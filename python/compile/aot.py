@@ -1,0 +1,97 @@
+"""AOT compile path: lower the L2/L1 functions to HLO *text* artifacts the
+rust runtime loads via PJRT.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact shapes mirror the rust-side synthetic datasets exactly
+(``rust/src/workloads/graphs.rs``): the `tiny` graph drives the end-to-end
+numeric cross-check in examples/gcn_pipeline.rs; the `cora`-shaped module
+is the deployment-scale artifact.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import gcn_layer, gcn_layer_grad
+from .kernels.aggregate import aggregate
+from .kernels.gather import face_gather
+
+# Shape contracts with rust/src/workloads/graphs.rs (GraphSpec::tiny and
+# the grad kernel's small variant).
+TINY = dict(nodes=256, edges=1024, feat=4)
+CORA = dict(nodes=2708, edges=10556, feat=16)
+GRAD_SMALL = dict(cells=512, faces=2048)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _graph_specs(g):
+    i32 = lambda n: jax.ShapeDtypeStruct((n,), jnp.int32)
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    return (
+        i32(g["edges"]),  # src
+        i32(g["edges"]),  # dst
+        f32(g["edges"]),  # w
+        f32(g["nodes"], g["feat"]),  # feat
+    )
+
+
+def lower_all():
+    """Return {artifact name: HLO text}."""
+    arts = {}
+
+    # Plain aggregation kernels (tiny for the cross-check, cora-scale).
+    for name, g in [("aggregate", TINY), ("aggregate_cora", CORA)]:
+        lowered = jax.jit(lambda s, d, w, f: (aggregate(s, d, w, f),)).lower(*_graph_specs(g))
+        arts[name] = to_hlo_text(lowered)
+
+    # grad-style face gather.
+    gs = GRAD_SMALL
+    i32 = lambda n: jax.ShapeDtypeStruct((n,), jnp.int32)
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    lowered = jax.jit(lambda o, n, c, p: (face_gather(o, n, c, p),)).lower(
+        i32(gs["faces"]), i32(gs["faces"]), f32(gs["faces"]), f32(gs["cells"])
+    )
+    arts["gather"] = to_hlo_text(lowered)
+
+    # Full GCN layer forward + backward (tiny shapes, hidden dim = feat).
+    g = TINY
+    specs = _graph_specs(g) + (
+        f32(g["feat"], g["feat"]),  # dense W
+        f32(g["feat"]),  # bias
+    )
+    lowered = jax.jit(lambda *a: (gcn_layer(*a),)).lower(*specs)
+    arts["gcn_layer"] = to_hlo_text(lowered)
+    lowered = jax.jit(lambda *a: tuple(gcn_layer_grad(*a))).lower(*specs)
+    arts["gcn_layer_grad"] = to_hlo_text(lowered)
+
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, text in lower_all().items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: GCN feature aggregation (the paper's Listing 1).
+
+    for e in range(E):
+        out[edge_start[e]] += weight[e] * feature[edge_end[e]]
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper separates
+the *regular* edge streams from the *irregular* feature gather with an
+SPM-vs-cache split; on TPU the same insight maps to keeping the edge tile
+in VMEM (BlockSpec-scheduled) while rows of ``feature``/``out`` are
+gathered/scattered per edge. The kernel is written at edge-tile
+granularity: the grid walks edge tiles; each step gathers/accumulates its
+tile's contribution. ``interpret=True`` everywhere — the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md), and
+correctness is what the AOT path needs; TPU-roofline notes live in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Edges processed per grid step (VMEM tile of 3 x TILE_E x 4 bytes).
+TILE_E = 512
+
+
+def _aggregate_kernel(src_ref, dst_ref, w_ref, feat_ref, out_ref, *, tile_e: int):
+    """One grid step: accumulate `tile_e` edges into the full output.
+
+    The output block is the whole (N, F) array for every step, so the
+    accumulation carries across grid steps (revisiting semantics).
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def body(i, _):
+        s = src_ref[i]
+        d = dst_ref[i]
+        wv = w_ref[i]
+        row = pl.load(feat_ref, (d, slice(None)))
+        cur = pl.load(out_ref, (s, slice(None)))
+        pl.store(out_ref, (s, slice(None)), cur + wv * row)
+        return 0
+
+    jax.lax.fori_loop(0, tile_e, body, 0)
+
+
+def _aggregate_pallas(src, dst, w, feat):
+    """Pallas edge-parallel aggregation. Shapes: src/dst/w (E,), feat (N,F).
+
+    E must be a multiple of TILE_E or small enough for one tile.
+    """
+    e = src.shape[0]
+    n, f = feat.shape
+    tile = TILE_E if e % TILE_E == 0 else e
+    grid = e // tile
+    kernel = functools.partial(_aggregate_kernel, tile_e=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),  # src tile in VMEM
+            pl.BlockSpec((tile,), lambda i: (i,)),  # dst tile
+            pl.BlockSpec((tile,), lambda i: (i,)),  # weight tile
+            pl.BlockSpec((n, f), lambda i: (0, 0)),  # full feature table
+        ],
+        out_specs=pl.BlockSpec((n, f), lambda i: (0, 0)),  # revisited accumulator
+        out_shape=jax.ShapeDtypeStruct((n, f), feat.dtype),
+        interpret=True,
+    )(src, dst, w, feat)
+
+
+@jax.custom_vjp
+def aggregate(src, dst, w, feat):
+    """Differentiable wrapper. The kernel is linear in `w` and `feat`, so
+    its VJP is the transposed gather/scatter pair (pure XLA ops — they fuse
+    into the same HLO module as the forward Pallas body)."""
+    return _aggregate_pallas(src, dst, w, feat)
+
+
+def _aggregate_fwd(src, dst, w, feat):
+    return _aggregate_pallas(src, dst, w, feat), (src, dst, w, feat)
+
+
+def _aggregate_bwd(res, ct):
+    import numpy as np
+
+    src, dst, w, feat = res
+    g_w = jnp.sum(ct[src] * feat[dst], axis=1)
+    g_feat = jnp.zeros_like(feat).at[dst].add(w[:, None] * ct[src])
+    f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)  # int args: no cotangent
+    return (f0(src), f0(dst), g_w, g_feat)
+
+
+aggregate.defvjp(_aggregate_fwd, _aggregate_bwd)
+
+
+def vmem_footprint_bytes(e_tile: int, n: int, f: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid step (edge tiles + the
+    gathered tables). Used by the §Perf roofline notes — interpret=True
+    gives no real TPU timing."""
+    edge_tiles = 3 * e_tile * dtype_bytes
+    tables = 2 * n * f * dtype_bytes  # feat + out blocks
+    return edge_tiles + tables

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: coefficient-weighted irregular gather — the OpenFOAM
+``grad`` access structure (Table 1):
+
+    out[i] = coef[i] * (phi[nei[i]] - phi[own[i]])
+
+Same VMEM schedule as the aggregate kernel: index/coefficient tiles are
+regular (BlockSpec-tiled), the ``phi`` table is gathered irregularly.
+``interpret=True`` for CPU-PJRT executability.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 512
+
+
+def _gather_kernel(own_ref, nei_ref, coef_ref, phi_ref, out_ref, *, tile: int):
+    def body(i, _):
+        o = own_ref[i]
+        n = nei_ref[i]
+        c = coef_ref[i]
+        diff = pl.load(phi_ref, (n,)) - pl.load(phi_ref, (o,))
+        pl.store(out_ref, (i,), c * diff)
+        return 0
+
+    jax.lax.fori_loop(0, tile, body, 0)
+
+
+@jax.jit
+def face_gather(own, nei, coef, phi):
+    """Per-face gather-difference. Shapes: own/nei/coef (FACES,), phi (N,)."""
+    faces = own.shape[0]
+    n = phi.shape[0]
+    tile = TILE if faces % TILE == 0 else faces
+    grid = faces // tile
+    kernel = functools.partial(_gather_kernel, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((faces,), phi.dtype),
+        interpret=True,
+    )(own, nei, coef, phi)

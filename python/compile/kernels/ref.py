@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal (pytest asserts kernel == ref before any artifact ships)."""
+
+import jax.numpy as jnp
+
+
+def aggregate_ref(src, dst, w, feat):
+    """out[src[e]] += w[e] * feat[dst[e]] via scatter-add."""
+    n, _f = feat.shape
+    contrib = w[:, None] * feat[dst]
+    out = jnp.zeros((n, feat.shape[1]), feat.dtype)
+    return out.at[src].add(contrib)
+
+
+def face_gather_ref(own, nei, coef, phi):
+    """out[i] = coef[i] * (phi[nei[i]] - phi[own[i]])."""
+    return coef * (phi[nei] - phi[own])
+
+
+def gcn_layer_ref(src, dst, w, feat, dense_w, bias):
+    """Aggregate → dense → ReLU (reference composition)."""
+    h = aggregate_ref(src, dst, w, feat)
+    return jnp.maximum(h @ dense_w + bias, 0.0)

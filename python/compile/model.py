@@ -1,0 +1,38 @@
+"""L2 JAX model: one GCN layer (the application the paper's motivating
+kernel comes from — PyTorch-Geometric's GCN, §4) built on the L1 Pallas
+aggregation kernel, plus its backward pass.
+
+Python only runs at build time: `aot.py` lowers these functions to HLO
+text that the rust runtime loads through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.aggregate import aggregate
+
+
+def gcn_layer(src, dst, w, feat, dense_w, bias):
+    """h = aggregate(feat); out = relu(h @ W + b).
+
+    The aggregation is the Pallas kernel; the dense transform lowers to a
+    plain XLA dot so the whole layer fuses into one HLO module.
+    """
+    h = aggregate(src, dst, w, feat)
+    return jnp.maximum(h @ dense_w + bias, 0.0)
+
+
+def gcn_layer_loss(src, dst, w, feat, dense_w, bias):
+    """Scalar training loss (½‖out‖²) — differentiable surrogate used to
+    exercise the backward path."""
+    out = gcn_layer(src, dst, w, feat, dense_w, bias)
+    return 0.5 * jnp.sum(out * out)
+
+
+def gcn_layer_grad(src, dst, w, feat, dense_w, bias):
+    """Gradients of the loss w.r.t. (feature table, dense weights, bias).
+
+    The aggregate kernel is linear in `feat`, so its VJP lowers to the
+    transposed gather/scatter; everything stays inside one HLO module.
+    """
+    return jax.grad(gcn_layer_loss, argnums=(3, 4, 5))(src, dst, w, feat, dense_w, bias)

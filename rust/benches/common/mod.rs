@@ -1,0 +1,44 @@
+//! Minimal measurement harness for `harness = false` benches (criterion is
+//! not in the offline vendored crate set). Reports min/median/mean over a
+//! few repetitions — enough to track regressions in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+pub struct Sample {
+    pub label: String,
+    pub secs: Vec<f64>,
+}
+
+impl Sample {
+    pub fn median(&self) -> f64 {
+        let mut s = self.secs.clone();
+        s.sort_by(f64::total_cmp);
+        s[s.len() / 2]
+    }
+    pub fn min(&self) -> f64 {
+        self.secs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Time `f` `reps` times; prints a criterion-style line and returns the
+/// samples. `f` returns a u64 "work counter" (e.g. simulated cycles) used
+/// to report throughput.
+pub fn bench(label: &str, reps: usize, mut f: impl FnMut() -> u64) -> Sample {
+    let mut secs = Vec::with_capacity(reps);
+    let mut work = 0u64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        work = f();
+        secs.push(t0.elapsed().as_secs_f64());
+    }
+    let s = Sample { label: label.to_string(), secs };
+    let med = s.median();
+    println!(
+        "{:<40} median {:>9.3} ms   min {:>9.3} ms   {:>8.2} Mcycles/s",
+        s.label,
+        med * 1e3,
+        s.min() * 1e3,
+        work as f64 / med / 1e6
+    );
+    s
+}

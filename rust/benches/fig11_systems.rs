@@ -1,0 +1,23 @@
+//! Fig 11a/11b end-to-end bench: regenerates the five-system comparison
+//! (execution time + memory access distribution) and reports harness
+//! wall time. `cargo bench --bench fig11_systems`.
+
+mod common;
+
+use cgra_mem::report;
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    common::bench("fig11a five-system campaign", 1, || {
+        let text = report::fig11a(threads);
+        println!("{text}");
+        let _ = report::save("fig11a", &text);
+        1
+    });
+    common::bench("fig11b access distribution", 1, || {
+        let text = report::fig11b(threads);
+        println!("{text}");
+        let _ = report::save("fig11b", &text);
+        1
+    });
+}

@@ -1,0 +1,18 @@
+//! Fig 12a-f bench: the cache-configuration sweeps (associativity, line
+//! size, capacity, MSHR, SPM size, storage parity) on GCN/Cora.
+
+mod common;
+
+use cgra_mem::report;
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    for part in ['a', 'b', 'c', 'd', 'e', 'f'] {
+        common::bench(&format!("fig12{part} sweep"), 1, || {
+            let text = report::fig12(part, threads);
+            println!("{text}");
+            let _ = report::save(&format!("fig12{part}"), &text);
+            1
+        });
+    }
+}

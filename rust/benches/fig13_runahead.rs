@@ -1,0 +1,28 @@
+//! Fig 13 + Fig 15 + Fig 16 bench: runahead speedups, prefetch-block
+//! classification and coverage across the Table 1 suite.
+
+mod common;
+
+use cgra_mem::report;
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    common::bench("fig13 runahead speedups", 1, || {
+        let text = report::fig13(threads);
+        println!("{text}");
+        let _ = report::save("fig13", &text);
+        1
+    });
+    common::bench("fig15 prefetch classification", 1, || {
+        let text = report::fig15(threads);
+        println!("{text}");
+        let _ = report::save("fig15", &text);
+        1
+    });
+    common::bench("fig16 coverage", 1, || {
+        let text = report::fig16(threads);
+        println!("{text}");
+        let _ = report::save("fig16", &text);
+        1
+    });
+}

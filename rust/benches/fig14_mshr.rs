@@ -1,0 +1,15 @@
+//! Fig 14 bench: runahead speedup vs MSHR size sweep.
+
+mod common;
+
+use cgra_mem::report;
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    common::bench("fig14 MSHR sweep", 1, || {
+        let text = report::fig14(threads);
+        println!("{text}");
+        let _ = report::save("fig14", &text);
+        1
+    });
+}

@@ -1,0 +1,16 @@
+//! Fig 17 bench: the cache-reconfiguration closed loop (8×8 Reconfig
+//! system) across the suite, with and without runahead.
+
+mod common;
+
+use cgra_mem::report;
+
+fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    common::bench("fig17 reconfiguration", 1, || {
+        let text = report::fig17(threads);
+        println!("{text}");
+        let _ = report::save("fig17", &text);
+        1
+    });
+}

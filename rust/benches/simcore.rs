@@ -1,0 +1,32 @@
+//! Core simulator throughput (the §Perf L3 hot path): simulated cycles
+//! per wall second on representative kernels/systems. Tracked across the
+//! optimization log in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use cgra_mem::mem::SubsystemConfig;
+use cgra_mem::sim::{CgraConfig, ExecMode};
+use cgra_mem::workloads::{prepare, GcnAggregate, GraphSpec, Rgb, Workload};
+
+fn run_once(wl: &dyn Workload, sys: SubsystemConfig, mode: ExecMode) -> u64 {
+    let (mut mem, mut arr, _l) = prepare(wl, sys, CgraConfig::hycube_4x4(mode));
+    arr.run(&mut mem, wl.iterations()).cycles
+}
+
+fn main() {
+    println!("simcore — cycle-loop throughput");
+    let cora = GcnAggregate::new(GraphSpec::cora());
+    let rgb = Rgb::default();
+    common::bench("gcn/cora cache+spm normal", 5, || {
+        run_once(&cora, SubsystemConfig::paper_base(), ExecMode::Normal)
+    });
+    common::bench("gcn/cora cache+spm runahead", 5, || {
+        run_once(&cora, SubsystemConfig::paper_base(), ExecMode::Runahead)
+    });
+    common::bench("gcn/cora spm-only (fast-forward)", 5, || {
+        run_once(&cora, SubsystemConfig::spm_only(2, 133 * 1024), ExecMode::Normal)
+    });
+    common::bench("rgb runahead", 5, || {
+        run_once(&rgb, SubsystemConfig::paper_base(), ExecMode::Runahead)
+    });
+}

@@ -1,0 +1,223 @@
+//! ARM Cortex-A72 / NEON-SIMD timing model (Table 2, Fig 11a baselines).
+//!
+//! Trace-driven: the DFG interpreter supplies the exact per-iteration
+//! instruction and memory stream; this model costs it against
+//!
+//! * a superscalar core (effective IPC for the integer/FP pipeline),
+//! * the A72 cache hierarchy — 32 KB 2-way L1D, 1 MB 16-way shared L2 —
+//!   simulated with the same tag model as the CGRA caches,
+//! * LPDDR4 main memory, and
+//! * an out-of-order overlap factor that hides part of each miss latency
+//!   (the A72's 128-entry-ish window extracts limited MLP on dependent
+//!   gather streams).
+//!
+//! The SIMD variant models NEON: vectorisable ALU work and regular loads
+//! are amortised by the vector width; irregular gathers are not (NEON has
+//! no gather), matching the modest SIMD gains the paper reports.
+
+use super::interp::interpret_dfg;
+use crate::mem::{AccessKind, AccessOutcome, Cache, CacheConfig};
+use crate::sim::Dfg;
+use crate::workloads::{Layout, Placement, Workload};
+
+/// Core + memory parameters (defaults follow Table 2).
+#[derive(Clone, Copy, Debug)]
+pub struct CpuModel {
+    pub freq_mhz: f64,
+    /// Effective instructions per cycle for non-stalled execution.
+    pub ipc: f64,
+    /// NEON vector width in 32-bit lanes (1 = scalar A72).
+    pub simd_width: u32,
+    pub l1: CacheConfig,
+    pub l2: CacheConfig,
+    /// Additional latency (cycles) for an L1 miss that hits L2.
+    pub l2_latency: u64,
+    /// Latency (cycles) to LPDDR4 on an L2 miss.
+    pub dram_latency: u64,
+    /// Fraction of miss latency NOT hidden by out-of-order overlap.
+    pub exposed_miss_fraction: f64,
+}
+
+impl CpuModel {
+    /// Scalar Cortex-A72 @ 1.8 GHz (Table 2).
+    pub fn a72() -> Self {
+        CpuModel {
+            freq_mhz: 1800.0,
+            // These kernels are dependent-gather chains (load→address→
+            // load→accumulate): the A72's 3-wide decode cannot be fed, so
+            // the sustained IPC sits near 1 (SPEC-like irregular codes).
+            ipc: 1.0,
+            simd_width: 1,
+            l1: CacheConfig::from_size(32 * 1024, 2, 64),
+            l2: CacheConfig::from_size(1024 * 1024, 16, 64),
+            l2_latency: 12,
+            dram_latency: 170, // ~94 ns LPDDR4-2400 @ 1.8 GHz
+            // Dependent misses expose most of their latency: the modest
+            // OoO window extracts little MLP from address-chained gathers.
+            exposed_miss_fraction: 0.85,
+        }
+    }
+
+    /// NEON-accelerated A72 (128-bit = 4 × 32-bit lanes).
+    pub fn a72_simd() -> Self {
+        CpuModel { simd_width: 4, ..Self::a72() }
+    }
+}
+
+/// Timing result of a baseline run.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuResult {
+    pub cycles: u64,
+    pub freq_mhz: f64,
+    pub instructions: u64,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub dram_accesses: u64,
+}
+
+impl CpuResult {
+    pub fn time_us(&self) -> f64 {
+        self.cycles as f64 / self.freq_mhz
+    }
+}
+
+/// Execute `wl` on the CPU model. The workload's layout classifies which
+/// addresses belong to irregular arrays (not vectorisable / not
+/// prefetch-friendly).
+pub fn run_cpu(wl: &dyn Workload, model: CpuModel) -> CpuResult {
+    // Build against a generous SPM-less layout: a CPU sees one flat space.
+    let mut layout = Layout::new(8, 0);
+    let dfg: Dfg = wl.build(&mut layout);
+    let mut backing = crate::mem::Backing::new(layout.backing_bytes(8));
+    wl.init(&layout, &mut backing);
+
+    // Irregular-address classifier from the layout.
+    let irregular_ranges: Vec<(u32, u32)> = layout
+        .specs
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.irregular)
+        .map(|(i, s)| (layout.bases[i], s.words * 4))
+        .collect();
+
+    let mut l1 = Cache::new(model.l1, 0);
+    let mut l2 = Cache::new(model.l2, 0);
+    let mut stall_cycles = 0f64;
+    let mut instr = 0u64;
+    let mut vec_ops = 0u64;
+    let mut scalar_ops = 0u64;
+    let mut l1_hits = 0u64;
+    let mut l2_hits = 0u64;
+    let mut dram = 0u64;
+
+    let mut access = |l1: &mut Cache, l2: &mut Cache, addr: u32, kind: AccessKind| -> u64 {
+        match l1.access(addr, kind) {
+            AccessOutcome::Hit => {
+                l1_hits += 1;
+                0
+            }
+            AccessOutcome::Miss => {
+                let lat = match l2.access(l1.block_addr(addr), AccessKind::Read) {
+                    AccessOutcome::Hit => {
+                        l2_hits += 1;
+                        model.l2_latency
+                    }
+                    AccessOutcome::Miss => {
+                        dram += 1;
+                        l2.fill(l1.block_addr(addr), false, 0);
+                        model.dram_latency
+                    }
+                };
+                l1.fill(addr, false, 0);
+                if kind == AccessKind::Write {
+                    l1.mark_dirty(addr);
+                }
+                lat
+            }
+        }
+    };
+
+    interpret_dfg(
+        &dfg,
+        &mut backing,
+        wl.iterations(),
+        |addr| irregular_ranges.iter().any(|&(b, l)| addr >= b && addr < b + l),
+        |_, tr| {
+            for &(addr, irr) in &tr.loads {
+                let lat = access(&mut l1, &mut l2, addr, AccessKind::Read);
+                stall_cycles += lat as f64 * model.exposed_miss_fraction;
+                instr += 1;
+                if irr {
+                    scalar_ops += 1;
+                } else {
+                    vec_ops += 1;
+                }
+            }
+            for &addr in &tr.stores {
+                let lat = access(&mut l1, &mut l2, addr, AccessKind::Write);
+                // Stores retire through the store buffer; only a small
+                // fraction of their miss latency is exposed.
+                stall_cycles += lat as f64 * model.exposed_miss_fraction * 0.3;
+                instr += 1;
+                scalar_ops += 1;
+            }
+            instr += tr.alu_ops as u64;
+            vec_ops += tr.vectorisable_ops as u64;
+            scalar_ops += (tr.alu_ops - tr.vectorisable_ops) as u64;
+        },
+    );
+
+    // Issue cycles: vectorisable work amortised by SIMD width.
+    let issue_ops = scalar_ops as f64 + vec_ops as f64 / model.simd_width as f64;
+    let cycles = (issue_ops / model.ipc + stall_cycles).ceil() as u64;
+    CpuResult {
+        cycles,
+        freq_mhz: model.freq_mhz,
+        instructions: instr,
+        l1_hits,
+        l2_hits,
+        dram_accesses: dram,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{GcnAggregate, GraphSpec, Rgb};
+
+    #[test]
+    fn simd_is_faster_than_scalar_but_not_4x_on_irregular() {
+        let wl = GcnAggregate::new(GraphSpec::tiny());
+        let scalar = run_cpu(&wl, CpuModel::a72());
+        let simd = run_cpu(&wl, CpuModel::a72_simd());
+        assert!(simd.cycles < scalar.cycles);
+        let speedup = scalar.cycles as f64 / simd.cycles as f64;
+        assert!(speedup < 3.0, "irregular kernel should not vectorise fully ({speedup:.2}x)");
+    }
+
+    #[test]
+    fn cache_hierarchy_filters_dram_traffic() {
+        let wl = Rgb::small();
+        let r = run_cpu(&wl, CpuModel::a72());
+        assert!(r.l1_hits > 0);
+        // Small palette fits in L1/L2: almost everything is a hit.
+        assert!(r.dram_accesses < r.instructions / 20);
+    }
+
+    #[test]
+    fn time_units_scale_with_frequency() {
+        let wl = Rgb::small();
+        let r = run_cpu(&wl, CpuModel::a72());
+        let t = r.time_us();
+        assert!(t > 0.0);
+        assert!((t - r.cycles as f64 / 1800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let wl = GcnAggregate::new(GraphSpec::tiny());
+        let a = run_cpu(&wl, CpuModel::a72());
+        let b = run_cpu(&wl, CpuModel::a72());
+        assert_eq!(a.cycles, b.cycles);
+    }
+}

@@ -1,0 +1,161 @@
+//! Functional DFG interpreter. Runs the kernel's dataflow graph outside
+//! any timing model to (a) produce the per-iteration instruction/memory
+//! trace that drives the CPU baselines, and (b) serve as an independent
+//! second implementation of kernel semantics (it cross-checks the
+//! cycle-accurate array in tests).
+
+use crate::mem::Backing;
+use crate::sim::alu::Value;
+use crate::sim::dfg::{Dfg, Op};
+
+/// Memory behaviour of one loop iteration.
+#[derive(Clone, Debug, Default)]
+pub struct IterTrace {
+    pub loads: Vec<(u32, bool)>,
+    pub stores: Vec<u32>,
+    /// Non-memory operations executed (ALU + address arithmetic).
+    pub alu_ops: u32,
+    /// Operations belonging to regular (vectorisable) dataflow — those
+    /// whose inputs do not depend on a loaded value from an irregular
+    /// array. Drives the SIMD model's vectorisable fraction.
+    pub vectorisable_ops: u32,
+}
+
+/// Interpret `dfg` for `iterations` iterations against `mem`, calling
+/// `sink` with each iteration's trace. Returns the total op count.
+///
+/// The `irregular` predicate classifies a load address as belonging to an
+/// irregularly-accessed array (used for the vectorisable split).
+pub fn interpret_dfg<F, G>(
+    dfg: &Dfg,
+    mem: &mut Backing,
+    iterations: u64,
+    mut irregular: G,
+    mut sink: F,
+) -> u64
+where
+    F: FnMut(u64, &IterTrace),
+    G: FnMut(u32) -> bool,
+{
+    let max_dist =
+        dfg.nodes.iter().flat_map(|n| n.inputs.iter().map(|e| e.dist)).max().unwrap_or(0);
+    let depth = (max_dist + 1) as usize;
+    let mut vals = vec![Value::real(0); dfg.nodes.len() * depth];
+    let mut total_ops = 0u64;
+    // Tracks whether a node's value is tainted by an irregular load.
+    let mut tainted = vec![false; dfg.nodes.len()];
+
+    for it in 0..iterations {
+        let mut tr = IterTrace::default();
+        let slot = (it % depth as u64) as usize;
+        for (id, node) in dfg.nodes.iter().enumerate() {
+            let get = |vals: &Vec<Value>, src: usize, dist: u32| -> Value {
+                if it < dist as u64 {
+                    Value::real(dfg.nodes[id].init)
+                } else {
+                    vals[src * depth + ((it - dist as u64) % depth as u64) as usize]
+                }
+            };
+            let v = match node.op {
+                Op::IterIdx => {
+                    tainted[id] = false;
+                    Value::real(it as u32)
+                }
+                Op::Const(c) => {
+                    tainted[id] = false;
+                    Value::real(c)
+                }
+                Op::Alu(op) => {
+                    let a = get(&vals, node.inputs[0].src, node.inputs[0].dist);
+                    let b = get(&vals, node.inputs[1].src, node.inputs[1].dist);
+                    tr.alu_ops += 1;
+                    let t = tainted[node.inputs[0].src] || tainted[node.inputs[1].src];
+                    tainted[id] = t;
+                    if !t {
+                        tr.vectorisable_ops += 1;
+                    }
+                    op.eval(a, b)
+                }
+                Op::Load(_) => {
+                    let addr = get(&vals, node.inputs[0].src, node.inputs[0].dist).bits;
+                    let irr = irregular(addr) || tainted[node.inputs[0].src];
+                    tainted[id] = irr;
+                    tr.loads.push((addr, irr));
+                    Value::real(mem.read_u32(addr))
+                }
+                Op::Store(_) => {
+                    let addr = get(&vals, node.inputs[0].src, node.inputs[0].dist).bits;
+                    let data = get(&vals, node.inputs[1].src, node.inputs[1].dist).bits;
+                    tr.stores.push(addr);
+                    mem.write_u32(addr, data);
+                    Value::real(data)
+                }
+            };
+            vals[id * depth + slot] = v;
+        }
+        total_ops += (tr.alu_ops + tr.loads.len() as u32 + tr.stores.len() as u32) as u64;
+        sink(it, &tr);
+    }
+    total_ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::SubsystemConfig;
+    use crate::sim::{CgraConfig, ExecMode};
+    use crate::workloads::{prepare, GcnAggregate, GraphSpec, Workload};
+
+    /// The interpreter and the cycle-accurate array must compute identical
+    /// outputs for the same workload (two independent implementations).
+    #[test]
+    fn interpreter_matches_cycle_accurate_array() {
+        let wl = GcnAggregate::new(GraphSpec::tiny());
+        // Cycle-accurate run.
+        let (mut mem, mut arr, layout) =
+            prepare(&wl, SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(ExecMode::Normal));
+        let dfg = wl.build(&mut crate::workloads::Layout::new(2, 512 - 128));
+        arr.run(&mut mem, wl.iterations());
+        // Interpreter run on a fresh backing.
+        let mut mem2 = mem.backing.clone();
+        // Reset output region to zero (the array already wrote it).
+        let (oname, owords) = wl.output();
+        let obase = layout.base_of(oname);
+        for w in 0..owords {
+            mem2.write_u32(obase + w * 4, 0);
+        }
+        interpret_dfg(&dfg, &mut mem2, wl.iterations(), |_| false, |_, _| {});
+        assert_eq!(
+            mem.backing.dump_u32(obase, owords as usize),
+            mem2.dump_u32(obase, owords as usize)
+        );
+    }
+
+    #[test]
+    fn trace_counts_loads_and_stores() {
+        let wl = GcnAggregate::new(GraphSpec::tiny());
+        let (mut mem, _arr, layout) =
+            prepare(&wl, SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(ExecMode::Normal));
+        let mut l = crate::workloads::Layout::new(2, 512 - 128);
+        let dfg = wl.build(&mut l);
+        let mut loads = 0u64;
+        let mut stores = 0u64;
+        let mut irregular_loads = 0u64;
+        let feat_base = layout.base_of("feature");
+        let out_base = layout.base_of("output");
+        interpret_dfg(
+            &dfg,
+            &mut mem.backing,
+            wl.iterations(),
+            |a| a >= feat_base.min(out_base),
+            |_, tr| {
+                loads += tr.loads.len() as u64;
+                stores += tr.stores.len() as u64;
+                irregular_loads += tr.loads.iter().filter(|(_, irr)| *irr).count() as u64;
+            },
+        );
+        assert_eq!(loads, wl.iterations() * 5);
+        assert_eq!(stores, wl.iterations());
+        assert!(irregular_loads >= wl.iterations() * 2); // feat + out RMW
+    }
+}

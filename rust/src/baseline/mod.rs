@@ -1,0 +1,13 @@
+//! Baseline systems of Fig 11a: ARM Cortex-A72 (Table 2) and its
+//! NEON/SIMD variant. Both are trace-driven timing models: the kernel's
+//! DFG is interpreted functionally to extract the exact instruction and
+//! memory-access stream, which is then costed against a superscalar core
+//! model with the A72's cache hierarchy (32 KB 2-way L1D, 1 MB 16-way L2,
+//! LPDDR4 main memory) — the substitution for real silicon documented in
+//! DESIGN.md.
+
+pub mod cpu;
+pub mod interp;
+
+pub use cpu::{run_cpu, CpuModel, CpuResult};
+pub use interp::{interpret_dfg, IterTrace};

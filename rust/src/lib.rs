@@ -1,0 +1,25 @@
+//! # cgra-mem — Re-thinking Memory-Bound Limitations in CGRAs
+//!
+//! Reproduction of Liu et al., ACM TECS 2025 (DOI 10.1145/3760386): a
+//! cycle-accurate HyCUBE-like CGRA with the paper's redesigned memory
+//! subsystem — Cache+SPM hybrid ([`mem`]), CGRA-specific runahead
+//! execution ([`sim::array`]), multi-L1 virtual SPMs and pattern-aware
+//! cache reconfiguration ([`reconfig`]) — plus the Table 1 workload suite
+//! ([`workloads`]), the Fig 11a CPU baselines ([`baseline`]), the area
+//! model ([`area`]), and a PJRT [`runtime`] that executes the JAX/Pallas
+//! AOT golden models from rust.
+//!
+//! See DESIGN.md for the system inventory and the per-figure experiment
+//! index, and EXPERIMENTS.md for measured-vs-paper results.
+
+pub mod area;
+pub mod baseline;
+pub mod coordinator;
+pub mod mem;
+pub mod reconfig;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,156 @@
+//! `repro` — the leader CLI for the reproduction: runs kernels on any of
+//! the five systems, regenerates every figure/table of the paper, and
+//! drives the reconfiguration loop. (Hand-rolled arg parsing: the vendored
+//! offline crate set has no clap.)
+
+use cgra_mem::coordinator::{measure, System};
+use cgra_mem::report;
+use cgra_mem::workloads::paper_suite;
+
+const USAGE: &str = "\
+repro — 'Re-thinking Memory-Bound Limitations in CGRAs' reproduction
+
+USAGE:
+  repro list                      list kernels and systems
+  repro run <kernel> [system]     run one kernel (default: all 5 systems)
+  repro figure <id|all> [-j N]    regenerate a figure: fig2 fig5 fig7
+                                  fig11a fig11b fig12a..fig12f fig13 fig14
+                                  fig15 fig16 fig17 fig18 motivation ablation
+  repro table <1|2|3|all>         regenerate a table
+  repro golden <artifact>         load + execute an AOT artifact via PJRT
+
+Figures are also written to artifacts/figures/<id>.txt.
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let threads = jobs_flag(&args).unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    });
+    match args.first().map(String::as_str) {
+        Some("list") => list(),
+        Some("run") => run(&args[1..]),
+        Some("figure") => figure(args.get(1).map(String::as_str).unwrap_or("all"), threads),
+        Some("table") => table(args.get(1).map(String::as_str).unwrap_or("all")),
+        Some("golden") => golden(args.get(1).map(String::as_str).unwrap_or("aggregate")),
+        _ => print!("{USAGE}"),
+    }
+}
+
+fn jobs_flag(args: &[String]) -> Option<usize> {
+    let i = args.iter().position(|a| a == "-j")?;
+    args.get(i + 1)?.parse().ok()
+}
+
+fn list() {
+    println!("kernels (Table 1):");
+    for wl in paper_suite() {
+        println!("  {:<22} {} ({} iterations)", wl.name(), wl.domain(), wl.iterations());
+    }
+    println!("systems (Fig 11a): A72 SIMD SPM-only Cache+SPM Runahead");
+}
+
+fn run(args: &[String]) {
+    let Some(kernel) = args.first() else {
+        eprintln!("usage: repro run <kernel> [system]");
+        return;
+    };
+    let suite = paper_suite();
+    let Some(wl) = suite.iter().find(|w| &w.name() == kernel) else {
+        eprintln!("unknown kernel {kernel:?}; try `repro list`");
+        return;
+    };
+    let systems: Vec<System> = match args.get(1).map(String::as_str) {
+        Some(name) => vec![System::all()
+            .into_iter()
+            .find(|s| s.name().eq_ignore_ascii_case(name))
+            .unwrap_or_else(|| panic!("unknown system {name}"))],
+        None => System::all().to_vec(),
+    };
+    println!(
+        "{:<10} {:>12} {:>10} {:>7} {:>6} {:>10}",
+        "system", "cycles", "time(us)", "util%", "ok", "dram"
+    );
+    for sys in systems {
+        let m = measure(wl.as_ref(), sys);
+        println!(
+            "{:<10} {:>12} {:>10.1} {:>6.2}% {:>6} {:>10}",
+            m.system,
+            m.cycles,
+            m.time_us,
+            m.utilization * 100.0,
+            m.output_ok,
+            m.dram_accesses
+        );
+    }
+}
+
+fn figure(id: &str, threads: usize) {
+    let render = |id: &str| -> Option<String> {
+        Some(match id {
+            "fig2" => report::fig2(),
+            "fig5" => report::fig5(threads),
+            "fig7" => report::fig7(),
+            "fig11a" => report::fig11a(threads),
+            "fig11b" => report::fig11b(threads),
+            "fig12a" => report::fig12('a', threads),
+            "fig12b" => report::fig12('b', threads),
+            "fig12c" => report::fig12('c', threads),
+            "fig12d" => report::fig12('d', threads),
+            "fig12e" => report::fig12('e', threads),
+            "fig12f" => report::fig12('f', threads),
+            "fig13" => report::fig13(threads),
+            "fig14" => report::fig14(threads),
+            "fig15" => report::fig15(threads),
+            "fig16" => report::fig16(threads),
+            "fig17" => report::fig17(threads),
+            "fig18" => report::fig18(),
+            "motivation" => report::motivation(threads),
+            "ablation" => report::ablation(threads),
+            _ => return None,
+        })
+    };
+    let ids: Vec<&str> = if id == "all" {
+        vec![
+            "fig2", "fig5", "fig7", "fig11a", "fig11b", "fig12a", "fig12b", "fig12c", "fig12d",
+            "fig12e", "fig12f", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18",
+            "motivation", "ablation",
+        ]
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        match render(id) {
+            Some(text) => {
+                println!("{text}");
+                if let Err(e) = report::save(id, &text) {
+                    eprintln!("(could not save {id}: {e})");
+                }
+            }
+            None => eprintln!("unknown figure {id:?}"),
+        }
+    }
+}
+
+fn table(id: &str) {
+    match id {
+        "1" => println!("{}", report::table1()),
+        "2" => println!("{}", report::table2()),
+        "3" => println!("{}", report::table3()),
+        "all" => {
+            println!("{}", report::table1());
+            println!("{}", report::table2());
+            println!("{}", report::table3());
+        }
+        _ => eprintln!("unknown table {id:?} (use 1, 2, 3 or all)"),
+    }
+}
+
+fn golden(name: &str) {
+    let rt = cgra_mem::runtime::Runtime::cpu("artifacts").expect("PJRT CPU client");
+    println!("platform: {}", rt.platform());
+    match rt.load(name) {
+        Ok(art) => println!("artifact {:?} loaded and compiled OK", art.name),
+        Err(e) => eprintln!("failed: {e:#}"),
+    }
+}

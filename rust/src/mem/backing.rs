@@ -1,0 +1,119 @@
+//! Functional backing store for the whole simulated address space.
+//!
+//! The timing model (SPM / caches / DRAM) decides *when* data arrives; the
+//! backing store decides *what* the data is. Keeping the two separate keeps
+//! every cache level coherent by construction (the paper's design avoids
+//! inter-cache coherence by fully partitioning data across virtual SPMs,
+//! §3.3, so a single functional image is faithful).
+
+use super::Addr;
+
+/// Word-addressable (4-byte) flat memory image.
+#[derive(Clone)]
+pub struct Backing {
+    words: Vec<u32>,
+}
+
+impl Backing {
+    /// Create an image covering `bytes` bytes (rounded up to a word).
+    pub fn new(bytes: usize) -> Self {
+        Backing { words: vec![0; (bytes + 3) / 4] }
+    }
+
+    /// Size of the image in bytes.
+    pub fn len_bytes(&self) -> usize {
+        self.words.len() * 4
+    }
+
+    #[inline]
+    fn widx(addr: Addr) -> usize {
+        (addr >> 2) as usize
+    }
+
+    /// Read the 32-bit word containing `addr` (word aligned access).
+    #[inline]
+    pub fn read_u32(&self, addr: Addr) -> u32 {
+        self.words[Self::widx(addr)]
+    }
+
+    /// Write the 32-bit word containing `addr`.
+    #[inline]
+    pub fn write_u32(&mut self, addr: Addr, value: u32) {
+        let i = Self::widx(addr);
+        self.words[i] = value;
+    }
+
+    /// Read an f32 stored at `addr` (bit pattern in the word).
+    #[inline]
+    pub fn read_f32(&self, addr: Addr) -> f32 {
+        f32::from_bits(self.read_u32(addr))
+    }
+
+    /// Write an f32 at `addr`.
+    #[inline]
+    pub fn write_f32(&mut self, addr: Addr, value: f32) {
+        self.write_u32(addr, value.to_bits());
+    }
+
+    /// Bulk-initialise a region with u32 values starting at `addr`.
+    pub fn load_u32_slice(&mut self, addr: Addr, data: &[u32]) {
+        let start = Self::widx(addr);
+        self.words[start..start + data.len()].copy_from_slice(data);
+    }
+
+    /// Bulk-initialise a region with f32 values starting at `addr`.
+    pub fn load_f32_slice(&mut self, addr: Addr, data: &[f32]) {
+        let start = Self::widx(addr);
+        for (i, v) in data.iter().enumerate() {
+            self.words[start + i] = v.to_bits();
+        }
+    }
+
+    /// Snapshot a u32 region (used by golden-output comparison).
+    pub fn dump_u32(&self, addr: Addr, count: usize) -> Vec<u32> {
+        let start = Self::widx(addr);
+        self.words[start..start + count].to_vec()
+    }
+
+    /// Snapshot an f32 region.
+    pub fn dump_f32(&self, addr: Addr, count: usize) -> Vec<f32> {
+        self.dump_u32(addr, count).iter().map(|w| f32::from_bits(*w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_roundtrip() {
+        let mut b = Backing::new(64);
+        b.write_u32(0, 0xdead_beef);
+        b.write_u32(60, 42);
+        assert_eq!(b.read_u32(0), 0xdead_beef);
+        assert_eq!(b.read_u32(60), 42);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut b = Backing::new(16);
+        b.write_f32(4, -1.5);
+        assert_eq!(b.read_f32(4), -1.5);
+    }
+
+    #[test]
+    fn bulk_load_and_dump() {
+        let mut b = Backing::new(128);
+        b.load_u32_slice(8, &[1, 2, 3]);
+        assert_eq!(b.dump_u32(8, 3), vec![1, 2, 3]);
+        b.load_f32_slice(32, &[0.5, 2.0]);
+        assert_eq!(b.dump_f32(32, 2), vec![0.5, 2.0]);
+    }
+
+    #[test]
+    fn unaligned_addr_maps_to_containing_word() {
+        let mut b = Backing::new(16);
+        b.write_u32(4, 7);
+        assert_eq!(b.read_u32(6), 7); // addr 6 lives in word 1
+    }
+}

@@ -1,0 +1,511 @@
+//! Reconfigurable, non-blocking, set-associative cache (paper §3.1, §3.4.1).
+//!
+//! Two reconfiguration axes:
+//!
+//! * **Cache size / associativity** — way-granular. Each way carries a
+//!   *permission register* binding it to one virtual SPM; reconfiguration
+//!   moves whole ways between L1 caches (`take_way` / `grant_way`), which
+//!   keeps the number of sets a power of two and needs no index rewiring.
+//! * **Cache line size** — `2^m` adjacent physical lines merge into one
+//!   *virtual cache line*. Replacement, fills and LRU operate at virtual-
+//!   line granularity; because the L2 line equals the maximum L1 virtual
+//!   line, a virtual line is always a full hit or a full miss, so we model
+//!   tag state directly at virtual-line granularity (`sets >> m` virtual
+//!   sets of `line << m` bytes — the first physical set of each group is
+//!   the representative set, exactly the paper's LRU scheme).
+//!
+//! The cache is tag-only: functional data lives in [`super::Backing`], so
+//! timing and value simulation stay decoupled (and trivially coherent).
+
+use super::{Addr, Cycle};
+
+/// Geometry + policy for one cache instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Physical sets (power of two).
+    pub sets: usize,
+    /// Initial number of ways owned by this cache.
+    pub ways: usize,
+    /// Physical line size in bytes (power of two).
+    pub line_bytes: u32,
+    /// Virtual-line shift `m`: virtual line = `line_bytes << m`.
+    pub vline_shift: u8,
+}
+
+impl CacheConfig {
+    /// Convenience: a config from total size / associativity / line size.
+    pub fn from_size(total_bytes: u32, ways: usize, line_bytes: u32) -> Self {
+        let sets = (total_bytes as usize / ways / line_bytes as usize).max(1);
+        assert!(sets.is_power_of_two(), "sets must be a power of two (got {sets})");
+        CacheConfig { sets, ways, line_bytes, vline_shift: 0 }
+    }
+
+    pub fn total_bytes(&self) -> u32 {
+        (self.sets * self.ways) as u32 * self.line_bytes
+    }
+
+    /// Virtual line size in bytes.
+    pub fn vline_bytes(&self) -> u32 {
+        self.line_bytes << self.vline_shift
+    }
+
+    /// Number of virtual sets.
+    pub fn vsets(&self) -> usize {
+        (self.sets >> self.vline_shift).max(1)
+    }
+}
+
+/// Per-(way, vset) tag state.
+#[derive(Clone, Copy, Debug, Default)]
+struct LineState {
+    valid: bool,
+    dirty: bool,
+    tag: u32,
+    /// LRU timestamp of the representative set.
+    lru: u64,
+    /// Filled by a runahead prefetch and not yet referenced by demand.
+    prefetched: bool,
+    /// Identifier of the prefetch batch (runahead episode) that fetched it.
+    prefetch_epoch: u64,
+}
+
+/// One cache way: tag state for every virtual set. Ways are the unit of
+/// size reconfiguration and carry their permission-register identity.
+#[derive(Clone, Debug)]
+pub struct Way {
+    lines: Vec<LineState>,
+    /// Permission register: which virtual SPM (L1 index) owns this way.
+    pub owner: usize,
+}
+
+/// Outcome of a tag lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessOutcome {
+    Hit,
+    Miss,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    Read,
+    Write,
+}
+
+/// Victim information returned by a fill.
+#[derive(Clone, Copy, Debug)]
+pub struct Evicted {
+    pub block_addr: Addr,
+    pub dirty: bool,
+    /// The victim was a prefetched line that was never used (counts toward
+    /// Fig 15 "Evicted").
+    pub unused_prefetch: bool,
+}
+
+/// Aggregate counters for one cache.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Demand hits on lines brought in by runahead prefetch (first touch).
+    pub prefetch_used: u64,
+    /// Prefetched-but-unused lines evicted.
+    pub prefetch_evicted: u64,
+    pub writebacks: u64,
+    pub fills: u64,
+}
+
+impl CacheStats {
+    pub fn accesses(&self) -> u64 {
+        self.reads + self.writes
+    }
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses() == 0 { 1.0 } else { self.hits as f64 / self.accesses() as f64 }
+    }
+}
+
+pub struct Cache {
+    cfg: CacheConfig,
+    ways: Vec<Way>,
+    clock: u64,
+    pub stats: CacheStats,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig, owner: usize) -> Self {
+        let ways = (0..cfg.ways)
+            .map(|_| Way { lines: vec![LineState::default(); cfg.vsets()], owner })
+            .collect();
+        Cache { cfg, ways, clock: 0, stats: CacheStats::default() }
+    }
+
+    pub fn config(&self) -> CacheConfig {
+        self.cfg
+    }
+
+    pub fn num_ways(&self) -> usize {
+        self.ways.len()
+    }
+
+    /// Current capacity in bytes given the ways presently owned.
+    pub fn capacity_bytes(&self) -> u32 {
+        (self.cfg.sets * self.ways.len()) as u32 * self.cfg.line_bytes
+    }
+
+    #[inline]
+    fn vset_of(&self, addr: Addr) -> usize {
+        ((addr / self.cfg.vline_bytes()) as usize) & (self.cfg.vsets() - 1)
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: Addr) -> u32 {
+        addr / self.cfg.vline_bytes() / self.cfg.vsets() as u32
+    }
+
+    /// Virtual-line-aligned block address.
+    #[inline]
+    pub fn block_addr(&self, addr: Addr) -> Addr {
+        addr & !(self.cfg.vline_bytes() - 1)
+    }
+
+    fn addr_of(&self, tag: u32, vset: usize) -> Addr {
+        (tag * self.cfg.vsets() as u32 + vset as u32) * self.cfg.vline_bytes()
+    }
+
+    /// Tag lookup without side effects (used by the reconfiguration model's
+    /// profiling phase and by runahead probes that must not disturb LRU).
+    pub fn probe(&self, addr: Addr) -> AccessOutcome {
+        if self.ways.is_empty() {
+            return AccessOutcome::Miss;
+        }
+        let (vset, tag) = (self.vset_of(addr), self.tag_of(addr));
+        for w in &self.ways {
+            let l = &w.lines[vset];
+            if l.valid && l.tag == tag {
+                return AccessOutcome::Hit;
+            }
+        }
+        AccessOutcome::Miss
+    }
+
+    /// Demand access: updates LRU, dirty bits, stats and prefetch-use
+    /// accounting.
+    pub fn access(&mut self, addr: Addr, kind: AccessKind) -> AccessOutcome {
+        self.clock += 1;
+        match kind {
+            AccessKind::Read => self.stats.reads += 1,
+            AccessKind::Write => self.stats.writes += 1,
+        }
+        if self.ways.is_empty() {
+            self.stats.misses += 1;
+            return AccessOutcome::Miss;
+        }
+        let (vset, tag) = (self.vset_of(addr), self.tag_of(addr));
+        for w in &mut self.ways {
+            let l = &mut w.lines[vset];
+            if l.valid && l.tag == tag {
+                l.lru = self.clock;
+                if kind == AccessKind::Write {
+                    l.dirty = true;
+                }
+                if l.prefetched {
+                    l.prefetched = false;
+                    self.stats.prefetch_used += 1;
+                }
+                self.stats.hits += 1;
+                return AccessOutcome::Hit;
+            }
+        }
+        self.stats.misses += 1;
+        AccessOutcome::Miss
+    }
+
+    /// Install the virtual line containing `addr`, evicting the LRU victim
+    /// of its virtual set if necessary. `prefetch` marks runahead fills.
+    pub fn fill(&mut self, addr: Addr, prefetch: bool, epoch: u64) -> Option<Evicted> {
+        if self.ways.is_empty() {
+            return None;
+        }
+        self.clock += 1;
+        self.stats.fills += 1;
+        let (vset, tag) = (self.vset_of(addr), self.tag_of(addr));
+        // Already present (e.g. demand fill raced a prefetch): refresh only.
+        if let Some(w) = self
+            .ways
+            .iter_mut()
+            .find(|w| w.lines[vset].valid && w.lines[vset].tag == tag)
+        {
+            w.lines[vset].lru = self.clock;
+            return None;
+        }
+        // Prefer an invalid way, else LRU victim.
+        let victim_way = match (0..self.ways.len()).find(|&i| !self.ways[i].lines[vset].valid) {
+            Some(i) => i,
+            None => (0..self.ways.len())
+                .min_by_key(|&i| self.ways[i].lines[vset].lru)
+                .expect("non-empty ways"),
+        };
+        let old = self.ways[victim_way].lines[vset];
+        let evicted = if old.valid {
+            if old.dirty {
+                self.stats.writebacks += 1;
+            }
+            if old.prefetched {
+                self.stats.prefetch_evicted += 1;
+            }
+            Some(Evicted {
+                block_addr: self.addr_of(old.tag, vset),
+                dirty: old.dirty,
+                unused_prefetch: old.prefetched,
+            })
+        } else {
+            None
+        };
+        self.ways[victim_way].lines[vset] = LineState {
+            valid: true,
+            dirty: false,
+            tag,
+            lru: self.clock,
+            prefetched: prefetch,
+            prefetch_epoch: epoch,
+        };
+        evicted
+    }
+
+    /// Mark the line containing `addr` dirty (store-buffer merge on fill).
+    pub fn mark_dirty(&mut self, addr: Addr) {
+        let (vset, tag) = (self.vset_of(addr), self.tag_of(addr));
+        for w in &mut self.ways {
+            let l = &mut w.lines[vset];
+            if l.valid && l.tag == tag {
+                l.dirty = true;
+                return;
+            }
+        }
+    }
+
+    /// Count lines still flagged as unused prefetches (end-of-run "Useless"
+    /// bucket of Fig 15 is derived from these + per-epoch bookkeeping).
+    pub fn unused_prefetch_lines(&self) -> u64 {
+        self.ways
+            .iter()
+            .flat_map(|w| w.lines.iter())
+            .filter(|l| l.valid && l.prefetched)
+            .count() as u64
+    }
+
+    /// Remove one way (lowest index) for reallocation to another cache.
+    /// All its lines are flushed; dirty lines are reported for writeback.
+    pub fn take_way(&mut self) -> Option<(Way, Vec<Evicted>)> {
+        if self.ways.is_empty() {
+            return None;
+        }
+        let mut way = self.ways.remove(0);
+        let mut flushed = Vec::new();
+        for (vset, l) in way.lines.iter_mut().enumerate() {
+            if l.valid {
+                if l.dirty {
+                    self.stats.writebacks += 1;
+                }
+                flushed.push(Evicted {
+                    block_addr: self.addr_of(l.tag, vset),
+                    dirty: l.dirty,
+                    unused_prefetch: l.prefetched,
+                });
+            }
+            *l = LineState::default();
+        }
+        Some((way, flushed))
+    }
+
+    /// Accept a way from another cache (its permission register is
+    /// rewritten to this owner). Contents arrive invalidated.
+    pub fn grant_way(&mut self, mut way: Way, owner: usize) {
+        way.owner = owner;
+        // Geometry may differ in vline_shift; reset to this cache's vsets.
+        way.lines = vec![LineState::default(); self.cfg.vsets()];
+        self.ways.push(way);
+    }
+
+    /// Change the virtual-line shift. This regroups sets, so all contents
+    /// are invalidated (dirty lines reported for writeback).
+    pub fn set_vline_shift(&mut self, m: u8) -> Vec<Evicted> {
+        assert!(
+            (self.cfg.sets >> m) >= 1,
+            "vline shift {m} leaves no virtual sets (sets={})",
+            self.cfg.sets
+        );
+        let mut flushed = Vec::new();
+        for wi in 0..self.ways.len() {
+            for vset in 0..self.ways[wi].lines.len() {
+                let l = self.ways[wi].lines[vset];
+                if l.valid {
+                    if l.dirty {
+                        self.stats.writebacks += 1;
+                    }
+                    flushed.push(Evicted {
+                        block_addr: self.addr_of(l.tag, vset),
+                        dirty: l.dirty,
+                        unused_prefetch: l.prefetched,
+                    });
+                }
+            }
+        }
+        self.cfg.vline_shift = m;
+        let vsets = self.cfg.vsets();
+        for w in &mut self.ways {
+            w.lines = vec![LineState::default(); vsets];
+        }
+        flushed
+    }
+
+    /// Invalidate everything (run reset).
+    pub fn reset(&mut self) {
+        for w in &mut self.ways {
+            for l in &mut w.lines {
+                *l = LineState::default();
+            }
+        }
+        self.clock = 0;
+        self.stats = CacheStats::default();
+    }
+
+    /// Cycle value is unused by the tag model but kept for API symmetry
+    /// with trace-driven models.
+    pub fn touch_clock(&mut self, _cycle: Cycle) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c4x4() -> Cache {
+        // 4 sets x 4 ways x 16B lines = 256B
+        Cache::new(CacheConfig { sets: 4, ways: 4, line_bytes: 16, vline_shift: 0 }, 0)
+    }
+
+    #[test]
+    fn config_from_size() {
+        let cfg = CacheConfig::from_size(4096, 4, 64);
+        assert_eq!(cfg.sets, 16);
+        assert_eq!(cfg.total_bytes(), 4096);
+    }
+
+    #[test]
+    fn miss_then_fill_then_hit() {
+        let mut c = c4x4();
+        assert_eq!(c.access(0x100, AccessKind::Read), AccessOutcome::Miss);
+        assert!(c.fill(0x100, false, 0).is_none());
+        assert_eq!(c.access(0x100, AccessKind::Read), AccessOutcome::Hit);
+        assert_eq!(c.access(0x10c, AccessKind::Read), AccessOutcome::Hit); // same line
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = c4x4();
+        // 4 ways of set 0: addresses with stride sets*line = 64
+        for i in 0..4u32 {
+            c.fill(i * 64, false, 0);
+        }
+        c.access(0, AccessKind::Read); // refresh way holding addr 0
+        let ev = c.fill(4 * 64, false, 0).expect("evicts");
+        assert_eq!(ev.block_addr, 64); // addr 64 was LRU
+        assert_eq!(c.probe(0), AccessOutcome::Hit);
+        assert_eq!(c.probe(64), AccessOutcome::Miss);
+    }
+
+    #[test]
+    fn write_allocates_dirty_and_writes_back() {
+        let mut c = c4x4();
+        c.fill(0x40, false, 0);
+        c.access(0x40, AccessKind::Write);
+        // Evict it by filling 4 more lines in the same set.
+        let mut dirty_seen = false;
+        for i in 1..=4u32 {
+            if let Some(ev) = c.fill(0x40 + i * 64, false, 0) {
+                dirty_seen |= ev.dirty && ev.block_addr == 0x40;
+            }
+        }
+        assert!(dirty_seen);
+        assert_eq!(c.stats.writebacks, 1);
+    }
+
+    #[test]
+    fn virtual_line_groups_adjacent_physical_lines() {
+        let mut c = c4x4();
+        c.set_vline_shift(1); // 2 vsets of 32B vlines
+        assert_eq!(c.config().vline_bytes(), 32);
+        assert_eq!(c.config().vsets(), 2);
+        c.fill(0x100, false, 0);
+        // addr 0x110 is the adjacent physical line inside the same vline
+        assert_eq!(c.probe(0x110), AccessOutcome::Hit);
+        assert_eq!(c.probe(0x120), AccessOutcome::Miss);
+        assert_eq!(c.block_addr(0x11f), 0x100);
+    }
+
+    #[test]
+    fn vline_shift_flushes_contents() {
+        let mut c = c4x4();
+        c.fill(0x40, false, 0);
+        c.access(0x40, AccessKind::Write);
+        let flushed = c.set_vline_shift(1);
+        assert_eq!(flushed.len(), 1);
+        assert!(flushed[0].dirty);
+        assert_eq!(c.probe(0x40), AccessOutcome::Miss);
+    }
+
+    #[test]
+    fn way_reallocation_moves_capacity() {
+        let mut a = c4x4();
+        let mut b = c4x4();
+        let (way, flushed) = a.take_way().unwrap();
+        assert!(flushed.is_empty());
+        b.grant_way(way, 1);
+        assert_eq!(a.num_ways(), 3);
+        assert_eq!(b.num_ways(), 5);
+        assert_eq!(a.capacity_bytes(), 3 * 4 * 16);
+        assert_eq!(b.capacity_bytes(), 5 * 4 * 16);
+        assert!(b.ways.iter().all(|w| w.owner == 1 || w.owner == 0));
+        assert_eq!(b.ways.last().unwrap().owner, 1);
+    }
+
+    #[test]
+    fn zero_way_cache_always_misses() {
+        let mut c = c4x4();
+        for _ in 0..4 {
+            c.take_way();
+        }
+        assert_eq!(c.access(0x0, AccessKind::Read), AccessOutcome::Miss);
+        assert!(c.fill(0x0, false, 0).is_none());
+        assert_eq!(c.probe(0x0), AccessOutcome::Miss);
+    }
+
+    #[test]
+    fn prefetch_accounting_used_and_evicted() {
+        let mut c = c4x4();
+        c.fill(0x100, true, 1); // prefetch
+        c.fill(0x200, true, 1); // prefetch, same set? 0x100 set=(0x100/16)%4=0, 0x200 set=0. yes
+        assert_eq!(c.unused_prefetch_lines(), 2);
+        c.access(0x100, AccessKind::Read); // demand uses the first
+        assert_eq!(c.stats.prefetch_used, 1);
+        assert_eq!(c.unused_prefetch_lines(), 1);
+        // Evict the second before use: fill same set until victim is 0x200.
+        for i in 0..8u32 {
+            c.fill(0x1000 + i * 64, false, 0);
+        }
+        assert!(c.stats.prefetch_evicted >= 1);
+    }
+
+    #[test]
+    fn probe_has_no_side_effects() {
+        let mut c = c4x4();
+        c.fill(0x100, false, 0);
+        let before = c.stats;
+        assert_eq!(c.probe(0x100), AccessOutcome::Hit);
+        assert_eq!(c.stats.hits, before.hits);
+        assert_eq!(c.stats.accesses(), before.accesses());
+    }
+}

@@ -1,0 +1,710 @@
+//! The full memory subsystem: per-crossbar SPM + private L1 (a "virtual
+//! SPM", §3.3), a shared non-inclusive L2, and a DRAM channel. Each virtual
+//! SPM serves a pair of border PEs; compile-time data partitioning ensures
+//! the address ranges handled by different virtual SPMs never overlap, which
+//! eliminates inter-cache coherence traffic by construction.
+//!
+//! The SPM-only baseline (original HyCUBE) is modelled as the degenerate
+//! configuration with zero cache ways: every off-SPM access walks straight
+//! to DRAM, exactly the asymmetric-latency behaviour §4.1 describes.
+
+use super::cache::{AccessKind, AccessOutcome, Cache, CacheConfig};
+use super::dram::Dram;
+use super::mshr::{LstDest, Mshr};
+use super::spm::Spm;
+use super::temp_store::TempStore;
+use super::{Addr, Backing, Cycle};
+use std::collections::HashMap;
+
+/// A memory request from a memory-accessing PE.
+#[derive(Clone, Copy, Debug)]
+pub struct MemRequest {
+    pub addr: Addr,
+    pub kind: AccessKind,
+    /// Store data (ignored for reads).
+    pub data: u32,
+    /// Identity of the issuing PE (for completion routing).
+    pub pe: usize,
+}
+
+/// Outcome of a demand request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemResponse {
+    /// Data available this cycle from the SPM.
+    HitSpm { data: u32 },
+    /// Data available after the L1 hit latency.
+    HitL1 { data: u32 },
+    /// Read miss queued: the CGRA stalls (or runs ahead) until `fill_at`.
+    ReadMiss { mshr_idx: usize, fill_at: Cycle },
+    /// Write miss absorbed by MSHR + store buffer; execution continues.
+    WriteQueued,
+    /// Structural stall: all MSHR entries (or store-buffer slots) busy.
+    MshrFull,
+}
+
+/// Outcome of a runahead prefetch request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefetchResponse {
+    /// Block already resident (SPM/L1) — nothing to do.
+    AlreadyPresent { data: u32 },
+    /// Prefetch accepted into the MSHR.
+    Queued { fill_at: Cycle },
+    /// Block already being fetched.
+    Pending,
+    /// MSHR full: prefetch dropped.
+    Dropped,
+}
+
+/// A completed read miss delivered back to the array.
+#[derive(Clone, Copy, Debug)]
+pub struct MemResponseComplete {
+    pub port: usize,
+    pub pe: usize,
+    pub addr_block: Addr,
+}
+
+/// Configuration of the whole subsystem.
+#[derive(Clone, Copy, Debug)]
+pub struct SubsystemConfig {
+    /// Number of virtual SPMs (crossbars); each serves two border PEs.
+    pub num_ports: usize,
+    /// Per-SPM capacity in bytes.
+    pub spm_bytes: u32,
+    /// Per-L1 geometry.
+    pub l1: CacheConfig,
+    /// Shared L2 geometry (zero ways in SPM-only / no-L2 configurations).
+    pub l2: CacheConfig,
+    pub mshr_entries: usize,
+    pub store_buffer_entries: usize,
+    /// L1 hit latency in cycles (Table 3: 1).
+    pub l1_hit_latency: Cycle,
+    /// L2 hit latency (Table 3: 8).
+    pub l2_hit_latency: Cycle,
+    /// L2-miss/DRAM latency (Table 3: 80).
+    pub dram_latency: Cycle,
+    pub dram_bytes_per_cycle: u64,
+    /// Runahead temp-storage partition carved from each SPM.
+    pub temp_store_bytes: u32,
+    /// Motivation experiment (Fig 3a ⑤⑥): route every port through L1 0,
+    /// modelling the pre-multi-cache design where all memory PEs contend
+    /// for one cache. Capacity should be scaled to keep storage equal.
+    pub shared_l1: bool,
+}
+
+impl SubsystemConfig {
+    /// Table 3 "Cache+SPM / Runahead" column (4×4 HyCUBE).
+    pub fn paper_base() -> Self {
+        SubsystemConfig {
+            num_ports: 2,
+            spm_bytes: 512,
+            l1: CacheConfig::from_size(4096, 4, 64),
+            l2: CacheConfig::from_size(128 * 1024, 8, 64),
+            mshr_entries: 16,
+            store_buffer_entries: 16,
+            l1_hit_latency: 1,
+            l2_hit_latency: 8,
+            dram_latency: 80,
+            dram_bytes_per_cycle: 8,
+            temp_store_bytes: 128,
+            shared_l1: false,
+        }
+    }
+
+    /// Table 3 "Reconfig" column (8×8 HyCUBE, 4 virtual SPMs).
+    pub fn paper_reconfig() -> Self {
+        SubsystemConfig {
+            num_ports: 4,
+            spm_bytes: 2048,
+            l1: CacheConfig::from_size(4096, 8, 64),
+            l2: CacheConfig::from_size(128 * 1024, 8, 128),
+            mshr_entries: 16,
+            store_buffer_entries: 16,
+            l1_hit_latency: 1,
+            l2_hit_latency: 8,
+            dram_latency: 80,
+            dram_bytes_per_cycle: 8,
+            temp_store_bytes: 256,
+            shared_l1: false,
+        }
+    }
+
+    /// SPM-only original HyCUBE: `spm_total` split across ports, no caches.
+    pub fn spm_only(num_ports: usize, spm_total: u32) -> Self {
+        SubsystemConfig {
+            num_ports,
+            spm_bytes: spm_total / num_ports as u32,
+            l1: CacheConfig { sets: 1, ways: 0, line_bytes: 16, vline_shift: 0 },
+            l2: CacheConfig { sets: 1, ways: 0, line_bytes: 16, vline_shift: 0 },
+            mshr_entries: 1,
+            store_buffer_entries: 1,
+            l1_hit_latency: 1,
+            l2_hit_latency: 0,
+            dram_latency: 80,
+            dram_bytes_per_cycle: 8,
+            temp_store_bytes: 0,
+            shared_l1: false,
+        }
+    }
+
+    /// Total storage (SPM + caches) in bytes — the Fig 12f metric.
+    pub fn total_storage_bytes(&self) -> u64 {
+        self.num_ports as u64 * self.spm_bytes as u64
+            + self.num_ports as u64 * self.l1.total_bytes() as u64
+            + self.l2.total_bytes() as u64
+    }
+}
+
+/// Aggregated access counters (Fig 11b).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubsystemStats {
+    pub spm_accesses: u64,
+    pub l1_accesses: u64,
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub l2_accesses: u64,
+    pub l2_hits: u64,
+    pub dram_accesses: u64,
+    pub prefetches_issued: u64,
+    pub prefetch_used: u64,
+    /// Demand miss arrived while its block was already being prefetched —
+    /// the stall is shortened to the fill's remaining latency.
+    pub prefetch_inflight_hits: u64,
+    pub prefetch_evicted_then_demanded: u64,
+    pub prefetch_useless: u64,
+    pub demand_misses_normal_mode: u64,
+    pub mshr_full_stalls: u64,
+}
+
+pub struct MemorySubsystem {
+    pub cfg: SubsystemConfig,
+    pub spms: Vec<Spm>,
+    pub l1s: Vec<Cache>,
+    pub mshrs: Vec<Mshr>,
+    pub l2: Cache,
+    pub dram: Dram,
+    pub backing: Backing,
+    pub temp_stores: Vec<TempStore>,
+    pub stats: SubsystemStats,
+    /// L2 request port: serialises L1-miss lookups.
+    l2_busy_until: Cycle,
+    /// Unused prefetched blocks that were evicted; if demanded later they
+    /// count as "Evicted (useful)" in Fig 15, else "Useless".
+    evicted_prefetches: HashMap<Addr, u64>,
+    /// Current runahead episode id (for prefetch epoch tagging).
+    pub prefetch_epoch: u64,
+}
+
+impl MemorySubsystem {
+    pub fn new(cfg: SubsystemConfig, backing_bytes: usize) -> Self {
+        let spms = (0..cfg.num_ports)
+            .map(|_| Spm::new(0, cfg.spm_bytes)) // windows set by place_spm()
+            .collect();
+        let l1s = (0..cfg.num_ports).map(|p| Cache::new(cfg.l1, p)).collect();
+        let mshrs = (0..cfg.num_ports)
+            .map(|_| Mshr::new(cfg.mshr_entries, cfg.mshr_entries * 4, cfg.store_buffer_entries))
+            .collect();
+        MemorySubsystem {
+            cfg,
+            spms,
+            l1s,
+            mshrs,
+            l2: Cache::new(cfg.l2, usize::MAX),
+            dram: Dram::new(cfg.dram_latency, cfg.dram_bytes_per_cycle),
+            backing: Backing::new(backing_bytes),
+            temp_stores: (0..cfg.num_ports).map(|_| TempStore::new(cfg.temp_store_bytes)).collect(),
+            stats: SubsystemStats::default(),
+            l2_busy_until: 0,
+            evicted_prefetches: HashMap::new(),
+            prefetch_epoch: 0,
+        }
+    }
+
+    /// Bind SPM `port` to the window `[base, base+usable)`; carves the
+    /// runahead temp partition out of the top.
+    pub fn place_spm(&mut self, port: usize, base: Addr) {
+        self.spms[port].base = base;
+        if self.cfg.temp_store_bytes > 0 {
+            self.spms[port].reserve_temp(self.cfg.temp_store_bytes);
+        }
+    }
+
+    /// L1/MSHR index serving `port` (all traffic hits cache 0 when the
+    /// shared-single-cache motivation mode is on).
+    #[inline]
+    fn l1_of(&self, port: usize) -> usize {
+        if self.cfg.shared_l1 { 0 } else { port }
+    }
+
+    /// Demand access from a border PE attached to `port`.
+    pub fn request(&mut self, port: usize, req: MemRequest, cycle: Cycle) -> MemResponse {
+        let spm = &mut self.spms[port];
+        if spm.contains(req.addr) {
+            spm.record_access();
+            self.stats.spm_accesses += 1;
+            return match req.kind {
+                AccessKind::Read => MemResponse::HitSpm { data: self.backing.read_u32(req.addr) },
+                AccessKind::Write => {
+                    self.backing.write_u32(req.addr, req.data);
+                    MemResponse::HitSpm { data: req.data }
+                }
+            };
+        }
+        // L1 path.
+        let port = self.l1_of(port);
+        self.stats.l1_accesses += 1;
+        let l1 = &mut self.l1s[port];
+        let block = l1.block_addr(req.addr);
+        match l1.access(req.addr, req.kind) {
+            AccessOutcome::Hit => {
+                self.stats.l1_hits += 1;
+                match req.kind {
+                    AccessKind::Read => {
+                        MemResponse::HitL1 { data: self.backing.read_u32(req.addr) }
+                    }
+                    AccessKind::Write => {
+                        self.backing.write_u32(req.addr, req.data);
+                        MemResponse::HitL1 { data: req.data }
+                    }
+                }
+            }
+            AccessOutcome::Miss => {
+                self.stats.l1_misses += 1;
+                self.stats.demand_misses_normal_mode += 1;
+                if let Some(cnt) = self.evicted_prefetches.get_mut(&block) {
+                    self.stats.prefetch_evicted_then_demanded += 1;
+                    *cnt -= 1;
+                    if *cnt == 0 {
+                        self.evicted_prefetches.remove(&block);
+                    }
+                }
+                let mshr = &mut self.mshrs[port];
+                // Secondary miss: attach to the pending fetch.
+                if let Some(idx) = mshr.find(block) {
+                    let fill_at = mshr.entry(idx).fill_at;
+                    if mshr.entry(idx).prefetch {
+                        self.stats.prefetch_inflight_hits += 1;
+                    }
+                    return Self::attach_demand(mshr, idx, fill_at, &mut self.backing, req, block);
+                }
+                if mshr.is_full() {
+                    self.stats.mshr_full_stalls += 1;
+                    return MemResponse::MshrFull;
+                }
+                let fill_at = Self::fetch_from_l2(
+                    &mut self.l2,
+                    &mut self.dram,
+                    &mut self.stats,
+                    &mut self.l2_busy_until,
+                    block,
+                    self.cfg.l1.vline_bytes(),
+                    self.cfg.l2_hit_latency,
+                    cycle,
+                );
+                let idx = mshr.allocate(block, fill_at, false).expect("checked not full");
+                Self::attach_demand(mshr, idx, fill_at, &mut self.backing, req, block)
+            }
+        }
+    }
+
+    fn attach_demand(
+        mshr: &mut Mshr,
+        idx: usize,
+        fill_at: Cycle,
+        backing: &mut Backing,
+        req: MemRequest,
+        block: Addr,
+    ) -> MemResponse {
+        let offset = (req.addr - block) / 4;
+        match req.kind {
+            AccessKind::Read => {
+                mshr.push_lst(idx, LstDest::Read { pe: req.pe }, offset);
+                MemResponse::ReadMiss { mshr_idx: idx, fill_at }
+            }
+            AccessKind::Write => match mshr.push_store(req.addr, req.data) {
+                Some(sb_idx) => {
+                    mshr.push_lst(idx, LstDest::Write { sb_idx }, offset);
+                    // Functional effect is applied immediately; timing is
+                    // carried by the MSHR entry.
+                    backing.write_u32(req.addr, req.data);
+                    MemResponse::WriteQueued
+                }
+                None => MemResponse::MshrFull,
+            },
+        }
+    }
+
+    /// L2 lookup + (on miss) DRAM fetch; returns the L1 fill-arrival cycle.
+    /// The L2 is non-inclusive: it is filled on the DRAM response and on
+    /// dirty L1 evictions.
+    #[allow(clippy::too_many_arguments)]
+    fn fetch_from_l2(
+        l2: &mut Cache,
+        dram: &mut Dram,
+        stats: &mut SubsystemStats,
+        l2_busy_until: &mut Cycle,
+        block: Addr,
+        vline_bytes: u32,
+        l2_hit_latency: Cycle,
+        cycle: Cycle,
+    ) -> Cycle {
+        if l2.num_ways() == 0 {
+            // SPM-only / no-L2 configuration: straight to DRAM.
+            stats.dram_accesses += 1;
+            return dram.schedule(cycle, vline_bytes as u64);
+        }
+        let start = cycle.max(*l2_busy_until);
+        *l2_busy_until = start + 1; // one lookup per cycle
+        stats.l2_accesses += 1;
+        match l2.access(block, AccessKind::Read) {
+            AccessOutcome::Hit => {
+                stats.l2_hits += 1;
+                start + l2_hit_latency
+            }
+            AccessOutcome::Miss => {
+                stats.dram_accesses += 1;
+                let arrive = dram.schedule(start, l2.config().vline_bytes() as u64);
+                l2.fill(block, false, 0);
+                arrive
+            }
+        }
+    }
+
+    /// Runahead prefetch probe+issue (§3.2): never stalls, never touches
+    /// demand LRU on a hit, returns data when the block is resident so
+    /// address chains can keep resolving.
+    pub fn prefetch(&mut self, port: usize, addr: Addr, cycle: Cycle) -> PrefetchResponse {
+        let spm = &self.spms[port];
+        if spm.contains(addr) {
+            return PrefetchResponse::AlreadyPresent { data: self.backing.read_u32(addr) };
+        }
+        let port = self.l1_of(port);
+        let l1 = &self.l1s[port];
+        let block = l1.block_addr(addr);
+        if l1.probe(addr) == AccessOutcome::Hit {
+            return PrefetchResponse::AlreadyPresent { data: self.backing.read_u32(addr) };
+        }
+        let mshr = &mut self.mshrs[port];
+        if mshr.find(block).is_some() {
+            return PrefetchResponse::Pending;
+        }
+        if mshr.is_full() {
+            return PrefetchResponse::Dropped;
+        }
+        let fill_at = Self::fetch_from_l2(
+            &mut self.l2,
+            &mut self.dram,
+            &mut self.stats,
+            &mut self.l2_busy_until,
+            block,
+            self.cfg.l1.vline_bytes(),
+            self.cfg.l2_hit_latency,
+            cycle,
+        );
+        mshr.allocate(block, fill_at, true);
+        self.stats.prefetches_issued += 1;
+        PrefetchResponse::Queued { fill_at }
+    }
+
+    /// Advance fills whose data has arrived by `cycle`. Returns completed
+    /// demand reads so the array can leave its stall / runahead state.
+    pub fn tick(&mut self, cycle: Cycle) -> Vec<MemResponseComplete> {
+        let mut completions = Vec::new();
+        for port in 0..self.cfg.num_ports {
+            // Fast path (§Perf): most cycles have no arriving fill; the
+            // cached min avoids the ready-list allocation entirely.
+            if self.mshrs[port].next_fill_at().map_or(true, |t| t > cycle) {
+                continue;
+            }
+            for idx in self.mshrs[port].ready(cycle) {
+                let entry = self.mshrs[port].entry(idx).clone();
+                let lst = self.mshrs[port].complete(idx);
+                let demand_attached =
+                    lst.iter().any(|e| matches!(e.dest, LstDest::Read { .. } | LstDest::Write { .. }));
+                // Install into L1. A pure-prefetch fill keeps its flag so a
+                // later demand touch counts as "Used" (Fig 15).
+                let keep_prefetch_flag = entry.prefetch && !demand_attached;
+                if let Some(ev) =
+                    self.l1s[port].fill(entry.block_addr, keep_prefetch_flag, self.prefetch_epoch)
+                {
+                    if ev.unused_prefetch {
+                        *self.evicted_prefetches.entry(ev.block_addr).or_insert(0) += 1;
+                    }
+                    if ev.dirty && self.l2.num_ways() > 0 {
+                        // Non-inclusive L2 absorbs the writeback.
+                        self.l2.fill(ev.block_addr, false, 0);
+                        self.l2.mark_dirty(ev.block_addr);
+                    }
+                }
+                if entry.prefetch && demand_attached {
+                    // Demand arrived while prefetch was in flight: the
+                    // prefetch was useful.
+                    self.stats.prefetch_used += 1;
+                }
+                for e in lst {
+                    match e.dest {
+                        LstDest::Read { pe } => completions.push(MemResponseComplete {
+                            port,
+                            pe,
+                            addr_block: entry.block_addr,
+                        }),
+                        LstDest::Write { sb_idx } => {
+                            // Data was applied functionally at issue; merge
+                            // now marks the line dirty and frees the slot.
+                            if let Some((addr, _)) = self.mshrs[port].store_at(sb_idx) {
+                                self.l1s[port].mark_dirty(addr);
+                                self.mshrs[port].release_store(sb_idx);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        completions
+    }
+
+    /// Earliest pending fill across all ports (stall fast-forwarding).
+    pub fn next_event(&self) -> Option<Cycle> {
+        self.mshrs.iter().filter_map(|m| m.next_fill_at()).min()
+    }
+
+    /// Finalise Fig 15 accounting: remaining evicted-unused prefetches and
+    /// never-touched resident prefetch lines are "Useless".
+    pub fn finalize_prefetch_stats(&mut self) {
+        let leftover_evicted: u64 = self.evicted_prefetches.values().sum();
+        let resident_unused: u64 = self.l1s.iter().map(|c| c.unused_prefetch_lines()).sum();
+        self.stats.prefetch_useless = leftover_evicted + resident_unused;
+        self.stats.prefetch_used = self.l1s.iter().map(|c| c.stats.prefetch_used).sum::<u64>()
+            + self.stats.prefetch_inflight_hits;
+    }
+
+    /// Prefetch blocks evicted before use whose data was later demanded
+    /// (the Fig 15 "Evicted" bucket).
+    pub fn prefetch_evicted_useful(&self) -> u64 {
+        self.stats.prefetch_evicted_then_demanded
+    }
+
+    pub fn l1_stats_sum(&self) -> super::cache::CacheStats {
+        let mut s = super::cache::CacheStats::default();
+        for c in &self.l1s {
+            let cs = c.stats;
+            s.reads += cs.reads;
+            s.writes += cs.writes;
+            s.hits += cs.hits;
+            s.misses += cs.misses;
+            s.prefetch_used += cs.prefetch_used;
+            s.prefetch_evicted += cs.prefetch_evicted;
+            s.writebacks += cs.writebacks;
+            s.fills += cs.fills;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SubsystemConfig {
+        SubsystemConfig {
+            num_ports: 2,
+            spm_bytes: 256,
+            l1: CacheConfig { sets: 4, ways: 2, line_bytes: 16, vline_shift: 0 },
+            l2: CacheConfig { sets: 16, ways: 4, line_bytes: 16, vline_shift: 0 },
+            mshr_entries: 4,
+            store_buffer_entries: 4,
+            l1_hit_latency: 1,
+            l2_hit_latency: 8,
+            dram_latency: 80,
+            dram_bytes_per_cycle: 8,
+            temp_store_bytes: 64,
+            shared_l1: false,
+        }
+    }
+
+    fn mk() -> MemorySubsystem {
+        let mut m = MemorySubsystem::new(small_cfg(), 1 << 16);
+        m.place_spm(0, 0x0000);
+        m.place_spm(1, 0x1000);
+        m
+    }
+
+    #[test]
+    fn spm_hit_is_immediate() {
+        let mut m = mk();
+        m.backing.write_u32(0x10, 99);
+        let r = m.request(0, MemRequest { addr: 0x10, kind: AccessKind::Read, data: 0, pe: 0 }, 0);
+        assert_eq!(r, MemResponse::HitSpm { data: 99 });
+        assert_eq!(m.stats.spm_accesses, 1);
+    }
+
+    #[test]
+    fn read_miss_fills_and_then_hits() {
+        let mut m = mk();
+        m.backing.write_u32(0x8000, 7);
+        let r = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 3 }, 0);
+        let fill_at = match r {
+            MemResponse::ReadMiss { fill_at, .. } => fill_at,
+            other => panic!("expected miss, got {other:?}"),
+        };
+        assert!(fill_at >= 80); // went to DRAM
+        assert!(m.tick(fill_at - 1).is_empty());
+        let done = m.tick(fill_at);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].pe, 3);
+        let r2 = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 3 }, fill_at + 1);
+        assert_eq!(r2, MemResponse::HitL1 { data: 7 });
+    }
+
+    #[test]
+    fn l2_hit_is_faster_than_dram() {
+        let mut m = mk();
+        // Prime L2 by missing once and filling.
+        let r = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, 0);
+        let f = match r { MemResponse::ReadMiss { fill_at, .. } => fill_at, _ => panic!() };
+        m.tick(f);
+        // Evict from L1 (2 ways, set of 0x8000): fill two conflicting lines.
+        for i in 1..=2u32 {
+            let addr = 0x8000 + i * 64; // same set (4 sets x 16B = 64B stride)
+            let r = m.request(0, MemRequest { addr, kind: AccessKind::Read, data: 0, pe: 0 }, f + i as u64 * 200);
+            if let MemResponse::ReadMiss { fill_at, .. } = r {
+                m.tick(fill_at);
+            }
+        }
+        // 0x8000 now misses L1 but hits L2.
+        let t = 10_000;
+        let r = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, t);
+        match r {
+            MemResponse::ReadMiss { fill_at, .. } => assert_eq!(fill_at, t + 8),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn write_miss_is_non_blocking_and_functionally_applied() {
+        let mut m = mk();
+        let r = m.request(0, MemRequest { addr: 0x9000, kind: AccessKind::Write, data: 5, pe: 0 }, 0);
+        assert_eq!(r, MemResponse::WriteQueued);
+        assert_eq!(m.backing.read_u32(0x9000), 5);
+        // Fill arrives; line becomes dirty; store buffer freed.
+        let f = m.next_event().unwrap();
+        m.tick(f);
+        let r2 = m.request(0, MemRequest { addr: 0x9000, kind: AccessKind::Read, data: 0, pe: 0 }, f + 1);
+        assert_eq!(r2, MemResponse::HitL1 { data: 5 });
+    }
+
+    #[test]
+    fn mshr_full_reported() {
+        let mut m = mk();
+        for i in 0..4u32 {
+            let r = m.request(0, MemRequest { addr: 0xA000 + i * 1024, kind: AccessKind::Read, data: 0, pe: 0 }, 0);
+            assert!(matches!(r, MemResponse::ReadMiss { .. }));
+        }
+        let r = m.request(0, MemRequest { addr: 0xF000, kind: AccessKind::Read, data: 0, pe: 0 }, 0);
+        assert_eq!(r, MemResponse::MshrFull);
+        assert_eq!(m.stats.mshr_full_stalls, 1);
+    }
+
+    #[test]
+    fn secondary_miss_attaches_to_pending_entry() {
+        let mut m = mk();
+        let r1 = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, 0);
+        let f1 = match r1 { MemResponse::ReadMiss { fill_at, .. } => fill_at, _ => panic!() };
+        let r2 = m.request(0, MemRequest { addr: 0x8004, kind: AccessKind::Read, data: 0, pe: 1 }, 1);
+        match r2 {
+            MemResponse::ReadMiss { fill_at, .. } => assert_eq!(fill_at, f1),
+            other => panic!("{other:?}"),
+        }
+        let done = m.tick(f1);
+        assert_eq!(done.len(), 2);
+        assert_eq!(m.stats.dram_accesses, 1); // one fetch served both
+    }
+
+    #[test]
+    fn prefetch_then_demand_counts_used() {
+        let mut m = mk();
+        m.backing.write_u32(0xB000, 3);
+        let p = m.prefetch(0, 0xB000, 0);
+        let f = match p { PrefetchResponse::Queued { fill_at } => fill_at, other => panic!("{other:?}") };
+        m.tick(f);
+        let r = m.request(0, MemRequest { addr: 0xB000, kind: AccessKind::Read, data: 0, pe: 0 }, f + 1);
+        assert_eq!(r, MemResponse::HitL1 { data: 3 });
+        m.finalize_prefetch_stats();
+        assert_eq!(m.stats.prefetch_used, 1);
+        assert_eq!(m.stats.prefetch_useless, 0);
+    }
+
+    #[test]
+    fn unused_prefetch_counts_useless_at_end() {
+        let mut m = mk();
+        let p = m.prefetch(0, 0xB000, 0);
+        let f = match p { PrefetchResponse::Queued { fill_at } => fill_at, _ => panic!() };
+        m.tick(f);
+        m.finalize_prefetch_stats();
+        assert_eq!(m.stats.prefetch_useless, 1);
+        assert_eq!(m.stats.prefetch_used, 0);
+    }
+
+    #[test]
+    fn demand_on_inflight_prefetch_is_inflight_hit() {
+        let mut m = mk();
+        let p = m.prefetch(0, 0xB000, 0);
+        assert!(matches!(p, PrefetchResponse::Queued { .. }));
+        let r = m.request(0, MemRequest { addr: 0xB000, kind: AccessKind::Read, data: 0, pe: 0 }, 1);
+        assert!(matches!(r, MemResponse::ReadMiss { .. }));
+        assert_eq!(m.stats.prefetch_inflight_hits, 1);
+        let f = m.next_event().unwrap();
+        let done = m.tick(f);
+        assert_eq!(done.len(), 1);
+        m.finalize_prefetch_stats();
+        assert_eq!(m.stats.prefetch_used, 1);
+    }
+
+    #[test]
+    fn prefetch_on_resident_block_returns_data() {
+        let mut m = mk();
+        m.backing.write_u32(0x20, 11); // SPM window of port 0
+        assert_eq!(m.prefetch(0, 0x20, 0), PrefetchResponse::AlreadyPresent { data: 11 });
+    }
+
+    #[test]
+    fn spm_only_config_goes_straight_to_dram() {
+        let cfg = SubsystemConfig::spm_only(2, 512);
+        let mut m = MemorySubsystem::new(cfg, 1 << 16);
+        m.place_spm(0, 0);
+        m.place_spm(1, 256);
+        let r = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, 0);
+        match r {
+            MemResponse::ReadMiss { fill_at, .. } => assert!(fill_at >= 80),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(m.stats.dram_accesses, 1);
+        assert_eq!(m.stats.l2_accesses, 0);
+        // After the fill, the same address still misses (no cache retains it).
+        let f = m.next_event().unwrap();
+        m.tick(f);
+        let r2 = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, f + 1);
+        assert!(matches!(r2, MemResponse::ReadMiss { .. }));
+        assert_eq!(m.stats.dram_accesses, 2);
+    }
+
+    #[test]
+    fn evicted_prefetch_then_demand_counts_evicted_useful() {
+        let mut m = mk();
+        // Prefetch a block, evict it with demand fills to the same set,
+        // then demand the original block.
+        let p = m.prefetch(0, 0x8000, 0);
+        let f = match p { PrefetchResponse::Queued { fill_at } => fill_at, _ => panic!() };
+        m.tick(f);
+        let mut t = f + 1;
+        for i in 1..=2u32 {
+            let r = m.request(0, MemRequest { addr: 0x8000 + i * 64, kind: AccessKind::Read, data: 0, pe: 0 }, t);
+            if let MemResponse::ReadMiss { fill_at, .. } = r {
+                m.tick(fill_at);
+                t = fill_at + 1;
+            }
+        }
+        let r = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, t);
+        assert!(matches!(r, MemResponse::ReadMiss { .. }));
+        assert_eq!(m.prefetch_evicted_useful(), 1);
+    }
+}

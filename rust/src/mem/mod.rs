@@ -1,0 +1,29 @@
+//! The redesigned CGRA memory subsystem (paper §3.1/§3.3/§3.4.1).
+//!
+//! The subsystem pairs each crossbar ("virtual SPM", shared by two border
+//! PEs) with a small SPM and a private non-blocking L1 cache; all L1s share
+//! a non-inclusive L2 backed by a fixed-latency DRAM model. Caches support
+//! the paper's reconfiguration hooks: way *permission registers* (cache-size
+//! reconfiguration at way granularity, §3.4.1) and *virtual cache lines*
+//! (line-size reconfiguration by merging `2^m` adjacent physical lines).
+
+pub mod backing;
+pub mod cache;
+pub mod dram;
+pub mod hierarchy;
+pub mod mshr;
+pub mod spm;
+pub mod temp_store;
+
+pub use backing::Backing;
+pub use cache::{AccessKind, AccessOutcome, Cache, CacheConfig, CacheStats};
+pub use dram::Dram;
+pub use hierarchy::{MemRequest, MemResponse, MemResponseComplete, MemorySubsystem, PrefetchResponse, SubsystemConfig, SubsystemStats};
+pub use mshr::{LstEntry, LstDest, Mshr, MshrEntry};
+pub use spm::Spm;
+pub use temp_store::TempStore;
+
+/// Byte address in the simulated 32-bit flat address space.
+pub type Addr = u32;
+/// Simulated cycle count.
+pub type Cycle = u64;

@@ -1,0 +1,95 @@
+//! Scratchpad memory module (one per virtual SPM / crossbar pair).
+//!
+//! The SPM is a software-managed, single-cycle buffer. Data placement is
+//! decided at "compile" time by the workload's data-allocation pass: each
+//! SPM owns a contiguous address window, and any access inside the window
+//! hits with SPM latency. A slice of the window can be carved out as the
+//! runahead *temporary storage* partition (§3.2.1 — partitioning the SPM
+//! beat repurposing cache space in the authors' evaluation).
+
+use super::Addr;
+
+#[derive(Clone, Debug)]
+pub struct Spm {
+    /// Start of the address window mapped onto this SPM.
+    pub base: Addr,
+    /// Total capacity in bytes.
+    pub size: u32,
+    /// Bytes at the top of the window reserved for runahead temp storage.
+    pub temp_reserve: u32,
+    /// Demand accesses that hit this SPM.
+    pub accesses: u64,
+    /// Address ranges kept resident by DMA double-buffering. SPM-only
+    /// CGRAs prefetch *regular* streams effectively (§2.2: "prefetching
+    /// strategies are effective only for regular memory access patterns"),
+    /// so sequential arrays marked as streamed hit even when the SPM is
+    /// too small to hold them whole.
+    pub streamed: Vec<(Addr, u32)>,
+}
+
+impl Spm {
+    pub fn new(base: Addr, size: u32) -> Self {
+        Spm { base, size, temp_reserve: 0, accesses: 0, streamed: Vec::new() }
+    }
+
+    /// Mark `[base, base+len)` as a DMA-streamed regular range.
+    pub fn add_streamed(&mut self, base: Addr, len: u32) {
+        self.streamed.push((base, len));
+    }
+
+    /// Reserve `bytes` at the top of the window for runahead temp storage.
+    /// Returns the base address of the reserved partition.
+    pub fn reserve_temp(&mut self, bytes: u32) -> Addr {
+        assert!(bytes <= self.size, "temp reservation exceeds SPM capacity");
+        self.temp_reserve = bytes;
+        self.base + self.size - bytes
+    }
+
+    /// Usable (non-reserved) capacity in bytes.
+    pub fn usable(&self) -> u32 {
+        self.size - self.temp_reserve
+    }
+
+    /// Does `addr` fall in the SPM's usable window or a streamed range?
+    #[inline]
+    pub fn contains(&self, addr: Addr) -> bool {
+        (addr >= self.base && addr < self.base + self.usable())
+            || self.streamed.iter().any(|&(b, l)| addr >= b && addr < b + l)
+    }
+
+    #[inline]
+    pub fn record_access(&mut self) {
+        self.accesses += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_membership() {
+        let s = Spm::new(0x1000, 512);
+        assert!(s.contains(0x1000));
+        assert!(s.contains(0x11ff));
+        assert!(!s.contains(0x1200));
+        assert!(!s.contains(0xfff));
+    }
+
+    #[test]
+    fn temp_reservation_shrinks_usable_window() {
+        let mut s = Spm::new(0x1000, 512);
+        let tbase = s.reserve_temp(128);
+        assert_eq!(tbase, 0x1000 + 384);
+        assert_eq!(s.usable(), 384);
+        assert!(!s.contains(tbase)); // reserved region no longer demand-addressable
+        assert!(s.contains(tbase - 4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn over_reservation_panics() {
+        let mut s = Spm::new(0, 64);
+        s.reserve_temp(128);
+    }
+}

@@ -1,0 +1,89 @@
+//! Runahead temporary storage (§3.2.1). Valid writes performed during
+//! runahead are redirected here instead of the cache/SPM so that normal
+//! execution state is never corrupted; runahead reads check it first so
+//! runahead-local RAW dependencies still resolve. Physically it is a
+//! partition carved out of the SPM; we model it as a small associative
+//! word store with that partition's capacity.
+
+use super::Addr;
+use std::collections::HashMap;
+
+pub struct TempStore {
+    /// Capacity in 32-bit words (the SPM partition size / 4).
+    capacity_words: usize,
+    map: HashMap<Addr, u32>,
+    /// Writes dropped because the partition filled up.
+    pub overflow_drops: u64,
+}
+
+impl TempStore {
+    pub fn new(capacity_bytes: u32) -> Self {
+        TempStore {
+            capacity_words: (capacity_bytes / 4) as usize,
+            map: HashMap::new(),
+            overflow_drops: 0,
+        }
+    }
+
+    /// Record a runahead write. Returns false (and counts a drop) when the
+    /// partition is full — the write is then simply discarded, which is
+    /// safe because temp storage only exists to improve runahead fidelity.
+    pub fn write(&mut self, addr: Addr, data: u32) -> bool {
+        let key = addr & !3;
+        if self.map.len() >= self.capacity_words && !self.map.contains_key(&key) {
+            self.overflow_drops += 1;
+            return false;
+        }
+        self.map.insert(key, data);
+        true
+    }
+
+    /// Runahead read probe.
+    pub fn read(&self, addr: Addr) -> Option<u32> {
+        self.map.get(&(addr & !3)).copied()
+    }
+
+    /// Discard all runahead state (on exit from runahead, §3.2 — writes are
+    /// never committed, so no rollback is needed).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_within_runahead_resolves() {
+        let mut t = TempStore::new(64);
+        assert!(t.write(0x100, 42));
+        assert_eq!(t.read(0x100), Some(42));
+        assert_eq!(t.read(0x104), None);
+    }
+
+    #[test]
+    fn clear_discards_everything() {
+        let mut t = TempStore::new(64);
+        t.write(0x100, 1);
+        t.clear();
+        assert_eq!(t.read(0x100), None);
+        assert_eq!(t.occupancy(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_are_counted_and_safe() {
+        let mut t = TempStore::new(8); // two words
+        assert!(t.write(0x0, 1));
+        assert!(t.write(0x4, 2));
+        assert!(!t.write(0x8, 3));
+        assert_eq!(t.overflow_drops, 1);
+        // existing keys can still be updated at capacity
+        assert!(t.write(0x0, 9));
+        assert_eq!(t.read(0x0), Some(9));
+    }
+}

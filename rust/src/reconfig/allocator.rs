@@ -1,0 +1,116 @@
+//! Algorithm 1 — Optimal Cache Way Allocation.
+//!
+//! `max_profit(H, T)` maximises `Σ_i H[i][S_i]` subject to `Σ S_i ≤ T`
+//! with a dynamic program over (cache index, ways spent):
+//! `dp[i][j] = max_k dp[i-1][j-k] + H[i-1][k]`, followed by a backtrace
+//! recovering the per-cache allocation. `H[i][k]` is the (log) time hit
+//! rate of cache `i` given `k` ways, supplied by the profiling model.
+//! Time complexity O(n·T²), exactly the paper's bound.
+
+/// Returns `(max_profit, allocations)`. `h[i]` must have at least
+/// `t_max + 1` entries (profit of giving cache `i` exactly `k` ways,
+/// k = 0..=t_max); surplus columns are ignored.
+pub fn max_profit(h: &[Vec<f64>], t_max: usize) -> (f64, Vec<usize>) {
+    let n = h.len();
+    assert!(h.iter().all(|row| row.len() >= t_max + 1), "profit matrix shape");
+    // dp[i][j]: best profit allocating j ways among the first i caches.
+    let mut dp = vec![vec![f64::NEG_INFINITY; t_max + 1]; n + 1];
+    for j in 0..=t_max {
+        dp[0][j] = 0.0;
+    }
+    for i in 1..=n {
+        for j in 0..=t_max {
+            // Default: nothing for cache i-1.
+            let mut best = dp[i - 1][j] + h[i - 1][0];
+            for k in 1..=j {
+                let cand = dp[i - 1][j - k] + h[i - 1][k];
+                if cand > best {
+                    best = cand;
+                }
+            }
+            dp[i][j] = best;
+        }
+    }
+    // Backtrace.
+    let mut alloc = vec![0usize; n];
+    let mut j = t_max;
+    for i in (1..=n).rev() {
+        for k in 0..=j {
+            if (dp[i][j] - (dp[i - 1][j - k] + h[i - 1][k])).abs() < 1e-12 {
+                alloc[i - 1] = k;
+                j -= k;
+                break;
+            }
+        }
+    }
+    (dp[n][t_max], alloc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Exhaustive reference for small instances.
+    fn brute(h: &[Vec<f64>], t_max: usize) -> f64 {
+        fn rec(h: &[Vec<f64>], i: usize, left: usize) -> f64 {
+            if i == h.len() {
+                return 0.0;
+            }
+            (0..=left).map(|k| h[i][k] + rec(h, i + 1, left - k)).fold(f64::NEG_INFINITY, f64::max)
+        }
+        rec(h, 0, t_max)
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let n = 1 + (rng.next_u64() % 4) as usize;
+            let t = (rng.next_u64() % 9) as usize;
+            let h: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..=t).map(|_| rng.gen_f32() as f64).collect())
+                .collect();
+            let (dp, alloc) = max_profit(&h, t);
+            let bf = brute(&h, t);
+            assert!((dp - bf).abs() < 1e-9, "dp {dp} vs brute {bf}");
+            assert!(alloc.iter().sum::<usize>() <= t);
+            // The backtraced allocation achieves the reported profit.
+            let achieved: f64 = alloc.iter().enumerate().map(|(i, &k)| h[i][k]).sum();
+            assert!((achieved - dp).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn monotone_profits_allocate_everything() {
+        // Strictly increasing profits: every way should be spent.
+        let h: Vec<Vec<f64>> = (0..3).map(|i| (0..=8).map(|k| (k as f64) * (i + 1) as f64).collect()).collect();
+        let (_, alloc) = max_profit(&h, 8);
+        assert_eq!(alloc.iter().sum::<usize>(), 8);
+        // The highest-slope cache gets the most ways.
+        assert!(alloc[2] >= alloc[0]);
+    }
+
+    #[test]
+    fn paper_figure10_shape_single_and_two_caches() {
+        // cache count = 1: trivially allocate all ways to the only cache
+        // when profits increase.
+        let h1 = vec![vec![0.0, 0.5, 0.8, 0.9]];
+        let (p, a) = max_profit(&h1, 3);
+        assert_eq!(a, vec![3]);
+        assert!((p - 0.9).abs() < 1e-12);
+        // cache count = 2 with diminishing returns splits the budget.
+        let h2 = vec![vec![0.0, 0.7, 0.8, 0.85], vec![0.0, 0.7, 0.8, 0.85]];
+        let (_, a2) = max_profit(&h2, 3);
+        assert_eq!(a2.iter().sum::<usize>(), 3);
+        assert!(a2[0] >= 1 && a2[1] >= 1, "diminishing returns split: {a2:?}");
+    }
+
+    #[test]
+    fn zero_budget_allocates_zero() {
+        let h = vec![vec![0.1], vec![0.2]];
+        let (p, a) = max_profit(&h, 0);
+        assert_eq!(a, vec![0, 0]);
+        assert!((p - 0.3).abs() < 1e-12);
+    }
+}

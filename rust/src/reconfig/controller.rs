@@ -1,0 +1,171 @@
+//! Reconfiguration controller (Fig 8b): turns a set of sampled access
+//! windows into a concrete plan — per-L1 way counts (permission-register
+//! rewrites) and virtual-line shifts — and applies it to a live memory
+//! subsystem by migrating ways between caches (flushing their contents,
+//! which is what the hardware's invalidate-on-reassign does).
+
+use super::allocator::max_profit;
+use super::model::{profile_port, PortProfile};
+use crate::mem::MemorySubsystem;
+use crate::sim::AccessTrace;
+
+/// The plan produced by the software phase.
+#[derive(Clone, Debug)]
+pub struct ReconfigPlan {
+    /// Ways per L1 (sums to the global way budget).
+    pub ways: Vec<usize>,
+    /// Virtual-line shift per L1.
+    pub shifts: Vec<u8>,
+    /// Expected Σ log(time hit rate) from the model.
+    pub expected_profit: f64,
+    /// Per-port profiles (kept for reporting/diagnostics).
+    pub profiles: Vec<PortProfile>,
+}
+
+/// Phase 1+2 of §3.4: profile each port's sample ignoring the global
+/// budget, then allocate the real budget with Algorithm 1.
+pub fn plan_from_traces(
+    mem: &MemorySubsystem,
+    traces: &AccessTrace,
+    shifts: &[u8],
+) -> ReconfigPlan {
+    let ports = mem.cfg.num_ports;
+    let budget: usize = mem.l1s.iter().map(|c| c.num_ways()).sum();
+    let template = mem.cfg.l1;
+    let mut profiles = Vec::with_capacity(ports);
+    for p in 0..ports {
+        profiles.push(profile_port(&traces.events[p], template, budget, shifts));
+    }
+    let h: Vec<Vec<f64>> = profiles.iter().map(|p| p.profit.clone()).collect();
+    let (expected_profit, mut ways) = max_profit(&h, budget);
+    // Ways are physical: any budget the DP left unspent (flat profits)
+    // is parked round-robin so every way keeps an owner.
+    let mut leftover = budget - ways.iter().sum::<usize>();
+    let mut p = 0usize;
+    while leftover > 0 {
+        ways[p % ports] += 1;
+        p += 1;
+        leftover -= 1;
+    }
+    let shifts_out: Vec<u8> = profiles
+        .iter()
+        .zip(ways.iter())
+        .map(|(p, &w)| p.best_shift[w])
+        .collect();
+    ReconfigPlan { ways, shifts: shifts_out, expected_profit, profiles }
+}
+
+/// Apply a plan to the live subsystem: move ways between L1s via their
+/// permission registers and set virtual-line shifts. Returns the number of
+/// ways migrated (each costs a flush of that way).
+pub fn apply_plan(mem: &mut MemorySubsystem, plan: &ReconfigPlan) -> usize {
+    let ports = mem.cfg.num_ports;
+    assert_eq!(plan.ways.len(), ports);
+    // Line-size reconfiguration first (flushes the cache's contents).
+    for p in 0..ports {
+        if mem.l1s[p].config().vline_shift != plan.shifts[p] {
+            let _ = mem.l1s[p].set_vline_shift(plan.shifts[p]);
+        }
+    }
+    // Way migration: harvest surplus ways into a pool, then grant.
+    let mut pool = Vec::new();
+    let mut migrated = 0usize;
+    for p in 0..ports {
+        while mem.l1s[p].num_ways() > plan.ways[p] {
+            let (way, _flushed) = mem.l1s[p].take_way().expect("has ways");
+            pool.push(way);
+            migrated += 1;
+        }
+    }
+    for p in 0..ports {
+        while mem.l1s[p].num_ways() < plan.ways[p] {
+            let way = pool.pop().expect("way budget conserved");
+            mem.l1s[p].grant_way(way, p);
+        }
+    }
+    assert!(pool.is_empty(), "all ways must be reassigned");
+    migrated
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{MemorySubsystem, SubsystemConfig};
+    use crate::sim::trace::TraceEvent;
+    use crate::sim::AccessTrace;
+
+    fn mk() -> MemorySubsystem {
+        let mut m = MemorySubsystem::new(SubsystemConfig::paper_reconfig(), 1 << 22);
+        for p in 0..4 {
+            m.place_spm(p, p as u32 * 0x20_0000);
+        }
+        m
+    }
+
+    fn traces_with_one_irregular_port() -> AccessTrace {
+        let mut t = AccessTrace::new(4, 1024);
+        let mut x = 5u32;
+        for i in 0..1024u64 {
+            // Port 0: pure sequential stream.
+            t.record(TraceEvent { cycle: i, pe: 0, port: 0, addr: (i as u32) * 4, is_write: false });
+            // Port 3: random gather over 256 KB.
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+            t.record(TraceEvent {
+                cycle: i,
+                pe: 12,
+                port: 3,
+                addr: 0x10_0000 + (x % 262144) & !3,
+                is_write: false,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn plan_shifts_ways_from_regular_to_irregular_port() {
+        let mem = mk();
+        let traces = traces_with_one_irregular_port();
+        let plan = plan_from_traces(&mem, &traces, &[0, 1]);
+        let budget: usize = mem.l1s.iter().map(|c| c.num_ways()).sum();
+        assert_eq!(plan.ways.iter().sum::<usize>(), budget);
+        assert!(
+            plan.ways[3] > plan.ways[0],
+            "irregular port should win ways: {:?}",
+            plan.ways
+        );
+    }
+
+    #[test]
+    fn apply_conserves_way_budget_and_matches_plan() {
+        let mut mem = mk();
+        let traces = traces_with_one_irregular_port();
+        let plan = plan_from_traces(&mem, &traces, &[0, 1]);
+        let before: usize = mem.l1s.iter().map(|c| c.num_ways()).sum();
+        apply_plan(&mut mem, &plan);
+        let after: usize = mem.l1s.iter().map(|c| c.num_ways()).sum();
+        assert_eq!(before, after);
+        for p in 0..4 {
+            assert_eq!(mem.l1s[p].num_ways(), plan.ways[p], "port {p}");
+            assert_eq!(mem.l1s[p].config().vline_shift, plan.shifts[p]);
+        }
+    }
+
+    #[test]
+    fn applying_same_plan_twice_is_idempotent() {
+        let mut mem = mk();
+        let traces = traces_with_one_irregular_port();
+        let plan = plan_from_traces(&mem, &traces, &[0, 1]);
+        apply_plan(&mut mem, &plan);
+        let migrated_second = apply_plan(&mut mem, &plan);
+        assert_eq!(migrated_second, 0);
+    }
+
+    #[test]
+    fn empty_traces_yield_budget_preserving_plan() {
+        let mem = mk();
+        let traces = AccessTrace::new(4, 64);
+        let plan = plan_from_traces(&mem, &traces, &[0, 1]);
+        let budget: usize = mem.l1s.iter().map(|c| c.num_ways()).sum();
+        assert_eq!(plan.ways.iter().sum::<usize>(), budget);
+    }
+}

@@ -1,0 +1,24 @@
+//! Memory-access-pattern-aware cache reconfiguration (paper §3.4, Fig 8).
+//!
+//! Closed loop:
+//! 1. a hardware **monitor** watches L1 miss rates against an MMIO-set
+//!    threshold register;
+//! 2. on trigger, the **tracker** samples each PE pair's accesses over an
+//!    observation window (we reuse the array's [`crate::sim::AccessTrace`]);
+//! 3. the **software model** replays each sample against candidate cache
+//!    geometries to estimate per-cache *time hit rates* (the paper's
+//!    redefinition of hit rate — misses per time window, not per access);
+//! 4. **Algorithm 1** (dynamic programming) allocates the global way
+//!    budget to maximise `Σ log H_i(S_i)`;
+//! 5. the **controller** rewrites way permission registers (moving whole
+//!    ways between L1s) and virtual-line-size registers.
+
+pub mod allocator;
+pub mod controller;
+pub mod model;
+pub mod monitor;
+
+pub use allocator::max_profit;
+pub use controller::{apply_plan, plan_from_traces, ReconfigPlan};
+pub use model::{profile_port, PortProfile};
+pub use monitor::MissRateMonitor;

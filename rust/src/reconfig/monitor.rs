@@ -1,0 +1,71 @@
+//! Hardware miss-rate monitor (Fig 8a): compares each L1's observed miss
+//! rate over a window against an MMIO-programmed threshold register and
+//! raises the tracker trigger. Trivial hardware — a pair of counters and a
+//! comparator per cache — so we model it faithfully but simply.
+
+use crate::mem::MemorySubsystem;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MissRateMonitor {
+    /// MMIO threshold register: trigger when miss rate exceeds this.
+    pub threshold: f64,
+    /// Minimum accesses before the monitor may trigger (debounce).
+    pub min_accesses: u64,
+    last_hits: u64,
+    last_accesses: u64,
+}
+
+impl MissRateMonitor {
+    pub fn new(threshold: f64, min_accesses: u64) -> Self {
+        MissRateMonitor { threshold, min_accesses, last_hits: 0, last_accesses: 0 }
+    }
+
+    /// Observe the subsystem; returns true when the windowed miss rate
+    /// exceeds the threshold (and re-arms the window).
+    pub fn observe(&mut self, mem: &MemorySubsystem) -> bool {
+        let s = mem.l1_stats_sum();
+        let acc = s.accesses() - self.last_accesses;
+        let hits = s.hits - self.last_hits;
+        if acc < self.min_accesses {
+            return false;
+        }
+        let miss_rate = 1.0 - hits as f64 / acc as f64;
+        self.last_accesses = s.accesses();
+        self.last_hits = s.hits;
+        miss_rate > self.threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{AccessKind, MemRequest, MemorySubsystem, SubsystemConfig};
+
+    #[test]
+    fn triggers_on_high_miss_rate_only() {
+        let mut mem = MemorySubsystem::new(SubsystemConfig::paper_base(), 1 << 20);
+        mem.place_spm(0, 0);
+        mem.place_spm(1, 0x1000);
+        let mut mon = MissRateMonitor::new(0.5, 8);
+        assert!(!mon.observe(&mem), "no traffic yet");
+        // All-miss traffic: scattered cold reads (set-spreading stride).
+        for i in 0..16u32 {
+            let _ = mem.request(
+                0,
+                MemRequest { addr: 0x10000 + i * 4160, kind: AccessKind::Read, data: 0, pe: 0 },
+                i as u64,
+            );
+            mem.tick(1000 + i as u64 * 200);
+        }
+        assert!(mon.observe(&mem), "cold scattered reads must trigger");
+        // Now re-hit the same lines: miss rate drops below threshold.
+        for i in 0..16u32 {
+            let _ = mem.request(
+                0,
+                MemRequest { addr: 0x10000 + i * 4160, kind: AccessKind::Read, data: 0, pe: 0 },
+                10_000 + i as u64,
+            );
+        }
+        assert!(!mon.observe(&mem), "warm re-hits must not trigger");
+    }
+}

@@ -1,0 +1,594 @@
+//! Per-figure regeneration harnesses (§4 evaluation). Each function runs
+//! the experiment behind one figure and renders the series the paper
+//! plots; EXPERIMENTS.md records these outputs against the published
+//! values.
+
+use crate::coordinator::{campaign, measure, par_map, reconfig_experiment, System};
+use crate::mem::{CacheConfig, SubsystemConfig};
+use crate::sim::{CgraConfig, ExecMode};
+use crate::stats;
+use crate::workloads::{paper_suite, run_workload, GcnAggregate, GraphSpec, Workload};
+
+fn gcn_cora() -> GcnAggregate {
+    GcnAggregate::new(GraphSpec::cora())
+}
+
+/// Fig 2: CGRA utilization of the SPM-only design (4×4 HyCUBE, 4 KB SPM)
+/// on the GCN/Cora aggregate kernel. Paper: average ≈ 1.43%.
+pub fn fig2() -> String {
+    let wl = gcn_cora();
+    let run = run_workload(
+        &wl,
+        SubsystemConfig::spm_only(2, 4096),
+        CgraConfig::hycube_4x4(ExecMode::Normal),
+    );
+    let util = 100.0 * run.result.utilization();
+    format!(
+        "Fig 2 — SPM-only (4KB) utilization on GCN aggregate / Cora\n\
+         cycles={} stall={} ({:.1}%)\n\
+         CGRA utilization = {util:.2}%   (paper: 1.43%)\n",
+        run.result.cycles,
+        run.result.stall_cycles,
+        100.0 * run.result.stall_cycles as f64 / run.result.cycles as f64,
+    )
+}
+
+/// Fig 5: share of irregular accesses vs CGRA utilization per workload
+/// (SPM-only 4 KB). Paper: average utilization ≈ 1.7%.
+pub fn fig5(threads: usize) -> String {
+    let idx: Vec<usize> = (0..paper_suite().len()).collect();
+    let rows = par_map(idx, threads, |i| {
+        let suite = paper_suite();
+        let wl = &suite[i];
+        let run = run_workload(
+            wl.as_ref(),
+            SubsystemConfig::spm_only(2, 4096),
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+        );
+        // Dynamic irregular share: fraction of demand accesses that went
+        // off-SPM (the irregular arrays are exactly the off-SPM ones).
+        let m = &run.result.mem;
+        let total = m.spm_accesses + m.l1_accesses;
+        let dyn_share = m.l1_accesses as f64 / total.max(1) as f64;
+        (wl.name(), dyn_share, run.result.utilization())
+    });
+    let mut s = String::from("Fig 5 — irregular access share vs CGRA utilization (SPM-only 4KB)\n");
+    s.push_str(&format!("{:<22} {:>10} {:>12}\n", "kernel", "irregular%", "utilization%"));
+    let mut utils = Vec::new();
+    for (name, share, util) in rows {
+        utils.push(util * 100.0);
+        s.push_str(&format!("{:<22} {:>9.1}% {:>11.2}%\n", name, share * 100.0, util * 100.0));
+    }
+    s.push_str(&format!("average utilization = {:.2}%   (paper: 1.7%)\n", stats::mean(&utils)));
+    s
+}
+
+/// Fig 7: per-PE (per-port) address/time series showing the access-pattern
+/// taxonomy. Rendered as classified stride statistics plus CSV samples.
+pub fn fig7() -> String {
+    let wl = gcn_cora();
+    let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
+    cgra.trace_window = 4096;
+    let (mut mem, mut arr, _layout) =
+        crate::workloads::prepare(&wl, SubsystemConfig::paper_base(), cgra);
+    arr.run(&mut mem, 20_000);
+    let mut s = String::from("Fig 7 — per-port access patterns (GCN aggregate / Cora)\n");
+    for p in 0..2 {
+        let irr = arr.trace.irregularity(p);
+        let class = if irr < 0.05 {
+            "regular (constant/linear/step)"
+        } else if irr > 0.6 {
+            "irregular (random / irregular step)"
+        } else {
+            "mixed regular+irregular"
+        };
+        s.push_str(&format!(
+            "port {p}: {} sampled accesses, stride-irregularity {:.2} → {}\n",
+            arr.trace.events[p].len(),
+            irr,
+            class
+        ));
+        s.push_str("  first samples (cycle,addr): ");
+        for ev in arr.trace.events[p].iter().take(8) {
+            s.push_str(&format!("({},{:#x}) ", ev.cycle, ev.addr));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Fig 11a: normalized execution time of the five systems across the
+/// suite. Paper: Cache+SPM ≈10× vs SPM-only, 7.26×/6.0× vs A72/SIMD;
+/// Runahead +3.04× (≤6.91×) on top.
+pub fn fig11a(threads: usize) -> String {
+    let ms = campaign(&System::all(), threads);
+    let suite: Vec<String> = paper_suite().iter().map(|w| w.name()).collect();
+    let mut s = String::from("Fig 11a — execution time normalized to A72 (lower is better)\n");
+    s.push_str(&format!(
+        "{:<22} {:>8} {:>8} {:>9} {:>10} {:>9}\n",
+        "kernel", "A72", "SIMD", "SPM-only", "Cache+SPM", "Runahead"
+    ));
+    let mut ratios: Vec<(f64, f64, f64, f64)> = Vec::new(); // vs A72
+    for name in &suite {
+        let t = |sys: &str| {
+            ms.iter().find(|m| &m.workload == name && m.system == sys).map(|m| m.time_us).unwrap()
+        };
+        let a = t("A72");
+        s.push_str(&format!(
+            "{:<22} {:>8.2} {:>8.2} {:>9.2} {:>10.2} {:>9.2}\n",
+            name,
+            1.0,
+            t("SIMD") / a,
+            t("SPM-only") / a,
+            t("Cache+SPM") / a,
+            t("Runahead") / a
+        ));
+        ratios.push((t("SIMD") / a, t("SPM-only") / a, t("Cache+SPM") / a, t("Runahead") / a));
+    }
+    let gm = |f: fn(&(f64, f64, f64, f64)) -> f64| {
+        stats::geomean(&ratios.iter().map(f).collect::<Vec<_>>())
+    };
+    s.push_str(&format!(
+        "geomean            {:>8.2} {:>8.2} {:>9.2} {:>10.2} {:>9.2}\n",
+        1.0,
+        gm(|r| r.0),
+        gm(|r| r.1),
+        gm(|r| r.2),
+        gm(|r| r.3)
+    ));
+    s.push_str(&format!(
+        "Cache+SPM vs SPM-only speedup (geomean) = {:.2}x   (paper: ~10x)\n",
+        gm(|r| r.1) / gm(|r| r.2)
+    ));
+    s.push_str(&format!(
+        "Runahead vs A72 speedup (geomean)       = {:.2}x   (paper: ~22x implied)\n",
+        1.0 / gm(|r| r.3)
+    ));
+    s
+}
+
+/// Fig 11b: memory access counts per level for the three CGRA systems.
+/// Paper: Cache+SPM cuts DRAM accesses by ~77% vs SPM-only.
+pub fn fig11b(threads: usize) -> String {
+    let ms = campaign(&[System::SpmOnly, System::CacheSpm, System::Runahead], threads);
+    let mut s = String::from("Fig 11b — total memory accesses by level (suite sum)\n");
+    s.push_str(&format!(
+        "{:<10} {:>12} {:>12} {:>12} {:>12}\n",
+        "system", "SPM", "L1", "L2", "DRAM"
+    ));
+    let mut dram = std::collections::HashMap::new();
+    for sys in ["SPM-only", "Cache+SPM", "Runahead"] {
+        let f = |g: fn(&crate::coordinator::Measurement) -> u64| -> u64 {
+            ms.iter().filter(|m| m.system == sys).map(g).sum()
+        };
+        let d = f(|m| m.dram_accesses);
+        dram.insert(sys, d);
+        s.push_str(&format!(
+            "{:<10} {:>12} {:>12} {:>12} {:>12}\n",
+            sys,
+            f(|m| m.spm_accesses),
+            f(|m| m.l1_accesses),
+            f(|m| m.l2_accesses),
+            d
+        ));
+    }
+    let drop =
+        100.0 * (1.0 - dram["Cache+SPM"] as f64 / dram["SPM-only"].max(1) as f64);
+    s.push_str(&format!("Cache+SPM DRAM reduction vs SPM-only = {drop:.0}%   (paper: 77%)\n"));
+    s
+}
+
+/// One Fig 12 sweep point: run GCN/Cora on a modified base config.
+fn sweep_point(cfg: SubsystemConfig) -> u64 {
+    let wl = gcn_cora();
+    run_workload(&wl, cfg, CgraConfig::hycube_4x4(ExecMode::Normal)).result.cycles
+}
+
+/// Fig 12a-f: impact of cache configuration on execution time.
+pub fn fig12(part: char, threads: usize) -> String {
+    let base = SubsystemConfig::paper_base();
+    let mut s = format!("Fig 12{part} — GCN/Cora execution cycles vs parameter (Table 3 base)\n");
+    match part {
+        'a' => {
+            // L1 associativity at fixed 4 KB capacity.
+            let pts: Vec<usize> = vec![1, 2, 4, 8, 16];
+            let cycles = par_map(pts.clone(), threads, |w| {
+                let mut c = base;
+                c.l1 = CacheConfig::from_size(4096, w, 64);
+                sweep_point(c)
+            });
+            render_series(&mut s, "assoc", &pts, &cycles);
+            s.push_str("(paper: saturates at associativity 8)\n");
+        }
+        'b' => {
+            // L1+L2 line size together.
+            let pts: Vec<u32> = vec![16, 32, 64, 128];
+            let cycles = par_map(pts.clone(), threads, |lb| {
+                let mut c = base;
+                c.l1 = CacheConfig::from_size(4096, 4, lb);
+                c.l2 = CacheConfig::from_size(128 * 1024, 8, lb);
+                sweep_point(c)
+            });
+            render_series(&mut s, "line B", &pts, &cycles);
+            s.push_str("(paper: saturates around 64 B)\n");
+        }
+        'c' => {
+            let pts: Vec<u32> = vec![1024, 2048, 4096, 8192, 16384];
+            let cycles = par_map(pts.clone(), threads, |sz| {
+                let mut c = base;
+                c.l1 = CacheConfig::from_size(sz, 4, 64);
+                sweep_point(c)
+            });
+            render_series(&mut s, "L1 size", &pts, &cycles);
+        }
+        'd' => {
+            let pts: Vec<usize> = vec![1, 2, 4, 8, 16];
+            let cycles = par_map(pts.clone(), threads, |m| {
+                let mut c = base;
+                c.mshr_entries = m;
+                c.store_buffer_entries = m.max(4);
+                sweep_point(c)
+            });
+            render_series(&mut s, "MSHR", &pts, &cycles);
+            s.push_str("(paper: demand misses saturate at 4)\n");
+        }
+        'e' => {
+            let pts: Vec<u32> = vec![256, 512, 1024, 2048, 4096];
+            let cycles = par_map(pts.clone(), threads, |b| {
+                let mut c = base;
+                c.spm_bytes = b;
+                sweep_point(c)
+            });
+            render_series(&mut s, "SPM B", &pts, &cycles);
+            s.push_str("(paper: SPM size has little impact for large kernels)\n");
+        }
+        'f' => {
+            // Controlled storage-parity experiment (§4.2): small Cache+SPM
+            // vs SPM-only scaled until performance matches.
+            let mut small = base;
+            small.spm_bytes = 512; // 2 x 512B = 1 KB SPM
+            small.l1 = CacheConfig::from_size(1024, 4, 64); // 2 x 1KB = 2KB L1
+            small.l2 = CacheConfig { sets: 1, ways: 0, line_bytes: 64, vline_shift: 0 };
+            let cache_cycles = sweep_point(small);
+            let cache_storage = small.total_storage_bytes();
+            let sizes: Vec<u32> =
+                (3..=10).map(|i| 1u32 << (i + 10)).collect(); // 8 KB … 1 MB
+            let results = par_map(sizes.clone(), threads, |sz| {
+                sweep_point(SubsystemConfig::spm_only(2, sz))
+            });
+            s.push_str(&format!(
+                "Cache+SPM (2KB L1 + 1KB SPM, no L2): {} cycles, {} B storage\n",
+                cache_cycles, cache_storage
+            ));
+            let mut matched = None;
+            for (sz, cyc) in sizes.iter().zip(results.iter()) {
+                s.push_str(&format!("SPM-only {:>8} B: {:>12} cycles\n", sz, cyc));
+                if matched.is_none() && *cyc <= cache_cycles {
+                    matched = Some(*sz);
+                }
+            }
+            match matched {
+                Some(sz) => s.push_str(&format!(
+                    "parity at {} B → Cache+SPM uses {:.2}% of the storage   (paper: 1.27%)\n",
+                    sz,
+                    100.0 * cache_storage as f64 / sz as f64
+                )),
+                None => s.push_str("SPM-only never reached parity in the swept range\n"),
+            }
+        }
+        _ => s.push_str("unknown part (use a-f)\n"),
+    }
+    s
+}
+
+fn render_series<T: std::fmt::Display>(s: &mut String, label: &str, pts: &[T], cycles: &[u64]) {
+    let max = *cycles.iter().max().unwrap() as f64;
+    for (p, c) in pts.iter().zip(cycles.iter()) {
+        s.push_str(&format!(
+            "{label} {:>6} : {:>12} cycles |{}|\n",
+            p,
+            c,
+            stats::bar(*c as f64, max, 40)
+        ));
+    }
+}
+
+/// Fig 13: runahead speedup per kernel. Paper: avg 3.04×, max 6.91×.
+pub fn fig13(threads: usize) -> String {
+    let idx: Vec<usize> = (0..paper_suite().len()).collect();
+    let rows = par_map(idx, threads, |i| {
+        let suite = paper_suite();
+        let n = measure(suite[i].as_ref(), System::CacheSpm);
+        let r = measure(suite[i].as_ref(), System::Runahead);
+        (suite[i].name(), n.cycles as f64 / r.cycles as f64)
+    });
+    let mut s = String::from("Fig 13 — runahead speedup over Cache+SPM\n");
+    let sp: Vec<f64> = rows.iter().map(|(_, x)| *x).collect();
+    for (name, x) in &rows {
+        s.push_str(&format!("{:<22} {:>5.2}x |{}|\n", name, x, stats::bar(*x, 7.0, 35)));
+    }
+    s.push_str(&format!(
+        "average = {:.2}x (paper: 3.04x)   max = {:.2}x (paper: 6.91x)\n",
+        stats::mean(&sp),
+        stats::max(&sp)
+    ));
+    s
+}
+
+/// Fig 14: runahead speedup vs MSHR size. Paper: saturates around 16.
+pub fn fig14(threads: usize) -> String {
+    let kernels = ["aggregate/cora", "grad", "rgb", "src2dest"];
+    let mshrs: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
+    let mut jobs = Vec::new();
+    for k in &kernels {
+        for &m in &mshrs {
+            jobs.push((k.to_string(), m));
+        }
+    }
+    let results = par_map(jobs, threads, |(k, m)| {
+        let suite = paper_suite();
+        let wl = suite.iter().find(|w| w.name() == k).unwrap();
+        let mut cfg = SubsystemConfig::paper_base();
+        cfg.mshr_entries = m;
+        cfg.store_buffer_entries = m.max(4);
+        let n = run_workload(wl.as_ref(), cfg, CgraConfig::hycube_4x4(ExecMode::Normal));
+        let r = run_workload(wl.as_ref(), cfg, CgraConfig::hycube_4x4(ExecMode::Runahead));
+        (k, m, n.result.cycles as f64 / r.result.cycles as f64)
+    });
+    let mut s = String::from("Fig 14 — runahead speedup vs MSHR entries\n");
+    s.push_str(&format!("{:<22}", "kernel"));
+    for m in &mshrs {
+        s.push_str(&format!(" {:>7}", format!("M={m}")));
+    }
+    s.push('\n');
+    for k in &kernels {
+        s.push_str(&format!("{:<22}", k));
+        for &m in &mshrs {
+            let v = results.iter().find(|(rk, rm, _)| rk == k && *rm == m).unwrap().2;
+            s.push_str(&format!(" {:>6.2}x", v));
+        }
+        s.push('\n');
+    }
+    s.push_str("(paper: benefits grow with MSHR size and saturate around 16)\n");
+    s
+}
+
+/// Fig 15: prefetched-block classification. Paper: "Useless" ≈ 0
+/// (prefetch accuracy ≈ 100%); evictions pronounced for grad/rgb.
+pub fn fig15(threads: usize) -> String {
+    let ms = campaign(&[System::Runahead], threads);
+    let mut s = String::from("Fig 15 — prefetched cache blocks: Used / Evicted / Useless\n");
+    s.push_str(&format!(
+        "{:<22} {:>9} {:>9} {:>9} {:>10}\n",
+        "kernel", "used", "evicted", "useless", "accuracy%"
+    ));
+    for m in &ms {
+        let total = (m.prefetch_used + m.prefetch_evicted + m.prefetch_useless).max(1);
+        s.push_str(&format!(
+            "{:<22} {:>9} {:>9} {:>9} {:>9.1}%\n",
+            m.workload,
+            m.prefetch_used,
+            m.prefetch_evicted,
+            m.prefetch_useless,
+            100.0 * (m.prefetch_used + m.prefetch_evicted) as f64 / total as f64
+        ));
+    }
+    s.push_str("(paper: useless ≈ 0 → prefetch accuracy ≈ 100%)\n");
+    s
+}
+
+/// Fig 16: runahead coverage. Paper: average 87%.
+pub fn fig16(threads: usize) -> String {
+    let ms = campaign(&[System::Runahead], threads);
+    let mut s = String::from("Fig 16 — runahead coverage (share of misses addressed)\n");
+    let mut cov = Vec::new();
+    for m in &ms {
+        cov.push(m.coverage * 100.0);
+        s.push_str(&format!(
+            "{:<22} {:>6.1}% |{}|\n",
+            m.workload,
+            m.coverage * 100.0,
+            stats::bar(m.coverage, 1.0, 35)
+        ));
+    }
+    s.push_str(&format!("average coverage = {:.1}%   (paper: 87%)\n", stats::mean(&cov)));
+    s
+}
+
+/// Fig 17: cache reconfiguration gains on the 8×8 Reconfig system.
+/// Paper: real data 4.59%/3.22% (no-RA / RA), random 2.10%/1.58%.
+pub fn fig17(threads: usize) -> String {
+    let mut jobs = Vec::new();
+    for i in 0..paper_suite().len() {
+        for mode in [ExecMode::Normal, ExecMode::Runahead] {
+            jobs.push((i, mode));
+        }
+    }
+    let rows = par_map(jobs, threads, |(i, mode)| {
+        let suite = paper_suite();
+        let out = reconfig_experiment(suite[i].as_ref(), mode, 4096);
+        let red = 100.0 * (1.0 - out.reconf_cycles as f64 / out.base_cycles as f64);
+        (suite[i].name(), mode, red, out.output_ok, out.plan.ways.clone())
+    });
+    let mut s = String::from("Fig 17 — runtime reduction from cache reconfiguration (8x8)\n");
+    s.push_str(&format!("{:<22} {:>12} {:>12}  plan(ways)\n", "kernel", "no-runahead", "runahead"));
+    let mut real_n = Vec::new();
+    let mut real_r = Vec::new();
+    let mut rand_n = Vec::new();
+    let mut rand_r = Vec::new();
+    for name in paper_suite().iter().map(|w| w.name()) {
+        let get = |mode: ExecMode| rows.iter().find(|(n, m, ..)| *n == name && *m == mode).unwrap();
+        let (_, _, rn, okn, ways) = get(ExecMode::Normal);
+        let (_, _, rr, okr, _) = get(ExecMode::Runahead);
+        assert!(okn & okr, "reconfigured output must stay correct");
+        let real = name.starts_with("aggregate");
+        if real {
+            real_n.push(*rn);
+            real_r.push(*rr);
+        } else {
+            rand_n.push(*rn);
+            rand_r.push(*rr);
+        }
+        s.push_str(&format!("{:<22} {:>11.2}% {:>11.2}%  {:?}\n", name, rn, rr, ways));
+    }
+    s.push_str(&format!(
+        "real-data avg:   {:>6.2}% / {:>6.2}%   (paper: 4.59% / 3.22%)\n",
+        stats::mean(&real_n),
+        stats::mean(&real_r)
+    ));
+    s.push_str(&format!(
+        "random-data avg: {:>6.2}% / {:>6.2}%   (paper: 2.10% / 1.58%)\n",
+        stats::mean(&rand_n),
+        stats::mean(&rand_r)
+    ));
+    s
+}
+
+/// Fig 18 + §4.5: area breakdown and runahead overhead.
+pub fn fig18() -> String {
+    let a = crate::area::reconfig_system();
+    let pe = crate::area::pe_breakdown();
+    let alu = crate::area::alu_breakdown();
+    let mut s = String::from("Fig 18 — area breakdown (Table 3 Reconfig system)\n");
+    s.push_str(&format!(
+        "system: L2 {:.2}% | CGRA {:.2}% | L1 {:.2}% | SPM {:.2}% | IO/bus {:.2}%\n",
+        a.pct(a.l2_cache),
+        a.pct(a.cgra),
+        a.pct(a.l1_cache),
+        a.pct(a.spm),
+        a.pct(a.noc_io)
+    ));
+    s.push_str("        (paper: L2 73.32% | CGRA 12.51% | L1 9.38%)\n");
+    s.push_str(&format!(
+        "PE:     crossbar {:.2}% | ALU {:.2}% | regfile {:.2}% | config {:.2}% | other {:.2}%\n",
+        pe.crossbar * 100.0,
+        pe.alu * 100.0,
+        pe.regfile * 100.0,
+        pe.config_mem * 100.0,
+        pe.other * 100.0
+    ));
+    s.push_str(&format!(
+        "ALU:    multiply {:.2}% | shift {:.2}% | control {:.2}% | bitwise/cmp {:.2}% | add/sub {:.2}%\n",
+        alu.multiply * 100.0,
+        alu.shift * 100.0,
+        alu.control * 100.0,
+        alu.bitwise_cmp * 100.0,
+        alu.add_sub * 100.0
+    ));
+    s.push_str(&format!(
+        "§4.5 runahead area overhead vs native HyCUBE = {:.2}%   (paper: 14.78%)\n",
+        crate::area::RUNAHEAD_PE_OVERHEAD * 100.0
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig18_is_static_and_matches() {
+        let s = fig18();
+        assert!(s.contains("14.78%"));
+    }
+
+    #[test]
+    fn fig2_reports_low_utilization() {
+        let s = fig2();
+        let pct: f64 = s
+            .lines()
+            .find(|l| l.starts_with("CGRA utilization"))
+            .and_then(|l| l.split('=').nth(1))
+            .and_then(|x| x.trim().trim_end_matches(|c: char| !c.is_ascii_digit() && c != '.').split('%').next())
+            .and_then(|x| x.trim().parse().ok())
+            .unwrap();
+        assert!(pct < 5.0, "SPM-only utilization should collapse: {pct}%");
+    }
+}
+
+/// Motivation study (Fig 3a ⑤⑥): one shared L1 for all memory PEs vs the
+/// multi-cache virtual-SPM design at equal total capacity.
+pub fn motivation(threads: usize) -> String {
+    let idx: Vec<usize> = (0..paper_suite().len()).collect();
+    let rows = par_map(idx, threads, |i| {
+        let suite = paper_suite();
+        let wl = &suite[i];
+        // Multi-cache: 2 x 4 KB private L1s (Table 3 base).
+        let multi = run_workload(
+            wl.as_ref(),
+            SubsystemConfig::paper_base(),
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+        );
+        // Shared: one 8 KB L1 serving both crossbars (equal storage).
+        let mut shared_cfg = SubsystemConfig::paper_base();
+        shared_cfg.shared_l1 = true;
+        shared_cfg.l1 = CacheConfig::from_size(8192, 8, 64);
+        let shared = run_workload(wl.as_ref(), shared_cfg, CgraConfig::hycube_4x4(ExecMode::Normal));
+        assert!(multi.output_ok && shared.output_ok);
+        (wl.name(), shared.result.cycles as f64 / multi.result.cycles as f64)
+    });
+    let mut s = String::from(
+        "Motivation (Fig 3a) — shared single L1 vs multi-cache at equal capacity\n",
+    );
+    let mut ratios = Vec::new();
+    for (name, r) in &rows {
+        ratios.push(*r);
+        s.push_str(&format!("{:<22} shared/multi cycle ratio = {:>5.2}x\n", name, r));
+    }
+    s.push_str(&format!(
+        "geomean = {:.2}x at equal capacity+associativity. With port-partitioned data,\n\
+         capacity interference is nearly neutral; the paper's contention argument\n\
+         (§3.3) is primarily about per-cycle request arbitration, which the private\n\
+         per-crossbar L1s remove by construction in our mapper's schedules.\n",
+        stats::geomean(&ratios)
+    ));
+    s
+}
+
+/// §3.2.1 ablation: switch off each runahead design choice in turn and
+/// measure the speedup that remains (DESIGN.md calls these out as the
+/// paper's named design aspects).
+pub fn ablation(threads: usize) -> String {
+    use crate::sim::array::RunaheadAblation;
+    let kernels = ["aggregate/cora", "grad", "radix_update", "rgb"];
+    let variants: Vec<(&str, RunaheadAblation)> = vec![
+        ("full runahead", RunaheadAblation::default()),
+        ("no temp store", RunaheadAblation { temp_store: false, ..Default::default() }),
+        ("no write->read conv", RunaheadAblation { convert_writes: false, ..Default::default() }),
+        ("no dummy tracking", RunaheadAblation { dummy_tracking: false, ..Default::default() }),
+    ];
+    let mut jobs = Vec::new();
+    for k in &kernels {
+        for (vi, _) in variants.iter().enumerate() {
+            jobs.push((k.to_string(), vi));
+        }
+    }
+    let variants2 = variants.clone();
+    let rows = par_map(jobs, threads, move |(k, vi)| {
+        let suite = paper_suite();
+        let wl = suite.iter().find(|w| w.name() == k).unwrap();
+        let normal =
+            run_workload(wl.as_ref(), SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(ExecMode::Normal));
+        let mut cfg = CgraConfig::hycube_4x4(ExecMode::Runahead);
+        cfg.ablation = variants2[vi].1;
+        let ra = run_workload(wl.as_ref(), SubsystemConfig::paper_base(), cfg);
+        assert!(ra.output_ok, "{k} variant {vi} diverged");
+        (k, vi, normal.result.cycles as f64 / ra.result.cycles as f64)
+    });
+    let mut s = String::from("Ablation (§3.2.1) — runahead speedup with each mechanism disabled\n");
+    s.push_str(&format!("{:<22}", "kernel"));
+    for (name, _) in &variants {
+        s.push_str(&format!(" {:>20}", name));
+    }
+    s.push('\n');
+    for k in &kernels {
+        s.push_str(&format!("{:<22}", k));
+        for (vi, _) in variants.iter().enumerate() {
+            let v = rows.iter().find(|(rk, rvi, _)| rk == k && *rvi == vi).unwrap().2;
+            s.push_str(&format!(" {:>19.2}x", v));
+        }
+        s.push('\n');
+    }
+    s.push_str("(correctness is preserved in every variant — ablations only change prefetch quality)\n");
+    s
+}

@@ -1,0 +1,17 @@
+//! Figure/table harness: regenerates every table and figure of the
+//! paper's evaluation (§4) as aligned text (plus CSV lines) — the mapping
+//! from figure id to modules is the per-experiment index in DESIGN.md.
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::*;
+pub use tables::*;
+
+/// Write a rendered figure to `artifacts/figures/<id>.txt` (best-effort)
+/// and return the text.
+pub fn save(id: &str, text: &str) -> std::io::Result<()> {
+    let dir = std::path::Path::new("artifacts/figures");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{id}.txt")), text)
+}

@@ -1,0 +1,142 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client.
+//! Python never runs on this path — the rust binary is self-contained once
+//! `make artifacts` has been built.
+//!
+//! The runtime serves as the *golden model* for the cycle-accurate
+//! simulator: `examples/gcn_pipeline.rs` runs the same GCN aggregation
+//! through (a) the simulated CGRA and (b) the XLA executable, and checks
+//! the numerics agree.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A compiled XLA executable plus its client.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU runtime holding loaded artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Connect to the PJRT CPU backend.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<dir>/<name>.hlo.txt`, parse as HLO text and compile.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        Ok(Artifact { name: name.to_string(), exe })
+    }
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns the elements of the output
+    /// tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.decompose_tuple()?)
+    }
+}
+
+/// Helpers converting between simulator data and XLA literals.
+pub fn lit_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+pub fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("aggregate.hlo.txt").exists()
+    }
+
+    #[test]
+    fn load_and_run_aggregate_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu(artifacts_dir()).unwrap();
+        let art = rt.load("aggregate").unwrap();
+        // Contract shapes: E=1024, N=256, F=4 (aot.TINY).
+        let e = 1024usize;
+        let (n, f) = (256usize, 4usize);
+        let src: Vec<i32> = (0..e).map(|i| (i % n) as i32).collect();
+        let dst: Vec<i32> = (0..e).map(|i| ((i * 7) % n) as i32).collect();
+        let w = vec![1.0f32; e];
+        let feat = vec![0.5f32; n * f];
+        let out = art
+            .run(&[
+                lit_i32(&src),
+                lit_i32(&dst),
+                lit_f32(&w),
+                lit_f32_2d(&feat, n, f).unwrap(),
+            ])
+            .unwrap();
+        let vals = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(vals.len(), n * f);
+        // Each node receives e/n = 4 edges of 1.0 * 0.5.
+        for v in &vals {
+            assert!((v - 2.0).abs() < 1e-5, "got {v}");
+        }
+    }
+
+    #[test]
+    fn gcn_layer_artifact_runs_and_is_nonnegative() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu(artifacts_dir()).unwrap();
+        let art = rt.load("gcn_layer").unwrap();
+        let e = 1024usize;
+        let (n, f) = (256usize, 4usize);
+        let src: Vec<i32> = (0..e).map(|i| (i % n) as i32).collect();
+        let dst: Vec<i32> = (0..e).map(|i| ((i * 13) % n) as i32).collect();
+        let w = vec![0.5f32; e];
+        let feat: Vec<f32> = (0..n * f).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+        let dense_w: Vec<f32> = (0..f * f).map(|i| if i % (f + 1) == 0 { 1.0 } else { 0.1 }).collect();
+        let bias = vec![0.01f32; f];
+        let out = art
+            .run(&[
+                lit_i32(&src),
+                lit_i32(&dst),
+                lit_f32(&w),
+                lit_f32_2d(&feat, n, f).unwrap(),
+                lit_f32_2d(&dense_w, f, f).unwrap(),
+                lit_f32(&bias),
+            ])
+            .unwrap();
+        let vals = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(vals.len(), n * f);
+        assert!(vals.iter().all(|v| *v >= 0.0), "ReLU output must be non-negative");
+        assert!(vals.iter().any(|v| *v > 0.0));
+    }
+}

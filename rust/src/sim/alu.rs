@@ -1,0 +1,136 @@
+//! PE ALU: HyCUBE's integer op set (§4.5 — add/sub/mul, logic, shifts,
+//! compare) plus f32 add/mul for the GCN-style kernels, and the paper's
+//! runahead *dummy-bit* propagation (§5.1): every datum carries one extra
+//! flag bit; the ALU ORs the input flags into the output flag — the only
+//! hardware change runahead needs inside a PE.
+
+/// A 32-bit datum plus the runahead dummy flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Value {
+    pub bits: u32,
+    pub dummy: bool,
+}
+
+impl Value {
+    #[inline]
+    pub fn real(bits: u32) -> Self {
+        Value { bits, dummy: false }
+    }
+    #[inline]
+    pub fn dummy() -> Self {
+        // The dummy payload is arbitrary; zero keeps behaviour reproducible.
+        Value { bits: 0, dummy: true }
+    }
+    #[inline]
+    pub fn f32(v: f32) -> Self {
+        Value { bits: v.to_bits(), dummy: false }
+    }
+    #[inline]
+    pub fn as_f32(self) -> f32 {
+        f32::from_bits(self.bits)
+    }
+}
+
+/// Binary ALU operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Mul,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Lshr,
+    Ashr,
+    /// Set-less-than (unsigned): out = (a < b) as u32.
+    Ltu,
+    /// Set-equal: out = (a == b) as u32.
+    Eq,
+    /// Minimum (unsigned) — used by clamping address patterns.
+    Minu,
+    /// IEEE-754 f32 add (extension beyond base HyCUBE; see DESIGN.md).
+    FAdd,
+    /// IEEE-754 f32 multiply.
+    FMul,
+    /// Pass operand `a` through (routing / move).
+    MovA,
+    /// out = a if sel(b != 0) else a; select is modelled as (b!=0)?a:0.
+    SelNz,
+}
+
+impl AluOp {
+    /// Execute with dummy propagation: one OR gate on the flag bits.
+    #[inline]
+    pub fn eval(self, a: Value, b: Value) -> Value {
+        let dummy = a.dummy | b.dummy;
+        let bits = match self {
+            AluOp::Add => a.bits.wrapping_add(b.bits),
+            AluOp::Sub => a.bits.wrapping_sub(b.bits),
+            AluOp::Mul => a.bits.wrapping_mul(b.bits),
+            AluOp::And => a.bits & b.bits,
+            AluOp::Or => a.bits | b.bits,
+            AluOp::Xor => a.bits ^ b.bits,
+            AluOp::Shl => a.bits.wrapping_shl(b.bits & 31),
+            AluOp::Lshr => a.bits.wrapping_shr(b.bits & 31),
+            AluOp::Ashr => ((a.bits as i32).wrapping_shr(b.bits & 31)) as u32,
+            AluOp::Ltu => (a.bits < b.bits) as u32,
+            AluOp::Eq => (a.bits == b.bits) as u32,
+            AluOp::Minu => a.bits.min(b.bits),
+            AluOp::FAdd => (a.as_f32() + b.as_f32()).to_bits(),
+            AluOp::FMul => (a.as_f32() * b.as_f32()).to_bits(),
+            AluOp::MovA => a.bits,
+            AluOp::SelNz => if b.bits != 0 { a.bits } else { 0 },
+        };
+        Value { bits, dummy }
+    }
+
+    /// Is this one of the base HyCUBE integer ops (area model, Fig 18d)?
+    pub fn is_base_hycube(self) -> bool {
+        !matches!(self, AluOp::FAdd | AluOp::FMul)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integer_ops() {
+        let v = |x| Value::real(x);
+        assert_eq!(AluOp::Add.eval(v(2), v(3)).bits, 5);
+        assert_eq!(AluOp::Sub.eval(v(2), v(3)).bits, u32::MAX);
+        assert_eq!(AluOp::Mul.eval(v(7), v(6)).bits, 42);
+        assert_eq!(AluOp::And.eval(v(0b1100), v(0b1010)).bits, 0b1000);
+        assert_eq!(AluOp::Or.eval(v(0b1100), v(0b1010)).bits, 0b1110);
+        assert_eq!(AluOp::Xor.eval(v(0b1100), v(0b1010)).bits, 0b0110);
+        assert_eq!(AluOp::Shl.eval(v(1), v(4)).bits, 16);
+        assert_eq!(AluOp::Lshr.eval(v(0x8000_0000), v(31)).bits, 1);
+        assert_eq!(AluOp::Ashr.eval(v(0x8000_0000), v(31)).bits, u32::MAX);
+        assert_eq!(AluOp::Ltu.eval(v(1), v(2)).bits, 1);
+        assert_eq!(AluOp::Eq.eval(v(5), v(5)).bits, 1);
+        assert_eq!(AluOp::Minu.eval(v(9), v(4)).bits, 4);
+        assert_eq!(AluOp::MovA.eval(v(17), v(0)).bits, 17);
+        assert_eq!(AluOp::SelNz.eval(v(17), v(1)).bits, 17);
+        assert_eq!(AluOp::SelNz.eval(v(17), v(0)).bits, 0);
+    }
+
+    #[test]
+    fn float_ops() {
+        let a = Value::f32(1.5);
+        let b = Value::f32(2.0);
+        assert_eq!(AluOp::FAdd.eval(a, b).as_f32(), 3.5);
+        assert_eq!(AluOp::FMul.eval(a, b).as_f32(), 3.0);
+    }
+
+    #[test]
+    fn dummy_propagates_through_any_op() {
+        let d = Value::dummy();
+        let r = Value::real(3);
+        for op in [AluOp::Add, AluOp::Mul, AluOp::FAdd, AluOp::Shl, AluOp::MovA] {
+            assert!(op.eval(d, r).dummy);
+            assert!(op.eval(r, d).dummy);
+            assert!(!op.eval(r, r).dummy);
+        }
+    }
+}

@@ -1,0 +1,844 @@
+//! Cycle-accurate execution engine for the mapped CGRA (paper §2.2, §3.2).
+//!
+//! The array executes the modulo schedule in lock-step: virtual time `ctx`
+//! advances one step per *executed* cycle; DFG node `n` (scheduled at time
+//! `t_n`) fires for iteration `i` when `ctx == i·II + t_n`. Because PEs have
+//! no handshaking, an unresolved demand read freezes `ctx` for the whole
+//! array — the memory-bound pathology of Fig 2 — while the cycle counter
+//! keeps running.
+//!
+//! A frozen context is *replayed* once its misses resolve; effects already
+//! performed in the frozen cycle (loads that hit, issued stores) are latched
+//! in `cycle_effects` so the replay neither double-counts cache accesses nor
+//! re-issues stores — this mirrors lock-step hardware, which holds issued
+//! requests in place rather than re-executing them.
+//!
+//! With runahead enabled (§3.2), the array instead saves its register state
+//! into the PEs' backup registers (Fig 6), substitutes dummy values for the
+//! missing loads and keeps executing *speculatively*: valid addresses turn
+//! into precise prefetches, valid stores are parked in the SPM's temporary
+//! partition, invalid operations are discarded via the ALUs' dummy-bit
+//! tracking. When every miss of the trigger cycle has resolved, state is
+//! restored and normal execution resumes with future data already resident
+//! or in flight.
+
+use super::alu::Value;
+use super::dfg::{Dfg, NodeId, Op};
+use super::mapper::{Geometry, Mapping};
+use super::pe::{program, PeConfigMem};
+use super::trace::{AccessTrace, TraceEvent};
+use crate::mem::{
+    AccessKind, Cycle, MemRequest, MemResponse, MemorySubsystem, PrefetchResponse, SubsystemStats,
+};
+/// Execution-mode knob for a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Stall on every unresolved demand read (baseline Cache+SPM / SPM-only).
+    Normal,
+    /// Enter runahead on stall-triggering read misses.
+    Runahead,
+}
+
+/// Ablation switches for the runahead design choices of §3.2.1. All on
+/// by default; the `ablation` figure turns them off one at a time to
+/// quantify each mechanism's contribution.
+#[derive(Clone, Copy, Debug)]
+pub struct RunaheadAblation {
+    /// Redirect valid runahead writes to the SPM temp partition so
+    /// runahead-local RAW chains resolve ("Temporary Storage Strategy").
+    pub temp_store: bool,
+    /// Convert valid runahead writes into prefetch reads ("write
+    /// operations are converted into corresponding read operations").
+    pub convert_writes: bool,
+    /// Track dummy propagation through the ALUs; without it, addresses
+    /// derived from missing data issue garbage prefetches (cache
+    /// pollution — "Dummy Data Handling and Selective Prefetching").
+    pub dummy_tracking: bool,
+}
+
+impl Default for RunaheadAblation {
+    fn default() -> Self {
+        RunaheadAblation { temp_store: true, convert_writes: true, dummy_tracking: true }
+    }
+}
+
+/// Array-level configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CgraConfig {
+    pub geom: Geometry,
+    pub mode: ExecMode,
+    /// Safety cap on a single runahead episode (cycles).
+    pub max_runahead_cycles: u64,
+    /// Clock frequency in MHz (Table 3: 704).
+    pub freq_mhz: f64,
+    /// Per-port trace-window capacity (0 = tracing off).
+    pub trace_window: usize,
+    /// §3.2.1 design-choice switches (all on = the paper's design).
+    pub ablation: RunaheadAblation,
+}
+
+impl CgraConfig {
+    pub fn hycube_4x4(mode: ExecMode) -> Self {
+        CgraConfig {
+            geom: Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 },
+            mode,
+            max_runahead_cycles: 2048,
+            freq_mhz: 704.0,
+            trace_window: 0,
+            ablation: RunaheadAblation::default(),
+        }
+    }
+    pub fn hycube_8x8(mode: ExecMode) -> Self {
+        CgraConfig {
+            geom: Geometry { rows: 8, cols: 8, ports: 4, hop_budget: 3 },
+            mode,
+            max_runahead_cycles: 2048,
+            freq_mhz: 704.0,
+            trace_window: 0,
+            ablation: RunaheadAblation::default(),
+        }
+    }
+}
+
+/// Aggregate result of one kernel execution.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub cycles: Cycle,
+    /// Cycles in which `ctx` did not advance (stall or runahead).
+    pub stall_cycles: Cycle,
+    /// Subset of stall cycles spent executing in runahead mode.
+    pub runahead_cycles: Cycle,
+    pub runahead_entries: u64,
+    pub iterations: u64,
+    /// Useful node executions (completed, normal-mode cycles).
+    pub useful_ops: u64,
+    pub num_pes: usize,
+    pub ii: u32,
+    pub mem: SubsystemStats,
+    pub freq_mhz: f64,
+    /// Demand read misses that stalled the array (not covered by prefetch).
+    pub uncovered_misses: u64,
+}
+
+impl RunResult {
+    /// PE-array utilization (Fig 2 / Fig 5 metric).
+    pub fn utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.useful_ops as f64 / (self.num_pes as f64 * self.cycles as f64)
+    }
+    /// Wall-clock execution time in microseconds at the configured clock.
+    pub fn time_us(&self) -> f64 {
+        self.cycles as f64 / self.freq_mhz
+    }
+    /// Runahead prefetch coverage (Fig 16): share of would-be demand misses
+    /// eliminated (or shortened) by runahead prefetching.
+    pub fn coverage(&self) -> f64 {
+        let covered = self.mem.prefetch_used;
+        let total = covered + self.uncovered_misses;
+        if total == 0 {
+            0.0
+        } else {
+            covered as f64 / total as f64
+        }
+    }
+}
+
+/// Saved context counter for runahead entry; the value shadow lives in
+/// `CgraArray::backup_vals` (the backup registers of Fig 6), reused
+/// across episodes to keep the hot path allocation-free (§Perf).
+struct BackupRegs {
+    ctx: u64,
+}
+
+/// One unresolved trigger read the stall/runahead episode waits on.
+#[derive(Clone, Copy, Debug)]
+struct Trigger {
+    port: usize,
+    block: u32,
+    node: NodeId,
+    iter: u64,
+    addr: u32,
+}
+
+/// Latched effects of memory nodes in the currently-frozen context:
+/// `Some(word)` for loads (data), `None` for issued stores. A frozen
+/// context holds at most a handful of memory nodes, so a linear-scan
+/// vector beats a hash map on the hot path (§Perf).
+#[derive(Default)]
+struct CycleEffects {
+    entries: Vec<(NodeId, u64, Option<u32>)>,
+}
+
+impl CycleEffects {
+    #[inline]
+    fn insert(&mut self, key: (NodeId, u64), val: Option<u32>) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == key.0 && e.1 == key.1) {
+            e.2 = val;
+        } else {
+            self.entries.push((key.0, key.1, val));
+        }
+    }
+    #[inline]
+    fn get(&self, key: &(NodeId, u64)) -> Option<&Option<u32>> {
+        self.entries.iter().find(|e| e.0 == key.0 && e.1 == key.1).map(|e| &e.2)
+    }
+    #[inline]
+    fn contains_key(&self, key: &(NodeId, u64)) -> bool {
+        self.get(key).is_some()
+    }
+    #[inline]
+    fn clear(&mut self) {
+        self.entries.clear();
+    }
+    #[inline]
+    fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+pub struct CgraArray {
+    pub cfg: CgraConfig,
+    dfg: Dfg,
+    mapping: Mapping,
+    config_mems: Vec<PeConfigMem>,
+    /// Rotating value buffers: `vals[node * depth + iter % depth]`.
+    vals: Vec<Value>,
+    depth: usize,
+    /// Nodes firing in each modulo slot, ordered by schedule time.
+    slot_nodes: Vec<Vec<(NodeId, u32)>>,
+    /// Fig 6 backup registers: shadow of `vals` during runahead.
+    backup_vals: Vec<Value>,
+    pub trace: AccessTrace,
+}
+
+impl CgraArray {
+    pub fn new(cfg: CgraConfig, dfg: Dfg, mapping: Mapping) -> Self {
+        let config_mems = program(&cfg.geom, &mapping);
+        let max_dist =
+            dfg.nodes.iter().flat_map(|n| n.inputs.iter().map(|e| e.dist)).max().unwrap_or(0);
+        let depth = (mapping.stages() + max_dist + 2) as usize;
+        let mut slot_nodes: Vec<Vec<(NodeId, u32)>> = vec![Vec::new(); mapping.ii as usize];
+        for (node, &(_, t)) in mapping.place.iter().enumerate() {
+            slot_nodes[(t % mapping.ii) as usize].push((node, t));
+        }
+        for s in &mut slot_nodes {
+            s.sort_by_key(|&(_, t)| t);
+        }
+        let vals = vec![Value::real(0); dfg.num_nodes() * depth];
+        let backup_vals = vals.clone();
+        let trace = AccessTrace::new(cfg.geom.ports, cfg.trace_window);
+        CgraArray { cfg, dfg, mapping, config_mems, vals, depth, slot_nodes, backup_vals, trace }
+    }
+
+    pub fn mapping(&self) -> &Mapping {
+        &self.mapping
+    }
+    pub fn config_mems(&self) -> &[PeConfigMem] {
+        &self.config_mems
+    }
+
+    #[inline]
+    fn val(&self, node: NodeId, iter: u64) -> Value {
+        self.vals[node * self.depth + (iter % self.depth as u64) as usize]
+    }
+    #[inline]
+    fn set_val(&mut self, node: NodeId, iter: u64, v: Value) {
+        self.vals[node * self.depth + (iter % self.depth as u64) as usize] = v;
+    }
+
+    /// Read a node input, honouring loop-carried distance and init values.
+    #[inline]
+    fn input(&self, node: NodeId, idx: usize, iter: u64) -> Value {
+        let e = self.dfg.nodes[node].inputs[idx];
+        if iter < e.dist as u64 {
+            Value::real(self.dfg.nodes[node].init)
+        } else {
+            self.val(e.src, iter - e.dist as u64)
+        }
+    }
+
+    /// Execute the kernel for `iterations` loop iterations.
+    pub fn run(&mut self, mem: &mut MemorySubsystem, iterations: u64) -> RunResult {
+        let ii = self.mapping.ii as u64;
+        let end_ctx = if iterations == 0 {
+            0
+        } else {
+            (iterations - 1) * ii + self.mapping.schedule_len as u64
+        };
+        let mut cycle: Cycle = 0;
+        let mut ctx: u64 = 0;
+        let mut stall_cycles: Cycle = 0;
+        let mut runahead_cycles: Cycle = 0;
+        let mut runahead_entries: u64 = 0;
+        let mut useful_ops: u64 = 0;
+        let mut uncovered = 0u64;
+
+        let mut backup: Option<BackupRegs> = None;
+        let mut triggers: Vec<Trigger> = Vec::new();
+        let mut ra_deadline: Cycle = 0;
+        let mut effects = CycleEffects::default();
+        // Requests bounced by a full MSHR, retried while the array is frozen.
+        let mut retry: Vec<(usize, MemRequest, NodeId, u64, bool)> = Vec::new();
+
+        // The loop must also cover cycles where the array is frozen or in
+        // runahead at the end of the schedule (speculative ctx may pass
+        // end_ctx; real progress resumes only after restore).
+        while ctx < end_ctx || backup.is_some() || !triggers.is_empty() || !retry.is_empty() {
+            // ---- Frozen-context service (normal mode only) ----
+            if backup.is_none() && !retry.is_empty() {
+                let mut still = Vec::new();
+                for (port, req, node, iter, is_read) in retry.drain(..) {
+                    match mem.request(port, req, cycle) {
+                        MemResponse::MshrFull => still.push((port, req, node, iter, is_read)),
+                        MemResponse::HitSpm { data } | MemResponse::HitL1 { data } => {
+                            if is_read {
+                                effects.insert((node, iter), Some(data));
+                            } else {
+                                effects.insert((node, iter), None);
+                            }
+                        }
+                        MemResponse::ReadMiss { .. } => {
+                            let block = mem.l1s[port].block_addr(req.addr);
+                            uncovered += 1;
+                            triggers.push(Trigger { port, block, node, iter, addr: req.addr });
+                        }
+                        MemResponse::WriteQueued => {
+                            effects.insert((node, iter), None);
+                        }
+                    }
+                }
+                retry = still;
+                if !retry.is_empty() {
+                    stall_cycles += 1;
+                    cycle += 1;
+                    Self::drain(mem, cycle, &mut triggers, &mut effects);
+                    continue;
+                }
+            }
+
+            if backup.is_none() && !triggers.is_empty() {
+                match self.cfg.mode {
+                    ExecMode::Normal => {
+                        // ---- Plain stall: fast-forward to the next fill ----
+                        let next = mem.next_event().unwrap_or(cycle + 1).max(cycle + 1);
+                        stall_cycles += next - cycle;
+                        cycle = next;
+                        Self::drain(mem, cycle, &mut triggers, &mut effects);
+                        continue;
+                    }
+                    ExecMode::Runahead => {
+                        // ---- Enter runahead (Fig 3b ②) ----
+                        runahead_entries += 1;
+                        mem.prefetch_epoch += 1;
+                        self.backup_vals.copy_from_slice(&self.vals);
+                        backup = Some(BackupRegs { ctx });
+                        ra_deadline = cycle + self.cfg.max_runahead_cycles;
+                        for t in &triggers {
+                            self.set_val(t.node, t.iter, Value::dummy());
+                        }
+                    }
+                }
+            }
+
+            let in_runahead = backup.is_some();
+            // ---- Execute one cycle of the schedule ----
+            let slot = (ctx % ii) as usize;
+            for si in 0..self.slot_nodes[slot].len() {
+                let (node, t_n32) = self.slot_nodes[slot][si];
+                let t_n = t_n32 as u64;
+                if ctx < t_n {
+                    continue;
+                }
+                let iter = (ctx - t_n) / ii;
+                if iter >= iterations {
+                    continue;
+                }
+                match self.dfg.nodes[node].op {
+                    Op::IterIdx => self.set_val(node, iter, Value::real(iter as u32)),
+                    Op::Const(c) => self.set_val(node, iter, Value::real(c)),
+                    Op::Alu(op) => {
+                        let a = self.input(node, 0, iter);
+                        let b = self.input(node, 1, iter);
+                        self.set_val(node, iter, op.eval(a, b));
+                    }
+                    Op::Load(space) => {
+                        let addr_v = self.input(node, 0, iter);
+                        if in_runahead {
+                            let v = self.runahead_load(mem, space.port, addr_v, cycle);
+                            self.set_val(node, iter, v);
+                        } else if let Some(eff) = effects.get(&(node, iter)) {
+                            // Replay of a frozen context: use latched data.
+                            let d = eff.expect("load effect carries data");
+                            self.set_val(node, iter, Value::real(d));
+                        } else {
+                            self.demand_load(
+                                mem, node, iter, space.port, addr_v.bits, cycle,
+                                &mut triggers, &mut effects, &mut retry, &mut uncovered,
+                            );
+                        }
+                    }
+                    Op::Store(space) => {
+                        let addr_v = self.input(node, 0, iter);
+                        let data_v = self.input(node, 1, iter);
+                        if in_runahead {
+                            self.runahead_store(mem, space.port, addr_v, data_v, cycle);
+                        } else if effects.contains_key(&(node, iter)) {
+                            // Store already issued before the freeze.
+                        } else {
+                            self.demand_store(
+                                mem, node, iter, space.port, addr_v.bits, data_v.bits, cycle,
+                                &mut effects, &mut retry,
+                            );
+                        }
+                    }
+                }
+            }
+
+            cycle += 1;
+            if in_runahead {
+                stall_cycles += 1;
+                runahead_cycles += 1;
+                ctx += 1; // speculative progress (discarded on exit)
+            } else if triggers.is_empty() && retry.is_empty() {
+                // Clean completion of this context.
+                useful_ops += self.slot_nodes[slot]
+                    .iter()
+                    .filter(|&&(_, t)| {
+                        ctx >= t as u64 && (ctx - t as u64) / ii < iterations
+                    })
+                    .count() as u64;
+                effects.clear();
+                ctx += 1;
+            }
+            // else: context frozen; ctx stays, effects/triggers persist.
+
+            // ---- Fill completions ----
+            Self::drain(mem, cycle, &mut triggers, &mut effects);
+
+            if backup.is_some() {
+                let resolved = triggers.is_empty();
+                let timed_out = cycle >= ra_deadline;
+                if resolved || timed_out {
+                    // ---- Exit runahead: restore backup registers ----
+                    let b = backup.take().unwrap();
+                    ctx = b.ctx;
+                    self.vals.copy_from_slice(&self.backup_vals);
+                    if timed_out && !resolved {
+                        // Degenerate: wait out the remaining fills plainly.
+                        while !triggers.is_empty() {
+                            let next = mem.next_event().unwrap_or(cycle + 1).max(cycle + 1);
+                            stall_cycles += next - cycle;
+                            cycle = next;
+                            Self::drain(mem, cycle, &mut triggers, &mut effects);
+                        }
+                    }
+                    for port in 0..self.cfg.geom.ports {
+                        mem.temp_stores[port].clear();
+                    }
+                    // Replay the frozen context; trigger loads consume the
+                    // effects latched by drain().
+                }
+            }
+        }
+
+        mem.finalize_prefetch_stats();
+        RunResult {
+            cycles: cycle,
+            stall_cycles,
+            runahead_cycles,
+            runahead_entries,
+            iterations,
+            useful_ops,
+            num_pes: self.cfg.geom.num_pes(),
+            ii: self.mapping.ii as u32,
+            mem: mem.stats,
+            freq_mhz: self.cfg.freq_mhz,
+            uncovered_misses: uncovered,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn demand_load(
+        &mut self,
+        mem: &mut MemorySubsystem,
+        node: NodeId,
+        iter: u64,
+        port: usize,
+        addr: u32,
+        cycle: Cycle,
+        triggers: &mut Vec<Trigger>,
+        effects: &mut CycleEffects,
+        retry: &mut Vec<(usize, MemRequest, NodeId, u64, bool)>,
+        uncovered: &mut u64,
+    ) {
+        let pe = self.mapping.place[node].0;
+        self.trace.record(TraceEvent { cycle, pe, port, addr, is_write: false });
+        let req = MemRequest { addr, kind: AccessKind::Read, data: 0, pe: node };
+        match mem.request(port, req, cycle) {
+            MemResponse::HitSpm { data } | MemResponse::HitL1 { data } => {
+                self.set_val(node, iter, Value::real(data));
+                effects.insert((node, iter), Some(data));
+            }
+            MemResponse::ReadMiss { .. } => {
+                let block = mem.l1s[port].block_addr(addr);
+                *uncovered += 1;
+                triggers.push(Trigger { port, block, node, iter, addr });
+            }
+            MemResponse::WriteQueued => unreachable!("read got WriteQueued"),
+            MemResponse::MshrFull => retry.push((port, req, node, iter, true)),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn demand_store(
+        &mut self,
+        mem: &mut MemorySubsystem,
+        node: NodeId,
+        iter: u64,
+        port: usize,
+        addr: u32,
+        data: u32,
+        cycle: Cycle,
+        effects: &mut CycleEffects,
+        retry: &mut Vec<(usize, MemRequest, NodeId, u64, bool)>,
+    ) {
+        let pe = self.mapping.place[node].0;
+        self.trace.record(TraceEvent { cycle, pe, port, addr, is_write: true });
+        let req = MemRequest { addr, kind: AccessKind::Write, data, pe: node };
+        match mem.request(port, req, cycle) {
+            MemResponse::MshrFull => retry.push((port, req, node, iter, false)),
+            _ => {
+                effects.insert((node, iter), None);
+            }
+        }
+    }
+
+    /// Apply fill completions; resolved triggers latch their data into the
+    /// frozen context's effects for replay.
+    fn drain(
+        mem: &mut MemorySubsystem,
+        cycle: Cycle,
+        triggers: &mut Vec<Trigger>,
+        effects: &mut CycleEffects,
+    ) {
+        for done in mem.tick(cycle) {
+            let mut i = 0;
+            while i < triggers.len() {
+                let t = triggers[i];
+                // Match on (node, block): node ids are unique, and under
+                // the shared-L1 motivation mode the completing L1 index
+                // differs from the issuing port.
+                if t.node == done.pe && t.block == done.addr_block {
+                    effects.insert((t.node, t.iter), Some(mem.backing.read_u32(t.addr)));
+                    triggers.swap_remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Runahead load (§3.2): dummy address → dummy; else probe temp store,
+    /// SPM and L1 (no LRU disturbance); miss → precise prefetch + dummy.
+    fn runahead_load(
+        &mut self,
+        mem: &mut MemorySubsystem,
+        port: usize,
+        addr: Value,
+        cycle: Cycle,
+    ) -> Value {
+        if addr.dummy {
+            if !self.cfg.ablation.dummy_tracking {
+                // Ablated selective prefetching: the garbage address goes
+                // to the memory subsystem and pollutes the cache.
+                let _ = mem.prefetch(port, addr.bits, cycle);
+            }
+            return Value::dummy();
+        }
+        if self.cfg.ablation.temp_store {
+            if let Some(d) = mem.temp_stores[port].read(addr.bits) {
+                return Value::real(d);
+            }
+        }
+        match mem.prefetch(port, addr.bits, cycle) {
+            PrefetchResponse::AlreadyPresent { data } => Value::real(data),
+            _ => Value::dummy(),
+        }
+    }
+
+    /// Runahead store (§3.2): writes are converted into prefetch reads
+    /// (never committed); valid data additionally lands in temp storage so
+    /// runahead-local RAW chains stay coherent.
+    fn runahead_store(
+        &mut self,
+        mem: &mut MemorySubsystem,
+        port: usize,
+        addr: Value,
+        data: Value,
+        cycle: Cycle,
+    ) {
+        if addr.dummy {
+            if !self.cfg.ablation.dummy_tracking {
+                let _ = mem.prefetch(port, addr.bits, cycle);
+            }
+            return; // discarded invalid operation
+        }
+        if self.cfg.ablation.convert_writes {
+            let _ = mem.prefetch(port, addr.bits, cycle);
+        }
+        if self.cfg.ablation.temp_store && !data.dummy {
+            mem.temp_stores[port].write(addr.bits, data.bits);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{CacheConfig, SubsystemConfig};
+    use crate::sim::alu::AluOp;
+    use crate::sim::dfg::DfgBuilder;
+    use crate::sim::mapper::Mapper;
+
+    fn small_mem(num_ports: usize) -> MemorySubsystem {
+        let cfg = SubsystemConfig {
+            num_ports,
+            spm_bytes: 512,
+            l1: CacheConfig { sets: 8, ways: 2, line_bytes: 16, vline_shift: 0 },
+            l2: CacheConfig { sets: 64, ways: 4, line_bytes: 16, vline_shift: 0 },
+            mshr_entries: 8,
+            store_buffer_entries: 8,
+            l1_hit_latency: 1,
+            l2_hit_latency: 8,
+            dram_latency: 80,
+            dram_bytes_per_cycle: 8,
+            temp_store_bytes: 64,
+            shared_l1: false,
+        };
+        let mut m = MemorySubsystem::new(cfg, 1 << 20);
+        for p in 0..num_ports {
+            m.place_spm(p, (p as u32) * 0x1000);
+        }
+        m
+    }
+
+    /// out[i] = a[i] + b[i] over n elements, all data beyond SPM.
+    fn vecadd_dfg() -> Dfg {
+        let mut b = DfgBuilder::new("vecadd");
+        let i = b.iter_idx();
+        let av = b.array_load(0, 0x10000, i);
+        let bv = b.array_load(1, 0x20000, i);
+        let s = b.alu(AluOp::Add, av, bv);
+        b.array_store(0, 0x30000, i, s);
+        b.finish()
+    }
+
+    fn run_vecadd(mode: ExecMode, n: u64) -> (RunResult, Vec<u32>) {
+        let dfg = vecadd_dfg();
+        let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+        let mapping = Mapper::new(geom).map(&dfg).unwrap();
+        let mut cfg = CgraConfig::hycube_4x4(mode);
+        cfg.trace_window = 128;
+        let mut mem = small_mem(2);
+        for i in 0..n as u32 {
+            mem.backing.write_u32(0x10000 + i * 4, i);
+            mem.backing.write_u32(0x20000 + i * 4, 100 + i);
+        }
+        let mut arr = CgraArray::new(cfg, dfg, mapping);
+        let res = arr.run(&mut mem, n);
+        let out = mem.backing.dump_u32(0x30000, n as usize);
+        (res, out)
+    }
+
+    #[test]
+    fn vecadd_functional_correctness_normal() {
+        let (res, out) = run_vecadd(ExecMode::Normal, 64);
+        for i in 0..64u32 {
+            assert_eq!(out[i as usize], 100 + 2 * i, "element {i}");
+        }
+        assert!(res.cycles > 0);
+        assert!(res.stall_cycles > 0); // cold misses stall
+    }
+
+    #[test]
+    fn vecadd_functional_correctness_runahead() {
+        let (res, out) = run_vecadd(ExecMode::Runahead, 64);
+        for i in 0..64u32 {
+            assert_eq!(out[i as usize], 100 + 2 * i, "element {i}");
+        }
+        assert!(res.runahead_entries > 0);
+    }
+
+    #[test]
+    fn runahead_is_not_slower_on_streaming_kernel() {
+        let (normal, _) = run_vecadd(ExecMode::Normal, 256);
+        let (ra, _) = run_vecadd(ExecMode::Runahead, 256);
+        assert!(
+            ra.cycles <= normal.cycles,
+            "runahead {} > normal {}",
+            ra.cycles,
+            normal.cycles
+        );
+    }
+
+    #[test]
+    fn runahead_issues_prefetches_and_covers_misses() {
+        let (ra, _) = run_vecadd(ExecMode::Runahead, 256);
+        assert!(ra.mem.prefetches_issued > 0);
+        assert!(ra.mem.prefetch_used > 0);
+        assert!(ra.coverage() > 0.2, "coverage {}", ra.coverage());
+    }
+
+    #[test]
+    fn utilization_between_zero_and_one() {
+        let (res, _) = run_vecadd(ExecMode::Normal, 64);
+        let u = res.utilization();
+        assert!(u > 0.0 && u < 1.0, "utilization {u}");
+    }
+
+    #[test]
+    fn trace_captures_demand_accesses() {
+        let dfg = vecadd_dfg();
+        let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+        let mapping = Mapper::new(geom).map(&dfg).unwrap();
+        let mut cfg = CgraConfig::hycube_4x4(ExecMode::Normal);
+        cfg.trace_window = 64;
+        let mut mem = small_mem(2);
+        let mut arr = CgraArray::new(cfg, dfg, mapping);
+        arr.run(&mut mem, 32);
+        assert!(arr.trace.totals[0] > 0);
+        assert!(!arr.trace.events[0].is_empty());
+    }
+
+    #[test]
+    fn spm_resident_run_never_stalls() {
+        let mut b = DfgBuilder::new("spm_vecadd");
+        let i = b.iter_idx();
+        let av = b.array_load(0, 0x0000, i); // port0 SPM window
+        let bv = b.array_load(1, 0x1000, i); // port1 SPM window
+        let s = b.alu(AluOp::Add, av, bv);
+        b.array_store(0, 0x100, i, s);
+        let dfg = b.finish();
+        let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+        let mapping = Mapper::new(geom).map(&dfg).unwrap();
+        let mut mem = small_mem(2);
+        for i in 0..16u32 {
+            mem.backing.write_u32(i * 4, i);
+            mem.backing.write_u32(0x1000 + i * 4, 5);
+        }
+        let mut arr = CgraArray::new(CgraConfig::hycube_4x4(ExecMode::Normal), dfg, mapping);
+        let res = arr.run(&mut mem, 16);
+        assert_eq!(res.stall_cycles, 0);
+        assert_eq!(
+            res.cycles,
+            15 * res.ii as u64 + arr.mapping.schedule_len as u64
+        );
+        for i in 0..16u32 {
+            assert_eq!(mem.backing.read_u32(0x100 + i * 4), i + 5);
+        }
+    }
+
+    #[test]
+    fn loop_carried_accumulator_sums_correctly() {
+        let mut b = DfgBuilder::new("prefix");
+        let i = b.iter_idx();
+        let av = b.array_load(0, 0x0000, i); // SPM resident
+        let acc = b.alu_carried(AluOp::Add, 0, 1, av, 0);
+        b.dfg_mut().nodes[acc].inputs[0].src = acc; // self-edge
+        b.array_store(1, 0x1000, i, acc); // port1 SPM window
+        let dfg = b.dfg_mut().clone();
+        let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+        let mapping = Mapper::new(geom).map(&dfg).unwrap();
+        let mut mem = small_mem(2);
+        for k in 0..8u32 {
+            mem.backing.write_u32(k * 4, k + 1);
+        }
+        let mut arr = CgraArray::new(CgraConfig::hycube_4x4(ExecMode::Normal), dfg, mapping);
+        arr.run(&mut mem, 8);
+        let mut expect = 0u32;
+        for k in 0..8u32 {
+            expect += k + 1;
+            assert_eq!(mem.backing.read_u32(0x1000 + k * 4), expect, "prefix {k}");
+        }
+    }
+
+    #[test]
+    fn runahead_and_normal_produce_identical_outputs() {
+        let (_, out_n) = run_vecadd(ExecMode::Normal, 128);
+        let (_, out_r) = run_vecadd(ExecMode::Runahead, 128);
+        assert_eq!(out_n, out_r);
+    }
+
+    #[test]
+    fn spm_only_gather_does_not_livelock_and_is_slow() {
+        // Irregular gather with a 0-way cache (SPM-only): every off-SPM
+        // access pays full DRAM latency; the frozen-context replay must
+        // consume latched data instead of re-missing forever.
+        let mut b = DfgBuilder::new("gather");
+        let i = b.iter_idx();
+        let idx = b.array_load(0, 0x0000, i); // index array in SPM
+        let v = b.array_load(1, 0x40000, idx); // gather from DRAM-backed space
+        b.array_store(1, 0x1000, i, v); // port1 SPM
+        let dfg = b.finish();
+        let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+        let mapping = Mapper::new(geom).map(&dfg).unwrap();
+        let cfg = SubsystemConfig::spm_only(2, 8192);
+        let mut mem = MemorySubsystem::new(cfg, 1 << 20);
+        mem.place_spm(0, 0x0000);
+        mem.place_spm(1, 0x1000);
+        let n = 32u64;
+        for k in 0..n as u32 {
+            mem.backing.write_u32(k * 4, (k * 7) % 64); // scattered indices
+            mem.backing.write_u32(0x40000 + ((k * 7) % 64) * 4, 1000 + k);
+        }
+        let mut arr = CgraArray::new(CgraConfig::hycube_4x4(ExecMode::Normal), dfg, mapping);
+        let res = arr.run(&mut mem, n);
+        for k in 0..n as u32 {
+            assert_eq!(mem.backing.read_u32(0x1000 + k * 4), 1000 + k, "elem {k}");
+        }
+        // Every gather missed: stall cycles dominate.
+        assert!(res.stall_cycles as f64 / res.cycles as f64 > 0.8);
+        assert!(res.utilization() < 0.10);
+    }
+
+    #[test]
+    fn runahead_faster_than_normal_on_irregular_gather() {
+        // Pointer-chase-free irregular gather where prefetching helps: the
+        // index array is SPM-resident so runahead can resolve future
+        // addresses precisely.
+        let build = || {
+            let mut b = DfgBuilder::new("gather");
+            let i = b.iter_idx();
+            let idx = b.array_load(0, 0x0000, i);
+            let v = b.array_load(1, 0x40000, idx);
+            b.array_store(1, 0x1000, i, v);
+            b.finish()
+        };
+        let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+        let n = 128u64;
+        let mut run = |mode| {
+            let dfg = build();
+            let mapping = Mapper::new(geom).map(&dfg).unwrap();
+            let mut mem = small_mem(2);
+            let mut x = 99u32;
+            for k in 0..n as u32 {
+                x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                let idx = x % 4096;
+                mem.backing.write_u32(k * 4, idx);
+                mem.backing.write_u32(0x40000 + idx * 4, k);
+            }
+            let mut arr = CgraArray::new(CgraConfig::hycube_4x4(mode), dfg, mapping);
+            arr.run(&mut mem, n)
+        };
+        let normal = run(ExecMode::Normal);
+        let ra = run(ExecMode::Runahead);
+        assert!(
+            (ra.cycles as f64) < normal.cycles as f64 * 0.9,
+            "runahead {} vs normal {}",
+            ra.cycles,
+            normal.cycles
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Cycle-accurate HyCUBE-like CGRA model (paper §2.1, Fig 4).
+//!
+//! The array is an `n×n` grid of PEs connected by a crossbar-based
+//! configurable network with single-cycle multi-hop routing. Left-column
+//! ("border") PEs issue loads/stores; each *pair* of border PEs shares a
+//! crossbar to one virtual SPM (SPM + private L1). PEs execute a modulo-
+//! scheduled Data Flow Graph: every PE holds one context per II slot in its
+//! config memory and the whole array advances in lock-step — which is why a
+//! single unresolved memory access stalls *everything* (§2.2), the effect
+//! the paper's runahead mechanism exploits.
+
+pub mod alu;
+pub mod array;
+pub mod dfg;
+pub mod mapper;
+pub mod pe;
+pub mod trace;
+
+pub use alu::{AluOp, Value};
+pub use array::{CgraArray, CgraConfig, ExecMode, RunResult, RunaheadAblation};
+pub use dfg::{Dfg, DfgBuilder, MemSpace, NodeId, Op};
+pub use mapper::Geometry;
+pub use mapper::{Mapper, Mapping};
+pub use trace::AccessTrace;

@@ -1,0 +1,137 @@
+//! Demand-access trace capture. Two consumers:
+//!
+//! * Fig 7 — per-PE address/time scatter series showing the regular /
+//!   irregular / mixed taxonomy;
+//! * the reconfiguration hardware tracker (§3.4) — samples each PE's
+//!   accesses over an observation window for the software model.
+
+use crate::mem::{Addr, Cycle};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub cycle: Cycle,
+    pub pe: usize,
+    pub port: usize,
+    pub addr: Addr,
+    pub is_write: bool,
+}
+
+/// Bounded trace recorder: keeps the first `cap` events per port (the
+/// tracker's observation window) and summary statistics for all of them.
+#[derive(Clone, Debug)]
+pub struct AccessTrace {
+    pub cap_per_port: usize,
+    pub events: Vec<Vec<TraceEvent>>,
+    /// Total events seen per port (including dropped ones).
+    pub totals: Vec<u64>,
+    enabled: bool,
+}
+
+impl AccessTrace {
+    pub fn new(ports: usize, cap_per_port: usize) -> Self {
+        AccessTrace {
+            cap_per_port,
+            events: vec![Vec::new(); ports],
+            totals: vec![0; ports],
+            enabled: cap_per_port > 0,
+        }
+    }
+
+    pub fn disabled(ports: usize) -> Self {
+        Self::new(ports, 0)
+    }
+
+    #[inline]
+    pub fn record(&mut self, ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        self.totals[ev.port] += 1;
+        let buf = &mut self.events[ev.port];
+        if buf.len() < self.cap_per_port {
+            buf.push(ev);
+        }
+    }
+
+    /// Restart the observation window (tracker re-arm).
+    pub fn rearm(&mut self) {
+        for b in &mut self.events {
+            b.clear();
+        }
+    }
+
+    /// Irregularity score of a port's sampled stream: fraction of accesses
+    /// whose stride differs from the previous stride (0 = perfectly
+    /// regular). Used for Fig 5 and the reconfiguration heuristics.
+    pub fn irregularity(&self, port: usize) -> f64 {
+        let evs = &self.events[port];
+        if evs.len() < 3 {
+            return 0.0;
+        }
+        let mut changes = 0usize;
+        let mut prev_stride: i64 = evs[1].addr as i64 - evs[0].addr as i64;
+        for w in evs.windows(2).skip(1) {
+            let s = w[1].addr as i64 - w[0].addr as i64;
+            if s != prev_stride {
+                changes += 1;
+            }
+            prev_stride = s;
+        }
+        changes as f64 / (evs.len() - 2) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(port: usize, cycle: u64, addr: u32) -> TraceEvent {
+        TraceEvent { cycle, pe: 0, port, addr, is_write: false }
+    }
+
+    #[test]
+    fn caps_per_port_but_counts_all() {
+        let mut t = AccessTrace::new(2, 2);
+        for i in 0..5 {
+            t.record(ev(0, i, i as u32 * 4));
+        }
+        assert_eq!(t.events[0].len(), 2);
+        assert_eq!(t.totals[0], 5);
+        assert!(t.events[1].is_empty());
+    }
+
+    #[test]
+    fn regular_stream_has_zero_irregularity() {
+        let mut t = AccessTrace::new(1, 64);
+        for i in 0..32 {
+            t.record(ev(0, i, i as u32 * 4));
+        }
+        assert_eq!(t.irregularity(0), 0.0);
+    }
+
+    #[test]
+    fn random_stream_has_high_irregularity() {
+        let mut t = AccessTrace::new(1, 64);
+        let mut x = 12345u32;
+        for i in 0..64 {
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+            t.record(ev(0, i, x % 4096));
+        }
+        assert!(t.irregularity(0) > 0.8);
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = AccessTrace::disabled(1);
+        t.record(ev(0, 0, 0));
+        assert_eq!(t.totals[0], 0);
+    }
+
+    #[test]
+    fn rearm_clears_window() {
+        let mut t = AccessTrace::new(1, 4);
+        t.record(ev(0, 0, 0));
+        t.rearm();
+        assert!(t.events[0].is_empty());
+    }
+}

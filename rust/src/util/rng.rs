@@ -1,0 +1,22 @@
+/// Deterministic xoshiro256** PRNG (offline substitute for the `rand` crate).
+#[derive(Clone, Debug)]
+pub struct Rng { s: [u64; 4] }
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || { sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm; z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB); z ^ (z >> 31) };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0]; self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2]; self.s[0] ^= self.s[3];
+        self.s[2] ^= t; self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+    pub fn gen_range(&mut self, lo: u64, hi: u64) -> u64 { lo + self.next_u64() % (hi - lo).max(1) }
+    pub fn gen_f32(&mut self) -> f32 { (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32 }
+}

@@ -1,0 +1,208 @@
+//! GCN feature aggregation — the paper's Listing 1 / Fig 4b kernel:
+//!
+//! ```c
+//! for (i = 0; i < E; i++)
+//!     output[edge_start[i]] += weight[i] * feature[edge_end[i]];
+//! ```
+//!
+//! Features are `F`-dimensional, so the loop is flattened to `E·F`
+//! iterations with `e = i >> log2(F)` and `f = i & (F-1)` (HyCUBE has no
+//! divider; F is a power of two). Edge arrays stream regularly — each edge
+//! entry is reused for F consecutive iterations — while the feature gather
+//! and output accumulation are data-dependent and irregular: exactly the
+//! regular/irregular mix of Fig 7g-h.
+
+use super::graphs::{Graph, GraphSpec};
+use super::{ArraySpec, Layout, Placement, Workload};
+use crate::mem::Backing;
+use crate::sim::{AluOp, Dfg, DfgBuilder};
+
+pub struct GcnAggregate {
+    pub graph: Graph,
+}
+
+impl GcnAggregate {
+    pub fn new(spec: GraphSpec) -> Self {
+        GcnAggregate { graph: Graph::synthesize(spec) }
+    }
+}
+
+impl Workload for GcnAggregate {
+    fn name(&self) -> String {
+        format!("aggregate/{}", self.graph.spec.name)
+    }
+
+    fn domain(&self) -> &'static str {
+        "Graph Neural Networks"
+    }
+
+    fn iterations(&self) -> u64 {
+        self.graph.spec.edges as u64 * self.graph.spec.feat_dim as u64
+    }
+
+    fn build(&self, l: &mut Layout) -> Dfg {
+        let s = self.graph.spec;
+        let (e, n, f) = (s.edges, s.nodes, s.feat_dim);
+        // Data partitioning across virtual SPMs (§3.3). With 4+ ports the
+        // regular streams, the output RMW and the feature gather each get
+        // their own cache — exposing the per-PE access patterns that the
+        // reconfiguration technique exploits (§3.4, Fig 3a ②).
+        let four = l.num_ports() >= 4;
+        let (p_edge, p_out, p_w, p_feat) =
+            if four { (0, 1, 2, 3) } else { (0, 0, 1, 1) };
+        let b_src = l.alloc(ArraySpec {
+            name: "edge_start", port: p_edge, words: e, placement: Placement::Streamed, irregular: false,
+        });
+        let b_dst = l.alloc(ArraySpec {
+            name: "edge_end", port: p_edge, words: e, placement: Placement::Streamed, irregular: false,
+        });
+        let b_out = l.alloc(ArraySpec {
+            name: "output", port: p_out, words: n * f, placement: Placement::Cached, irregular: true,
+        });
+        let b_w = l.alloc(ArraySpec {
+            name: "weight", port: p_w, words: e, placement: Placement::Streamed, irregular: false,
+        });
+        let b_feat = l.alloc(ArraySpec {
+            name: "feature", port: p_feat, words: n * f, placement: Placement::Cached, irregular: true,
+        });
+
+        let log2f = f.trailing_zeros();
+        let mut b = DfgBuilder::new("gcn_aggregate");
+        let i = b.iter_idx();
+        let kf = b.konst(log2f);
+        let e_idx = b.alu(AluOp::Lshr, i, kf); // e = i >> log2F
+        let km = b.konst(f - 1);
+        let f_idx = b.alu(AluOp::And, i, km); // f = i & (F-1)
+        let src = b.array_load(p_edge, b_src, e_idx); // edge_start[e]
+        let dst = b.array_load(p_edge, b_dst, e_idx); // edge_end[e]
+        let w = b.array_load(p_w, b_w, e_idx); // weight[e]
+        // feature[edge_end[e]*F + f]
+        let dsh = b.alu(AluOp::Shl, dst, kf);
+        let fi = b.alu(AluOp::Add, dsh, f_idx);
+        let feat = b.array_load(p_feat, b_feat, fi);
+        let prod = b.alu(AluOp::FMul, w, feat);
+        // output[edge_start[e]*F + f] += prod  (read-modify-write)
+        let ssh = b.alu(AluOp::Shl, src, kf);
+        let oi = b.alu(AluOp::Add, ssh, f_idx);
+        let old = b.array_load(p_out, b_out, oi);
+        let sum = b.alu(AluOp::FAdd, old, prod);
+        let st = b.array_store(p_out, b_out, oi, sum);
+        // Edges arrive in COO order: any two edges may share a source, so
+        // the output accumulator chains through memory with distance 1 —
+        // the conservative dependence a CGRA compiler must honour when it
+        // cannot prove the scatter targets distinct.
+        b.mem_dep(st, old, 1);
+        b.finish()
+    }
+
+    fn init(&self, l: &Layout, mem: &mut Backing) {
+        let s = self.graph.spec;
+        mem.load_u32_slice(l.base_of("edge_start"), &self.graph.src);
+        mem.load_u32_slice(l.base_of("edge_end"), &self.graph.dst);
+        mem.load_u32_slice(l.base_of("weight"), &self.graph.weight);
+        let mut rng = crate::util::Rng::new(s.seed ^ 0xfeed);
+        let feat: Vec<u32> =
+            (0..(s.nodes * s.feat_dim)).map(|_| (rng.gen_f32() - 0.5).to_bits()).collect();
+        mem.load_u32_slice(l.base_of("feature"), &feat);
+        // output starts at zero (Backing is zero-initialised).
+    }
+
+    fn golden(&self, l: &Layout, mem: &Backing) -> Vec<u32> {
+        let s = self.graph.spec;
+        let f = s.feat_dim as usize;
+        let feat_base = l.base_of("feature");
+        let mut out = vec![0f32; (s.nodes * s.feat_dim) as usize];
+        for i in 0..self.graph.src.len() {
+            let (src, dst) = (self.graph.src[i] as usize, self.graph.dst[i] as usize);
+            let w = f32::from_bits(self.graph.weight[i]);
+            for k in 0..f {
+                let fv = mem.read_f32(feat_base + ((dst * f + k) * 4) as u32);
+                out[src * f + k] += w * fv;
+            }
+        }
+        out.into_iter().map(f32::to_bits).collect()
+    }
+
+    fn output(&self) -> (&'static str, u32) {
+        ("output", self.graph.spec.nodes * self.graph.spec.feat_dim)
+    }
+
+    fn output_is_f32(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::SubsystemConfig;
+    use crate::sim::{CgraConfig, ExecMode};
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn tiny_gcn_correct_normal_mode() {
+        let wl = GcnAggregate::new(GraphSpec::tiny());
+        let run = run_workload(
+            &wl,
+            SubsystemConfig::paper_base(),
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+        );
+        assert!(run.output_ok, "simulated output diverged from golden");
+        assert!(run.result.cycles > 0);
+    }
+
+    #[test]
+    fn tiny_gcn_correct_runahead_mode() {
+        let wl = GcnAggregate::new(GraphSpec::tiny());
+        let run = run_workload(
+            &wl,
+            SubsystemConfig::paper_base(),
+            CgraConfig::hycube_4x4(ExecMode::Runahead),
+        );
+        assert!(run.output_ok);
+        assert!(run.result.runahead_entries > 0);
+    }
+
+    #[test]
+    fn runahead_speeds_up_tiny_gcn() {
+        let wl = GcnAggregate::new(GraphSpec::tiny());
+        let normal = run_workload(
+            &wl,
+            SubsystemConfig::paper_base(),
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+        );
+        let ra = run_workload(
+            &wl,
+            SubsystemConfig::paper_base(),
+            CgraConfig::hycube_4x4(ExecMode::Runahead),
+        );
+        assert!(
+            ra.result.cycles < normal.result.cycles,
+            "runahead {} vs normal {}",
+            ra.result.cycles,
+            normal.result.cycles
+        );
+    }
+
+    #[test]
+    fn spm_only_is_much_slower_than_cache_spm() {
+        let wl = GcnAggregate::new(GraphSpec::tiny());
+        let spm_only = run_workload(
+            &wl,
+            SubsystemConfig::spm_only(2, 4096),
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+        );
+        let cache = run_workload(
+            &wl,
+            SubsystemConfig::paper_base(),
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+        );
+        assert!(spm_only.output_ok && cache.output_ok);
+        assert!(
+            spm_only.result.cycles > 2 * cache.result.cycles,
+            "spm-only {} vs cache {}",
+            spm_only.result.cycles,
+            cache.result.cycles
+        );
+    }
+}

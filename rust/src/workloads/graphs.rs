@@ -1,0 +1,136 @@
+//! Synthetic graph datasets standing in for Planetoid/OGB (substitution
+//! documented in DESIGN.md): node/edge counts match the real datasets
+//! (OGBN-Arxiv and PubMed edge counts are scaled down, as the paper itself
+//! reduced dimensions "to control simulation time"), and the degree
+//! distribution is skewed (preferential-attachment-style) so the feature
+//! gather shows the same hot/cold locality structure real citation graphs
+//! have. Edges are kept in COO load order, so the `edge_start`/`edge_end`
+//! index arrays stream regularly while the feature gather and output
+//! accumulation they drive are irregular — Listing 1's access structure.
+
+use crate::util::Rng;
+
+/// Static description of a graph dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct GraphSpec {
+    pub name: &'static str,
+    pub nodes: u32,
+    pub edges: u32,
+    /// Feature dimension (paper: reduced; must be a power of two so the
+    /// kernel splits the flat index with shift/mask — HyCUBE has no
+    /// divider, §4.5).
+    pub feat_dim: u32,
+    pub seed: u64,
+}
+
+impl GraphSpec {
+    /// The four evaluation datasets of Table 1.
+    pub fn paper_datasets() -> Vec<GraphSpec> {
+        vec![
+            GraphSpec { name: "citeseer", nodes: 3327, edges: 9104, feat_dim: 16, seed: 11 },
+            GraphSpec { name: "cora", nodes: 2708, edges: 10556, feat_dim: 16, seed: 12 },
+            // PubMed: 19717 nodes / 88648 edges in reality; edge count
+            // scaled to keep full-suite simulation tractable.
+            GraphSpec { name: "pubmed", nodes: 19717, edges: 24000, feat_dim: 16, seed: 13 },
+            // OGBN-Arxiv: 169k nodes / 1.17M edges; scaled likewise.
+            GraphSpec { name: "ogbn_arxiv", nodes: 16384, edges: 30000, feat_dim: 16, seed: 14 },
+        ]
+    }
+
+    pub fn cora() -> GraphSpec {
+        Self::paper_datasets()[1]
+    }
+
+    /// Tiny graph for unit tests and quick sweeps.
+    pub fn tiny() -> GraphSpec {
+        GraphSpec { name: "tiny", nodes: 256, edges: 1024, feat_dim: 4, seed: 7 }
+    }
+}
+
+/// Materialised edge list.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub spec: GraphSpec,
+    /// Source of edge i (COO order; output scatter target).
+    pub src: Vec<u32>,
+    /// Destination of edge i (skewed-random; feature gather index).
+    pub dst: Vec<u32>,
+    /// Edge weights as f32 bit patterns.
+    pub weight: Vec<u32>,
+}
+
+impl Graph {
+    pub fn synthesize(spec: GraphSpec) -> Graph {
+        let mut rng = Rng::new(spec.seed);
+        let mut src = Vec::with_capacity(spec.edges as usize);
+        let mut dst = Vec::with_capacity(spec.edges as usize);
+        let mut weight = Vec::with_capacity(spec.edges as usize);
+        for _ in 0..spec.edges {
+            src.push(rng.gen_range(0, spec.nodes as u64) as u32);
+            // Preferential-attachment-style skew: a third of the endpoints
+            // land in a hot sqrt(N)-sized head, the rest are uniform.
+            let d = if rng.next_u64() % 3 == 0 {
+                let head = (spec.nodes as f64).sqrt() as u64 + 1;
+                rng.gen_range(0, head) as u32
+            } else {
+                rng.gen_range(0, spec.nodes as u64) as u32
+            };
+            dst.push(d);
+            // Weights in (0, 1] keep float sums well-conditioned.
+            weight.push((0.25 + 0.5 * rng.gen_f32()).to_bits());
+        }
+        // COO edge order (as loaded from disk): neither endpoint stream is
+        // sorted, so BOTH the feature gather and the output accumulation
+        // are irregular — matching the paper's treatment of Listing 1
+        // (edge_start/edge_end index *arrays* stream regularly, but the
+        // arrays they index are accessed irregularly).
+        Graph { spec, src, dst, weight }
+    }
+
+    /// Degree skew diagnostic: fraction of edges landing in the hottest
+    /// sqrt(N) destination nodes.
+    pub fn hot_fraction(&self) -> f64 {
+        let head = (self.spec.nodes as f64).sqrt() as u32 + 1;
+        let hot = self.dst.iter().filter(|&&d| d < head).count();
+        hot as f64 / self.dst.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let a = Graph::synthesize(GraphSpec::tiny());
+        let b = Graph::synthesize(GraphSpec::tiny());
+        assert_eq!(a.src, b.src);
+        assert_eq!(a.dst, b.dst);
+        assert_eq!(a.weight, b.weight);
+    }
+
+    #[test]
+    fn sizes_match_spec() {
+        let g = Graph::synthesize(GraphSpec::cora());
+        assert_eq!(g.src.len(), 10556);
+        assert!(g.src.iter().all(|&s| s < 2708));
+        assert!(g.dst.iter().all(|&d| d < 2708));
+    }
+
+    #[test]
+    fn destination_distribution_is_skewed() {
+        let g = Graph::synthesize(GraphSpec::cora());
+        // ~1/3 of edges land in the sqrt(N) hot head vs ~2% for uniform.
+        let f = g.hot_fraction();
+        assert!(f > 0.25, "hot fraction {f}");
+    }
+
+    #[test]
+    fn weights_are_unit_interval_floats() {
+        let g = Graph::synthesize(GraphSpec::tiny());
+        for w in &g.weight {
+            let f = f32::from_bits(*w);
+            assert!(f > 0.0 && f <= 1.0);
+        }
+    }
+}

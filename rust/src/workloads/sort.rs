@@ -1,0 +1,313 @@
+//! Sorting-family kernels of Table 1: Graclus `perm_sort` (counting-sort
+//! permutation) and MachSuite radix sort's `radix_hist` / `radix_update`
+//! phases. All three scatter or read-modify-write through data-dependent
+//! indices; the radix kernels derive their indices with shift/AND, which
+//! concentrates them into a small bucket range — the "computed locality"
+//! the paper calls out in §4.4.
+
+use super::{ArraySpec, Layout, Placement, Workload};
+use crate::mem::Backing;
+use crate::sim::{AluOp, Dfg, DfgBuilder};
+use crate::util::Rng;
+
+/// Counting-sort permutation phase: `out[perm[i]] = val[i]` where `perm`
+/// is a random permutation (the counting phase's prefix-sum output).
+pub struct PermSort {
+    pub n: u32,
+    pub seed: u64,
+}
+
+impl Default for PermSort {
+    fn default() -> Self {
+        PermSort { n: 65536, seed: 31 }
+    }
+}
+
+impl PermSort {
+    pub fn small() -> Self {
+        PermSort { n: 2048, seed: 31 }
+    }
+
+    fn perm(&self) -> Vec<u32> {
+        let mut rng = Rng::new(self.seed);
+        let mut p: Vec<u32> = (0..self.n).collect();
+        // Fisher-Yates
+        for i in (1..self.n as usize).rev() {
+            let j = rng.gen_range(0, (i + 1) as u64) as usize;
+            p.swap(i, j);
+        }
+        p
+    }
+}
+
+impl Workload for PermSort {
+    fn name(&self) -> String {
+        "perm_sort".into()
+    }
+    fn domain(&self) -> &'static str {
+        "Graph Clustering"
+    }
+    fn iterations(&self) -> u64 {
+        self.n as u64
+    }
+
+    fn build(&self, l: &mut Layout) -> Dfg {
+        let b_perm = l.alloc(ArraySpec {
+            name: "perm", port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
+        });
+        let b_out = l.alloc(ArraySpec {
+            name: "out", port: 0, words: self.n, placement: Placement::Cached, irregular: true,
+        });
+        let b_val = l.alloc(ArraySpec {
+            name: "val", port: 1, words: self.n, placement: Placement::Streamed, irregular: false,
+        });
+        let mut b = DfgBuilder::new("perm_sort");
+        let i = b.iter_idx();
+        let p = b.array_load(0, b_perm, i);
+        let v = b.array_load(1, b_val, i);
+        b.array_store(0, b_out, p, v);
+        b.finish()
+    }
+
+    fn init(&self, l: &Layout, mem: &mut Backing) {
+        mem.load_u32_slice(l.base_of("perm"), &self.perm());
+        let mut rng = Rng::new(self.seed ^ 0x55);
+        let vals: Vec<u32> = (0..self.n).map(|_| rng.next_u64() as u32).collect();
+        mem.load_u32_slice(l.base_of("val"), &vals);
+    }
+
+    fn golden(&self, l: &Layout, mem: &Backing) -> Vec<u32> {
+        let perm = self.perm();
+        let val_base = l.base_of("val");
+        let mut out = vec![0u32; self.n as usize];
+        for i in 0..self.n {
+            out[perm[i as usize] as usize] = mem.read_u32(val_base + i * 4);
+        }
+        out
+    }
+
+    fn output(&self) -> (&'static str, u32) {
+        ("out", self.n)
+    }
+}
+
+/// Radix-sort histogram phase: `hist[(key[i] >> SHIFT) & MASK] += 1`.
+pub struct RadixHist {
+    pub n: u32,
+    pub buckets: u32,
+    pub shift: u32,
+    pub seed: u64,
+}
+
+impl Default for RadixHist {
+    fn default() -> Self {
+        RadixHist { n: 49152, buckets: 32768, shift: 4, seed: 41 }
+    }
+}
+
+impl RadixHist {
+    pub fn small() -> Self {
+        RadixHist { n: 2048, buckets: 256, shift: 4, seed: 41 }
+    }
+
+    fn keys(&self) -> Vec<u32> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.n).map(|_| rng.next_u64() as u32 & 0x3f_ffff).collect()
+    }
+}
+
+impl Workload for RadixHist {
+    fn name(&self) -> String {
+        "radix_hist".into()
+    }
+    fn domain(&self) -> &'static str {
+        "Sorting Algorithms"
+    }
+    fn iterations(&self) -> u64 {
+        self.n as u64
+    }
+
+    fn build(&self, l: &mut Layout) -> Dfg {
+        let b_keys = l.alloc(ArraySpec {
+            name: "keys", port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
+        });
+        let b_hist = l.alloc(ArraySpec {
+            name: "hist", port: 1, words: self.buckets, placement: Placement::Cached, irregular: true,
+        });
+        let mut b = DfgBuilder::new("radix_hist");
+        let i = b.iter_idx();
+        let key = b.array_load(0, b_keys, i);
+        let ksh = b.konst(self.shift);
+        let sh = b.alu(AluOp::Lshr, key, ksh);
+        let km = b.konst(self.buckets - 1);
+        let bucket = b.alu(AluOp::And, sh, km);
+        let old = b.array_load(1, b_hist, bucket);
+        let one = b.konst(1);
+        let inc = b.alu(AluOp::Add, old, one);
+        let st = b.array_store(1, b_hist, bucket, inc);
+        b.mem_dep(st, old, 1); // adjacent keys may share a bucket
+        b.finish()
+    }
+
+    fn init(&self, l: &Layout, mem: &mut Backing) {
+        mem.load_u32_slice(l.base_of("keys"), &self.keys());
+    }
+
+    fn golden(&self, _l: &Layout, _mem: &Backing) -> Vec<u32> {
+        let mut hist = vec![0u32; self.buckets as usize];
+        for k in self.keys() {
+            hist[((k >> self.shift) & (self.buckets - 1)) as usize] += 1;
+        }
+        hist
+    }
+
+    fn output(&self) -> (&'static str, u32) {
+        ("hist", self.buckets)
+    }
+}
+
+/// Radix-sort update phase: scatter keys to their bucket cursors:
+/// `out[off[b]] = key; off[b] += 1` with `b = (key >> SHIFT) & MASK`.
+pub struct RadixUpdate {
+    pub n: u32,
+    pub buckets: u32,
+    pub shift: u32,
+    pub seed: u64,
+}
+
+impl Default for RadixUpdate {
+    fn default() -> Self {
+        RadixUpdate { n: 49152, buckets: 8192, shift: 4, seed: 51 }
+    }
+}
+
+impl RadixUpdate {
+    pub fn small() -> Self {
+        RadixUpdate { n: 2048, buckets: 256, shift: 4, seed: 51 }
+    }
+
+    fn keys(&self) -> Vec<u32> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.n).map(|_| rng.next_u64() as u32 & 0x3f_ffff).collect()
+    }
+
+    /// Initial bucket offsets (exclusive prefix sum of the histogram).
+    fn offsets(&self) -> Vec<u32> {
+        let mut hist = vec![0u32; self.buckets as usize];
+        for k in self.keys() {
+            hist[((k >> self.shift) & (self.buckets - 1)) as usize] += 1;
+        }
+        let mut off = vec![0u32; self.buckets as usize];
+        let mut acc = 0;
+        for (i, h) in hist.iter().enumerate() {
+            off[i] = acc;
+            acc += h;
+        }
+        off
+    }
+}
+
+impl Workload for RadixUpdate {
+    fn name(&self) -> String {
+        "radix_update".into()
+    }
+    fn domain(&self) -> &'static str {
+        "Sorting Algorithms"
+    }
+    fn iterations(&self) -> u64 {
+        self.n as u64
+    }
+
+    fn build(&self, l: &mut Layout) -> Dfg {
+        let b_keys = l.alloc(ArraySpec {
+            name: "keys", port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
+        });
+        let b_out = l.alloc(ArraySpec {
+            name: "out", port: 0, words: self.n, placement: Placement::Cached, irregular: true,
+        });
+        let b_off = l.alloc(ArraySpec {
+            name: "off", port: 1, words: self.buckets, placement: Placement::Cached, irregular: true,
+        });
+        let mut b = DfgBuilder::new("radix_update");
+        let i = b.iter_idx();
+        let key = b.array_load(0, b_keys, i);
+        let ksh = b.konst(self.shift);
+        let sh = b.alu(AluOp::Lshr, key, ksh);
+        let km = b.konst(self.buckets - 1);
+        let bucket = b.alu(AluOp::And, sh, km);
+        let cur = b.array_load(1, b_off, bucket); // off[b]
+        let st_out = b.array_store(0, b_out, cur, key); // out[off[b]] = key
+        let one = b.konst(1);
+        let nxt = b.alu(AluOp::Add, cur, one);
+        let st_off = b.array_store(1, b_off, bucket, nxt); // off[b] += 1
+        b.mem_dep(st_off, cur, 1); // cursor RMW chain
+        let _ = st_out;
+        b.finish()
+    }
+
+    fn init(&self, l: &Layout, mem: &mut Backing) {
+        mem.load_u32_slice(l.base_of("keys"), &self.keys());
+        mem.load_u32_slice(l.base_of("off"), &self.offsets());
+    }
+
+    fn golden(&self, _l: &Layout, _mem: &Backing) -> Vec<u32> {
+        let mut off = self.offsets();
+        let mut out = vec![0u32; self.n as usize];
+        for k in self.keys() {
+            let b = ((k >> self.shift) & (self.buckets - 1)) as usize;
+            out[off[b] as usize] = k;
+            off[b] += 1;
+        }
+        out
+    }
+
+    fn output(&self) -> (&'static str, u32) {
+        ("out", self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::SubsystemConfig;
+    use crate::sim::{CgraConfig, ExecMode};
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn perm_sort_correct_both_modes() {
+        let wl = PermSort::small();
+        for mode in [ExecMode::Normal, ExecMode::Runahead] {
+            let run = run_workload(&wl, SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(mode));
+            assert!(run.output_ok, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn radix_hist_correct_both_modes() {
+        let wl = RadixHist::small();
+        for mode in [ExecMode::Normal, ExecMode::Runahead] {
+            let run = run_workload(&wl, SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(mode));
+            assert!(run.output_ok, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn radix_update_correct_both_modes() {
+        let wl = RadixUpdate::small();
+        for mode in [ExecMode::Normal, ExecMode::Runahead] {
+            let run = run_workload(&wl, SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(mode));
+            assert!(run.output_ok, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn histogram_counts_sum_to_n() {
+        let wl = RadixHist::small();
+        let run = run_workload(
+            &wl,
+            SubsystemConfig::paper_base(),
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+        );
+        assert!(run.output_ok);
+    }
+}

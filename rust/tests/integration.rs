@@ -1,0 +1,115 @@
+//! Cross-module integration tests: full workload runs across systems and
+//! modes, output validation everywhere, and paper-shape assertions.
+
+use cgra_mem::coordinator::{measure, reconfig_experiment, System};
+use cgra_mem::mem::SubsystemConfig;
+use cgra_mem::sim::{CgraConfig, ExecMode};
+use cgra_mem::workloads::{run_workload, small_suite, GcnAggregate, GraphSpec};
+
+/// Every kernel in the (reduced-size) suite computes correct output on
+/// every CGRA system in both execution modes.
+#[test]
+fn small_suite_correct_on_all_cgra_systems() {
+    for wl in small_suite() {
+        for (sys, mode) in [
+            (SubsystemConfig::spm_only(2, 4096), ExecMode::Normal),
+            (SubsystemConfig::paper_base(), ExecMode::Normal),
+            (SubsystemConfig::paper_base(), ExecMode::Runahead),
+        ] {
+            let run = run_workload(wl.as_ref(), sys, CgraConfig::hycube_4x4(mode));
+            assert!(run.output_ok, "{} {:?} diverged", wl.name(), mode);
+        }
+    }
+}
+
+/// The 8×8 geometry must also validate (4 virtual SPMs).
+#[test]
+fn small_suite_correct_on_8x8() {
+    for wl in small_suite() {
+        let run = run_workload(
+            wl.as_ref(),
+            SubsystemConfig::paper_reconfig(),
+            CgraConfig::hycube_8x8(ExecMode::Runahead),
+        );
+        assert!(run.output_ok, "{} diverged on 8x8", wl.name());
+    }
+}
+
+/// Runahead never changes results and never loses cycles catastrophically.
+#[test]
+fn runahead_is_safe_and_effective_on_small_suite() {
+    for wl in small_suite() {
+        let n = run_workload(
+            wl.as_ref(),
+            SubsystemConfig::paper_base(),
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+        );
+        let r = run_workload(
+            wl.as_ref(),
+            SubsystemConfig::paper_base(),
+            CgraConfig::hycube_4x4(ExecMode::Runahead),
+        );
+        assert!(r.output_ok && n.output_ok, "{}", wl.name());
+        assert!(
+            r.result.cycles <= n.result.cycles * 11 / 10,
+            "{}: runahead {} vs normal {}",
+            wl.name(),
+            r.result.cycles,
+            n.result.cycles
+        );
+    }
+}
+
+/// Determinism: identical runs give identical cycle counts and outputs.
+#[test]
+fn simulation_is_deterministic() {
+    let wl = GcnAggregate::new(GraphSpec::tiny());
+    let a = run_workload(&wl, SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(ExecMode::Runahead));
+    let b = run_workload(&wl, SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(ExecMode::Runahead));
+    assert_eq!(a.result.cycles, b.result.cycles);
+    assert_eq!(a.result.mem.prefetches_issued, b.result.mem.prefetches_issued);
+}
+
+/// Fig 11a ordering holds on the tiny kernel for the baselines too.
+#[test]
+fn baselines_measure_and_validate() {
+    let wl = GcnAggregate::new(GraphSpec::tiny());
+    let a72 = measure(&wl, System::A72);
+    let simd = measure(&wl, System::Simd);
+    assert!(simd.time_us < a72.time_us, "SIMD must beat scalar");
+}
+
+/// The reconfiguration loop preserves correctness on every small kernel.
+#[test]
+fn reconfig_loop_preserves_correctness() {
+    for wl in small_suite().into_iter().take(4) {
+        let out = reconfig_experiment(wl.as_ref(), ExecMode::Normal, 2048);
+        assert!(out.output_ok, "{}", wl.name());
+    }
+}
+
+/// MSHR-starved configurations still complete and validate (structural
+/// stall path).
+#[test]
+fn mshr_starved_system_still_correct() {
+    let mut cfg = SubsystemConfig::paper_base();
+    cfg.mshr_entries = 1;
+    cfg.store_buffer_entries = 1;
+    for wl in small_suite().into_iter().take(3) {
+        for mode in [ExecMode::Normal, ExecMode::Runahead] {
+            let run = run_workload(wl.as_ref(), cfg, CgraConfig::hycube_4x4(mode));
+            assert!(run.output_ok, "{} {:?}", wl.name(), mode);
+        }
+    }
+}
+
+/// Tiny single-entry caches (worst-case thrash) still validate.
+#[test]
+fn degenerate_cache_geometry_still_correct() {
+    let mut cfg = SubsystemConfig::paper_base();
+    cfg.l1 = cgra_mem::mem::CacheConfig { sets: 1, ways: 1, line_bytes: 16, vline_shift: 0 };
+    for wl in small_suite().into_iter().take(3) {
+        let run = run_workload(wl.as_ref(), cfg, CgraConfig::hycube_4x4(ExecMode::Runahead));
+        assert!(run.output_ok, "{}", wl.name());
+    }
+}

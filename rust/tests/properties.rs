@@ -1,0 +1,179 @@
+//! Property-based tests (deterministic-PRNG harness standing in for
+//! proptest, which is unavailable offline): random DFGs through the
+//! mapper, random traces through the cache model, random profit matrices
+//! through Algorithm 1.
+
+use cgra_mem::mem::{AccessKind, AccessOutcome, Cache, CacheConfig};
+use cgra_mem::reconfig::max_profit;
+use cgra_mem::sim::{AluOp, Dfg, DfgBuilder, Geometry, Mapper, Op};
+use cgra_mem::util::Rng;
+
+/// Generate a random, valid DFG: a few constants/index nodes, random ALU
+/// layers, loads with computed addresses, one store.
+fn random_dfg(rng: &mut Rng, ports: usize) -> Dfg {
+    let mut b = DfgBuilder::new("prop");
+    let i = b.iter_idx();
+    let mut pool = vec![i];
+    for _ in 0..rng.gen_range(1, 4) {
+        let c = b.konst(rng.next_u64() as u32 & 0xff);
+        pool.push(c);
+    }
+    let n_alu = rng.gen_range(1, 8) as usize;
+    for _ in 0..n_alu {
+        let ops = [AluOp::Add, AluOp::Sub, AluOp::And, AluOp::Or, AluOp::Xor, AluOp::Shl];
+        let op = ops[(rng.next_u64() % ops.len() as u64) as usize];
+        let a = pool[(rng.next_u64() % pool.len() as u64) as usize];
+        let c = pool[(rng.next_u64() % pool.len() as u64) as usize];
+        pool.push(b.alu(op, a, c));
+    }
+    let n_loads = rng.gen_range(1, 4) as usize;
+    for k in 0..n_loads {
+        let idx = pool[(rng.next_u64() % pool.len() as u64) as usize];
+        let port = k % ports;
+        let v = b.array_load(port, 0x1000 * (k as u32 + 1), idx);
+        pool.push(v);
+    }
+    let data = pool[(rng.next_u64() % pool.len() as u64) as usize];
+    let addr_idx = pool[(rng.next_u64() % pool.len() as u64) as usize];
+    b.array_store(rng.gen_range(0, ports as u64) as usize, 0x40_000, addr_idx, data);
+    b.finish()
+}
+
+/// Check a mapping against all scheduling constraints.
+fn assert_valid(dfg: &Dfg, g: &Geometry, m: &cgra_mem::sim::Mapping) {
+    let ii = m.ii;
+    let mut pe_slots = std::collections::HashSet::new();
+    let mut port_slots = std::collections::HashSet::new();
+    for (id, &(pe, t)) in m.place.iter().enumerate() {
+        assert!(pe < g.num_pes());
+        assert!(pe_slots.insert((pe, t % ii)), "pe slot conflict at node {id}");
+        match dfg.nodes[id].op {
+            Op::Load(s) | Op::Store(s) => {
+                assert!(g.is_mem_pe(pe), "mem node off border");
+                assert_eq!(g.port_of_pe(pe), s.port, "wrong port");
+                assert!(port_slots.insert((s.port, t % ii)), "port conflict");
+            }
+            _ => {}
+        }
+        for e in &dfg.nodes[id].inputs {
+            let (_, ts) = m.place[e.src];
+            assert!(t + e.dist * ii >= ts + dfg.latency(e.src), "dependence violated");
+        }
+    }
+    for d in &dfg.deps {
+        let (_, ts) = m.place[d.src];
+        let (_, td) = m.place[d.dst];
+        assert!(td + d.dist * ii >= ts + 1, "mem dep violated");
+    }
+}
+
+#[test]
+fn prop_mapper_produces_valid_schedules() {
+    let mut rng = Rng::new(2024);
+    let geoms = [
+        Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 },
+        Geometry { rows: 8, cols: 8, ports: 4, hop_budget: 3 },
+    ];
+    let mut mapped = 0;
+    for trial in 0..200 {
+        let g = geoms[trial % geoms.len()];
+        let dfg = random_dfg(&mut rng, g.ports);
+        if let Ok(m) = Mapper::new(g).map(&dfg) {
+            assert_valid(&dfg, &g, &m);
+            assert!(m.ii >= Mapper::new(g).res_mii(&dfg), "II below resource bound");
+            mapped += 1;
+        }
+    }
+    assert!(mapped > 150, "mapper should succeed on most random DFGs ({mapped}/200)");
+}
+
+#[test]
+fn prop_cache_hit_iff_recently_filled() {
+    // Invariant: after fill(addr), probe(addr) hits until ≥`ways` distinct
+    // conflicting fills to the same virtual set occur.
+    let mut rng = Rng::new(7);
+    for _ in 0..100 {
+        let ways = 1 + (rng.next_u64() % 4) as usize;
+        let sets = 1usize << rng.gen_range(1, 5);
+        let cfg = CacheConfig { sets, ways, line_bytes: 16, vline_shift: 0 };
+        let mut c = Cache::new(cfg, 0);
+        let target = (rng.next_u64() as u32) & 0xffff0;
+        c.fill(target, false, 0);
+        assert_eq!(c.probe(target), AccessOutcome::Hit);
+        // Fewer than `ways` conflicting fills cannot evict the target
+        // (LRU prefers invalid ways first).
+        let vset_stride = (sets as u32) * 16;
+        for k in 1..ways as u32 {
+            c.fill(target + k * vset_stride, false, 0);
+        }
+        assert_eq!(c.probe(target), AccessOutcome::Hit, "ways={ways} sets={sets}");
+    }
+}
+
+#[test]
+fn prop_cache_stats_are_consistent() {
+    let mut rng = Rng::new(13);
+    for _ in 0..50 {
+        let cfg = CacheConfig { sets: 8, ways: 2, line_bytes: 32, vline_shift: 0 };
+        let mut c = Cache::new(cfg, 0);
+        let n = 200 + (rng.next_u64() % 200) as u64;
+        for _ in 0..n {
+            let addr = (rng.next_u64() as u32) % 8192;
+            let kind = if rng.next_u64() % 4 == 0 { AccessKind::Write } else { AccessKind::Read };
+            if c.access(addr, kind) == AccessOutcome::Miss {
+                c.fill(addr, false, 0);
+            }
+        }
+        assert_eq!(c.stats.hits + c.stats.misses, c.stats.accesses());
+        assert_eq!(c.stats.accesses(), n);
+        assert!(c.stats.fills <= c.stats.misses);
+    }
+}
+
+#[test]
+fn prop_dp_allocator_never_exceeds_budget_and_is_monotone() {
+    let mut rng = Rng::new(31);
+    for _ in 0..100 {
+        let n = 1 + (rng.next_u64() % 4) as usize;
+        let t = (rng.next_u64() % 12) as usize;
+        // Monotone profits (hit rate never decreases with more ways).
+        let h: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let mut acc = -(rng.gen_f32() as f64) - 0.1;
+                (0..=t)
+                    .map(|_| {
+                        acc += rng.gen_f32() as f64 * 0.2;
+                        acc
+                    })
+                    .collect()
+            })
+            .collect();
+        let (profit, alloc) = max_profit(&h, t);
+        assert!(alloc.iter().sum::<usize>() <= t);
+        let achieved: f64 = alloc.iter().enumerate().map(|(i, &k)| h[i][k]).sum();
+        assert!((achieved - profit).abs() < 1e-9);
+        if t > 0 {
+            // With strictly monotone profits the optimum uses the budget.
+            let (p_small, _) = max_profit(&h, t - 1);
+            assert!(profit >= p_small - 1e-12, "monotone in budget");
+        }
+    }
+}
+
+#[test]
+fn prop_virtual_line_partitions_address_space() {
+    // Every address maps into exactly one virtual line; block_addr is
+    // idempotent and alignment-consistent.
+    let mut rng = Rng::new(47);
+    for m in 0..3u8 {
+        let cfg = CacheConfig { sets: 16, ways: 2, line_bytes: 32, vline_shift: m };
+        let c = Cache::new(cfg, 0);
+        for _ in 0..200 {
+            let a = rng.next_u64() as u32 & 0xf_ffff;
+            let b = c.block_addr(a);
+            assert_eq!(b % cfg.vline_bytes(), 0);
+            assert!(a >= b && a - b < cfg.vline_bytes());
+            assert_eq!(c.block_addr(b), b);
+        }
+    }
+}
