@@ -9,15 +9,19 @@
 //!    reports the paper's headline metrics.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example gcn_pipeline
+//! make artifacts && cargo run --release --features pjrt --example gcn_pipeline
 //! ```
+//!
+//! NOTE: the `pjrt` feature needs the `xla` crate, which is not in the
+//! offline vendored set — vendor it and uncomment the dependency in
+//! rust/Cargo.toml first, or this build fails with unresolved imports.
 
 use cgra_mem::mem::SubsystemConfig;
 use cgra_mem::runtime::{lit_f32, lit_f32_2d, lit_i32, Runtime};
 use cgra_mem::sim::{CgraConfig, ExecMode};
 use cgra_mem::workloads::{prepare, GcnAggregate, Graph, GraphSpec, Workload};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), String> {
     // The tiny artifact's shape contract: E=1024, N=256, F=4.
     let spec = GraphSpec::tiny();
     let graph = Graph::synthesize(spec);
@@ -47,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         lit_f32(&w),
         lit_f32_2d(&feat, n, f)?,
     ])?;
-    let xla_out = out[0].to_vec::<f32>()?;
+    let xla_out = out[0].to_vec::<f32>().map_err(|e| format!("reading XLA output: {e}"))?;
     println!(
         "XLA golden: {} outputs in {:.1} ms",
         xla_out.len(),

@@ -1,38 +1,39 @@
-//! Quickstart: run the paper's headline comparison on one kernel.
+//! Quickstart: the paper's headline comparison through the `exp` API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Runs GCN feature aggregation (Cora) on the original SPM-only HyCUBE,
-//! the Cache+SPM redesign, and the runahead-enhanced system, validating
-//! every run against the golden executor.
+//! Declares a three-system experiment (original SPM-only HyCUBE, the
+//! Cache+SPM redesign, and the runahead-enhanced system), runs it on the
+//! persistent-pool engine, and prints both the human table and a JSON
+//! report — every simulated run is validated against the golden executor.
 
-use cgra_mem::mem::SubsystemConfig;
-use cgra_mem::sim::{CgraConfig, ExecMode};
-use cgra_mem::workloads::{run_workload, GcnAggregate, GraphSpec};
+use cgra_mem::exp::{Engine, ExperimentSpec, SystemSpec};
 
 fn main() {
     println!("GCN aggregate / Cora on three memory subsystems (4x4 HyCUBE @ 704 MHz)\n");
-    let systems = [
-        ("SPM-only (133 KB)", SubsystemConfig::spm_only(2, 133 * 1024), ExecMode::Normal),
-        ("Cache+SPM (Table 3 base)", SubsystemConfig::paper_base(), ExecMode::Normal),
-        ("Cache+SPM + Runahead", SubsystemConfig::paper_base(), ExecMode::Runahead),
-    ];
+    let spec = ExperimentSpec::new("quickstart")
+        .workload("aggregate/cora")
+        .system(SystemSpec::spm_only())
+        .system(SystemSpec::cache_spm())
+        .system(SystemSpec::runahead());
+    let engine = Engine::auto();
+    let report = engine.run(&spec);
+
     let mut baseline = None;
-    for (name, sys, mode) in systems {
-        let wl = GcnAggregate::new(GraphSpec::cora());
-        let run = run_workload(&wl, sys, CgraConfig::hycube_4x4(mode));
-        let r = &run.result;
-        let base = *baseline.get_or_insert(r.cycles);
+    for m in &report.measurements {
+        let base = *baseline.get_or_insert(m.cycles);
         println!(
-            "{name:<26} {:>12} cycles  {:>9.1} us  util {:>5.2}%  speedup {:>6.2}x  output {}",
-            r.cycles,
-            r.time_us(),
-            100.0 * r.utilization(),
-            base as f64 / r.cycles as f64,
-            if run.output_ok { "OK" } else { "MISMATCH" }
+            "{:<26} {:>12} cycles  {:>9.1} us  util {:>5.2}%  speedup {:>6.2}x  output {}",
+            m.system,
+            m.cycles,
+            m.time_us,
+            100.0 * m.utilization,
+            base as f64 / m.cycles as f64,
+            if m.output_ok { "OK" } else { "MISMATCH" }
         );
     }
-    println!("\nSee `repro figure all` for the full evaluation.");
+    println!("\nmachine-readable report:\n{}", report.to_json().render_pretty());
+    println!("See `repro figure all` for the full evaluation and `repro sweep` for custom specs.");
 }

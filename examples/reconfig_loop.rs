@@ -6,7 +6,7 @@
 //! cargo run --release --example reconfig_loop [kernel]
 //! ```
 
-use cgra_mem::coordinator::reconfig_experiment;
+use cgra_mem::exp::reconfig_experiment;
 use cgra_mem::sim::ExecMode;
 use cgra_mem::workloads::paper_suite;
 

@@ -4,18 +4,19 @@
 
 mod common;
 
+use cgra_mem::exp::Engine;
 use cgra_mem::report;
 
 fn main() {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let eng = Engine::auto();
     common::bench("fig11a five-system campaign", 1, || {
-        let text = report::fig11a(threads);
+        let text = report::fig11a(&eng);
         println!("{text}");
         let _ = report::save("fig11a", &text);
         1
     });
     common::bench("fig11b access distribution", 1, || {
-        let text = report::fig11b(threads);
+        let text = report::fig11b(&eng);
         println!("{text}");
         let _ = report::save("fig11b", &text);
         1

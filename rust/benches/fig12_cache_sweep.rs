@@ -3,13 +3,14 @@
 
 mod common;
 
+use cgra_mem::exp::Engine;
 use cgra_mem::report;
 
 fn main() {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let eng = Engine::auto();
     for part in ['a', 'b', 'c', 'd', 'e', 'f'] {
         common::bench(&format!("fig12{part} sweep"), 1, || {
-            let text = report::fig12(part, threads);
+            let text = report::fig12(part, &eng);
             println!("{text}");
             let _ = report::save(&format!("fig12{part}"), &text);
             1

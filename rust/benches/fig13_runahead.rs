@@ -3,24 +3,25 @@
 
 mod common;
 
+use cgra_mem::exp::Engine;
 use cgra_mem::report;
 
 fn main() {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let eng = Engine::auto();
     common::bench("fig13 runahead speedups", 1, || {
-        let text = report::fig13(threads);
+        let text = report::fig13(&eng);
         println!("{text}");
         let _ = report::save("fig13", &text);
         1
     });
     common::bench("fig15 prefetch classification", 1, || {
-        let text = report::fig15(threads);
+        let text = report::fig15(&eng);
         println!("{text}");
         let _ = report::save("fig15", &text);
         1
     });
     common::bench("fig16 coverage", 1, || {
-        let text = report::fig16(threads);
+        let text = report::fig16(&eng);
         println!("{text}");
         let _ = report::save("fig16", &text);
         1

@@ -2,12 +2,13 @@
 
 mod common;
 
+use cgra_mem::exp::Engine;
 use cgra_mem::report;
 
 fn main() {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let eng = Engine::auto();
     common::bench("fig14 MSHR sweep", 1, || {
-        let text = report::fig14(threads);
+        let text = report::fig14(&eng);
         println!("{text}");
         let _ = report::save("fig14", &text);
         1

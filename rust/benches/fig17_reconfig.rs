@@ -3,12 +3,13 @@
 
 mod common;
 
+use cgra_mem::exp::Engine;
 use cgra_mem::report;
 
 fn main() {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let eng = Engine::auto();
     common::bench("fig17 reconfiguration", 1, || {
-        let text = report::fig17(threads);
+        let text = report::fig17(&eng);
         println!("{text}");
         let _ = report::save("fig17", &text);
         1

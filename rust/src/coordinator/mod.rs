@@ -1,17 +1,20 @@
-//! Experiment coordinator: names the paper's five systems, runs
-//! (workload × system) campaigns across std threads, and drives the
-//! cache-reconfiguration closed loop end-to-end (sample → plan → apply →
-//! run, the Fig 17 protocol).
+//! Thin compatibility shims over the [`crate::exp`] experiment layer.
+//!
+//! This module used to own four parallel ad-hoc drivers (`measure`,
+//! `campaign`/`run_jobs`, `par_map`, plus the per-figure harness glue).
+//! All of that now lives behind [`crate::exp::Engine`] /
+//! [`crate::exp::ExperimentSpec`]; what remains here is the historical
+//! five-system enum and wrappers that forward to the new API, kept so
+//! existing callers and tests continue to work. New code should use
+//! `exp` directly.
 
-use crate::baseline::{run_cpu, CpuModel};
-use crate::mem::SubsystemConfig;
-use crate::reconfig::{apply_plan, plan_from_traces, MissRateMonitor, ReconfigPlan};
-use crate::sim::{CgraConfig, ExecMode};
-use crate::workloads::{paper_suite, prepare, run_workload, validate, Workload};
-use std::sync::mpsc;
-use std::thread;
+pub use crate::exp::{measure_spec, reconfig_experiment, Measurement, ReconfigOutcome};
 
-/// The five systems of Fig 11a.
+use crate::exp::{Engine, ExperimentSpec, SystemSpec};
+use crate::workloads::Workload;
+
+/// The five systems of Fig 11a (compat: prefer [`SystemSpec`] values from
+/// [`crate::exp::builtin_systems`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum System {
     A72,
@@ -25,6 +28,7 @@ impl System {
     pub fn all() -> [System; 5] {
         [System::A72, System::Simd, System::SpmOnly, System::CacheSpm, System::Runahead]
     }
+
     pub fn name(&self) -> &'static str {
         match self {
             System::A72 => "A72",
@@ -34,208 +38,38 @@ impl System {
             System::Runahead => "Runahead",
         }
     }
+
+    /// The data-driven description of this system.
+    pub fn spec(&self) -> SystemSpec {
+        match self {
+            System::A72 => SystemSpec::a72(),
+            System::Simd => SystemSpec::simd(),
+            System::SpmOnly => SystemSpec::spm_only(),
+            System::CacheSpm => SystemSpec::cache_spm(),
+            System::Runahead => SystemSpec::runahead(),
+        }
+    }
 }
 
-/// One measured data point.
-#[derive(Clone, Debug)]
-pub struct Measurement {
-    pub workload: String,
-    pub system: &'static str,
-    pub time_us: f64,
-    pub cycles: u64,
-    pub utilization: f64,
-    pub output_ok: bool,
-    pub spm_accesses: u64,
-    pub l1_accesses: u64,
-    pub l1_hits: u64,
-    pub l2_accesses: u64,
-    pub dram_accesses: u64,
-    pub prefetch_used: u64,
-    pub prefetch_evicted: u64,
-    pub prefetch_useless: u64,
-    pub coverage: f64,
-    pub irregular_share: f64,
-    pub runahead_entries: u64,
-}
-
-/// Execute one workload on one system (Table 3 base/runahead configs,
-/// SPM-only = 133 KB original HyCUBE).
+/// Compat: execute one workload on one of the five named systems.
 pub fn measure(wl: &dyn Workload, sys: System) -> Measurement {
-    match sys {
-        System::A72 | System::Simd => {
-            let model = if sys == System::A72 { CpuModel::a72() } else { CpuModel::a72_simd() };
-            let r = run_cpu(wl, model);
-            Measurement {
-                workload: wl.name(),
-                system: sys.name(),
-                time_us: r.time_us(),
-                cycles: r.cycles,
-                utilization: 0.0,
-                output_ok: true,
-                spm_accesses: 0,
-                l1_accesses: r.instructions,
-                l1_hits: r.l1_hits,
-                l2_accesses: 0,
-                dram_accesses: r.dram_accesses,
-                prefetch_used: 0,
-                prefetch_evicted: 0,
-                prefetch_useless: 0,
-                coverage: 0.0,
-                irregular_share: 0.0,
-                runahead_entries: 0,
-            }
-        }
-        System::SpmOnly | System::CacheSpm | System::Runahead => {
-            let (sys_cfg, mode) = match sys {
-                System::SpmOnly => (SubsystemConfig::spm_only(2, 133 * 1024), ExecMode::Normal),
-                System::CacheSpm => (SubsystemConfig::paper_base(), ExecMode::Normal),
-                System::Runahead => (SubsystemConfig::paper_base(), ExecMode::Runahead),
-                _ => unreachable!(),
-            };
-            let run = run_workload(wl, sys_cfg, CgraConfig::hycube_4x4(mode));
-            let r = &run.result;
-            Measurement {
-                workload: wl.name(),
-                system: sys.name(),
-                time_us: r.time_us(),
-                cycles: r.cycles,
-                utilization: r.utilization(),
-                output_ok: run.output_ok,
-                spm_accesses: r.mem.spm_accesses,
-                l1_accesses: r.mem.l1_accesses,
-                l1_hits: r.mem.l1_hits,
-                l2_accesses: r.mem.l2_accesses,
-                dram_accesses: r.mem.dram_accesses,
-                prefetch_used: r.mem.prefetch_used,
-                prefetch_evicted: r.mem.prefetch_evicted_then_demanded,
-                prefetch_useless: r.mem.prefetch_useless,
-                coverage: r.coverage(),
-                irregular_share: run.irregular_share,
-                runahead_entries: r.runahead_entries,
-            }
-        }
-    }
+    measure_spec(wl, &sys.spec())
 }
 
-/// Run the whole Table 1 suite × the requested systems, fanning out over
-/// std threads (one task per (workload, system) pair).
+/// Compat: run the whole Table 1 suite × the requested systems on a
+/// freshly spawned engine. Callers running more than one campaign should
+/// hold their own [`Engine`] so the worker pool persists across calls.
 pub fn campaign(systems: &[System], threads: usize) -> Vec<Measurement> {
-    let mut jobs: Vec<(usize, System)> = Vec::new();
-    let n_wl = paper_suite().len();
-    for w in 0..n_wl {
-        for &s in systems {
-            jobs.push((w, s));
-        }
-    }
-    run_jobs(jobs, threads)
-}
-
-/// Generic parallel map over a work list using scoped std threads — the
-/// sweep executor used by every figure harness.
-pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
-where
-    T: Send,
-    R: Send,
-    F: Fn(T) -> R + Sync,
-{
-    let n = items.len();
-    let queue = std::sync::Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>());
-    let results = std::sync::Mutex::new(Vec::<(usize, R)>::with_capacity(n));
-    thread::scope(|s| {
-        for _ in 0..threads.max(1).min(n.max(1)) {
-            s.spawn(|| loop {
-                let job = { queue.lock().unwrap().pop() };
-                match job {
-                    Some((i, item)) => {
-                        let r = f(item);
-                        results.lock().unwrap().push((i, r));
-                    }
-                    None => break,
-                }
-            });
-        }
-    });
-    let mut out = results.into_inner().unwrap();
-    out.sort_by_key(|(i, _)| *i);
-    out.into_iter().map(|(_, r)| r).collect()
-}
-
-fn run_jobs(jobs: Vec<(usize, System)>, threads: usize) -> Vec<Measurement> {
-    let (tx, rx) = mpsc::channel::<(usize, Measurement)>();
-    let jobs = std::sync::Arc::new(std::sync::Mutex::new(
-        jobs.into_iter().enumerate().collect::<Vec<_>>(),
-    ));
-    let mut handles = Vec::new();
-    for _ in 0..threads.max(1) {
-        let tx = tx.clone();
-        let jobs = jobs.clone();
-        handles.push(thread::spawn(move || loop {
-            let job = { jobs.lock().unwrap().pop() };
-            match job {
-                Some((order, (w, s))) => {
-                    // Workloads are rebuilt per thread (deterministic seeds).
-                    let suite = paper_suite();
-                    let m = measure(suite[w].as_ref(), s);
-                    let _ = tx.send((order, m));
-                }
-                None => break,
-            }
-        }));
-    }
-    drop(tx);
-    let mut out: Vec<(usize, Measurement)> = rx.into_iter().collect();
-    for h in handles {
-        h.join().expect("worker thread");
-    }
-    out.sort_by_key(|(o, _)| *o);
-    out.into_iter().map(|(_, m)| m).collect()
-}
-
-/// Fig 17 protocol: run a workload on the 8×8 Reconfig system with and
-/// without the closed-loop cache reconfiguration, in both exec modes.
-pub struct ReconfigOutcome {
-    pub base_cycles: u64,
-    pub reconf_cycles: u64,
-    pub plan: ReconfigPlan,
-    pub output_ok: bool,
-    pub monitor_triggered: bool,
-}
-
-pub fn reconfig_experiment(wl: &dyn Workload, mode: ExecMode, sample_window: usize) -> ReconfigOutcome {
-    let sys = SubsystemConfig::paper_reconfig();
-    let mut cgra = CgraConfig::hycube_8x8(mode);
-    cgra.trace_window = sample_window;
-
-    // Baseline run (uniform ways, default line size) — also the sampling
-    // run: the hardware tracker records each port's access window.
-    let (mut mem, mut arr, _layout) = prepare(wl, sys, cgra);
-    let mut monitor = MissRateMonitor::new(0.05, 1024);
-    let base = arr.run(&mut mem, wl.iterations());
-    let monitor_triggered = monitor.observe(&mem);
-    let plan = plan_from_traces(&mem, &arr.trace, &[0, 1]);
-
-    // Reconfigured run: apply the plan to a fresh system (steady-state
-    // behaviour; the flush/migration cost is a handful of cycles and is
-    // charged below).
-    let (mut mem2, mut arr2, layout2) = prepare(wl, sys, cgra);
-    let migrated = apply_plan(&mut mem2, &plan);
-    let reconf = arr2.run(&mut mem2, wl.iterations());
-    let output_ok = validate(wl, &layout2, &mem2);
-    ReconfigOutcome {
-        base_cycles: base.cycles,
-        // Way migration costs one flush per moved way (§4.5: reuses the
-        // existing invalidate machinery).
-        reconf_cycles: reconf.cycles + migrated as u64 * 64,
-        plan,
-        output_ok,
-        monitor_triggered,
-    }
+    let spec = ExperimentSpec::campaign("campaign", systems.iter().map(System::spec));
+    Engine::new(threads).run(&spec).measurements
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workloads::{GcnAggregate, GraphSpec};
+    use crate::mem::SubsystemConfig;
+    use crate::sim::{CgraConfig, ExecMode};
+    use crate::workloads::{run_workload, GcnAggregate, GraphSpec};
 
     #[test]
     fn measure_runs_all_five_systems_on_tiny_gcn() {
@@ -244,6 +78,7 @@ mod tests {
             let m = measure(&wl, s);
             assert!(m.time_us > 0.0, "{}", s.name());
             assert!(m.output_ok, "{}", s.name());
+            assert_eq!(m.system, s.name());
         }
     }
 
@@ -277,5 +112,12 @@ mod tests {
             out.reconf_cycles,
             out.base_cycles
         );
+    }
+
+    #[test]
+    fn system_specs_carry_the_enum_names() {
+        for s in System::all() {
+            assert_eq!(s.spec().name, s.name());
+        }
     }
 }

@@ -1,0 +1,251 @@
+//! The experiment engine: one persistent worker pool that executes every
+//! campaign, sweep and figure harness.
+//!
+//! The old `coordinator::run_jobs` / `coordinator::par_map` pair spawned a
+//! fresh set of std threads on every call (and `run_jobs` rebuilt the whole
+//! Table 1 suite inside every job). The [`Engine`] spawns its workers once;
+//! [`Engine::map`] fans any work list over them, and [`Engine::run`] turns a
+//! declarative [`ExperimentSpec`] into a structured [`Report`], building only
+//! the single workload each job needs, exactly once per job.
+
+use super::registry::WorkloadRegistry;
+use super::{measure_spec, ExperimentSpec, Report};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Persistent thread pool + workload registry: the single front door for
+/// running experiments.
+pub struct Engine {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    registry: Arc<WorkloadRegistry>,
+    threads: usize,
+}
+
+impl Engine {
+    /// Pool with `threads` workers over the built-in workload registry.
+    pub fn new(threads: usize) -> Self {
+        Self::with_registry(threads, WorkloadRegistry::builtin())
+    }
+
+    /// Pool sized to the machine.
+    pub fn auto() -> Self {
+        Self::new(default_parallelism())
+    }
+
+    /// Pool over a caller-extended registry (custom workloads by name).
+    pub fn with_registry(threads: usize, registry: WorkloadRegistry) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("exp-worker-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn engine worker")
+            })
+            .collect();
+        Engine { tx: Some(tx), workers, registry: Arc::new(registry), threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn registry(&self) -> &WorkloadRegistry {
+        &self.registry
+    }
+
+    /// Shared handle to the registry, for `'static` closures passed to
+    /// [`Engine::map`].
+    pub fn registry_arc(&self) -> Arc<WorkloadRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Parallel map over the persistent pool. Results come back in input
+    /// order. Panics if a task panicked (after all other tasks finished).
+    ///
+    /// Jobs must be `'static`: clone/move what they need in. Do not call
+    /// `map` from inside a job running on the same engine — with all
+    /// workers busy the inner call would wait forever.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = channel::<(usize, R)>();
+        let tx = self.tx.as_ref().expect("engine already shut down");
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            tx.send(Box::new(move || {
+                let r = f(item);
+                let _ = rtx.send((i, r));
+            }))
+            .expect("engine worker pool is gone");
+        }
+        drop(rtx);
+        // Every job eventually runs or is dropped (on worker panic its
+        // result sender is dropped with it), so this drains without hanging.
+        let mut out: Vec<(usize, R)> = rrx.into_iter().collect();
+        assert_eq!(out.len(), n, "an engine task panicked; see stderr for the worker backtrace");
+        out.sort_by_key(|(i, _)| *i);
+        out.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Execute a declarative experiment: every (workload × system × repeat)
+    /// cell in parallel, returning a structured [`Report`].
+    pub fn run(&self, spec: &ExperimentSpec) -> Report {
+        self.try_run(spec).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Like [`Engine::run`] but surfacing spec errors (unknown workload
+    /// names, empty axes) instead of panicking.
+    pub fn try_run(&self, spec: &ExperimentSpec) -> Result<Report, String> {
+        if spec.workloads.is_empty() {
+            return Err(format!("experiment {:?} lists no workloads", spec.name));
+        }
+        if spec.systems.is_empty() {
+            return Err(format!("experiment {:?} lists no systems", spec.name));
+        }
+        for (i, w) in spec.workloads.iter().enumerate() {
+            if !self.registry.contains(w) {
+                return Err(format!(
+                    "unknown workload {:?} (known: {})",
+                    w,
+                    self.registry.names().join(", ")
+                ));
+            }
+            if spec.workloads[..i].contains(w) {
+                return Err(format!("workload {w:?} listed twice"));
+            }
+        }
+        // Reports are keyed by (workload, system) name; duplicates would
+        // make every lookup silently resolve to the first row.
+        for (i, sys) in spec.systems.iter().enumerate() {
+            if spec.systems[..i].iter().any(|s| s.name == sys.name) {
+                return Err(format!(
+                    "two systems share the name {:?}; give the variant a distinct \"name\"",
+                    sys.name
+                ));
+            }
+        }
+        let mut jobs = Vec::new();
+        for w in &spec.workloads {
+            for sys in &spec.systems {
+                for rep in 0..spec.repeats.max(1) {
+                    jobs.push((w.clone(), sys.clone(), rep));
+                }
+            }
+        }
+        let registry = Arc::clone(&self.registry);
+        let measurements = self.map(jobs, move |(wname, sys, rep)| {
+            // Build exactly the one workload this job needs (the old
+            // run_jobs rebuilt the entire suite here, every iteration).
+            let wl = registry.build(&wname).expect("name validated above");
+            let mut m = measure_spec(wl.as_ref(), &sys);
+            m.workload = wname;
+            m.repeat = rep;
+            m
+        });
+        Ok(Report {
+            experiment: spec.name.clone(),
+            workloads: spec.workloads.clone(),
+            systems: spec.systems.iter().map(|s| s.name.clone()).collect(),
+            measurements,
+        })
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // Closing the channel ends every worker's recv loop.
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        // Take the job *then* release the lock, so long tasks don't
+        // serialize the queue.
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return, // another worker panicked while holding the lock
+        };
+        match job {
+            Ok(job) => {
+                // A panicking task (workload assert, mapper failure) must not
+                // take the pool down; `map` detects the lost result instead.
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }
+            Err(_) => return, // engine dropped
+        }
+    }
+}
+
+/// Default worker count: one per available hardware thread.
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order_and_reuses_the_pool() {
+        let eng = Engine::new(3);
+        let a = eng.map((0..17).collect(), |x: usize| x * 2);
+        assert_eq!(a, (0..17).map(|x| x * 2).collect::<Vec<_>>());
+        // Second batch on the same (persistent) pool.
+        let b = eng.map(vec!["a", "bb", "ccc"], |s: &str| s.len());
+        assert_eq!(b, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn map_handles_empty_input() {
+        let eng = Engine::new(2);
+        let out: Vec<u32> = eng.map(Vec::<u32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_threaded_engine_still_completes() {
+        let eng = Engine::new(1);
+        let out = eng.map((0..5).collect(), |x: u64| x + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn try_run_rejects_unknown_names() {
+        let eng = Engine::new(1);
+        let spec = ExperimentSpec::new("bad").workloads(["no-such-kernel"]).system(
+            crate::exp::SystemSpec::cache_spm(),
+        );
+        assert!(eng.try_run(&spec).unwrap_err().contains("no-such-kernel"));
+    }
+
+    #[test]
+    fn try_run_rejects_duplicate_system_names() {
+        // Reports are keyed by name; two same-named systems would make the
+        // variant's rows unreachable through Report::get.
+        let eng = Engine::new(1);
+        let spec = ExperimentSpec::new("dup")
+            .workload("aggregate/tiny")
+            .system(crate::exp::SystemSpec::cache_spm())
+            .system(crate::exp::SystemSpec::cache_spm());
+        assert!(eng.try_run(&spec).unwrap_err().contains("Cache+SPM"));
+    }
+}

@@ -1,0 +1,806 @@
+//! The experiment layer — the single front door for every run.
+//!
+//! * [`SystemSpec`]: a system as *data* — a name plus an execution model
+//!   (CPU timing model, or CGRA memory-subsystem + array config). The five
+//!   paper systems live in [`registry::builtin_systems`]; new systems
+//!   ("Runahead-8x8", "Cache+SPM 2-way") are plain values, no enum to edit.
+//! * [`ExperimentSpec`]: a declarative (workloads × systems × repeats)
+//!   campaign, buildable in code or parsed from JSON (`repro sweep`).
+//! * [`Engine`]: a persistent worker pool executing specs into structured
+//!   [`Report`]s with hand-rolled JSON serialization ([`json`]).
+//!
+//! ```no_run
+//! use cgra_mem::exp::{Engine, ExperimentSpec, SystemSpec};
+//! let engine = Engine::auto();
+//! let spec = ExperimentSpec::new("quick")
+//!     .workloads(["aggregate/tiny", "small/rgb"])
+//!     .system(SystemSpec::cache_spm())
+//!     .system(SystemSpec::runahead());
+//! let report = engine.run(&spec);
+//! println!("{}", report.to_json().render_pretty());
+//! ```
+
+pub mod engine;
+pub mod json;
+pub mod registry;
+
+pub use engine::{default_parallelism, Engine};
+pub use json::Json;
+pub use registry::{builtin_systems, system_named, WorkloadRegistry};
+
+use crate::baseline::{run_cpu, CpuModel};
+use crate::mem::{CacheConfig, SubsystemConfig};
+use crate::reconfig::{apply_plan, plan_from_traces, MissRateMonitor, ReconfigPlan};
+use crate::sim::{CgraConfig, ExecMode, Geometry};
+use crate::workloads::{prepare, run_workload, validate, Workload};
+
+/// Checked numeric field access: present-but-invalid (negative,
+/// fractional, non-numeric) is an error, absent is `None` — a bad value
+/// must never be silently treated as "not set".
+fn u64_field(v: &Json, key: &str) -> Result<Option<u64>, String> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(j) => j
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| format!("{key:?} must be a non-negative integer, got {}", j.render())),
+    }
+}
+
+/// How a [`SystemSpec`] executes a workload.
+#[derive(Clone, Debug)]
+pub enum ExecModel {
+    /// Trace-driven CPU timing model (Fig 11a baselines).
+    Cpu(CpuModel),
+    /// Cycle-accurate CGRA: memory subsystem + array configuration (the
+    /// exec mode and geometry live inside [`CgraConfig`]).
+    Cgra { subsystem: SubsystemConfig, cgra: CgraConfig },
+}
+
+/// A system under test, as data. Replaces the closed `System` enum.
+#[derive(Clone, Debug)]
+pub struct SystemSpec {
+    pub name: String,
+    pub exec: ExecModel,
+}
+
+impl SystemSpec {
+    pub fn cpu(name: impl Into<String>, model: CpuModel) -> Self {
+        SystemSpec { name: name.into(), exec: ExecModel::Cpu(model) }
+    }
+
+    pub fn cgra(name: impl Into<String>, subsystem: SubsystemConfig, cgra: CgraConfig) -> Self {
+        assert_eq!(subsystem.num_ports, cgra.geom.ports, "port count mismatch in {:?}", cgra.geom);
+        SystemSpec { name: name.into(), exec: ExecModel::Cgra { subsystem, cgra } }
+    }
+
+    // ---- the five paper systems (Fig 11a) ----
+
+    /// Scalar ARM Cortex-A72 (Table 2).
+    pub fn a72() -> Self {
+        Self::cpu("A72", CpuModel::a72())
+    }
+
+    /// A72 + NEON SIMD (Table 2).
+    pub fn simd() -> Self {
+        Self::cpu("SIMD", CpuModel::a72_simd())
+    }
+
+    /// Original SPM-only HyCUBE (133 KB total SPM).
+    pub fn spm_only() -> Self {
+        Self::cgra(
+            "SPM-only",
+            SubsystemConfig::spm_only(2, 133 * 1024),
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+        )
+    }
+
+    /// The paper's Cache+SPM redesign (Table 3 base).
+    pub fn cache_spm() -> Self {
+        Self::cgra("Cache+SPM", SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(ExecMode::Normal))
+    }
+
+    /// Cache+SPM plus CGRA runahead execution.
+    pub fn runahead() -> Self {
+        Self::cgra(
+            "Runahead",
+            SubsystemConfig::paper_base(),
+            CgraConfig::hycube_4x4(ExecMode::Runahead),
+        )
+    }
+
+    /// A capacity-starved SPM-only system (Fig 2 / Fig 5 conditions).
+    pub fn spm_starved(total_bytes: u32) -> Self {
+        Self::cgra(
+            format!("SPM-starved-{total_bytes}B"),
+            SubsystemConfig::spm_only(2, total_bytes),
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+        )
+    }
+
+    /// Rename a spec (sweep points: "Cache+SPM 2-way", "M=8/ra", …).
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Parse a system from a JSON object:
+    /// `{"base": "Runahead", "name": "Runahead-8x8", "geometry": "8x8",
+    ///   "l1_ways": 2, ...}` — `base` picks a built-in system, the other
+    /// keys override the CGRA configuration (ignored for CPU bases).
+    pub fn from_json(v: &Json) -> Result<SystemSpec, String> {
+        const KNOWN: [&str; 14] = [
+            "base", "name", "mode", "geometry", "spm_bytes", "mshr", "freq_mhz", "shared_l1",
+            "l1_bytes", "l1_ways", "l1_line", "l2_bytes", "l2_ways", "l2_line",
+        ];
+        if let Json::Obj(fields) = v {
+            // A mistyped key would otherwise run the unmodified base config
+            // and silently produce a flat sweep.
+            for (k, _) in fields {
+                if !KNOWN.contains(&k.as_str()) {
+                    return Err(format!(
+                        "unknown system key {k:?} (known: {})",
+                        KNOWN.join(", ")
+                    ));
+                }
+            }
+        } else {
+            return Err("each systems entry must be a JSON object".into());
+        }
+        let base_name = v.get("base").and_then(Json::as_str).unwrap_or("Cache+SPM");
+        let mut spec = system_named(base_name)
+            .ok_or_else(|| format!("unknown base system {base_name:?}"))?;
+        if let Some(name) = v.get("name").and_then(Json::as_str) {
+            spec.name = name.to_string();
+        }
+        let exec = spec.exec.clone();
+        if let ExecModel::Cgra { mut subsystem, mut cgra } = exec {
+            if let Some(mode) = v.get("mode").and_then(Json::as_str) {
+                cgra.mode = match mode {
+                    "normal" => ExecMode::Normal,
+                    "runahead" => ExecMode::Runahead,
+                    other => return Err(format!("unknown mode {other:?}")),
+                };
+            }
+            if let Some(geom) = v.get("geometry").and_then(Json::as_str) {
+                match geom {
+                    "4x4" => {
+                        cgra.geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+                        subsystem.num_ports = 2;
+                    }
+                    "8x8" => {
+                        cgra.geom = Geometry { rows: 8, cols: 8, ports: 4, hop_budget: 3 };
+                        // Adopt the Table 3 Reconfig column (ports, SPM,
+                        // temp store, and — for cache-ful bases — its L1/L2
+                        // geometry, so "8x8" means the paper's 8x8 system);
+                        // explicit keys below still override.
+                        let rec = SubsystemConfig::paper_reconfig();
+                        subsystem.num_ports = rec.num_ports;
+                        subsystem.spm_bytes = rec.spm_bytes;
+                        subsystem.temp_store_bytes = rec.temp_store_bytes;
+                        if subsystem.l1.ways > 0 {
+                            subsystem.l1 = rec.l1;
+                            subsystem.l2 = rec.l2;
+                        }
+                    }
+                    other => return Err(format!("unknown geometry {other:?} (use 4x4 or 8x8)")),
+                }
+            }
+            if let Some(b) = u64_field(v, "spm_bytes")? {
+                subsystem.spm_bytes = b as u32;
+            }
+            if let Some(n) = u64_field(v, "mshr")? {
+                if n == 0 {
+                    return Err("\"mshr\" must be at least 1".into());
+                }
+                subsystem.mshr_entries = n as usize;
+                subsystem.store_buffer_entries = (n as usize).max(4);
+            }
+            if let Some(j) = v.get("freq_mhz") {
+                let f = j.as_f64().filter(|f| *f > 0.0).ok_or_else(|| {
+                    format!("\"freq_mhz\" must be a positive number, got {}", j.render())
+                })?;
+                cgra.freq_mhz = f;
+            }
+            let cache_override = |cur: CacheConfig, pfx: &str, v: &Json| -> Result<CacheConfig, String> {
+                let bytes = u64_field(v, &format!("{pfx}_bytes"))?
+                    .map(|b| b as u32)
+                    .unwrap_or_else(|| cur.total_bytes());
+                let ways = u64_field(v, &format!("{pfx}_ways"))?
+                    .map(|w| w as usize)
+                    .unwrap_or(cur.ways);
+                let line = u64_field(v, &format!("{pfx}_line"))?
+                    .map(|l| l as u32)
+                    .unwrap_or(cur.line_bytes);
+                if ways == 0 {
+                    // A bytes/line override on a cache-less base would be
+                    // dropped silently — the flat-sweep trap again.
+                    if v.get(&format!("{pfx}_bytes")).is_some() {
+                        return Err(format!(
+                            "{pfx}_bytes set but the base system has no {pfx} cache; set {pfx}_ways too"
+                        ));
+                    }
+                    return Ok(CacheConfig { sets: 1, ways: 0, line_bytes: line.max(1), vline_shift: 0 });
+                }
+                if line == 0 || !line.is_power_of_two() {
+                    return Err(format!("{pfx}_line must be a power of two (got {line})"));
+                }
+                // Validate here instead of letting from_size's assert panic
+                // past the CLI's spec-error path.
+                let sets = (bytes as usize / ways / line as usize).max(1);
+                if !sets.is_power_of_two() {
+                    return Err(format!(
+                        "{pfx}: {bytes} B / {ways} ways / {line} B lines gives {sets} sets, \
+                         which must be a power of two"
+                    ));
+                }
+                Ok(CacheConfig::from_size(bytes, ways, line))
+            };
+            let touches = |pfx: &str| {
+                ["bytes", "ways", "line"]
+                    .iter()
+                    .any(|k| v.get(&format!("{pfx}_{k}")).is_some())
+            };
+            if touches("l1") {
+                subsystem.l1 = cache_override(subsystem.l1, "l1", v)?;
+            }
+            if touches("l2") {
+                subsystem.l2 = cache_override(subsystem.l2, "l2", v)?;
+            }
+            if let Some(b) = v.get("shared_l1").and_then(Json::as_bool) {
+                subsystem.shared_l1 = b;
+            }
+            spec.exec = ExecModel::Cgra { subsystem, cgra };
+        }
+        Ok(spec)
+    }
+}
+
+/// One measured (workload, system, repeat) cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Measurement {
+    pub workload: String,
+    pub system: String,
+    pub repeat: u32,
+    pub time_us: f64,
+    pub cycles: u64,
+    pub stall_cycles: u64,
+    pub utilization: f64,
+    pub output_ok: bool,
+    pub spm_accesses: u64,
+    pub l1_accesses: u64,
+    pub l1_hits: u64,
+    pub l2_accesses: u64,
+    pub dram_accesses: u64,
+    pub prefetch_used: u64,
+    pub prefetch_evicted: u64,
+    pub prefetch_useless: u64,
+    pub coverage: f64,
+    pub irregular_share: f64,
+    pub runahead_entries: u64,
+}
+
+impl Measurement {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::str(&self.workload)),
+            ("system", Json::str(&self.system)),
+            ("repeat", Json::u64(self.repeat as u64)),
+            ("time_us", Json::num(self.time_us)),
+            ("cycles", Json::u64(self.cycles)),
+            ("stall_cycles", Json::u64(self.stall_cycles)),
+            ("utilization", Json::num(self.utilization)),
+            ("output_ok", Json::Bool(self.output_ok)),
+            ("spm_accesses", Json::u64(self.spm_accesses)),
+            ("l1_accesses", Json::u64(self.l1_accesses)),
+            ("l1_hits", Json::u64(self.l1_hits)),
+            ("l2_accesses", Json::u64(self.l2_accesses)),
+            ("dram_accesses", Json::u64(self.dram_accesses)),
+            ("prefetch_used", Json::u64(self.prefetch_used)),
+            ("prefetch_evicted", Json::u64(self.prefetch_evicted)),
+            ("prefetch_useless", Json::u64(self.prefetch_useless)),
+            ("coverage", Json::num(self.coverage)),
+            ("irregular_share", Json::num(self.irregular_share)),
+            ("runahead_entries", Json::u64(self.runahead_entries)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Measurement, String> {
+        let s = |k: &str| {
+            v.get(k).and_then(Json::as_str).map(str::to_string).ok_or(format!("missing {k:?}"))
+        };
+        let n = |k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let u = |k: &str| v.get(k).and_then(Json::as_u64).unwrap_or(0);
+        Ok(Measurement {
+            workload: s("workload")?,
+            system: s("system")?,
+            repeat: u("repeat") as u32,
+            time_us: n("time_us"),
+            cycles: u("cycles"),
+            stall_cycles: u("stall_cycles"),
+            utilization: n("utilization"),
+            output_ok: v.get("output_ok").and_then(Json::as_bool).unwrap_or(false),
+            spm_accesses: u("spm_accesses"),
+            l1_accesses: u("l1_accesses"),
+            l1_hits: u("l1_hits"),
+            l2_accesses: u("l2_accesses"),
+            dram_accesses: u("dram_accesses"),
+            prefetch_used: u("prefetch_used"),
+            prefetch_evicted: u("prefetch_evicted"),
+            prefetch_useless: u("prefetch_useless"),
+            coverage: n("coverage"),
+            irregular_share: n("irregular_share"),
+            runahead_entries: u("runahead_entries"),
+        })
+    }
+}
+
+/// Execute one workload on one system described as data — the generalized
+/// `coordinator::measure`.
+pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
+    match &spec.exec {
+        ExecModel::Cpu(model) => {
+            let r = run_cpu(wl, *model);
+            Measurement {
+                workload: wl.name(),
+                system: spec.name.clone(),
+                repeat: 0,
+                time_us: r.time_us(),
+                cycles: r.cycles,
+                stall_cycles: 0,
+                utilization: 0.0,
+                output_ok: true,
+                spm_accesses: 0,
+                l1_accesses: r.instructions,
+                l1_hits: r.l1_hits,
+                l2_accesses: 0,
+                dram_accesses: r.dram_accesses,
+                prefetch_used: 0,
+                prefetch_evicted: 0,
+                prefetch_useless: 0,
+                coverage: 0.0,
+                irregular_share: 0.0,
+                runahead_entries: 0,
+            }
+        }
+        ExecModel::Cgra { subsystem, cgra } => {
+            let run = run_workload(wl, *subsystem, *cgra);
+            let r = &run.result;
+            Measurement {
+                workload: wl.name(),
+                system: spec.name.clone(),
+                repeat: 0,
+                time_us: r.time_us(),
+                cycles: r.cycles,
+                stall_cycles: r.stall_cycles,
+                utilization: r.utilization(),
+                output_ok: run.output_ok,
+                spm_accesses: r.mem.spm_accesses,
+                l1_accesses: r.mem.l1_accesses,
+                l1_hits: r.mem.l1_hits,
+                l2_accesses: r.mem.l2_accesses,
+                dram_accesses: r.mem.dram_accesses,
+                prefetch_used: r.mem.prefetch_used,
+                prefetch_evicted: r.mem.prefetch_evicted_then_demanded,
+                prefetch_useless: r.mem.prefetch_useless,
+                coverage: r.coverage(),
+                irregular_share: run.irregular_share,
+                runahead_entries: r.runahead_entries,
+            }
+        }
+    }
+}
+
+/// A declarative (workloads × systems × repeats) experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub name: String,
+    /// Workload registry names ([`WorkloadRegistry`]).
+    pub workloads: Vec<String>,
+    pub systems: Vec<SystemSpec>,
+    pub repeats: u32,
+}
+
+impl ExperimentSpec {
+    pub fn new(name: impl Into<String>) -> Self {
+        ExperimentSpec { name: name.into(), workloads: Vec::new(), systems: Vec::new(), repeats: 1 }
+    }
+
+    pub fn workload(mut self, name: impl Into<String>) -> Self {
+        self.workloads.push(name.into());
+        self
+    }
+
+    /// Replace the workload list.
+    pub fn workloads<S: Into<String>>(mut self, names: impl IntoIterator<Item = S>) -> Self {
+        self.workloads = names.into_iter().map(Into::into).collect();
+        self
+    }
+
+    /// The full Table 1 paper suite.
+    pub fn paper_workloads(self) -> Self {
+        let names = WorkloadRegistry::builtin().paper_names();
+        self.workloads(names)
+    }
+
+    /// The reduced-input fast set.
+    pub fn small_workloads(self) -> Self {
+        let names = WorkloadRegistry::builtin().small_names();
+        self.workloads(names)
+    }
+
+    pub fn system(mut self, s: SystemSpec) -> Self {
+        self.systems.push(s);
+        self
+    }
+
+    pub fn systems(mut self, ss: impl IntoIterator<Item = SystemSpec>) -> Self {
+        self.systems = ss.into_iter().collect();
+        self
+    }
+
+    /// Swap the named system for another (sweep variants of a preset).
+    pub fn replace_system(mut self, name: &str, s: SystemSpec) -> Self {
+        match self.systems.iter_mut().find(|x| x.name == name) {
+            Some(slot) => *slot = s,
+            None => self.systems.push(s),
+        }
+        self
+    }
+
+    /// Run every (workload × system) cell `n` times. The cycle-accurate
+    /// simulator is deterministic, so for the built-in systems repeats
+    /// reproduce identical measurements — the axis exists for future
+    /// nondeterministic/wall-clock backends; [`Report::repeats_of`]
+    /// retrieves all rows of a cell.
+    pub fn repeats(mut self, n: u32) -> Self {
+        self.repeats = n.max(1);
+        self
+    }
+
+    // ---- presets behind the paper's figures ----
+
+    /// Fig 11a: full suite × the five systems.
+    pub fn fig11a() -> Self {
+        Self::new("fig11a").paper_workloads().systems(builtin_systems())
+    }
+
+    /// Fig 11b: full suite × the three CGRA systems.
+    pub fn fig11b() -> Self {
+        Self::new("fig11b").paper_workloads().systems([
+            SystemSpec::spm_only(),
+            SystemSpec::cache_spm(),
+            SystemSpec::runahead(),
+        ])
+    }
+
+    /// Campaign over the paper suite with caller-chosen systems.
+    pub fn campaign(name: impl Into<String>, systems: impl IntoIterator<Item = SystemSpec>) -> Self {
+        Self::new(name).paper_workloads().systems(systems)
+    }
+
+    /// Parse a sweep spec:
+    /// ```json
+    /// {
+    ///   "name": "runahead-8x8-sweep",
+    ///   "suite": "paper",
+    ///   "repeats": 1,
+    ///   "systems": [
+    ///     {"base": "Cache+SPM"},
+    ///     {"base": "Runahead", "name": "Runahead-8x8", "geometry": "8x8"}
+    ///   ]
+    /// }
+    /// ```
+    /// `workloads` (a name array) may replace `suite` ("paper" | "small").
+    pub fn from_json(v: &Json) -> Result<ExperimentSpec, String> {
+        const KNOWN: [&str; 5] = ["name", "workloads", "suite", "systems", "repeats"];
+        if let Json::Obj(fields) = v {
+            for (k, _) in fields {
+                if !KNOWN.contains(&k.as_str()) {
+                    return Err(format!("unknown spec key {k:?} (known: {})", KNOWN.join(", ")));
+                }
+            }
+        } else {
+            return Err("a sweep spec must be a JSON object".into());
+        }
+        let mut spec = ExperimentSpec::new(
+            v.get("name").and_then(Json::as_str).unwrap_or("sweep"),
+        );
+        if let Some(names) = v.get("workloads").and_then(Json::as_arr) {
+            for n in names {
+                let n = n.as_str().ok_or("workloads entries must be strings")?;
+                spec.workloads.push(n.to_string());
+            }
+        } else {
+            spec = match v.get("suite").and_then(Json::as_str).unwrap_or("paper") {
+                "paper" => spec.paper_workloads(),
+                "small" => spec.small_workloads(),
+                other => return Err(format!("unknown suite {other:?} (use paper or small)")),
+            };
+        }
+        let systems = v.get("systems").and_then(Json::as_arr).ok_or("spec needs a systems array")?;
+        for s in systems {
+            spec.systems.push(SystemSpec::from_json(s)?);
+        }
+        if let Some(r) = u64_field(v, "repeats")? {
+            spec.repeats = (r as u32).max(1);
+        }
+        Ok(spec)
+    }
+}
+
+/// Structured result of one [`Engine::run`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Report {
+    pub experiment: String,
+    /// Workload names in spec order.
+    pub workloads: Vec<String>,
+    /// System names in spec order.
+    pub systems: Vec<String>,
+    pub measurements: Vec<Measurement>,
+}
+
+impl Report {
+    /// First-repeat measurement of a (workload, system) cell.
+    pub fn get(&self, workload: &str, system: &str) -> Option<&Measurement> {
+        self.measurements
+            .iter()
+            .find(|m| m.workload == workload && m.system == system && m.repeat == 0)
+    }
+
+    pub fn time_of(&self, workload: &str, system: &str) -> Option<f64> {
+        self.get(workload, system).map(|m| m.time_us)
+    }
+
+    pub fn cycles_of(&self, workload: &str, system: &str) -> Option<u64> {
+        self.get(workload, system).map(|m| m.cycles)
+    }
+
+    /// All first-repeat measurements for one system, in workload order.
+    pub fn by_system(&self, system: &str) -> Vec<&Measurement> {
+        self.workloads.iter().filter_map(|w| self.get(w, system)).collect()
+    }
+
+    /// Every repeat of one (workload, system) cell, in repeat order.
+    pub fn repeats_of(&self, workload: &str, system: &str) -> Vec<&Measurement> {
+        self.measurements
+            .iter()
+            .filter(|m| m.workload == workload && m.system == system)
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("experiment", Json::str(&self.experiment)),
+            ("workloads", Json::Arr(self.workloads.iter().map(Json::str).collect())),
+            ("systems", Json::Arr(self.systems.iter().map(Json::str).collect())),
+            (
+                "measurements",
+                Json::Arr(self.measurements.iter().map(Measurement::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Report, String> {
+        let names = |k: &str| -> Result<Vec<String>, String> {
+            v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or(format!("missing {k:?} array"))?
+                .iter()
+                .map(|x| x.as_str().map(str::to_string).ok_or(format!("{k:?} entries must be strings")))
+                .collect()
+        };
+        let ms = v
+            .get("measurements")
+            .and_then(Json::as_arr)
+            .ok_or("missing measurements array")?
+            .iter()
+            .map(Measurement::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Report {
+            experiment: v.get("experiment").and_then(Json::as_str).unwrap_or("report").to_string(),
+            workloads: names("workloads")?,
+            systems: names("systems")?,
+            measurements: ms,
+        })
+    }
+
+    /// Aligned text table (the CLI's human-readable output).
+    pub fn render_table(&self) -> String {
+        let mut s = format!(
+            "{:<22} {:<18} {:>12} {:>10} {:>7} {:>6} {:>10}\n",
+            "workload", "system", "cycles", "time(us)", "util%", "ok", "dram"
+        );
+        for m in &self.measurements {
+            s.push_str(&format!(
+                "{:<22} {:<18} {:>12} {:>10.1} {:>6.2}% {:>6} {:>10}\n",
+                m.workload,
+                m.system,
+                m.cycles,
+                m.time_us,
+                m.utilization * 100.0,
+                m.output_ok,
+                m.dram_accesses
+            ));
+        }
+        s
+    }
+}
+
+/// Fig 17 protocol outcome (base vs reconfigured run).
+pub struct ReconfigOutcome {
+    pub base_cycles: u64,
+    pub reconf_cycles: u64,
+    pub plan: ReconfigPlan,
+    pub output_ok: bool,
+    pub monitor_triggered: bool,
+}
+
+/// Fig 17 protocol: run a workload on the 8×8 Reconfig system with and
+/// without the closed-loop cache reconfiguration (sample → plan → apply →
+/// run).
+pub fn reconfig_experiment(wl: &dyn Workload, mode: ExecMode, sample_window: usize) -> ReconfigOutcome {
+    let sys = SubsystemConfig::paper_reconfig();
+    let mut cgra = CgraConfig::hycube_8x8(mode);
+    cgra.trace_window = sample_window;
+
+    // Baseline run (uniform ways, default line size) — also the sampling
+    // run: the hardware tracker records each port's access window.
+    let (mut mem, mut arr, _layout) = prepare(wl, sys, cgra);
+    let mut monitor = MissRateMonitor::new(0.05, 1024);
+    let base = arr.run(&mut mem, wl.iterations());
+    let monitor_triggered = monitor.observe(&mem);
+    let plan = plan_from_traces(&mem, &arr.trace, &[0, 1]);
+
+    // Reconfigured run: apply the plan to a fresh system (steady-state
+    // behaviour; the flush/migration cost is a handful of cycles and is
+    // charged below).
+    let (mut mem2, mut arr2, layout2) = prepare(wl, sys, cgra);
+    let migrated = apply_plan(&mut mem2, &plan);
+    let reconf = arr2.run(&mut mem2, wl.iterations());
+    let output_ok = validate(wl, &layout2, &mem2);
+    ReconfigOutcome {
+        base_cycles: base.cycles,
+        // Way migration costs one flush per moved way (§4.5: reuses the
+        // existing invalidate machinery).
+        reconf_cycles: reconf.cycles + migrated as u64 * 64,
+        plan,
+        output_ok,
+        monitor_triggered,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_measurement() -> Measurement {
+        Measurement {
+            workload: "aggregate/tiny".into(),
+            system: "Cache+SPM".into(),
+            repeat: 0,
+            time_us: 12.625,
+            cycles: 8888,
+            stall_cycles: 1234,
+            utilization: 0.4375,
+            output_ok: true,
+            spm_accesses: 10,
+            l1_accesses: 20,
+            l1_hits: 15,
+            l2_accesses: 5,
+            dram_accesses: 2,
+            prefetch_used: 1,
+            prefetch_evicted: 0,
+            prefetch_useless: 0,
+            coverage: 0.875,
+            irregular_share: 0.5,
+            runahead_entries: 3,
+        }
+    }
+
+    #[test]
+    fn measurement_round_trips_through_json() {
+        let m = tiny_measurement();
+        let text = m.to_json().render_pretty();
+        let back = Measurement::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let mut m2 = tiny_measurement();
+        m2.system = "Runahead".into();
+        m2.repeat = 1;
+        m2.time_us = 7.5;
+        let r = Report {
+            experiment: "unit".into(),
+            workloads: vec!["aggregate/tiny".into()],
+            systems: vec!["Cache+SPM".into(), "Runahead".into()],
+            measurements: vec![tiny_measurement(), m2],
+        };
+        let back = Report::from_json(&Json::parse(&r.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.time_of("aggregate/tiny", "Cache+SPM"), Some(12.625));
+    }
+
+    #[test]
+    fn spec_parses_from_json_with_overrides() {
+        let text = r#"{
+            "name": "custom",
+            "workloads": ["aggregate/tiny"],
+            "repeats": 2,
+            "systems": [
+                {"base": "Cache+SPM", "name": "Cache+SPM 2-way", "l1_ways": 2},
+                {"base": "Runahead", "name": "Runahead-8x8", "geometry": "8x8"}
+            ]
+        }"#;
+        let spec = ExperimentSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.name, "custom");
+        assert_eq!(spec.repeats, 2);
+        assert_eq!(spec.workloads, vec!["aggregate/tiny"]);
+        assert_eq!(spec.systems.len(), 2);
+        match &spec.systems[0].exec {
+            ExecModel::Cgra { subsystem, .. } => assert_eq!(subsystem.l1.ways, 2),
+            _ => panic!("expected CGRA"),
+        }
+        match &spec.systems[1].exec {
+            ExecModel::Cgra { subsystem, cgra } => {
+                assert_eq!(cgra.geom.rows, 8);
+                assert_eq!(subsystem.num_ports, 4);
+                assert!(matches!(cgra.mode, ExecMode::Runahead));
+            }
+            _ => panic!("expected CGRA"),
+        }
+    }
+
+    #[test]
+    fn spec_rejects_typoed_keys() {
+        // "l1_way" (typo) must not silently run the unmodified base.
+        let sys = Json::parse(r#"{"base": "Cache+SPM", "l1_way": 2}"#).unwrap();
+        assert!(SystemSpec::from_json(&sys).unwrap_err().contains("l1_way"));
+        let spec = Json::parse(r#"{"suit": "paper", "systems": []}"#).unwrap();
+        assert!(ExperimentSpec::from_json(&spec).unwrap_err().contains("suit"));
+    }
+
+    #[test]
+    fn spec_rejects_invalid_cache_geometry() {
+        // Non-power-of-two set count must be a spec error, not an assert
+        // panic deep in CacheConfig::from_size.
+        let sys = Json::parse(r#"{"base": "Cache+SPM", "l1_bytes": 3000, "l1_ways": 4}"#).unwrap();
+        assert!(SystemSpec::from_json(&sys).unwrap_err().contains("power of two"));
+        // A bytes override on a cache-less base must not be dropped.
+        let sys = Json::parse(r#"{"base": "SPM-only", "l1_bytes": 4096}"#).unwrap();
+        assert!(SystemSpec::from_json(&sys).unwrap_err().contains("l1_ways"));
+        // Negative/fractional values are errors, not silent saturation.
+        let sys = Json::parse(r#"{"base": "Cache+SPM", "l1_bytes": -4096, "l1_ways": 4}"#).unwrap();
+        assert!(SystemSpec::from_json(&sys).unwrap_err().contains("non-negative"));
+        // Valid override still parses.
+        let sys = Json::parse(r#"{"base": "SPM-only", "l1_bytes": 4096, "l1_ways": 4}"#).unwrap();
+        assert!(SystemSpec::from_json(&sys).is_ok());
+    }
+
+    #[test]
+    fn spec_suite_selector_works() {
+        let spec = ExperimentSpec::from_json(
+            &Json::parse(r#"{"suite": "small", "systems": [{"base": "SPM-only"}]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec.workloads.len(), 7);
+        assert!(spec.workloads.iter().any(|w| w == "aggregate/tiny"));
+    }
+
+    #[test]
+    fn engine_runs_a_tiny_two_system_spec() {
+        let eng = Engine::new(2);
+        let spec = ExperimentSpec::new("tiny")
+            .workload("aggregate/tiny")
+            .system(SystemSpec::cache_spm())
+            .system(SystemSpec::runahead());
+        let report = eng.run(&spec);
+        assert_eq!(report.measurements.len(), 2);
+        assert!(report.measurements.iter().all(|m| m.output_ok));
+        // JSON of a real report parses back identically.
+        let back = Report::from_json(&Json::parse(&report.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, report);
+    }
+}

@@ -1,0 +1,163 @@
+//! Data-driven registries: workloads by name, systems by name.
+//!
+//! The workload registry replaces `paper_suite()` indexing as the way
+//! experiments refer to kernels — specs carry names, the engine builds
+//! instances on demand inside worker threads. The system list replaces the
+//! closed `coordinator::System` enum: the five paper systems are plain
+//! [`SystemSpec`] values, and callers can register or construct new ones
+//! ("Runahead-8x8", "Cache+SPM 2-way") without touching this module.
+
+use super::SystemSpec;
+use crate::workloads::{
+    GcnAggregate, Grad, GraphSpec, PermSort, RadixHist, RadixUpdate, Rgb, Src2Dest, Workload,
+};
+use std::sync::Arc;
+
+/// Builds one fresh workload instance (deterministic seeds make every
+/// instance identical).
+pub type WorkloadFactory = Arc<dyn Fn() -> Box<dyn Workload> + Send + Sync>;
+
+struct Entry {
+    name: String,
+    factory: WorkloadFactory,
+    /// Part of the Table 1 paper suite (figure campaigns iterate these).
+    paper: bool,
+}
+
+/// Name → workload factory table.
+pub struct WorkloadRegistry {
+    entries: Vec<Entry>,
+}
+
+impl WorkloadRegistry {
+    pub fn empty() -> Self {
+        WorkloadRegistry { entries: Vec::new() }
+    }
+
+    /// Table 1 paper suite (full-size inputs) plus fast variants:
+    /// `aggregate/tiny` and the `small/<kernel>` reduced-input set.
+    pub fn builtin() -> Self {
+        let mut r = WorkloadRegistry::empty();
+        for spec in GraphSpec::paper_datasets() {
+            r.add(format!("aggregate/{}", spec.name), true, move || {
+                Box::new(GcnAggregate::new(spec))
+            });
+        }
+        r.add("grad", true, || Box::new(Grad::default()));
+        r.add("perm_sort", true, || Box::new(PermSort::default()));
+        r.add("radix_hist", true, || Box::new(RadixHist::default()));
+        r.add("radix_update", true, || Box::new(RadixUpdate::default()));
+        r.add("rgb", true, || Box::new(Rgb::default()));
+        r.add("src2dest", true, || Box::new(Src2Dest::default()));
+        // Reduced-size variants for fast sweeps and tests.
+        r.add("aggregate/tiny", false, || Box::new(GcnAggregate::new(GraphSpec::tiny())));
+        r.add("small/grad", false, || Box::new(Grad::small()));
+        r.add("small/perm_sort", false, || Box::new(PermSort::small()));
+        r.add("small/radix_hist", false, || Box::new(RadixHist::small()));
+        r.add("small/radix_update", false, || Box::new(RadixUpdate::small()));
+        r.add("small/rgb", false, || Box::new(Rgb::small()));
+        r.add("small/src2dest", false, || Box::new(Src2Dest::small()));
+        r
+    }
+
+    fn add(
+        &mut self,
+        name: impl Into<String>,
+        paper: bool,
+        f: impl Fn() -> Box<dyn Workload> + Send + Sync + 'static,
+    ) {
+        self.entries.push(Entry { name: name.into(), factory: Arc::new(f), paper });
+    }
+
+    /// Register (or override) a workload under `name`.
+    pub fn register(
+        &mut self,
+        name: impl Into<String>,
+        f: impl Fn() -> Box<dyn Workload> + Send + Sync + 'static,
+    ) {
+        let name = name.into();
+        self.entries.retain(|e| e.name != name);
+        self.add(name, false, f);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.iter().any(|e| e.name == name)
+    }
+
+    /// Build a fresh instance of the named workload.
+    pub fn build(&self, name: &str) -> Option<Box<dyn Workload>> {
+        self.entries.iter().find(|e| e.name == name).map(|e| (e.factory)())
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// The Table 1 suite names, in paper order.
+    pub fn paper_names(&self) -> Vec<String> {
+        self.entries.iter().filter(|e| e.paper).map(|e| e.name.clone()).collect()
+    }
+
+    /// The reduced-input fast set (same kernels, small inputs).
+    pub fn small_names(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .filter(|e| e.name == "aggregate/tiny" || e.name.starts_with("small/"))
+            .map(|e| e.name.clone())
+            .collect()
+    }
+}
+
+/// The five systems of Fig 11a as data (Table 2 CPUs, Table 3 CGRAs).
+pub fn builtin_systems() -> Vec<SystemSpec> {
+    vec![
+        SystemSpec::a72(),
+        SystemSpec::simd(),
+        SystemSpec::spm_only(),
+        SystemSpec::cache_spm(),
+        SystemSpec::runahead(),
+    ]
+}
+
+/// Case-insensitive lookup among the built-in systems.
+pub fn system_named(name: &str) -> Option<SystemSpec> {
+    builtin_systems().into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_names_match_the_paper_suite() {
+        let reg = WorkloadRegistry::builtin();
+        let from_reg = reg.paper_names();
+        let from_suite: Vec<String> =
+            crate::workloads::paper_suite().iter().map(|w| w.name()).collect();
+        assert_eq!(from_reg, from_suite);
+        // Every registered paper workload builds under its own name.
+        for n in &from_reg {
+            assert_eq!(reg.build(n).unwrap().name(), *n);
+        }
+    }
+
+    #[test]
+    fn small_set_and_registration_work() {
+        let mut reg = WorkloadRegistry::builtin();
+        assert_eq!(reg.small_names().len(), 7);
+        assert!(reg.build("small/rgb").is_some());
+        reg.register("tiny2", || {
+            Box::new(GcnAggregate::new(GraphSpec::tiny()))
+        });
+        assert!(reg.contains("tiny2"));
+    }
+
+    #[test]
+    fn five_builtin_systems_by_name() {
+        assert_eq!(builtin_systems().len(), 5);
+        for n in ["A72", "simd", "SPM-only", "cache+spm", "Runahead"] {
+            assert!(system_named(n).is_some(), "{n}");
+        }
+        assert!(system_named("warp-drive").is_none());
+    }
+}

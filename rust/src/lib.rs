@@ -6,8 +6,13 @@
 //! execution ([`sim::array`]), multi-L1 virtual SPMs and pattern-aware
 //! cache reconfiguration ([`reconfig`]) — plus the Table 1 workload suite
 //! ([`workloads`]), the Fig 11a CPU baselines ([`baseline`]), the area
-//! model ([`area`]), and a PJRT [`runtime`] that executes the JAX/Pallas
-//! AOT golden models from rust.
+//! model ([`area`]), and (behind the `pjrt` feature) a PJRT `runtime` that
+//! executes the JAX/Pallas AOT golden models from rust.
+//!
+//! Every experiment runs through the [`exp`] layer: systems are data
+//! ([`exp::SystemSpec`]), campaigns are declarative ([`exp::ExperimentSpec`]),
+//! and the persistent-pool [`exp::Engine`] produces JSON-serializable
+//! [`exp::Report`]s. [`coordinator`] remains as thin compat shims.
 //!
 //! See DESIGN.md for the system inventory and the per-figure experiment
 //! index, and EXPERIMENTS.md for measured-vs-paper results.
@@ -15,9 +20,11 @@
 pub mod area;
 pub mod baseline;
 pub mod coordinator;
+pub mod exp;
 pub mod mem;
 pub mod reconfig;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod stats;

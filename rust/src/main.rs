@@ -1,35 +1,54 @@
-//! `repro` — the leader CLI for the reproduction: runs kernels on any of
-//! the five systems, regenerates every figure/table of the paper, and
-//! drives the reconfiguration loop. (Hand-rolled arg parsing: the vendored
-//! offline crate set has no clap.)
+//! `repro` — the leader CLI for the reproduction: runs kernels on any
+//! registered system, executes declarative JSON sweeps, regenerates every
+//! figure/table of the paper, and drives the reconfiguration loop. All
+//! execution goes through the `exp` Engine (one persistent worker pool).
+//! (Hand-rolled arg parsing: the vendored offline crate set has no clap.)
 
-use cgra_mem::coordinator::{measure, System};
+use cgra_mem::exp::{system_named, Engine, ExperimentSpec, Json, SystemSpec};
 use cgra_mem::report;
-use cgra_mem::workloads::paper_suite;
 
 const USAGE: &str = "\
 repro — 'Re-thinking Memory-Bound Limitations in CGRAs' reproduction
 
 USAGE:
-  repro list                      list kernels and systems
-  repro run <kernel> [system]     run one kernel (default: all 5 systems)
-  repro figure <id|all> [-j N]    regenerate a figure: fig2 fig5 fig7
-                                  fig11a fig11b fig12a..fig12f fig13 fig14
-                                  fig15 fig16 fig17 fig18 motivation ablation
-  repro table <1|2|3|all>         regenerate a table
-  repro golden <artifact>         load + execute an AOT artifact via PJRT
+  repro list                        list kernels and systems
+  repro run <kernel> [system]       run one kernel (default: all 5 systems)
+  repro sweep <spec.json>           run a declarative (workloads x systems
+                                    x repeats) experiment; see DESIGN.md
+  repro figure <id|all> [-j N]      regenerate a figure: fig2 fig5 fig7
+                                    fig11a fig11b fig12a..fig12f fig13 fig14
+                                    fig15 fig16 fig17 fig18 motivation ablation
+  repro table <1|2|3|all>           regenerate a table
+  repro golden <artifact>           load + execute an AOT artifact via PJRT
+                                    (requires building with --features pjrt)
 
-Figures are also written to artifacts/figures/<id>.txt.
+FLAGS:
+  -j N      worker threads (default: all hardware threads)
+  --json    emit the structured report as JSON on stdout (run/sweep)
+
+Figures are written to artifacts/figures/<id>.txt; run/sweep reports to
+artifacts/reports/<name>.json.
 ";
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let threads = jobs_flag(&args).unwrap_or_else(|| {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-    });
-    match args.first().map(String::as_str) {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let threads = match take_jobs_flag(&mut args) {
+        Ok(n) => n.unwrap_or_else(cgra_mem::exp::default_parallelism),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let json_out = take_flag(&mut args, "--json");
+    let cmd = args.first().map(String::as_str);
+    if json_out && !matches!(cmd, Some("run") | Some("sweep")) {
+        eprintln!("--json is only supported for `repro run` and `repro sweep`");
+        std::process::exit(2);
+    }
+    match cmd {
         Some("list") => list(),
-        Some("run") => run(&args[1..]),
+        Some("run") => run(&args[1..], threads, json_out),
+        Some("sweep") => sweep(&args[1..], threads, json_out),
         Some("figure") => figure(args.get(1).map(String::as_str).unwrap_or("all"), threads),
         Some("table") => table(args.get(1).map(String::as_str).unwrap_or("all")),
         Some("golden") => golden(args.get(1).map(String::as_str).unwrap_or("aggregate")),
@@ -37,76 +56,133 @@ fn main() {
     }
 }
 
-fn jobs_flag(args: &[String]) -> Option<usize> {
-    let i = args.iter().position(|a| a == "-j")?;
-    args.get(i + 1)?.parse().ok()
+fn take_jobs_flag(args: &mut Vec<String>) -> Result<Option<usize>, String> {
+    let Some(i) = args.iter().position(|a| a == "-j") else {
+        return Ok(None);
+    };
+    let Some(val) = args.get(i + 1) else {
+        return Err("-j needs a thread count (e.g. -j 8)".into());
+    };
+    let n: usize = val.parse().map_err(|_| format!("bad -j value {val:?}"))?;
+    args.drain(i..=i + 1);
+    Ok(Some(n.max(1)))
+}
+
+fn take_flag(args: &mut Vec<String>, flag: &str) -> bool {
+    match args.iter().position(|a| a == flag) {
+        Some(i) => {
+            args.remove(i);
+            true
+        }
+        None => false,
+    }
 }
 
 fn list() {
-    println!("kernels (Table 1):");
-    for wl in paper_suite() {
-        println!("  {:<22} {} ({} iterations)", wl.name(), wl.domain(), wl.iterations());
+    // No engine needed: the registry is plain data.
+    let registry = cgra_mem::exp::WorkloadRegistry::builtin();
+    println!("kernels (Table 1 + fast variants):");
+    for name in registry.names() {
+        if let Some(wl) = registry.build(&name) {
+            println!("  {:<22} {} ({} iterations)", name, wl.domain(), wl.iterations());
+        }
     }
-    println!("systems (Fig 11a): A72 SIMD SPM-only Cache+SPM Runahead");
+    println!("systems (Fig 11a):");
+    for s in cgra_mem::exp::builtin_systems() {
+        println!("  {}", s.name);
+    }
+    println!("new systems: describe them in a sweep spec (repro sweep; see DESIGN.md)");
 }
 
-fn run(args: &[String]) {
+fn run(args: &[String], threads: usize, json_out: bool) {
     let Some(kernel) = args.first() else {
-        eprintln!("usage: repro run <kernel> [system]");
-        return;
+        eprintln!("usage: repro run <kernel> [system] [--json]");
+        std::process::exit(2);
     };
-    let suite = paper_suite();
-    let Some(wl) = suite.iter().find(|w| &w.name() == kernel) else {
-        eprintln!("unknown kernel {kernel:?}; try `repro list`");
-        return;
+    let systems: Vec<SystemSpec> = match args.get(1) {
+        Some(name) => match system_named(name) {
+            Some(s) => vec![s],
+            None => {
+                eprintln!("unknown system {name:?}; try `repro list`");
+                std::process::exit(1);
+            }
+        },
+        None => cgra_mem::exp::builtin_systems(),
     };
-    let systems: Vec<System> = match args.get(1).map(String::as_str) {
-        Some(name) => vec![System::all()
-            .into_iter()
-            .find(|s| s.name().eq_ignore_ascii_case(name))
-            .unwrap_or_else(|| panic!("unknown system {name}"))],
-        None => System::all().to_vec(),
+    let eng = Engine::new(threads);
+    let spec = ExperimentSpec::new(format!("run-{kernel}"))
+        .workload(kernel.clone())
+        .systems(systems);
+    emit(&eng, &spec, json_out);
+}
+
+fn sweep(args: &[String], threads: usize, json_out: bool) {
+    let Some(path) = args.first() else {
+        eprintln!("usage: repro sweep <spec.json> [--json]");
+        std::process::exit(2);
     };
-    println!(
-        "{:<10} {:>12} {:>10} {:>7} {:>6} {:>10}",
-        "system", "cycles", "time(us)", "util%", "ok", "dram"
-    );
-    for sys in systems {
-        let m = measure(wl.as_ref(), sys);
-        println!(
-            "{:<10} {:>12} {:>10.1} {:>6.2}% {:>6} {:>10}",
-            m.system,
-            m.cycles,
-            m.time_us,
-            m.utilization * 100.0,
-            m.output_ok,
-            m.dram_accesses
-        );
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let spec = match Json::parse(&text).and_then(|v| ExperimentSpec::from_json(&v)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bad sweep spec {path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let eng = Engine::new(threads);
+    emit(&eng, &spec, json_out);
+}
+
+/// Run a spec, print the report (table or JSON), save the JSON artifact.
+/// Exits non-zero on spec/engine errors so scripts can trust `&&`.
+fn emit(eng: &Engine, spec: &ExperimentSpec, json_out: bool) {
+    let report = match eng.try_run(spec) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    };
+    if json_out {
+        print!("{}", report.to_json().render_pretty());
+    } else {
+        print!("{}", report.render_table());
+    }
+    match report::save_report(&report) {
+        Ok(path) => eprintln!("(report saved to {})", path.display()),
+        Err(e) => eprintln!("(could not save report: {e})"),
     }
 }
 
 fn figure(id: &str, threads: usize) {
+    let eng = Engine::new(threads);
     let render = |id: &str| -> Option<String> {
         Some(match id {
             "fig2" => report::fig2(),
-            "fig5" => report::fig5(threads),
+            "fig5" => report::fig5(&eng),
             "fig7" => report::fig7(),
-            "fig11a" => report::fig11a(threads),
-            "fig11b" => report::fig11b(threads),
-            "fig12a" => report::fig12('a', threads),
-            "fig12b" => report::fig12('b', threads),
-            "fig12c" => report::fig12('c', threads),
-            "fig12d" => report::fig12('d', threads),
-            "fig12e" => report::fig12('e', threads),
-            "fig12f" => report::fig12('f', threads),
-            "fig13" => report::fig13(threads),
-            "fig14" => report::fig14(threads),
-            "fig15" => report::fig15(threads),
-            "fig16" => report::fig16(threads),
-            "fig17" => report::fig17(threads),
+            "fig11a" => report::fig11a(&eng),
+            "fig11b" => report::fig11b(&eng),
+            "fig12a" => report::fig12('a', &eng),
+            "fig12b" => report::fig12('b', &eng),
+            "fig12c" => report::fig12('c', &eng),
+            "fig12d" => report::fig12('d', &eng),
+            "fig12e" => report::fig12('e', &eng),
+            "fig12f" => report::fig12('f', &eng),
+            "fig13" => report::fig13(&eng),
+            "fig14" => report::fig14(&eng),
+            "fig15" => report::fig15(&eng),
+            "fig16" => report::fig16(&eng),
+            "fig17" => report::fig17(&eng),
             "fig18" => report::fig18(),
-            "motivation" => report::motivation(threads),
-            "ablation" => report::ablation(threads),
+            "motivation" => report::motivation(&eng),
+            "ablation" => report::ablation(&eng),
             _ => return None,
         })
     };
@@ -146,11 +222,22 @@ fn table(id: &str) {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn golden(name: &str) {
     let rt = cgra_mem::runtime::Runtime::cpu("artifacts").expect("PJRT CPU client");
     println!("platform: {}", rt.platform());
     match rt.load(name) {
         Ok(art) => println!("artifact {:?} loaded and compiled OK", art.name),
-        Err(e) => eprintln!("failed: {e:#}"),
+        Err(e) => eprintln!("failed: {e}"),
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn golden(_name: &str) {
+    eprintln!(
+        "repro was built without the `pjrt` feature; rebuild with\n\
+         `cargo build --release --features pjrt` (needs the vendored xla crate,\n\
+         see rust/Cargo.toml) to load AOT artifacts."
+    );
+    std::process::exit(1);
 }

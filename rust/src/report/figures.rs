@@ -1,63 +1,59 @@
-//! Per-figure regeneration harnesses (§4 evaluation). Each function runs
-//! the experiment behind one figure and renders the series the paper
-//! plots; EXPERIMENTS.md records these outputs against the published
-//! values.
+//! Per-figure regeneration harnesses (§4 evaluation). Each figure is an
+//! [`ExperimentSpec`] (what to run) plus a formatter over the resulting
+//! [`Report`] (what the paper plots); the caller's [`Engine`] supplies the
+//! worker pool, so `repro figure all` reuses one pool for every figure.
+//! EXPERIMENTS.md records these outputs against the published values.
 
-use crate::coordinator::{campaign, measure, par_map, reconfig_experiment, System};
+use crate::exp::{reconfig_experiment, Engine, ExperimentSpec, Report, SystemSpec};
 use crate::mem::{CacheConfig, SubsystemConfig};
 use crate::sim::{CgraConfig, ExecMode};
 use crate::stats;
-use crate::workloads::{paper_suite, run_workload, GcnAggregate, GraphSpec, Workload};
+use crate::workloads::{prepare, GcnAggregate, GraphSpec};
 
-fn gcn_cora() -> GcnAggregate {
-    GcnAggregate::new(GraphSpec::cora())
+const CORA: &str = "aggregate/cora";
+
+fn cgra_4x4(name: impl Into<String>, sub: SubsystemConfig, mode: ExecMode) -> SystemSpec {
+    SystemSpec::cgra(name, sub, CgraConfig::hycube_4x4(mode))
 }
 
 /// Fig 2: CGRA utilization of the SPM-only design (4×4 HyCUBE, 4 KB SPM)
 /// on the GCN/Cora aggregate kernel. Paper: average ≈ 1.43%.
 pub fn fig2() -> String {
-    let wl = gcn_cora();
-    let run = run_workload(
-        &wl,
-        SubsystemConfig::spm_only(2, 4096),
-        CgraConfig::hycube_4x4(ExecMode::Normal),
-    );
-    let util = 100.0 * run.result.utilization();
+    let sys = SystemSpec::spm_starved(4096);
+    let m = crate::exp::measure_spec(&GcnAggregate::new(GraphSpec::cora()), &sys);
     format!(
         "Fig 2 — SPM-only (4KB) utilization on GCN aggregate / Cora\n\
          cycles={} stall={} ({:.1}%)\n\
-         CGRA utilization = {util:.2}%   (paper: 1.43%)\n",
-        run.result.cycles,
-        run.result.stall_cycles,
-        100.0 * run.result.stall_cycles as f64 / run.result.cycles as f64,
+         CGRA utilization = {:.2}%   (paper: 1.43%)\n",
+        m.cycles,
+        m.stall_cycles,
+        100.0 * m.stall_cycles as f64 / m.cycles as f64,
+        100.0 * m.utilization,
     )
 }
 
 /// Fig 5: share of irregular accesses vs CGRA utilization per workload
 /// (SPM-only 4 KB). Paper: average utilization ≈ 1.7%.
-pub fn fig5(threads: usize) -> String {
-    let idx: Vec<usize> = (0..paper_suite().len()).collect();
-    let rows = par_map(idx, threads, |i| {
-        let suite = paper_suite();
-        let wl = &suite[i];
-        let run = run_workload(
-            wl.as_ref(),
-            SubsystemConfig::spm_only(2, 4096),
-            CgraConfig::hycube_4x4(ExecMode::Normal),
-        );
-        // Dynamic irregular share: fraction of demand accesses that went
-        // off-SPM (the irregular arrays are exactly the off-SPM ones).
-        let m = &run.result.mem;
-        let total = m.spm_accesses + m.l1_accesses;
-        let dyn_share = m.l1_accesses as f64 / total.max(1) as f64;
-        (wl.name(), dyn_share, run.result.utilization())
-    });
+pub fn fig5(eng: &Engine) -> String {
+    let sys = SystemSpec::spm_starved(4096);
+    let sys_name = sys.name.clone();
+    let report = eng.run(&ExperimentSpec::new("fig5").paper_workloads().system(sys));
     let mut s = String::from("Fig 5 — irregular access share vs CGRA utilization (SPM-only 4KB)\n");
     s.push_str(&format!("{:<22} {:>10} {:>12}\n", "kernel", "irregular%", "utilization%"));
     let mut utils = Vec::new();
-    for (name, share, util) in rows {
-        utils.push(util * 100.0);
-        s.push_str(&format!("{:<22} {:>9.1}% {:>11.2}%\n", name, share * 100.0, util * 100.0));
+    for name in &report.workloads {
+        let m = report.get(name, &sys_name).unwrap();
+        // Dynamic irregular share: fraction of demand accesses that went
+        // off-SPM (the irregular arrays are exactly the off-SPM ones).
+        let total = m.spm_accesses + m.l1_accesses;
+        let dyn_share = m.l1_accesses as f64 / total.max(1) as f64;
+        utils.push(m.utilization * 100.0);
+        s.push_str(&format!(
+            "{:<22} {:>9.1}% {:>11.2}%\n",
+            name,
+            dyn_share * 100.0,
+            m.utilization * 100.0
+        ));
     }
     s.push_str(&format!("average utilization = {:.2}%   (paper: 1.7%)\n", stats::mean(&utils)));
     s
@@ -65,12 +61,12 @@ pub fn fig5(threads: usize) -> String {
 
 /// Fig 7: per-PE (per-port) address/time series showing the access-pattern
 /// taxonomy. Rendered as classified stride statistics plus CSV samples.
+/// (A trace dump, not a campaign — runs outside the engine.)
 pub fn fig7() -> String {
-    let wl = gcn_cora();
+    let wl = GcnAggregate::new(GraphSpec::cora());
     let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
     cgra.trace_window = 4096;
-    let (mut mem, mut arr, _layout) =
-        crate::workloads::prepare(&wl, SubsystemConfig::paper_base(), cgra);
+    let (mut mem, mut arr, _layout) = prepare(&wl, SubsystemConfig::paper_base(), cgra);
     arr.run(&mut mem, 20_000);
     let mut s = String::from("Fig 7 — per-port access patterns (GCN aggregate / Cora)\n");
     for p in 0..2 {
@@ -100,19 +96,16 @@ pub fn fig7() -> String {
 /// Fig 11a: normalized execution time of the five systems across the
 /// suite. Paper: Cache+SPM ≈10× vs SPM-only, 7.26×/6.0× vs A72/SIMD;
 /// Runahead +3.04× (≤6.91×) on top.
-pub fn fig11a(threads: usize) -> String {
-    let ms = campaign(&System::all(), threads);
-    let suite: Vec<String> = paper_suite().iter().map(|w| w.name()).collect();
+pub fn fig11a(eng: &Engine) -> String {
+    let report = eng.run(&ExperimentSpec::fig11a());
     let mut s = String::from("Fig 11a — execution time normalized to A72 (lower is better)\n");
     s.push_str(&format!(
         "{:<22} {:>8} {:>8} {:>9} {:>10} {:>9}\n",
         "kernel", "A72", "SIMD", "SPM-only", "Cache+SPM", "Runahead"
     ));
     let mut ratios: Vec<(f64, f64, f64, f64)> = Vec::new(); // vs A72
-    for name in &suite {
-        let t = |sys: &str| {
-            ms.iter().find(|m| &m.workload == name && m.system == sys).map(|m| m.time_us).unwrap()
-        };
+    for name in &report.workloads {
+        let t = |sys: &str| report.time_of(name, sys).unwrap();
         let a = t("A72");
         s.push_str(&format!(
             "{:<22} {:>8.2} {:>8.2} {:>9.2} {:>10.2} {:>9.2}\n",
@@ -149,8 +142,8 @@ pub fn fig11a(threads: usize) -> String {
 
 /// Fig 11b: memory access counts per level for the three CGRA systems.
 /// Paper: Cache+SPM cuts DRAM accesses by ~77% vs SPM-only.
-pub fn fig11b(threads: usize) -> String {
-    let ms = campaign(&[System::SpmOnly, System::CacheSpm, System::Runahead], threads);
+pub fn fig11b(eng: &Engine) -> String {
+    let report = eng.run(&ExperimentSpec::fig11b());
     let mut s = String::from("Fig 11b — total memory accesses by level (suite sum)\n");
     s.push_str(&format!(
         "{:<10} {:>12} {:>12} {:>12} {:>12}\n",
@@ -158,9 +151,8 @@ pub fn fig11b(threads: usize) -> String {
     ));
     let mut dram = std::collections::HashMap::new();
     for sys in ["SPM-only", "Cache+SPM", "Runahead"] {
-        let f = |g: fn(&crate::coordinator::Measurement) -> u64| -> u64 {
-            ms.iter().filter(|m| m.system == sys).map(g).sum()
-        };
+        let ms = report.by_system(sys);
+        let f = |g: fn(&crate::exp::Measurement) -> u64| -> u64 { ms.iter().map(|m| g(m)).sum() };
         let d = f(|m| m.dram_accesses);
         dram.insert(sys, d);
         s.push_str(&format!(
@@ -172,73 +164,94 @@ pub fn fig11b(threads: usize) -> String {
             d
         ));
     }
-    let drop =
-        100.0 * (1.0 - dram["Cache+SPM"] as f64 / dram["SPM-only"].max(1) as f64);
+    let drop = 100.0 * (1.0 - dram["Cache+SPM"] as f64 / dram["SPM-only"].max(1) as f64);
     s.push_str(&format!("Cache+SPM DRAM reduction vs SPM-only = {drop:.0}%   (paper: 77%)\n"));
     s
 }
 
-/// One Fig 12 sweep point: run GCN/Cora on a modified base config.
-fn sweep_point(cfg: SubsystemConfig) -> u64 {
-    let wl = gcn_cora();
-    run_workload(&wl, cfg, CgraConfig::hycube_4x4(ExecMode::Normal)).result.cycles
+/// Run one sweep over Cora: each modified config is a [`SystemSpec`] row.
+fn cora_sweep(eng: &Engine, name: &str, systems: Vec<SystemSpec>) -> (Report, Vec<u64>) {
+    let order: Vec<String> = systems.iter().map(|s| s.name.clone()).collect();
+    let report = eng.run(&ExperimentSpec::new(name).workload(CORA).systems(systems));
+    let cycles = order.iter().map(|s| report.cycles_of(CORA, s).unwrap()).collect();
+    (report, cycles)
 }
 
 /// Fig 12a-f: impact of cache configuration on execution time.
-pub fn fig12(part: char, threads: usize) -> String {
+pub fn fig12(part: char, eng: &Engine) -> String {
     let base = SubsystemConfig::paper_base();
     let mut s = format!("Fig 12{part} — GCN/Cora execution cycles vs parameter (Table 3 base)\n");
     match part {
         'a' => {
             // L1 associativity at fixed 4 KB capacity.
             let pts: Vec<usize> = vec![1, 2, 4, 8, 16];
-            let cycles = par_map(pts.clone(), threads, |w| {
-                let mut c = base;
-                c.l1 = CacheConfig::from_size(4096, w, 64);
-                sweep_point(c)
-            });
+            let systems = pts
+                .iter()
+                .map(|&w| {
+                    let mut c = base;
+                    c.l1 = CacheConfig::from_size(4096, w, 64);
+                    cgra_4x4(format!("assoc-{w}"), c, ExecMode::Normal)
+                })
+                .collect();
+            let (_, cycles) = cora_sweep(eng, "fig12a", systems);
             render_series(&mut s, "assoc", &pts, &cycles);
             s.push_str("(paper: saturates at associativity 8)\n");
         }
         'b' => {
             // L1+L2 line size together.
             let pts: Vec<u32> = vec![16, 32, 64, 128];
-            let cycles = par_map(pts.clone(), threads, |lb| {
-                let mut c = base;
-                c.l1 = CacheConfig::from_size(4096, 4, lb);
-                c.l2 = CacheConfig::from_size(128 * 1024, 8, lb);
-                sweep_point(c)
-            });
+            let systems = pts
+                .iter()
+                .map(|&lb| {
+                    let mut c = base;
+                    c.l1 = CacheConfig::from_size(4096, 4, lb);
+                    c.l2 = CacheConfig::from_size(128 * 1024, 8, lb);
+                    cgra_4x4(format!("line-{lb}B"), c, ExecMode::Normal)
+                })
+                .collect();
+            let (_, cycles) = cora_sweep(eng, "fig12b", systems);
             render_series(&mut s, "line B", &pts, &cycles);
             s.push_str("(paper: saturates around 64 B)\n");
         }
         'c' => {
             let pts: Vec<u32> = vec![1024, 2048, 4096, 8192, 16384];
-            let cycles = par_map(pts.clone(), threads, |sz| {
-                let mut c = base;
-                c.l1 = CacheConfig::from_size(sz, 4, 64);
-                sweep_point(c)
-            });
+            let systems = pts
+                .iter()
+                .map(|&sz| {
+                    let mut c = base;
+                    c.l1 = CacheConfig::from_size(sz, 4, 64);
+                    cgra_4x4(format!("l1-{sz}B"), c, ExecMode::Normal)
+                })
+                .collect();
+            let (_, cycles) = cora_sweep(eng, "fig12c", systems);
             render_series(&mut s, "L1 size", &pts, &cycles);
         }
         'd' => {
             let pts: Vec<usize> = vec![1, 2, 4, 8, 16];
-            let cycles = par_map(pts.clone(), threads, |m| {
-                let mut c = base;
-                c.mshr_entries = m;
-                c.store_buffer_entries = m.max(4);
-                sweep_point(c)
-            });
+            let systems = pts
+                .iter()
+                .map(|&m| {
+                    let mut c = base;
+                    c.mshr_entries = m;
+                    c.store_buffer_entries = m.max(4);
+                    cgra_4x4(format!("mshr-{m}"), c, ExecMode::Normal)
+                })
+                .collect();
+            let (_, cycles) = cora_sweep(eng, "fig12d", systems);
             render_series(&mut s, "MSHR", &pts, &cycles);
             s.push_str("(paper: demand misses saturate at 4)\n");
         }
         'e' => {
             let pts: Vec<u32> = vec![256, 512, 1024, 2048, 4096];
-            let cycles = par_map(pts.clone(), threads, |b| {
-                let mut c = base;
-                c.spm_bytes = b;
-                sweep_point(c)
-            });
+            let systems = pts
+                .iter()
+                .map(|&b| {
+                    let mut c = base;
+                    c.spm_bytes = b;
+                    cgra_4x4(format!("spm-{b}B"), c, ExecMode::Normal)
+                })
+                .collect();
+            let (_, cycles) = cora_sweep(eng, "fig12e", systems);
             render_series(&mut s, "SPM B", &pts, &cycles);
             s.push_str("(paper: SPM size has little impact for large kernels)\n");
         }
@@ -249,19 +262,20 @@ pub fn fig12(part: char, threads: usize) -> String {
             small.spm_bytes = 512; // 2 x 512B = 1 KB SPM
             small.l1 = CacheConfig::from_size(1024, 4, 64); // 2 x 1KB = 2KB L1
             small.l2 = CacheConfig { sets: 1, ways: 0, line_bytes: 64, vline_shift: 0 };
-            let cache_cycles = sweep_point(small);
             let cache_storage = small.total_storage_bytes();
-            let sizes: Vec<u32> =
-                (3..=10).map(|i| 1u32 << (i + 10)).collect(); // 8 KB … 1 MB
-            let results = par_map(sizes.clone(), threads, |sz| {
-                sweep_point(SubsystemConfig::spm_only(2, sz))
-            });
+            let sizes: Vec<u32> = (3..=10).map(|i| 1u32 << (i + 10)).collect(); // 8 KB … 1 MB
+            let mut systems = vec![cgra_4x4("small-cache", small, ExecMode::Normal)];
+            systems.extend(sizes.iter().map(|&sz| {
+                cgra_4x4(format!("spm-only-{sz}B"), SubsystemConfig::spm_only(2, sz), ExecMode::Normal)
+            }));
+            let (_, cycles) = cora_sweep(eng, "fig12f", systems);
+            let cache_cycles = cycles[0];
             s.push_str(&format!(
                 "Cache+SPM (2KB L1 + 1KB SPM, no L2): {} cycles, {} B storage\n",
                 cache_cycles, cache_storage
             ));
             let mut matched = None;
-            for (sz, cyc) in sizes.iter().zip(results.iter()) {
+            for (sz, cyc) in sizes.iter().zip(cycles[1..].iter()) {
                 s.push_str(&format!("SPM-only {:>8} B: {:>12} cycles\n", sz, cyc));
                 if matched.is_none() && *cyc <= cache_cycles {
                     matched = Some(*sz);
@@ -294,18 +308,18 @@ fn render_series<T: std::fmt::Display>(s: &mut String, label: &str, pts: &[T], c
 }
 
 /// Fig 13: runahead speedup per kernel. Paper: avg 3.04×, max 6.91×.
-pub fn fig13(threads: usize) -> String {
-    let idx: Vec<usize> = (0..paper_suite().len()).collect();
-    let rows = par_map(idx, threads, |i| {
-        let suite = paper_suite();
-        let n = measure(suite[i].as_ref(), System::CacheSpm);
-        let r = measure(suite[i].as_ref(), System::Runahead);
-        (suite[i].name(), n.cycles as f64 / r.cycles as f64)
-    });
+pub fn fig13(eng: &Engine) -> String {
+    let report = eng.run(&ExperimentSpec::campaign(
+        "fig13",
+        [SystemSpec::cache_spm(), SystemSpec::runahead()],
+    ));
     let mut s = String::from("Fig 13 — runahead speedup over Cache+SPM\n");
-    let sp: Vec<f64> = rows.iter().map(|(_, x)| *x).collect();
-    for (name, x) in &rows {
-        s.push_str(&format!("{:<22} {:>5.2}x |{}|\n", name, x, stats::bar(*x, 7.0, 35)));
+    let mut sp = Vec::new();
+    for name in &report.workloads {
+        let x = report.cycles_of(name, "Cache+SPM").unwrap() as f64
+            / report.cycles_of(name, "Runahead").unwrap() as f64;
+        sp.push(x);
+        s.push_str(&format!("{:<22} {:>5.2}x |{}|\n", name, x, stats::bar(x, 7.0, 35)));
     }
     s.push_str(&format!(
         "average = {:.2}x (paper: 3.04x)   max = {:.2}x (paper: 6.91x)\n",
@@ -316,25 +330,19 @@ pub fn fig13(threads: usize) -> String {
 }
 
 /// Fig 14: runahead speedup vs MSHR size. Paper: saturates around 16.
-pub fn fig14(threads: usize) -> String {
-    let kernels = ["aggregate/cora", "grad", "rgb", "src2dest"];
+pub fn fig14(eng: &Engine) -> String {
+    let kernels = [CORA, "grad", "rgb", "src2dest"];
     let mshrs: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
-    let mut jobs = Vec::new();
-    for k in &kernels {
-        for &m in &mshrs {
-            jobs.push((k.to_string(), m));
+    let mut systems = Vec::new();
+    for &m in &mshrs {
+        for (mode, tag) in [(ExecMode::Normal, "normal"), (ExecMode::Runahead, "ra")] {
+            let mut c = SubsystemConfig::paper_base();
+            c.mshr_entries = m;
+            c.store_buffer_entries = m.max(4);
+            systems.push(cgra_4x4(format!("M{m}/{tag}"), c, mode));
         }
     }
-    let results = par_map(jobs, threads, |(k, m)| {
-        let suite = paper_suite();
-        let wl = suite.iter().find(|w| w.name() == k).unwrap();
-        let mut cfg = SubsystemConfig::paper_base();
-        cfg.mshr_entries = m;
-        cfg.store_buffer_entries = m.max(4);
-        let n = run_workload(wl.as_ref(), cfg, CgraConfig::hycube_4x4(ExecMode::Normal));
-        let r = run_workload(wl.as_ref(), cfg, CgraConfig::hycube_4x4(ExecMode::Runahead));
-        (k, m, n.result.cycles as f64 / r.result.cycles as f64)
-    });
+    let report = eng.run(&ExperimentSpec::new("fig14").workloads(kernels).systems(systems));
     let mut s = String::from("Fig 14 — runahead speedup vs MSHR entries\n");
     s.push_str(&format!("{:<22}", "kernel"));
     for m in &mshrs {
@@ -344,8 +352,9 @@ pub fn fig14(threads: usize) -> String {
     for k in &kernels {
         s.push_str(&format!("{:<22}", k));
         for &m in &mshrs {
-            let v = results.iter().find(|(rk, rm, _)| rk == k && *rm == m).unwrap().2;
-            s.push_str(&format!(" {:>6.2}x", v));
+            let n = report.cycles_of(k, &format!("M{m}/normal")).unwrap();
+            let r = report.cycles_of(k, &format!("M{m}/ra")).unwrap();
+            s.push_str(&format!(" {:>6.2}x", n as f64 / r as f64));
         }
         s.push('\n');
     }
@@ -355,14 +364,14 @@ pub fn fig14(threads: usize) -> String {
 
 /// Fig 15: prefetched-block classification. Paper: "Useless" ≈ 0
 /// (prefetch accuracy ≈ 100%); evictions pronounced for grad/rgb.
-pub fn fig15(threads: usize) -> String {
-    let ms = campaign(&[System::Runahead], threads);
+pub fn fig15(eng: &Engine) -> String {
+    let report = eng.run(&ExperimentSpec::campaign("fig15", [SystemSpec::runahead()]));
     let mut s = String::from("Fig 15 — prefetched cache blocks: Used / Evicted / Useless\n");
     s.push_str(&format!(
         "{:<22} {:>9} {:>9} {:>9} {:>10}\n",
         "kernel", "used", "evicted", "useless", "accuracy%"
     ));
-    for m in &ms {
+    for m in &report.measurements {
         let total = (m.prefetch_used + m.prefetch_evicted + m.prefetch_useless).max(1);
         s.push_str(&format!(
             "{:<22} {:>9} {:>9} {:>9} {:>9.1}%\n",
@@ -378,11 +387,11 @@ pub fn fig15(threads: usize) -> String {
 }
 
 /// Fig 16: runahead coverage. Paper: average 87%.
-pub fn fig16(threads: usize) -> String {
-    let ms = campaign(&[System::Runahead], threads);
+pub fn fig16(eng: &Engine) -> String {
+    let report = eng.run(&ExperimentSpec::campaign("fig16", [SystemSpec::runahead()]));
     let mut s = String::from("Fig 16 — runahead coverage (share of misses addressed)\n");
     let mut cov = Vec::new();
-    for m in &ms {
+    for m in &report.measurements {
         cov.push(m.coverage * 100.0);
         s.push_str(&format!(
             "{:<22} {:>6.1}% |{}|\n",
@@ -397,18 +406,22 @@ pub fn fig16(threads: usize) -> String {
 
 /// Fig 17: cache reconfiguration gains on the 8×8 Reconfig system.
 /// Paper: real data 4.59%/3.22% (no-RA / RA), random 2.10%/1.58%.
-pub fn fig17(threads: usize) -> String {
+/// (The closed-loop protocol doesn't fit the campaign shape; it fans out
+/// over the engine's pool via [`Engine::map`].)
+pub fn fig17(eng: &Engine) -> String {
+    let names = eng.registry().paper_names();
     let mut jobs = Vec::new();
-    for i in 0..paper_suite().len() {
+    for name in &names {
         for mode in [ExecMode::Normal, ExecMode::Runahead] {
-            jobs.push((i, mode));
+            jobs.push((name.clone(), mode));
         }
     }
-    let rows = par_map(jobs, threads, |(i, mode)| {
-        let suite = paper_suite();
-        let out = reconfig_experiment(suite[i].as_ref(), mode, 4096);
+    let registry = eng.registry_arc();
+    let rows = eng.map(jobs, move |(name, mode)| {
+        let wl = registry.build(&name).expect("paper workload");
+        let out = reconfig_experiment(wl.as_ref(), mode, 4096);
         let red = 100.0 * (1.0 - out.reconf_cycles as f64 / out.base_cycles as f64);
-        (suite[i].name(), mode, red, out.output_ok, out.plan.ways.clone())
+        (name, mode, red, out.output_ok, out.plan.ways.clone())
     });
     let mut s = String::from("Fig 17 — runtime reduction from cache reconfiguration (8x8)\n");
     s.push_str(&format!("{:<22} {:>12} {:>12}  plan(ways)\n", "kernel", "no-runahead", "runahead"));
@@ -416,8 +429,8 @@ pub fn fig17(threads: usize) -> String {
     let mut real_r = Vec::new();
     let mut rand_n = Vec::new();
     let mut rand_r = Vec::new();
-    for name in paper_suite().iter().map(|w| w.name()) {
-        let get = |mode: ExecMode| rows.iter().find(|(n, m, ..)| *n == name && *m == mode).unwrap();
+    for name in &names {
+        let get = |mode: ExecMode| rows.iter().find(|(n, m, ..)| n == name && *m == mode).unwrap();
         let (_, _, rn, okn, ways) = get(ExecMode::Normal);
         let (_, _, rr, okr, _) = get(ExecMode::Runahead);
         assert!(okn & okr, "reconfigured output must stay correct");
@@ -482,6 +495,77 @@ pub fn fig18() -> String {
     s
 }
 
+/// Motivation study (Fig 3a ⑤⑥): one shared L1 for all memory PEs vs the
+/// multi-cache virtual-SPM design at equal total capacity.
+pub fn motivation(eng: &Engine) -> String {
+    // Multi-cache: 2 x 4 KB private L1s (Table 3 base).
+    let multi = cgra_4x4("multi-cache", SubsystemConfig::paper_base(), ExecMode::Normal);
+    // Shared: one 8 KB L1 serving both crossbars (equal storage).
+    let mut shared_cfg = SubsystemConfig::paper_base();
+    shared_cfg.shared_l1 = true;
+    shared_cfg.l1 = CacheConfig::from_size(8192, 8, 64);
+    let shared = cgra_4x4("shared-L1", shared_cfg, ExecMode::Normal);
+    let report = eng.run(&ExperimentSpec::campaign("motivation", [multi, shared]));
+    let mut s =
+        String::from("Motivation (Fig 3a) — shared single L1 vs multi-cache at equal capacity\n");
+    let mut ratios = Vec::new();
+    for name in &report.workloads {
+        let m = report.get(name, "multi-cache").unwrap();
+        let sh = report.get(name, "shared-L1").unwrap();
+        assert!(m.output_ok && sh.output_ok);
+        let r = sh.cycles as f64 / m.cycles as f64;
+        ratios.push(r);
+        s.push_str(&format!("{:<22} shared/multi cycle ratio = {:>5.2}x\n", name, r));
+    }
+    s.push_str(&format!(
+        "geomean = {:.2}x at equal capacity+associativity. With port-partitioned data,\n\
+         capacity interference is nearly neutral; the paper's contention argument\n\
+         (§3.3) is primarily about per-cycle request arbitration, which the private\n\
+         per-crossbar L1s remove by construction in our mapper's schedules.\n",
+        stats::geomean(&ratios)
+    ));
+    s
+}
+
+/// §3.2.1 ablation: switch off each runahead design choice in turn and
+/// measure the speedup that remains (DESIGN.md calls these out as the
+/// paper's named design aspects).
+pub fn ablation(eng: &Engine) -> String {
+    use crate::sim::RunaheadAblation;
+    let kernels = [CORA, "grad", "radix_update", "rgb"];
+    let variants: Vec<(&str, RunaheadAblation)> = vec![
+        ("full runahead", RunaheadAblation::default()),
+        ("no temp store", RunaheadAblation { temp_store: false, ..Default::default() }),
+        ("no write->read conv", RunaheadAblation { convert_writes: false, ..Default::default() }),
+        ("no dummy tracking", RunaheadAblation { dummy_tracking: false, ..Default::default() }),
+    ];
+    let mut systems = vec![cgra_4x4("no-runahead", SubsystemConfig::paper_base(), ExecMode::Normal)];
+    for (name, abl) in &variants {
+        let mut cfg = CgraConfig::hycube_4x4(ExecMode::Runahead);
+        cfg.ablation = *abl;
+        systems.push(SystemSpec::cgra(*name, SubsystemConfig::paper_base(), cfg));
+    }
+    let report = eng.run(&ExperimentSpec::new("ablation").workloads(kernels).systems(systems));
+    let mut s = String::from("Ablation (§3.2.1) — runahead speedup with each mechanism disabled\n");
+    s.push_str(&format!("{:<22}", "kernel"));
+    for (name, _) in &variants {
+        s.push_str(&format!(" {:>20}", name));
+    }
+    s.push('\n');
+    for k in &kernels {
+        let normal = report.cycles_of(k, "no-runahead").unwrap();
+        s.push_str(&format!("{:<22}", k));
+        for (vname, _) in &variants {
+            let m = report.get(k, vname).unwrap();
+            assert!(m.output_ok, "{k} variant {vname:?} diverged");
+            s.push_str(&format!(" {:>19.2}x", normal as f64 / m.cycles as f64));
+        }
+        s.push('\n');
+    }
+    s.push_str("(correctness is preserved in every variant — ablations only change prefetch quality)\n");
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -504,91 +588,4 @@ mod tests {
             .unwrap();
         assert!(pct < 5.0, "SPM-only utilization should collapse: {pct}%");
     }
-}
-
-/// Motivation study (Fig 3a ⑤⑥): one shared L1 for all memory PEs vs the
-/// multi-cache virtual-SPM design at equal total capacity.
-pub fn motivation(threads: usize) -> String {
-    let idx: Vec<usize> = (0..paper_suite().len()).collect();
-    let rows = par_map(idx, threads, |i| {
-        let suite = paper_suite();
-        let wl = &suite[i];
-        // Multi-cache: 2 x 4 KB private L1s (Table 3 base).
-        let multi = run_workload(
-            wl.as_ref(),
-            SubsystemConfig::paper_base(),
-            CgraConfig::hycube_4x4(ExecMode::Normal),
-        );
-        // Shared: one 8 KB L1 serving both crossbars (equal storage).
-        let mut shared_cfg = SubsystemConfig::paper_base();
-        shared_cfg.shared_l1 = true;
-        shared_cfg.l1 = CacheConfig::from_size(8192, 8, 64);
-        let shared = run_workload(wl.as_ref(), shared_cfg, CgraConfig::hycube_4x4(ExecMode::Normal));
-        assert!(multi.output_ok && shared.output_ok);
-        (wl.name(), shared.result.cycles as f64 / multi.result.cycles as f64)
-    });
-    let mut s = String::from(
-        "Motivation (Fig 3a) — shared single L1 vs multi-cache at equal capacity\n",
-    );
-    let mut ratios = Vec::new();
-    for (name, r) in &rows {
-        ratios.push(*r);
-        s.push_str(&format!("{:<22} shared/multi cycle ratio = {:>5.2}x\n", name, r));
-    }
-    s.push_str(&format!(
-        "geomean = {:.2}x at equal capacity+associativity. With port-partitioned data,\n\
-         capacity interference is nearly neutral; the paper's contention argument\n\
-         (§3.3) is primarily about per-cycle request arbitration, which the private\n\
-         per-crossbar L1s remove by construction in our mapper's schedules.\n",
-        stats::geomean(&ratios)
-    ));
-    s
-}
-
-/// §3.2.1 ablation: switch off each runahead design choice in turn and
-/// measure the speedup that remains (DESIGN.md calls these out as the
-/// paper's named design aspects).
-pub fn ablation(threads: usize) -> String {
-    use crate::sim::array::RunaheadAblation;
-    let kernels = ["aggregate/cora", "grad", "radix_update", "rgb"];
-    let variants: Vec<(&str, RunaheadAblation)> = vec![
-        ("full runahead", RunaheadAblation::default()),
-        ("no temp store", RunaheadAblation { temp_store: false, ..Default::default() }),
-        ("no write->read conv", RunaheadAblation { convert_writes: false, ..Default::default() }),
-        ("no dummy tracking", RunaheadAblation { dummy_tracking: false, ..Default::default() }),
-    ];
-    let mut jobs = Vec::new();
-    for k in &kernels {
-        for (vi, _) in variants.iter().enumerate() {
-            jobs.push((k.to_string(), vi));
-        }
-    }
-    let variants2 = variants.clone();
-    let rows = par_map(jobs, threads, move |(k, vi)| {
-        let suite = paper_suite();
-        let wl = suite.iter().find(|w| w.name() == k).unwrap();
-        let normal =
-            run_workload(wl.as_ref(), SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(ExecMode::Normal));
-        let mut cfg = CgraConfig::hycube_4x4(ExecMode::Runahead);
-        cfg.ablation = variants2[vi].1;
-        let ra = run_workload(wl.as_ref(), SubsystemConfig::paper_base(), cfg);
-        assert!(ra.output_ok, "{k} variant {vi} diverged");
-        (k, vi, normal.result.cycles as f64 / ra.result.cycles as f64)
-    });
-    let mut s = String::from("Ablation (§3.2.1) — runahead speedup with each mechanism disabled\n");
-    s.push_str(&format!("{:<22}", "kernel"));
-    for (name, _) in &variants {
-        s.push_str(&format!(" {:>20}", name));
-    }
-    s.push('\n');
-    for k in &kernels {
-        s.push_str(&format!("{:<22}", k));
-        for (vi, _) in variants.iter().enumerate() {
-            let v = rows.iter().find(|(rk, rvi, _)| rk == k && *rvi == vi).unwrap().2;
-            s.push_str(&format!(" {:>19.2}x", v));
-        }
-        s.push('\n');
-    }
-    s.push_str("(correctness is preserved in every variant — ablations only change prefetch quality)\n");
-    s
 }

@@ -1,6 +1,7 @@
 //! Figure/table harness: regenerates every table and figure of the
 //! paper's evaluation (§4) as aligned text (plus CSV lines) — the mapping
 //! from figure id to modules is the per-experiment index in DESIGN.md.
+//! Figures run on a caller-supplied [`crate::exp::Engine`].
 
 pub mod figures;
 pub mod tables;
@@ -14,4 +15,13 @@ pub fn save(id: &str, text: &str) -> std::io::Result<()> {
     let dir = std::path::Path::new("artifacts/figures");
     std::fs::create_dir_all(dir)?;
     std::fs::write(dir.join(format!("{id}.txt")), text)
+}
+
+/// Write a machine-readable report to `artifacts/reports/<name>.json`.
+pub fn save_report(report: &crate::exp::Report) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("artifacts/reports");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{}.json", report.experiment.replace('/', "_")));
+    std::fs::write(&path, report.to_json().render_pretty())?;
+    Ok(path)
 }

@@ -3,13 +3,24 @@
 //! Python never runs on this path — the rust binary is self-contained once
 //! `make artifacts` has been built.
 //!
+//! Compiled only with the off-by-default `pjrt` cargo feature: the `xla`
+//! crate is not in the offline vendored set, so the default build (and
+//! tier-1 CI) never touches this module. Errors are plain `String`s to
+//! avoid dragging `anyhow` in as a second feature-gated dependency.
+//!
 //! The runtime serves as the *golden model* for the cycle-accurate
 //! simulator: `examples/gcn_pipeline.rs` runs the same GCN aggregation
 //! through (a) the simulated CGRA and (b) the XLA executable, and checks
 //! the numerics agree.
 
-use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
+
+/// Stringly-typed runtime error (no anyhow in the vendored crate set).
+pub type Result<T> = std::result::Result<T, String>;
+
+fn ctx<T, E: std::fmt::Display>(r: std::result::Result<T, E>, what: impl Fn() -> String) -> Result<T> {
+    r.map_err(|e| format!("{}: {e}", what()))
+}
 
 /// A compiled XLA executable plus its client.
 pub struct Artifact {
@@ -26,7 +37,7 @@ pub struct Runtime {
 impl Runtime {
     /// Connect to the PJRT CPU backend.
     pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = ctx(xla::PjRtClient::cpu(), || "creating PJRT CPU client".to_string())?;
         Ok(Runtime { client, dir: artifact_dir.as_ref().to_path_buf() })
     }
 
@@ -37,10 +48,9 @@ impl Runtime {
     /// Load `<dir>/<name>.hlo.txt`, parse as HLO text and compile.
     pub fn load(&self, name: &str) -> Result<Artifact> {
         let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing {path:?}"))?;
+        let proto = ctx(xla::HloModuleProto::from_text_file(&path), || format!("parsing {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let exe = ctx(self.client.compile(&comp), || format!("compiling {name}"))?;
         Ok(Artifact { name: name.to_string(), exe })
     }
 }
@@ -49,8 +59,12 @@ impl Artifact {
     /// Execute with literal inputs; returns the elements of the output
     /// tuple (aot.py lowers with `return_tuple=True`).
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let mut result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        Ok(result.decompose_tuple()?)
+        let bufs = ctx(self.exe.execute::<xla::Literal>(inputs), || {
+            format!("executing {}", self.name)
+        })?;
+        let mut result =
+            ctx(bufs[0][0].to_literal_sync(), || format!("fetching {} output", self.name))?;
+        ctx(result.decompose_tuple(), || format!("decomposing {} output tuple", self.name))
     }
 }
 
@@ -62,7 +76,9 @@ pub fn lit_f32(v: &[f32]) -> xla::Literal {
     xla::Literal::vec1(v)
 }
 pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+    ctx(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64]), || {
+        format!("reshaping to {rows}x{cols}")
+    })
 }
 
 #[cfg(test)]

@@ -306,6 +306,69 @@ mod tests {
     }
 
     #[test]
+    fn spm_greedy_partial_fit_spills_tail_not_head() {
+        // SPM-only allocator (spm_greedy): an array larger than the SPM
+        // window gets a *partial* fit — head resident at the window start,
+        // tail spilling past it (served off-SPM) — and exhausts the window.
+        let mut l = Layout::new_spm_only(1, 512);
+        let big = l.alloc(ArraySpec {
+            name: "big",
+            port: 0,
+            words: 256, // 1024 B > 512 B window, < CACHED_OFFSET
+            placement: Placement::Cached,
+            irregular: true,
+        });
+        // Head lands at the start of the SPM window...
+        assert_eq!(big, 0);
+        // ...and the tail stays below the cached region (true spill zone).
+        assert!(big + 256 * 4 <= CACHED_OFFSET);
+        // The window is exhausted: the next SPM-hungry array goes cached.
+        let next = l.alloc(ArraySpec {
+            name: "next",
+            port: 0,
+            words: 16,
+            placement: Placement::Cached,
+            irregular: false,
+        });
+        assert_eq!(next, CACHED_OFFSET);
+        // Streamed arrays never take the window in greedy mode (DMA keeps
+        // them resident instead).
+        let streamed = l.alloc(ArraySpec {
+            name: "s",
+            port: 0,
+            words: 4,
+            placement: Placement::Streamed,
+            irregular: false,
+        });
+        assert!(streamed >= CACHED_OFFSET);
+    }
+
+    #[test]
+    fn spm_greedy_oversized_array_goes_cached_not_partial() {
+        // An array whose tail would collide with the cached region cannot
+        // take the partial-fit path.
+        let mut l = Layout::new_spm_only(1, 512);
+        let huge_words = (CACHED_OFFSET / 4) as u32; // bytes == CACHED_OFFSET
+        let huge = l.alloc(ArraySpec {
+            name: "huge",
+            port: 0,
+            words: huge_words,
+            placement: Placement::Cached,
+            irregular: true,
+        });
+        assert_eq!(huge, CACHED_OFFSET);
+        // The window stays free for a later small array.
+        let small = l.alloc(ArraySpec {
+            name: "small",
+            port: 0,
+            words: 8,
+            placement: Placement::SpmPreferred,
+            irregular: false,
+        });
+        assert_eq!(small, 0);
+    }
+
+    #[test]
     fn base_of_finds_arrays() {
         let mut l = Layout::new(1, 512);
         l.alloc(ArraySpec {

@@ -113,3 +113,55 @@ fn degenerate_cache_geometry_still_correct() {
         assert!(run.output_ok, "{}", wl.name());
     }
 }
+
+/// Acceptance: the fig11a five-system campaign reproduces through the new
+/// Engine/ExperimentSpec API with the paper's system ordering
+/// SPM-starved < Cache+SPM < Runahead (execution time, lower is faster).
+/// Restricted to the tiny graph so the test stays fast; the full-size
+/// campaign is `repro figure fig11a`. The tiny graph fits the 133 KB SPM
+/// entirely, so the SPM-only slot is swapped for a capacity-starved SPM,
+/// as in Fig 2.
+#[test]
+fn engine_reproduces_fig11a_system_ordering() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, SystemSpec};
+    let starved = SystemSpec::spm_starved(4096);
+    let starved_name = starved.name.clone();
+    let spec = ExperimentSpec::fig11a()
+        .workloads(["aggregate/tiny"])
+        .replace_system("SPM-only", starved);
+    let engine = Engine::new(2);
+    let report = engine.run(&spec);
+    assert_eq!(report.measurements.len(), 5);
+    assert!(report.measurements.iter().all(|m| m.output_ok));
+    let t = |sys: &str| report.time_of("aggregate/tiny", sys).unwrap();
+    assert!(t(&starved_name) > t("Cache+SPM"), "SPM-starved must be slowest CGRA");
+    assert!(t("Cache+SPM") > t("Runahead"), "runahead must win");
+    // Same engine pool serves a follow-up spec (persistent workers).
+    let again = engine.run(&ExperimentSpec::new("again")
+        .workload("aggregate/tiny")
+        .system(SystemSpec::runahead()));
+    assert_eq!(again.cycles_of("aggregate/tiny", "Runahead"),
+               report.cycles_of("aggregate/tiny", "Runahead"));
+}
+
+/// A JSON sweep spec (the `repro sweep` path) round-trips end to end:
+/// parse spec → run → emit report → parse report.
+#[test]
+fn json_sweep_spec_runs_and_report_round_trips() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, Json, Report};
+    let text = r#"{
+        "name": "it-sweep",
+        "workloads": ["aggregate/tiny"],
+        "systems": [
+            {"base": "Cache+SPM"},
+            {"base": "Cache+SPM", "name": "Cache+SPM 2-way", "l1_ways": 2},
+            {"base": "Runahead", "name": "Runahead-8x8", "geometry": "8x8"}
+        ]
+    }"#;
+    let spec = ExperimentSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+    let report = Engine::new(2).run(&spec);
+    assert_eq!(report.systems, vec!["Cache+SPM", "Cache+SPM 2-way", "Runahead-8x8"]);
+    assert!(report.measurements.iter().all(|m| m.output_ok));
+    let back = Report::from_json(&Json::parse(&report.to_json().render_pretty()).unwrap()).unwrap();
+    assert_eq!(back, report);
+}
