@@ -4,13 +4,20 @@
 
 mod common;
 
-use cgra_mem::mem::SubsystemConfig;
+use cgra_mem::mem::{
+    BankedDramConfig, DramModelKind, IdealConfig, MemoryModelSpec, SubsystemConfig,
+};
 use cgra_mem::sim::{CgraConfig, ExecMode};
-use cgra_mem::workloads::{prepare, GcnAggregate, GraphSpec, Rgb, Workload};
+use cgra_mem::workloads::{prepare, prepare_model, GcnAggregate, GraphSpec, Rgb, Workload};
 
 fn run_once(wl: &dyn Workload, sys: SubsystemConfig, mode: ExecMode) -> u64 {
     let (mut mem, mut arr, _l) = prepare(wl, sys, CgraConfig::hycube_4x4(mode));
     arr.run(&mut mem, wl.iterations()).cycles
+}
+
+fn run_once_model(wl: &dyn Workload, spec: &MemoryModelSpec, mode: ExecMode) -> u64 {
+    let (mut mem, mut arr, _l) = prepare_model(wl, spec, CgraConfig::hycube_4x4(mode));
+    arr.run(&mut *mem, wl.iterations()).cycles
 }
 
 fn main() {
@@ -28,5 +35,17 @@ fn main() {
     });
     common::bench("rgb runahead", 5, || {
         run_once(&rgb, SubsystemConfig::paper_base(), ExecMode::Runahead)
+    });
+    common::bench("gcn/cora banked-dram normal", 5, || {
+        let mut c = SubsystemConfig::paper_base();
+        c.dram = DramModelKind::Banked(BankedDramConfig::paper_default());
+        run_once(&cora, c, ExecMode::Normal)
+    });
+    common::bench("gcn/cora ideal ceiling", 5, || {
+        run_once_model(
+            &cora,
+            &MemoryModelSpec::Ideal(IdealConfig::with_ports(2)),
+            ExecMode::Normal,
+        )
     });
 }

@@ -1,9 +1,12 @@
 //! The experiment layer — the single front door for every run.
 //!
 //! * [`SystemSpec`]: a system as *data* — a name plus an execution model
-//!   (CPU timing model, or CGRA memory-subsystem + array config). The five
-//!   paper systems live in [`registry::builtin_systems`]; new systems
-//!   ("Runahead-8x8", "Cache+SPM 2-way") are plain values, no enum to edit.
+//!   (CPU timing model, or CGRA memory backend + array config, where the
+//!   backend is a [`MemoryModelSpec`]: the paper hierarchy over a flat or
+//!   banked DRAM channel, or the ideal perf ceiling). The five paper
+//!   systems live in [`registry::builtin_systems`], the extra backends in
+//!   [`registry::extra_systems`]; new systems ("Runahead-8x8",
+//!   "Cache+SPM 2-way") are plain values, no enum to edit.
 //! * [`ExperimentSpec`]: a declarative (workloads × systems × repeats)
 //!   campaign, buildable in code or parsed from JSON (`repro sweep`).
 //! * [`Engine`]: a persistent worker pool executing specs into structured
@@ -26,13 +29,16 @@ pub mod registry;
 
 pub use engine::{default_parallelism, Engine};
 pub use json::Json;
-pub use registry::{builtin_systems, system_named, WorkloadRegistry};
+pub use registry::{all_systems, builtin_systems, extra_systems, system_named, WorkloadRegistry};
 
 use crate::baseline::{run_cpu, CpuModel};
-use crate::mem::{CacheConfig, SubsystemConfig};
+use crate::mem::{
+    BankedDramConfig, CacheConfig, DramModelKind, IdealConfig, MemoryModelSpec, RowPolicy,
+    SubsystemConfig,
+};
 use crate::reconfig::{apply_plan, plan_from_traces, MissRateMonitor, ReconfigPlan};
 use crate::sim::{CgraConfig, ExecMode, Geometry};
-use crate::workloads::{prepare, run_workload, validate, Workload};
+use crate::workloads::{prepare, run_workload_model, validate, Workload};
 
 /// Checked numeric field access: present-but-invalid (negative,
 /// fractional, non-numeric) is an error, absent is `None` — a bad value
@@ -52,9 +58,11 @@ fn u64_field(v: &Json, key: &str) -> Result<Option<u64>, String> {
 pub enum ExecModel {
     /// Trace-driven CPU timing model (Fig 11a baselines).
     Cpu(CpuModel),
-    /// Cycle-accurate CGRA: memory subsystem + array configuration (the
-    /// exec mode and geometry live inside [`CgraConfig`]).
-    Cgra { subsystem: SubsystemConfig, cgra: CgraConfig },
+    /// Cycle-accurate CGRA: a memory backend as data
+    /// ([`MemoryModelSpec`]: the paper hierarchy with a flat or banked
+    /// DRAM channel, or the ideal perf-ceiling model) + array
+    /// configuration (exec mode and geometry live inside [`CgraConfig`]).
+    Cgra { mem: MemoryModelSpec, cgra: CgraConfig },
 }
 
 /// A system under test, as data. Replaces the closed `System` enum.
@@ -70,8 +78,13 @@ impl SystemSpec {
     }
 
     pub fn cgra(name: impl Into<String>, subsystem: SubsystemConfig, cgra: CgraConfig) -> Self {
-        assert_eq!(subsystem.num_ports, cgra.geom.ports, "port count mismatch in {:?}", cgra.geom);
-        SystemSpec { name: name.into(), exec: ExecModel::Cgra { subsystem, cgra } }
+        Self::cgra_model(name, MemoryModelSpec::Hierarchy(subsystem), cgra)
+    }
+
+    /// A CGRA system over any memory backend described as data.
+    pub fn cgra_model(name: impl Into<String>, mem: MemoryModelSpec, cgra: CgraConfig) -> Self {
+        assert_eq!(mem.num_ports(), cgra.geom.ports, "port count mismatch in {:?}", cgra.geom);
+        SystemSpec { name: name.into(), exec: ExecModel::Cgra { mem, cgra } }
     }
 
     // ---- the five paper systems (Fig 11a) ----
@@ -109,6 +122,24 @@ impl SystemSpec {
         )
     }
 
+    /// Ideal-latency ceiling: every access hits in SPM latency — the
+    /// paper's idealistic upper bound, rendered as the "Ideal" series.
+    pub fn ideal() -> Self {
+        Self::cgra_model(
+            "Ideal",
+            MemoryModelSpec::Ideal(IdealConfig::with_ports(2)),
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+        )
+    }
+
+    /// Cache+SPM over the banked DRAM channel (row-buffer + bank-conflict
+    /// contention instead of the flat latency constant).
+    pub fn banked_dram() -> Self {
+        let mut sub = SubsystemConfig::paper_base();
+        sub.dram = DramModelKind::Banked(BankedDramConfig::paper_default());
+        Self::cgra("Banked-DRAM", sub, CgraConfig::hycube_4x4(ExecMode::Normal))
+    }
+
     /// A capacity-starved SPM-only system (Fig 2 / Fig 5 conditions).
     pub fn spm_starved(total_bytes: u32) -> Self {
         Self::cgra(
@@ -128,10 +159,21 @@ impl SystemSpec {
     /// `{"base": "Runahead", "name": "Runahead-8x8", "geometry": "8x8",
     ///   "l1_ways": 2, ...}` — `base` picks a built-in system, the other
     /// keys override the CGRA configuration (ignored for CPU bases).
+    /// `"memory"` selects the backend (`"hierarchy"` | `"ideal"`);
+    /// `"dram_model": "banked"` plus `dram_banks` / `dram_row_bytes` /
+    /// `dram_policy` selects and shapes the banked DRAM channel.
     pub fn from_json(v: &Json) -> Result<SystemSpec, String> {
-        const KNOWN: [&str; 14] = [
-            "base", "name", "mode", "geometry", "spm_bytes", "mshr", "freq_mhz", "shared_l1",
-            "l1_bytes", "l1_ways", "l1_line", "l2_bytes", "l2_ways", "l2_line",
+        const KNOWN: [&str; 20] = [
+            "base", "name", "mode", "geometry", "memory", "spm_bytes", "mshr", "freq_mhz",
+            "shared_l1", "l1_bytes", "l1_ways", "l1_line", "l2_bytes", "l2_ways", "l2_line",
+            "dram_model", "dram_banks", "dram_row_bytes", "dram_policy", "dram_latency",
+        ];
+        // Keys that configure the hierarchy backend and are meaningless
+        // (and therefore hard errors) on the ideal backend.
+        const HIERARCHY_ONLY: [&str; 14] = [
+            "spm_bytes", "mshr", "shared_l1", "l1_bytes", "l1_ways", "l1_line", "l2_bytes",
+            "l2_ways", "l2_line", "dram_model", "dram_banks", "dram_row_bytes", "dram_policy",
+            "dram_latency",
         ];
         if let Json::Obj(fields) = v {
             // A mistyped key would otherwise run the unmodified base config
@@ -154,7 +196,7 @@ impl SystemSpec {
             spec.name = name.to_string();
         }
         let exec = spec.exec.clone();
-        if let ExecModel::Cgra { mut subsystem, mut cgra } = exec {
+        if let ExecModel::Cgra { mem, mut cgra } = exec {
             if let Some(mode) = v.get("mode").and_then(Json::as_str) {
                 cgra.mode = match mode {
                     "normal" => ExecMode::Normal,
@@ -162,28 +204,83 @@ impl SystemSpec {
                     other => return Err(format!("unknown mode {other:?}")),
                 };
             }
-            if let Some(geom) = v.get("geometry").and_then(Json::as_str) {
-                match geom {
-                    "4x4" => {
-                        cgra.geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
-                        subsystem.num_ports = 2;
+            let geom_8x8 = match v.get("geometry").and_then(Json::as_str) {
+                None => None,
+                Some("4x4") => Some(false),
+                Some("8x8") => Some(true),
+                Some(other) => {
+                    return Err(format!("unknown geometry {other:?} (use 4x4 or 8x8)"))
+                }
+            };
+            if let Some(is8) = geom_8x8 {
+                cgra.geom = if is8 {
+                    Geometry { rows: 8, cols: 8, ports: 4, hop_budget: 3 }
+                } else {
+                    Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 }
+                };
+            }
+            if let Some(j) = v.get("freq_mhz") {
+                let f = j.as_f64().filter(|f| *f > 0.0).ok_or_else(|| {
+                    format!("\"freq_mhz\" must be a positive number, got {}", j.render())
+                })?;
+                cgra.freq_mhz = f;
+            }
+            // ---- memory-backend selection (strict: a bad value must
+            // never silently run the base's backend) ----
+            let mem = match v.get("memory") {
+                None => mem,
+                Some(j) => match j.as_str() {
+                    Some("hierarchy") => match mem {
+                        MemoryModelSpec::Hierarchy(_) => mem,
+                        MemoryModelSpec::Ideal(_) => {
+                            return Err(format!(
+                                "base system {base_name:?} has no hierarchy config; \
+                                 pick a hierarchy base (e.g. \"Cache+SPM\")"
+                            ))
+                        }
+                    },
+                    Some("ideal") => {
+                        MemoryModelSpec::Ideal(IdealConfig::with_ports(cgra.geom.ports))
                     }
-                    "8x8" => {
-                        cgra.geom = Geometry { rows: 8, cols: 8, ports: 4, hop_budget: 3 };
-                        // Adopt the Table 3 Reconfig column (ports, SPM,
-                        // temp store, and — for cache-ful bases — its L1/L2
-                        // geometry, so "8x8" means the paper's 8x8 system);
-                        // explicit keys below still override.
-                        let rec = SubsystemConfig::paper_reconfig();
-                        subsystem.num_ports = rec.num_ports;
-                        subsystem.spm_bytes = rec.spm_bytes;
-                        subsystem.temp_store_bytes = rec.temp_store_bytes;
-                        if subsystem.l1.ways > 0 {
-                            subsystem.l1 = rec.l1;
-                            subsystem.l2 = rec.l2;
+                    _ => {
+                        return Err(format!(
+                            "\"memory\" must be \"hierarchy\" or \"ideal\", got {}",
+                            j.render()
+                        ))
+                    }
+                },
+            };
+            let mut subsystem = match mem {
+                MemoryModelSpec::Ideal(mut ideal) => {
+                    for k in HIERARCHY_ONLY {
+                        if v.get(k).is_some() {
+                            return Err(format!(
+                                "{k:?} does not apply to the ideal memory model"
+                            ));
                         }
                     }
-                    other => return Err(format!("unknown geometry {other:?} (use 4x4 or 8x8)")),
+                    ideal.num_ports = cgra.geom.ports;
+                    spec.exec = ExecModel::Cgra { mem: MemoryModelSpec::Ideal(ideal), cgra };
+                    return Ok(spec);
+                }
+                MemoryModelSpec::Hierarchy(subsystem) => subsystem,
+            };
+            if let Some(is8) = geom_8x8 {
+                if is8 {
+                    // Adopt the Table 3 Reconfig column (ports, SPM, temp
+                    // store, and — for cache-ful bases — its L1/L2
+                    // geometry, so "8x8" means the paper's 8x8 system);
+                    // explicit keys below still override.
+                    let rec = SubsystemConfig::paper_reconfig();
+                    subsystem.num_ports = rec.num_ports;
+                    subsystem.spm_bytes = rec.spm_bytes;
+                    subsystem.temp_store_bytes = rec.temp_store_bytes;
+                    if subsystem.l1.ways > 0 {
+                        subsystem.l1 = rec.l1;
+                        subsystem.l2 = rec.l2;
+                    }
+                } else {
+                    subsystem.num_ports = 2;
                 }
             }
             if let Some(b) = u64_field(v, "spm_bytes")? {
@@ -196,11 +293,92 @@ impl SystemSpec {
                 subsystem.mshr_entries = n as usize;
                 subsystem.store_buffer_entries = (n as usize).max(4);
             }
-            if let Some(j) = v.get("freq_mhz") {
-                let f = j.as_f64().filter(|f| *f > 0.0).ok_or_else(|| {
-                    format!("\"freq_mhz\" must be a positive number, got {}", j.render())
-                })?;
-                cgra.freq_mhz = f;
+            // ---- DRAM channel selection (banked keys on a flat channel
+            // without the model switch are the flat-sweep trap again; on
+            // an already-banked base they just tune the channel) ----
+            let banked_key = ["dram_banks", "dram_row_bytes", "dram_policy"]
+                .into_iter()
+                .find(|k| v.get(k).is_some());
+            let banked = match v.get("dram_model") {
+                None => match subsystem.dram {
+                    DramModelKind::Banked(_) => banked_key.is_some(),
+                    DramModelKind::Flat => {
+                        if let Some(k) = banked_key {
+                            return Err(format!("{k:?} requires \"dram_model\": \"banked\""));
+                        }
+                        false
+                    }
+                },
+                Some(j) => match j.as_str() {
+                    Some("flat") => {
+                        if let Some(k) = banked_key {
+                            return Err(format!("{k:?} does not apply to the flat DRAM model"));
+                        }
+                        subsystem.dram = DramModelKind::Flat;
+                        false
+                    }
+                    Some("banked") => true,
+                    _ => {
+                        return Err(format!(
+                            "\"dram_model\" must be \"flat\" or \"banked\", got {}",
+                            j.render()
+                        ))
+                    }
+                },
+            };
+            if banked {
+                let mut b = match subsystem.dram {
+                    DramModelKind::Banked(b) => b,
+                    DramModelKind::Flat => BankedDramConfig::paper_default(),
+                };
+                if let Some(n) = u64_field(v, "dram_banks")? {
+                    if n == 0 || n > 1024 || !n.is_power_of_two() {
+                        return Err(format!(
+                            "\"dram_banks\" must be a power of two in 1..=1024, got {n}"
+                        ));
+                    }
+                    b.banks = n as usize;
+                }
+                if let Some(rb) = u64_field(v, "dram_row_bytes")? {
+                    // Upper bound keeps the later u32 cast lossless (a 2^32
+                    // row would truncate to 0 and panic in BankedDram::new,
+                    // past the spec-error path).
+                    if rb < 64 || rb > (1 << 20) || !rb.is_power_of_two() {
+                        return Err(format!(
+                            "\"dram_row_bytes\" must be a power of two in 64..=1048576, got {rb}"
+                        ));
+                    }
+                    b.row_bytes = rb as u32;
+                }
+                if let Some(j) = v.get("dram_policy") {
+                    b.policy = match j.as_str() {
+                        Some("open") => RowPolicy::Open,
+                        Some("closed") => RowPolicy::Closed,
+                        _ => {
+                            return Err(format!(
+                                "\"dram_policy\" must be \"open\" or \"closed\", got {}",
+                                j.render()
+                            ))
+                        }
+                    };
+                }
+                subsystem.dram = DramModelKind::Banked(b);
+            }
+            if let Some(l) = u64_field(v, "dram_latency")? {
+                if l == 0 {
+                    return Err("\"dram_latency\" must be at least 1".into());
+                }
+                // The banked channel times accesses from t_rp/t_rcd/t_cas;
+                // silently accepting the flat constant there would be the
+                // same no-op trap the banked keys are guarded against.
+                if matches!(subsystem.dram, DramModelKind::Banked(_)) {
+                    return Err(
+                        "\"dram_latency\" applies to the flat DRAM model only; \
+                         the banked channel is timed by its row parameters"
+                            .into(),
+                    );
+                }
+                subsystem.dram_latency = l;
             }
             let cache_override = |cur: CacheConfig, pfx: &str, v: &Json| -> Result<CacheConfig, String> {
                 let bytes = u64_field(v, &format!("{pfx}_bytes"))?
@@ -250,7 +428,7 @@ impl SystemSpec {
             if let Some(b) = v.get("shared_l1").and_then(Json::as_bool) {
                 subsystem.shared_l1 = b;
             }
-            spec.exec = ExecModel::Cgra { subsystem, cgra };
+            spec.exec = ExecModel::Cgra { mem: MemoryModelSpec::Hierarchy(subsystem), cgra };
         }
         Ok(spec)
     }
@@ -272,6 +450,8 @@ pub struct Measurement {
     pub l1_hits: u64,
     pub l2_accesses: u64,
     pub dram_accesses: u64,
+    pub dram_row_hits: u64,
+    pub dram_row_conflicts: u64,
     pub prefetch_used: u64,
     pub prefetch_evicted: u64,
     pub prefetch_useless: u64,
@@ -296,6 +476,8 @@ impl Measurement {
             ("l1_hits", Json::u64(self.l1_hits)),
             ("l2_accesses", Json::u64(self.l2_accesses)),
             ("dram_accesses", Json::u64(self.dram_accesses)),
+            ("dram_row_hits", Json::u64(self.dram_row_hits)),
+            ("dram_row_conflicts", Json::u64(self.dram_row_conflicts)),
             ("prefetch_used", Json::u64(self.prefetch_used)),
             ("prefetch_evicted", Json::u64(self.prefetch_evicted)),
             ("prefetch_useless", Json::u64(self.prefetch_useless)),
@@ -325,6 +507,8 @@ impl Measurement {
             l1_hits: u("l1_hits"),
             l2_accesses: u("l2_accesses"),
             dram_accesses: u("dram_accesses"),
+            dram_row_hits: u("dram_row_hits"),
+            dram_row_conflicts: u("dram_row_conflicts"),
             prefetch_used: u("prefetch_used"),
             prefetch_evicted: u("prefetch_evicted"),
             prefetch_useless: u("prefetch_useless"),
@@ -335,8 +519,7 @@ impl Measurement {
     }
 }
 
-/// Execute one workload on one system described as data — the generalized
-/// `coordinator::measure`.
+/// Execute one workload on one system described as data.
 pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
     match &spec.exec {
         ExecModel::Cpu(model) => {
@@ -355,6 +538,8 @@ pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
                 l1_hits: r.l1_hits,
                 l2_accesses: 0,
                 dram_accesses: r.dram_accesses,
+                dram_row_hits: 0,
+                dram_row_conflicts: 0,
                 prefetch_used: 0,
                 prefetch_evicted: 0,
                 prefetch_useless: 0,
@@ -363,8 +548,8 @@ pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
                 runahead_entries: 0,
             }
         }
-        ExecModel::Cgra { subsystem, cgra } => {
-            let run = run_workload(wl, *subsystem, *cgra);
+        ExecModel::Cgra { mem, cgra } => {
+            let run = run_workload_model(wl, mem, *cgra);
             let r = &run.result;
             Measurement {
                 workload: wl.name(),
@@ -380,6 +565,8 @@ pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
                 l1_hits: r.mem.l1_hits,
                 l2_accesses: r.mem.l2_accesses,
                 dram_accesses: r.mem.dram_accesses,
+                dram_row_hits: r.mem.dram_row_hits,
+                dram_row_conflicts: r.mem.dram_row_conflicts,
                 prefetch_used: r.mem.prefetch_used,
                 prefetch_evicted: r.mem.prefetch_evicted_then_demanded,
                 prefetch_useless: r.mem.prefetch_useless,
@@ -460,9 +647,13 @@ impl ExperimentSpec {
 
     // ---- presets behind the paper's figures ----
 
-    /// Fig 11a: full suite × the five systems.
+    /// Fig 11a: full suite × the five systems, plus the ideal-memory
+    /// perf-ceiling series.
     pub fn fig11a() -> Self {
-        Self::new("fig11a").paper_workloads().systems(builtin_systems())
+        Self::new("fig11a")
+            .paper_workloads()
+            .systems(builtin_systems())
+            .system(SystemSpec::ideal())
     }
 
     /// Fig 11b: full suite × the three CGRA systems.
@@ -658,7 +849,7 @@ pub fn reconfig_experiment(wl: &dyn Workload, mode: ExecMode, sample_window: usi
     let (mut mem2, mut arr2, layout2) = prepare(wl, sys, cgra);
     let migrated = apply_plan(&mut mem2, &plan);
     let reconf = arr2.run(&mut mem2, wl.iterations());
-    let output_ok = validate(wl, &layout2, &mem2);
+    let output_ok = validate(wl, &layout2, &mem2.backing);
     ReconfigOutcome {
         base_cycles: base.cycles,
         // Way migration costs one flush per moved way (§4.5: reuses the
@@ -689,6 +880,8 @@ mod tests {
             l1_hits: 15,
             l2_accesses: 5,
             dram_accesses: 2,
+            dram_row_hits: 1,
+            dram_row_conflicts: 1,
             prefetch_used: 1,
             prefetch_evicted: 0,
             prefetch_useless: 0,
@@ -740,17 +933,106 @@ mod tests {
         assert_eq!(spec.workloads, vec!["aggregate/tiny"]);
         assert_eq!(spec.systems.len(), 2);
         match &spec.systems[0].exec {
-            ExecModel::Cgra { subsystem, .. } => assert_eq!(subsystem.l1.ways, 2),
-            _ => panic!("expected CGRA"),
+            ExecModel::Cgra { mem: MemoryModelSpec::Hierarchy(subsystem), .. } => {
+                assert_eq!(subsystem.l1.ways, 2)
+            }
+            _ => panic!("expected hierarchy CGRA"),
         }
         match &spec.systems[1].exec {
-            ExecModel::Cgra { subsystem, cgra } => {
+            ExecModel::Cgra { mem: MemoryModelSpec::Hierarchy(subsystem), cgra } => {
                 assert_eq!(cgra.geom.rows, 8);
                 assert_eq!(subsystem.num_ports, 4);
                 assert!(matches!(cgra.mode, ExecMode::Runahead));
             }
-            _ => panic!("expected CGRA"),
+            _ => panic!("expected hierarchy CGRA"),
         }
+    }
+
+    #[test]
+    fn spec_selects_ideal_backend_and_rejects_cache_keys_on_it() {
+        let sys = Json::parse(r#"{"base": "Cache+SPM", "memory": "ideal", "geometry": "8x8"}"#)
+            .unwrap();
+        let spec = SystemSpec::from_json(&sys).unwrap();
+        match &spec.exec {
+            ExecModel::Cgra { mem: MemoryModelSpec::Ideal(c), cgra } => {
+                assert_eq!(c.num_ports, 4);
+                assert_eq!(cgra.geom.rows, 8);
+            }
+            other => panic!("expected ideal backend, got {other:?}"),
+        }
+        // The named base works too.
+        assert!(SystemSpec::from_json(&Json::parse(r#"{"base": "Ideal"}"#).unwrap()).is_ok());
+        // Cache/DRAM keys on the ideal backend are hard errors.
+        let bad = Json::parse(r#"{"base": "Ideal", "l1_ways": 2}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("ideal"));
+        let bad = Json::parse(r#"{"base": "Cache+SPM", "memory": "ideal", "mshr": 4}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("ideal"));
+        // An unknown backend name is a hard error, not a silent fallback.
+        let bad = Json::parse(r#"{"base": "Cache+SPM", "memory": "warp"}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("memory"));
+    }
+
+    #[test]
+    fn spec_selects_banked_dram_with_strict_params() {
+        let sys = Json::parse(
+            r#"{"base": "Runahead", "dram_model": "banked", "dram_banks": 4,
+                "dram_row_bytes": 1024, "dram_policy": "closed"}"#,
+        )
+        .unwrap();
+        let spec = SystemSpec::from_json(&sys).unwrap();
+        match &spec.exec {
+            ExecModel::Cgra { mem: MemoryModelSpec::Hierarchy(sub), cgra } => {
+                assert!(matches!(cgra.mode, ExecMode::Runahead));
+                match sub.dram {
+                    DramModelKind::Banked(b) => {
+                        assert_eq!(b.banks, 4);
+                        assert_eq!(b.row_bytes, 1024);
+                        assert_eq!(b.policy, RowPolicy::Closed);
+                    }
+                    DramModelKind::Flat => panic!("expected banked channel"),
+                }
+            }
+            other => panic!("expected hierarchy CGRA, got {other:?}"),
+        }
+        // The named base resolves, already carries the banked channel, and
+        // its banked params are tunable without restating dram_model.
+        let named = SystemSpec::from_json(
+            &Json::parse(r#"{"base": "Banked-DRAM", "dram_banks": 16}"#).unwrap(),
+        )
+        .unwrap();
+        match &named.exec {
+            ExecModel::Cgra { mem: MemoryModelSpec::Hierarchy(sub), .. } => match sub.dram {
+                DramModelKind::Banked(b) => assert_eq!(b.banks, 16),
+                DramModelKind::Flat => panic!("expected banked channel"),
+            },
+            other => panic!("{other:?}"),
+        }
+        // Banked params without the model switch: the flat-sweep trap.
+        let bad = Json::parse(r#"{"base": "Cache+SPM", "dram_banks": 8}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("dram_model"));
+        let bad =
+            Json::parse(r#"{"base": "Cache+SPM", "dram_model": "flat", "dram_policy": "open"}"#)
+                .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("flat"));
+        // Invalid parameter values are hard errors.
+        let bad =
+            Json::parse(r#"{"base": "Cache+SPM", "dram_model": "banked", "dram_banks": 3}"#)
+                .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("power of two"));
+        let bad = Json::parse(
+            r#"{"base": "Cache+SPM", "dram_model": "banked", "dram_policy": "lru"}"#,
+        )
+        .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("dram_policy"));
+        // A 2^32 row would truncate to zero in the u32 config — range error.
+        let bad = Json::parse(
+            r#"{"base": "Cache+SPM", "dram_model": "banked", "dram_row_bytes": 4294967296}"#,
+        )
+        .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("dram_row_bytes"));
+        // The flat constant is meaningless on the banked channel.
+        let bad = Json::parse(r#"{"base": "Banked-DRAM", "dram_latency": 40}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("flat DRAM model only"));
     }
 
     #[test]

@@ -3,9 +3,10 @@
 //! The workload registry replaces `paper_suite()` indexing as the way
 //! experiments refer to kernels — specs carry names, the engine builds
 //! instances on demand inside worker threads. The system list replaces the
-//! closed `coordinator::System` enum: the five paper systems are plain
-//! [`SystemSpec`] values, and callers can register or construct new ones
-//! ("Runahead-8x8", "Cache+SPM 2-way") without touching this module.
+//! old closed five-system enum: the paper systems (and the extra memory
+//! backends) are plain [`SystemSpec`] values, and callers can register or
+//! construct new ones ("Runahead-8x8", "Cache+SPM 2-way") without
+//! touching this module.
 
 use super::SystemSpec;
 use crate::workloads::{
@@ -119,9 +120,22 @@ pub fn builtin_systems() -> Vec<SystemSpec> {
     ]
 }
 
-/// Case-insensitive lookup among the built-in systems.
+/// Additional named memory backends beyond the five paper systems: the
+/// ideal-latency perf ceiling and the banked-DRAM contention channel.
+pub fn extra_systems() -> Vec<SystemSpec> {
+    vec![SystemSpec::ideal(), SystemSpec::banked_dram()]
+}
+
+/// Every system addressable by name (sweep-spec `base`, `repro run`).
+pub fn all_systems() -> Vec<SystemSpec> {
+    let mut v = builtin_systems();
+    v.extend(extra_systems());
+    v
+}
+
+/// Case-insensitive lookup among all named systems.
 pub fn system_named(name: &str) -> Option<SystemSpec> {
-    builtin_systems().into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
+    all_systems().into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
 }
 
 #[cfg(test)]
@@ -159,5 +173,15 @@ mod tests {
             assert!(system_named(n).is_some(), "{n}");
         }
         assert!(system_named("warp-drive").is_none());
+    }
+
+    #[test]
+    fn extra_backends_resolve_by_name() {
+        for n in ["Ideal", "ideal", "Banked-DRAM", "banked-dram"] {
+            assert!(system_named(n).is_some(), "{n}");
+        }
+        // The paper's five-system list stays exactly the paper's list.
+        assert!(builtin_systems().iter().all(|s| s.name != "Ideal"));
+        assert_eq!(all_systems().len(), 7);
     }
 }

@@ -10,16 +10,16 @@
 //! executes the JAX/Pallas AOT golden models from rust.
 //!
 //! Every experiment runs through the [`exp`] layer: systems are data
-//! ([`exp::SystemSpec`]), campaigns are declarative ([`exp::ExperimentSpec`]),
-//! and the persistent-pool [`exp::Engine`] produces JSON-serializable
-//! [`exp::Report`]s. [`coordinator`] remains as thin compat shims.
+//! ([`exp::SystemSpec`] over a pluggable [`mem::MemoryModelSpec`] memory
+//! backend), campaigns are declarative ([`exp::ExperimentSpec`]), and the
+//! persistent-pool [`exp::Engine`] produces JSON-serializable
+//! [`exp::Report`]s.
 //!
 //! See DESIGN.md for the system inventory and the per-figure experiment
 //! index, and EXPERIMENTS.md for measured-vs-paper results.
 
 pub mod area;
 pub mod baseline;
-pub mod coordinator;
 pub mod exp;
 pub mod mem;
 pub mod reconfig;

@@ -19,6 +19,9 @@ USAGE:
                                     fig11a fig11b fig12a..fig12f fig13 fig14
                                     fig15 fig16 fig17 fig18 motivation ablation
   repro table <1|2|3|all>           regenerate a table
+  repro bench                       run the fixed kernel x system perf
+                                    matrix serially and write BENCH_sim.json
+                                    (iterations/sec; the perf trajectory)
   repro golden <artifact>           load + execute an AOT artifact via PJRT
                                     (requires building with --features pjrt)
 
@@ -51,6 +54,7 @@ fn main() {
         Some("sweep") => sweep(&args[1..], threads, json_out),
         Some("figure") => figure(args.get(1).map(String::as_str).unwrap_or("all"), threads),
         Some("table") => table(args.get(1).map(String::as_str).unwrap_or("all")),
+        Some("bench") => bench(),
         Some("golden") => golden(args.get(1).map(String::as_str).unwrap_or("aggregate")),
         _ => print!("{USAGE}"),
     }
@@ -89,6 +93,10 @@ fn list() {
     }
     println!("systems (Fig 11a):");
     for s in cgra_mem::exp::builtin_systems() {
+        println!("  {}", s.name);
+    }
+    println!("memory-model backends (ceiling / contention series):");
+    for s in cgra_mem::exp::extra_systems() {
         println!("  {}", s.name);
     }
     println!("new systems: describe them in a sweep spec (repro sweep; see DESIGN.md)");
@@ -219,6 +227,57 @@ fn table(id: &str) {
             println!("{}", report::table3());
         }
         _ => eprintln!("unknown table {id:?} (use 1, 2, 3 or all)"),
+    }
+}
+
+/// Fixed kernel × system perf matrix, run serially (one thread, stable
+/// numbers): simulator throughput as kernel iterations per wall second.
+/// Written to BENCH_sim.json so successive PRs have a perf trajectory.
+fn bench() {
+    use std::time::Instant;
+    let registry = cgra_mem::exp::WorkloadRegistry::builtin();
+    let kernels = ["aggregate/tiny", "small/rgb", "small/grad", "small/radix_update"];
+    let systems = [
+        SystemSpec::cache_spm(),
+        SystemSpec::runahead(),
+        SystemSpec::banked_dram(),
+        SystemSpec::ideal(),
+    ];
+    let mut rows = Vec::new();
+    println!("{:<22} {:<14} {:>12} {:>10} {:>14}", "kernel", "system", "sim_cycles", "wall_ms", "iters/sec");
+    for k in &kernels {
+        let wl = registry.build(k).expect("bench kernel is registered");
+        for sys in &systems {
+            let t0 = Instant::now();
+            let m = cgra_mem::exp::measure_spec(wl.as_ref(), sys);
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            let ips = wl.iterations() as f64 / secs;
+            println!(
+                "{:<22} {:<14} {:>12} {:>10.2} {:>14.0}",
+                k, sys.name, m.cycles, secs * 1e3, ips
+            );
+            rows.push(Json::obj(vec![
+                ("kernel", Json::str(*k)),
+                ("system", Json::str(&sys.name)),
+                ("iterations", Json::u64(wl.iterations())),
+                ("sim_cycles", Json::u64(m.cycles)),
+                ("output_ok", Json::Bool(m.output_ok)),
+                ("wall_s", Json::num(secs)),
+                ("iters_per_sec", Json::num(ips)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sim")),
+        ("unit", Json::str("kernel iterations per wall second")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_sim.json", doc.render_pretty()) {
+        Ok(()) => eprintln!("(written to BENCH_sim.json)"),
+        Err(e) => {
+            eprintln!("cannot write BENCH_sim.json: {e}");
+            std::process::exit(1);
+        }
     }
 }
 

@@ -17,7 +17,7 @@
 //! The cache is tag-only: functional data lives in [`super::Backing`], so
 //! timing and value simulation stay decoupled (and trivially coherent).
 
-use super::{Addr, Cycle};
+use super::Addr;
 
 /// Geometry + policy for one cache instance.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -370,10 +370,6 @@ impl Cache {
         self.clock = 0;
         self.stats = CacheStats::default();
     }
-
-    /// Cycle value is unused by the tag model but kept for API symmetry
-    /// with trace-driven models.
-    pub fn touch_clock(&mut self, _cycle: Cycle) {}
 }
 
 #[cfg(test)]

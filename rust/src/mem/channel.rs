@@ -1,0 +1,243 @@
+//! The backing (DRAM) channel level: the seam behind the shared L2.
+//!
+//! [`BackingChannel`] abstracts "a line fetch issued at cycle C arrives at
+//! cycle A". Two implementations:
+//!
+//! * the flat-latency [`Dram`](super::Dram) channel (Table 3's single
+//!   80-cycle constant plus a service-rate bandwidth limit), and
+//! * [`BankedDram`] — a banked channel with per-bank row buffers, where
+//!   sequential traffic rides open rows cheaply while scattered traffic
+//!   pays precharge + activate on nearly every access and serialises on
+//!   bank-busy windows. This replaces the flat constant with the
+//!   contention behaviour the paper's asymmetric-latency argument (§4.1)
+//!   actually stems from, and is sweepable via bank count / row-buffer
+//!   policy.
+
+use super::dram::Dram;
+use super::{Addr, Cycle};
+
+/// Channel-level counters (row counters stay zero on the flat channel).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChannelStats {
+    pub accesses: u64,
+    pub bytes: u64,
+    pub row_hits: u64,
+    pub row_conflicts: u64,
+}
+
+/// One line fetch scheduled on the channel; returns the arrival cycle.
+pub trait BackingChannel: Send {
+    fn schedule(&mut self, cycle: Cycle, addr: Addr, bytes: u64) -> Cycle;
+    fn stats(&self) -> ChannelStats;
+}
+
+impl BackingChannel for Dram {
+    fn schedule(&mut self, cycle: Cycle, _addr: Addr, bytes: u64) -> Cycle {
+        Dram::schedule(self, cycle, bytes)
+    }
+
+    fn stats(&self) -> ChannelStats {
+        ChannelStats { accesses: self.accesses, bytes: self.bytes, ..ChannelStats::default() }
+    }
+}
+
+/// Row-buffer management policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowPolicy {
+    /// Keep the row open after an access: repeats to the same row pay only
+    /// `t_cas`, a different row pays precharge + activate + CAS.
+    Open,
+    /// Auto-precharge after every access: uniform `t_rcd + t_cas`.
+    Closed,
+}
+
+/// Geometry + timing of the banked channel (per-channel bandwidth comes
+/// from [`SubsystemConfig::dram_bytes_per_cycle`](super::SubsystemConfig)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BankedDramConfig {
+    /// Number of banks (power of two); rows interleave across them.
+    pub banks: usize,
+    /// Row-buffer size per bank in bytes (power of two).
+    pub row_bytes: u32,
+    /// Precharge latency in CGRA cycles.
+    pub t_rp: Cycle,
+    /// Activate (row open) latency.
+    pub t_rcd: Cycle,
+    /// Column access latency (row already open).
+    pub t_cas: Cycle,
+    pub policy: RowPolicy,
+}
+
+impl BankedDramConfig {
+    /// Defaults calibrated against the flat 80-cycle constant: an open-row
+    /// hit (40) beats it, an idle activate (70) roughly matches it, and a
+    /// row conflict (100) exceeds it — so streaming keeps its speed while
+    /// scattered gathers get slower, the ordering §4.1 predicts.
+    pub fn paper_default() -> Self {
+        BankedDramConfig {
+            banks: 8,
+            row_bytes: 2048,
+            t_rp: 30,
+            t_rcd: 30,
+            t_cas: 40,
+            policy: RowPolicy::Open,
+        }
+    }
+}
+
+/// Which channel model backs the shared L2 (carried inside
+/// [`SubsystemConfig`](super::SubsystemConfig) so systems stay plain data).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DramModelKind {
+    /// Fixed-latency channel (`dram_latency` + service time).
+    Flat,
+    /// Banked channel with row-buffer and bank-conflict contention.
+    Banked(BankedDramConfig),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Bank {
+    busy_until: Cycle,
+    open_row: Option<u32>,
+}
+
+/// Banked DRAM channel: per-bank row state + busy windows, one shared data
+/// bus. Purely a timing model — data lives in the functional backing store.
+pub struct BankedDram {
+    cfg: BankedDramConfig,
+    bytes_per_cycle: u64,
+    banks: Vec<Bank>,
+    /// Next cycle the shared data bus is free.
+    bus_busy_until: Cycle,
+    stats: ChannelStats,
+}
+
+impl BankedDram {
+    pub fn new(cfg: BankedDramConfig, bytes_per_cycle: u64) -> Self {
+        assert!(cfg.banks >= 1 && cfg.banks.is_power_of_two(), "banks must be a power of two");
+        assert!(
+            cfg.row_bytes >= 64 && cfg.row_bytes.is_power_of_two(),
+            "row_bytes must be a power of two >= 64"
+        );
+        assert!(bytes_per_cycle > 0);
+        BankedDram {
+            cfg,
+            bytes_per_cycle,
+            banks: vec![Bank { busy_until: 0, open_row: None }; cfg.banks],
+            bus_busy_until: 0,
+            stats: ChannelStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> BankedDramConfig {
+        self.cfg
+    }
+}
+
+impl BackingChannel for BankedDram {
+    fn schedule(&mut self, cycle: Cycle, addr: Addr, bytes: u64) -> Cycle {
+        let row = addr / self.cfg.row_bytes;
+        let bank_idx = (row as usize) & (self.cfg.banks - 1);
+        self.stats.accesses += 1;
+        self.stats.bytes += bytes;
+        let bank = &mut self.banks[bank_idx];
+        let start = cycle.max(bank.busy_until);
+        let access = match (self.cfg.policy, bank.open_row) {
+            (RowPolicy::Open, Some(r)) if r == row => {
+                self.stats.row_hits += 1;
+                self.cfg.t_cas
+            }
+            (RowPolicy::Open, Some(_)) => {
+                self.stats.row_conflicts += 1;
+                self.cfg.t_rp + self.cfg.t_rcd + self.cfg.t_cas
+            }
+            // Idle bank (open policy, nothing open yet) or closed-page
+            // policy: activate + CAS.
+            _ => self.cfg.t_rcd + self.cfg.t_cas,
+        };
+        bank.open_row = match self.cfg.policy {
+            RowPolicy::Open => Some(row),
+            RowPolicy::Closed => None,
+        };
+        let service = bytes.div_ceil(self.bytes_per_cycle);
+        // The data transfer needs the shared bus; the bank stays busy
+        // through it (no back-to-back overlap within one bank).
+        let data_start = (start + access).max(self.bus_busy_until);
+        self.bus_busy_until = data_start + service;
+        bank.busy_until = data_start + service;
+        data_start + service
+    }
+
+    fn stats(&self) -> ChannelStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(policy: RowPolicy) -> BankedDram {
+        let cfg = BankedDramConfig { policy, ..BankedDramConfig::paper_default() };
+        BankedDram::new(cfg, 8)
+    }
+
+    #[test]
+    fn open_row_hit_beats_conflict() {
+        let mut d = mk(RowPolicy::Open);
+        // Cold access to row 0: activate + CAS + 8 cycles service for 64 B.
+        assert_eq!(d.schedule(0, 0x0000, 64), 70 + 8);
+        // Same row, bank idle again: row hit.
+        assert_eq!(d.schedule(1000, 0x0040, 64), 1000 + 40 + 8);
+        // Different row, same bank (row + banks*row_bytes): conflict.
+        let conflict_addr = 8 * 2048;
+        assert_eq!(d.schedule(2000, conflict_addr, 64), 2000 + 100 + 8);
+        let s = d.stats();
+        assert_eq!(s.row_hits, 1);
+        assert_eq!(s.row_conflicts, 1);
+        assert_eq!(s.accesses, 3);
+    }
+
+    #[test]
+    fn closed_policy_is_uniform() {
+        let mut d = mk(RowPolicy::Closed);
+        assert_eq!(d.schedule(0, 0x0000, 64), 78);
+        assert_eq!(d.schedule(1000, 0x0000, 64), 1078); // no row reuse
+        assert_eq!(d.stats().row_hits, 0);
+        assert_eq!(d.stats().row_conflicts, 0);
+    }
+
+    #[test]
+    fn banks_overlap_but_bus_serialises_transfers() {
+        let mut d = mk(RowPolicy::Open);
+        // Two cold accesses to different banks at the same cycle: access
+        // phases overlap; the second transfer queues behind the first on
+        // the bus (8-cycle service each).
+        let a = d.schedule(0, 0, 64); // bank 0
+        let b = d.schedule(0, 2048, 64); // bank 1
+        assert_eq!(a, 78);
+        assert_eq!(b, 86);
+    }
+
+    #[test]
+    fn same_bank_back_to_back_serialises_on_the_bank() {
+        let mut d = mk(RowPolicy::Open);
+        let a = d.schedule(0, 0, 64);
+        // Same bank, different row, issued while the bank is busy.
+        let b = d.schedule(0, 8 * 2048, 64);
+        assert_eq!(a, 78);
+        // Starts when the bank frees (78), pays the conflict (100) + 8.
+        assert_eq!(b, 78 + 100 + 8);
+    }
+
+    #[test]
+    fn flat_dram_reports_channel_stats() {
+        let mut d = Dram::new(80, 8);
+        let arrive = BackingChannel::schedule(&mut d, 0, 0x1234, 64);
+        assert_eq!(arrive, 88);
+        let s = BackingChannel::stats(&d);
+        assert_eq!(s.accesses, 1);
+        assert_eq!(s.bytes, 64);
+        assert_eq!(s.row_hits, 0);
+    }
+}

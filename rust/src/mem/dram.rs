@@ -28,7 +28,7 @@ impl Dram {
     /// the data arrives. The channel serialises transfers.
     pub fn schedule(&mut self, cycle: Cycle, bytes: u64) -> Cycle {
         let start = cycle.max(self.busy_until);
-        let service = (bytes + self.bytes_per_cycle - 1) / self.bytes_per_cycle;
+        let service = bytes.div_ceil(self.bytes_per_cycle);
         self.busy_until = start + service;
         self.accesses += 1;
         self.bytes += bytes;

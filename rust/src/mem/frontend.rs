@@ -1,0 +1,43 @@
+//! Port front-end level: the per-crossbar software-managed storage a
+//! border-PE pair talks to before anything cache-shaped — the SPM window
+//! plus the runahead temporary partition carved out of it (§3.2.1).
+
+use super::spm::Spm;
+use super::temp_store::TempStore;
+use super::Addr;
+
+/// One virtual-SPM port's front end.
+pub struct PortFrontEnd {
+    pub spm: Spm,
+    pub temp: TempStore,
+}
+
+impl PortFrontEnd {
+    pub fn new(spm_bytes: u32, temp_bytes: u32) -> Self {
+        PortFrontEnd { spm: Spm::new(0, spm_bytes), temp: TempStore::new(temp_bytes) }
+    }
+
+    /// Bind the SPM window to `[base, base+size)`, reserving the runahead
+    /// temp partition at its top.
+    pub fn place(&mut self, base: Addr, temp_bytes: u32) {
+        self.spm.base = base;
+        if temp_bytes > 0 {
+            self.spm.reserve_temp(temp_bytes);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn place_reserves_temp_partition() {
+        let mut fe = PortFrontEnd::new(512, 128);
+        fe.place(0x1000, 128);
+        assert_eq!(fe.spm.base, 0x1000);
+        assert_eq!(fe.spm.usable(), 384);
+        assert!(fe.temp.write(0x1000, 7));
+        assert_eq!(fe.temp.read(0x1000), Some(7));
+    }
+}

@@ -1,67 +1,31 @@
-//! The full memory subsystem: per-crossbar SPM + private L1 (a "virtual
-//! SPM", §3.3), a shared non-inclusive L2, and a DRAM channel. Each virtual
-//! SPM serves a pair of border PEs; compile-time data partitioning ensures
-//! the address ranges handled by different virtual SPMs never overlap, which
-//! eliminates inter-cache coherence traffic by construction.
+//! The hierarchical memory subsystem, composed from the level modules:
+//! per-port front ends ([`PortFrontEnd`]: SPM + runahead temp partition),
+//! the private-L1 array ([`L1Array`]: caches + MSHRs, §3.3 "virtual
+//! SPMs"), a shared non-inclusive L2 in front of a pluggable backing
+//! channel ([`SharedL2`] over [`BackingChannel`](super::BackingChannel)),
+//! and the functional [`Backing`] image. Compile-time data partitioning
+//! ensures the address ranges handled by different virtual SPMs never
+//! overlap, which eliminates inter-cache coherence traffic by construction.
 //!
 //! The SPM-only baseline (original HyCUBE) is modelled as the degenerate
 //! configuration with zero cache ways: every off-SPM access walks straight
 //! to DRAM, exactly the asymmetric-latency behaviour §4.1 describes.
+//!
+//! [`MemorySubsystem`] implements [`MemoryModel`], the seam the execution
+//! engine is generic over; sibling backends live in [`super::ideal`].
 
 use super::cache::{AccessKind, AccessOutcome, Cache, CacheConfig};
+use super::channel::{BackingChannel, BankedDram, DramModelKind};
 use super::dram::Dram;
+use super::frontend::PortFrontEnd;
+use super::l1::L1Array;
+use super::l2::SharedL2;
+use super::model::{
+    MemRequest, MemResponse, MemResponseComplete, MemoryModel, PrefetchResponse, SubsystemStats,
+};
 use super::mshr::{LstDest, Mshr};
-use super::spm::Spm;
-use super::temp_store::TempStore;
 use super::{Addr, Backing, Cycle};
 use std::collections::HashMap;
-
-/// A memory request from a memory-accessing PE.
-#[derive(Clone, Copy, Debug)]
-pub struct MemRequest {
-    pub addr: Addr,
-    pub kind: AccessKind,
-    /// Store data (ignored for reads).
-    pub data: u32,
-    /// Identity of the issuing PE (for completion routing).
-    pub pe: usize,
-}
-
-/// Outcome of a demand request.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum MemResponse {
-    /// Data available this cycle from the SPM.
-    HitSpm { data: u32 },
-    /// Data available after the L1 hit latency.
-    HitL1 { data: u32 },
-    /// Read miss queued: the CGRA stalls (or runs ahead) until `fill_at`.
-    ReadMiss { mshr_idx: usize, fill_at: Cycle },
-    /// Write miss absorbed by MSHR + store buffer; execution continues.
-    WriteQueued,
-    /// Structural stall: all MSHR entries (or store-buffer slots) busy.
-    MshrFull,
-}
-
-/// Outcome of a runahead prefetch request.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum PrefetchResponse {
-    /// Block already resident (SPM/L1) — nothing to do.
-    AlreadyPresent { data: u32 },
-    /// Prefetch accepted into the MSHR.
-    Queued { fill_at: Cycle },
-    /// Block already being fetched.
-    Pending,
-    /// MSHR full: prefetch dropped.
-    Dropped,
-}
-
-/// A completed read miss delivered back to the array.
-#[derive(Clone, Copy, Debug)]
-pub struct MemResponseComplete {
-    pub port: usize,
-    pub pe: usize,
-    pub addr_block: Addr,
-}
 
 /// Configuration of the whole subsystem.
 #[derive(Clone, Copy, Debug)]
@@ -80,9 +44,11 @@ pub struct SubsystemConfig {
     pub l1_hit_latency: Cycle,
     /// L2 hit latency (Table 3: 8).
     pub l2_hit_latency: Cycle,
-    /// L2-miss/DRAM latency (Table 3: 80).
+    /// L2-miss/DRAM latency (Table 3: 80) — the flat channel's constant.
     pub dram_latency: Cycle,
     pub dram_bytes_per_cycle: u64,
+    /// Which backing-channel model serves L2 misses.
+    pub dram: DramModelKind,
     /// Runahead temp-storage partition carved from each SPM.
     pub temp_store_bytes: u32,
     /// Motivation experiment (Fig 3a ⑤⑥): route every port through L1 0,
@@ -105,6 +71,7 @@ impl SubsystemConfig {
             l2_hit_latency: 8,
             dram_latency: 80,
             dram_bytes_per_cycle: 8,
+            dram: DramModelKind::Flat,
             temp_store_bytes: 128,
             shared_l1: false,
         }
@@ -123,6 +90,7 @@ impl SubsystemConfig {
             l2_hit_latency: 8,
             dram_latency: 80,
             dram_bytes_per_cycle: 8,
+            dram: DramModelKind::Flat,
             temp_store_bytes: 256,
             shared_l1: false,
         }
@@ -141,6 +109,7 @@ impl SubsystemConfig {
             l2_hit_latency: 0,
             dram_latency: 80,
             dram_bytes_per_cycle: 8,
+            dram: DramModelKind::Flat,
             temp_store_bytes: 0,
             shared_l1: false,
         }
@@ -152,41 +121,25 @@ impl SubsystemConfig {
             + self.num_ports as u64 * self.l1.total_bytes() as u64
             + self.l2.total_bytes() as u64
     }
-}
 
-/// Aggregated access counters (Fig 11b).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct SubsystemStats {
-    pub spm_accesses: u64,
-    pub l1_accesses: u64,
-    pub l1_hits: u64,
-    pub l1_misses: u64,
-    pub l2_accesses: u64,
-    pub l2_hits: u64,
-    pub dram_accesses: u64,
-    pub prefetches_issued: u64,
-    pub prefetch_used: u64,
-    /// Demand miss arrived while its block was already being prefetched —
-    /// the stall is shortened to the fill's remaining latency.
-    pub prefetch_inflight_hits: u64,
-    pub prefetch_evicted_then_demanded: u64,
-    pub prefetch_useless: u64,
-    pub demand_misses_normal_mode: u64,
-    pub mshr_full_stalls: u64,
+    fn build_channel(&self) -> Box<dyn BackingChannel> {
+        match self.dram {
+            DramModelKind::Flat => Box::new(Dram::new(self.dram_latency, self.dram_bytes_per_cycle)),
+            DramModelKind::Banked(b) => Box::new(BankedDram::new(b, self.dram_bytes_per_cycle)),
+        }
+    }
 }
 
 pub struct MemorySubsystem {
     pub cfg: SubsystemConfig,
-    pub spms: Vec<Spm>,
-    pub l1s: Vec<Cache>,
-    pub mshrs: Vec<Mshr>,
-    pub l2: Cache,
-    pub dram: Dram,
+    /// Per-port SPM + runahead temp partition.
+    pub ports: Vec<PortFrontEnd>,
+    /// Private L1 caches + MSHRs (with shared-L1 routing).
+    pub l1x: L1Array,
+    /// Shared non-inclusive L2 over the backing channel.
+    pub l2: SharedL2,
     pub backing: Backing,
-    pub temp_stores: Vec<TempStore>,
     pub stats: SubsystemStats,
-    /// L2 request port: serialises L1-miss lookups.
-    l2_busy_until: Cycle,
     /// Unused prefetched blocks that were evicted; if demanded later they
     /// count as "Evicted (useful)" in Fig 15, else "Useless".
     evicted_prefetches: HashMap<Addr, u64>,
@@ -196,24 +149,21 @@ pub struct MemorySubsystem {
 
 impl MemorySubsystem {
     pub fn new(cfg: SubsystemConfig, backing_bytes: usize) -> Self {
-        let spms = (0..cfg.num_ports)
-            .map(|_| Spm::new(0, cfg.spm_bytes)) // windows set by place_spm()
-            .collect();
-        let l1s = (0..cfg.num_ports).map(|p| Cache::new(cfg.l1, p)).collect();
-        let mshrs = (0..cfg.num_ports)
-            .map(|_| Mshr::new(cfg.mshr_entries, cfg.mshr_entries * 4, cfg.store_buffer_entries))
-            .collect();
         MemorySubsystem {
             cfg,
-            spms,
-            l1s,
-            mshrs,
-            l2: Cache::new(cfg.l2, usize::MAX),
-            dram: Dram::new(cfg.dram_latency, cfg.dram_bytes_per_cycle),
+            ports: (0..cfg.num_ports)
+                .map(|_| PortFrontEnd::new(cfg.spm_bytes, cfg.temp_store_bytes))
+                .collect(),
+            l1x: L1Array::new(
+                cfg.l1,
+                cfg.num_ports,
+                cfg.mshr_entries,
+                cfg.store_buffer_entries,
+                cfg.shared_l1,
+            ),
+            l2: SharedL2::new(cfg.l2, cfg.l2_hit_latency, cfg.build_channel()),
             backing: Backing::new(backing_bytes),
-            temp_stores: (0..cfg.num_ports).map(|_| TempStore::new(cfg.temp_store_bytes)).collect(),
             stats: SubsystemStats::default(),
-            l2_busy_until: 0,
             evicted_prefetches: HashMap::new(),
             prefetch_epoch: 0,
         }
@@ -222,24 +172,31 @@ impl MemorySubsystem {
     /// Bind SPM `port` to the window `[base, base+usable)`; carves the
     /// runahead temp partition out of the top.
     pub fn place_spm(&mut self, port: usize, base: Addr) {
-        self.spms[port].base = base;
-        if self.cfg.temp_store_bytes > 0 {
-            self.spms[port].reserve_temp(self.cfg.temp_store_bytes);
-        }
+        self.ports[port].place(base, self.cfg.temp_store_bytes);
     }
 
-    /// L1/MSHR index serving `port` (all traffic hits cache 0 when the
-    /// shared-single-cache motivation mode is on).
-    #[inline]
-    fn l1_of(&self, port: usize) -> usize {
-        if self.cfg.shared_l1 { 0 } else { port }
+    /// The L1 cache array (reconfiguration controller, diagnostics).
+    pub fn l1s(&self) -> &[Cache] {
+        &self.l1x.caches
+    }
+
+    pub fn l1(&self, port: usize) -> &Cache {
+        &self.l1x.caches[port]
+    }
+
+    pub fn l1_mut(&mut self, port: usize) -> &mut Cache {
+        &mut self.l1x.caches[port]
+    }
+
+    pub fn mshr(&self, port: usize) -> &Mshr {
+        &self.l1x.mshrs[port]
     }
 
     /// Demand access from a border PE attached to `port`.
     pub fn request(&mut self, port: usize, req: MemRequest, cycle: Cycle) -> MemResponse {
-        let spm = &mut self.spms[port];
-        if spm.contains(req.addr) {
-            spm.record_access();
+        let fe = &mut self.ports[port];
+        if fe.spm.contains(req.addr) {
+            fe.spm.record_access();
             self.stats.spm_accesses += 1;
             return match req.kind {
                 AccessKind::Read => MemResponse::HitSpm { data: self.backing.read_u32(req.addr) },
@@ -250,11 +207,10 @@ impl MemorySubsystem {
             };
         }
         // L1 path.
-        let port = self.l1_of(port);
+        let li = self.l1x.route(port);
         self.stats.l1_accesses += 1;
-        let l1 = &mut self.l1s[port];
-        let block = l1.block_addr(req.addr);
-        match l1.access(req.addr, req.kind) {
+        let block = self.l1x.caches[li].block_addr(req.addr);
+        match self.l1x.caches[li].access(req.addr, req.kind) {
             AccessOutcome::Hit => {
                 self.stats.l1_hits += 1;
                 match req.kind {
@@ -277,31 +233,30 @@ impl MemorySubsystem {
                         self.evicted_prefetches.remove(&block);
                     }
                 }
-                let mshr = &mut self.mshrs[port];
                 // Secondary miss: attach to the pending fetch.
-                if let Some(idx) = mshr.find(block) {
-                    let fill_at = mshr.entry(idx).fill_at;
-                    if mshr.entry(idx).prefetch {
+                if let Some(idx) = self.l1x.mshrs[li].find(block) {
+                    let fill_at = self.l1x.mshrs[li].entry(idx).fill_at;
+                    if self.l1x.mshrs[li].entry(idx).prefetch {
                         self.stats.prefetch_inflight_hits += 1;
                     }
-                    return Self::attach_demand(mshr, idx, fill_at, &mut self.backing, req, block);
+                    return Self::attach_demand(
+                        &mut self.l1x.mshrs[li],
+                        idx,
+                        fill_at,
+                        &mut self.backing,
+                        req,
+                        block,
+                    );
                 }
-                if mshr.is_full() {
+                if self.l1x.mshrs[li].is_full() {
                     self.stats.mshr_full_stalls += 1;
                     return MemResponse::MshrFull;
                 }
-                let fill_at = Self::fetch_from_l2(
-                    &mut self.l2,
-                    &mut self.dram,
-                    &mut self.stats,
-                    &mut self.l2_busy_until,
-                    block,
-                    self.cfg.l1.vline_bytes(),
-                    self.cfg.l2_hit_latency,
-                    cycle,
-                );
-                let idx = mshr.allocate(block, fill_at, false).expect("checked not full");
-                Self::attach_demand(mshr, idx, fill_at, &mut self.backing, req, block)
+                let fill_at =
+                    self.l2.fetch(block, self.cfg.l1.vline_bytes(), cycle, &mut self.stats);
+                let idx =
+                    self.l1x.mshrs[li].allocate(block, fill_at, false).expect("checked not full");
+                Self::attach_demand(&mut self.l1x.mshrs[li], idx, fill_at, &mut self.backing, req, block)
             }
         }
     }
@@ -333,74 +288,26 @@ impl MemorySubsystem {
         }
     }
 
-    /// L2 lookup + (on miss) DRAM fetch; returns the L1 fill-arrival cycle.
-    /// The L2 is non-inclusive: it is filled on the DRAM response and on
-    /// dirty L1 evictions.
-    #[allow(clippy::too_many_arguments)]
-    fn fetch_from_l2(
-        l2: &mut Cache,
-        dram: &mut Dram,
-        stats: &mut SubsystemStats,
-        l2_busy_until: &mut Cycle,
-        block: Addr,
-        vline_bytes: u32,
-        l2_hit_latency: Cycle,
-        cycle: Cycle,
-    ) -> Cycle {
-        if l2.num_ways() == 0 {
-            // SPM-only / no-L2 configuration: straight to DRAM.
-            stats.dram_accesses += 1;
-            return dram.schedule(cycle, vline_bytes as u64);
-        }
-        let start = cycle.max(*l2_busy_until);
-        *l2_busy_until = start + 1; // one lookup per cycle
-        stats.l2_accesses += 1;
-        match l2.access(block, AccessKind::Read) {
-            AccessOutcome::Hit => {
-                stats.l2_hits += 1;
-                start + l2_hit_latency
-            }
-            AccessOutcome::Miss => {
-                stats.dram_accesses += 1;
-                let arrive = dram.schedule(start, l2.config().vline_bytes() as u64);
-                l2.fill(block, false, 0);
-                arrive
-            }
-        }
-    }
-
     /// Runahead prefetch probe+issue (§3.2): never stalls, never touches
     /// demand LRU on a hit, returns data when the block is resident so
     /// address chains can keep resolving.
     pub fn prefetch(&mut self, port: usize, addr: Addr, cycle: Cycle) -> PrefetchResponse {
-        let spm = &self.spms[port];
-        if spm.contains(addr) {
+        if self.ports[port].spm.contains(addr) {
             return PrefetchResponse::AlreadyPresent { data: self.backing.read_u32(addr) };
         }
-        let port = self.l1_of(port);
-        let l1 = &self.l1s[port];
-        let block = l1.block_addr(addr);
-        if l1.probe(addr) == AccessOutcome::Hit {
+        let li = self.l1x.route(port);
+        let block = self.l1x.caches[li].block_addr(addr);
+        if self.l1x.caches[li].probe(addr) == AccessOutcome::Hit {
             return PrefetchResponse::AlreadyPresent { data: self.backing.read_u32(addr) };
         }
-        let mshr = &mut self.mshrs[port];
-        if mshr.find(block).is_some() {
+        if self.l1x.mshrs[li].find(block).is_some() {
             return PrefetchResponse::Pending;
         }
-        if mshr.is_full() {
+        if self.l1x.mshrs[li].is_full() {
             return PrefetchResponse::Dropped;
         }
-        let fill_at = Self::fetch_from_l2(
-            &mut self.l2,
-            &mut self.dram,
-            &mut self.stats,
-            &mut self.l2_busy_until,
-            block,
-            self.cfg.l1.vline_bytes(),
-            self.cfg.l2_hit_latency,
-            cycle,
-        );
-        mshr.allocate(block, fill_at, true);
+        let fill_at = self.l2.fetch(block, self.cfg.l1.vline_bytes(), cycle, &mut self.stats);
+        self.l1x.mshrs[li].allocate(block, fill_at, true);
         self.stats.prefetches_issued += 1;
         PrefetchResponse::Queued { fill_at }
     }
@@ -409,30 +316,32 @@ impl MemorySubsystem {
     /// demand reads so the array can leave its stall / runahead state.
     pub fn tick(&mut self, cycle: Cycle) -> Vec<MemResponseComplete> {
         let mut completions = Vec::new();
-        for port in 0..self.cfg.num_ports {
+        for li in 0..self.l1x.len() {
             // Fast path (§Perf): most cycles have no arriving fill; the
             // cached min avoids the ready-list allocation entirely.
-            if self.mshrs[port].next_fill_at().map_or(true, |t| t > cycle) {
+            if self.l1x.mshrs[li].next_fill_at().map_or(true, |t| t > cycle) {
                 continue;
             }
-            for idx in self.mshrs[port].ready(cycle) {
-                let entry = self.mshrs[port].entry(idx).clone();
-                let lst = self.mshrs[port].complete(idx);
-                let demand_attached =
-                    lst.iter().any(|e| matches!(e.dest, LstDest::Read { .. } | LstDest::Write { .. }));
+            for idx in self.l1x.mshrs[li].ready(cycle) {
+                let entry = self.l1x.mshrs[li].entry(idx).clone();
+                let lst = self.l1x.mshrs[li].complete(idx);
+                let demand_attached = lst
+                    .iter()
+                    .any(|e| matches!(e.dest, LstDest::Read { .. } | LstDest::Write { .. }));
                 // Install into L1. A pure-prefetch fill keeps its flag so a
                 // later demand touch counts as "Used" (Fig 15).
                 let keep_prefetch_flag = entry.prefetch && !demand_attached;
-                if let Some(ev) =
-                    self.l1s[port].fill(entry.block_addr, keep_prefetch_flag, self.prefetch_epoch)
-                {
+                if let Some(ev) = self.l1x.caches[li].fill(
+                    entry.block_addr,
+                    keep_prefetch_flag,
+                    self.prefetch_epoch,
+                ) {
                     if ev.unused_prefetch {
                         *self.evicted_prefetches.entry(ev.block_addr).or_insert(0) += 1;
                     }
-                    if ev.dirty && self.l2.num_ways() > 0 {
+                    if ev.dirty {
                         // Non-inclusive L2 absorbs the writeback.
-                        self.l2.fill(ev.block_addr, false, 0);
-                        self.l2.mark_dirty(ev.block_addr);
+                        self.l2.absorb_writeback(ev.block_addr);
                     }
                 }
                 if entry.prefetch && demand_attached {
@@ -443,16 +352,16 @@ impl MemorySubsystem {
                 for e in lst {
                     match e.dest {
                         LstDest::Read { pe } => completions.push(MemResponseComplete {
-                            port,
+                            port: li,
                             pe,
                             addr_block: entry.block_addr,
                         }),
                         LstDest::Write { sb_idx } => {
                             // Data was applied functionally at issue; merge
                             // now marks the line dirty and frees the slot.
-                            if let Some((addr, _)) = self.mshrs[port].store_at(sb_idx) {
-                                self.l1s[port].mark_dirty(addr);
-                                self.mshrs[port].release_store(sb_idx);
+                            if let Some((addr, _)) = self.l1x.mshrs[li].store_at(sb_idx) {
+                                self.l1x.caches[li].mark_dirty(addr);
+                                self.l1x.mshrs[li].release_store(sb_idx);
                             }
                         }
                     }
@@ -464,17 +373,17 @@ impl MemorySubsystem {
 
     /// Earliest pending fill across all ports (stall fast-forwarding).
     pub fn next_event(&self) -> Option<Cycle> {
-        self.mshrs.iter().filter_map(|m| m.next_fill_at()).min()
+        self.l1x.next_fill_at()
     }
 
     /// Finalise Fig 15 accounting: remaining evicted-unused prefetches and
     /// never-touched resident prefetch lines are "Useless".
     pub fn finalize_prefetch_stats(&mut self) {
         let leftover_evicted: u64 = self.evicted_prefetches.values().sum();
-        let resident_unused: u64 = self.l1s.iter().map(|c| c.unused_prefetch_lines()).sum();
+        let resident_unused: u64 = self.l1x.unused_prefetch_lines();
         self.stats.prefetch_useless = leftover_evicted + resident_unused;
-        self.stats.prefetch_used = self.l1s.iter().map(|c| c.stats.prefetch_used).sum::<u64>()
-            + self.stats.prefetch_inflight_hits;
+        self.stats.prefetch_used =
+            self.l1x.stats_sum().prefetch_used + self.stats.prefetch_inflight_hits;
     }
 
     /// Prefetch blocks evicted before use whose data was later demanded
@@ -484,25 +393,89 @@ impl MemorySubsystem {
     }
 
     pub fn l1_stats_sum(&self) -> super::cache::CacheStats {
-        let mut s = super::cache::CacheStats::default();
-        for c in &self.l1s {
-            let cs = c.stats;
-            s.reads += cs.reads;
-            s.writes += cs.writes;
-            s.hits += cs.hits;
-            s.misses += cs.misses;
-            s.prefetch_used += cs.prefetch_used;
-            s.prefetch_evicted += cs.prefetch_evicted;
-            s.writebacks += cs.writebacks;
-            s.fills += cs.fills;
-        }
+        self.l1x.stats_sum()
+    }
+
+    /// Aggregate counters merged with channel-level row statistics.
+    pub fn merged_stats(&self) -> SubsystemStats {
+        let ch = self.l2.channel_stats();
+        let mut s = self.stats;
+        s.dram_row_hits = ch.row_hits;
+        s.dram_row_conflicts = ch.row_conflicts;
         s
+    }
+}
+
+impl MemoryModel for MemorySubsystem {
+    fn num_ports(&self) -> usize {
+        self.cfg.num_ports
+    }
+
+    fn place_spm(&mut self, port: usize, base: Addr) {
+        MemorySubsystem::place_spm(self, port, base);
+    }
+
+    fn add_streamed(&mut self, port: usize, base: Addr, bytes: u32) {
+        self.ports[port].spm.add_streamed(base, bytes);
+    }
+
+    fn request(&mut self, port: usize, req: MemRequest, cycle: Cycle) -> MemResponse {
+        MemorySubsystem::request(self, port, req, cycle)
+    }
+
+    fn prefetch(&mut self, port: usize, addr: Addr, cycle: Cycle) -> PrefetchResponse {
+        MemorySubsystem::prefetch(self, port, addr, cycle)
+    }
+
+    fn tick(&mut self, cycle: Cycle) -> Vec<MemResponseComplete> {
+        MemorySubsystem::tick(self, cycle)
+    }
+
+    fn next_event(&self) -> Option<Cycle> {
+        MemorySubsystem::next_event(self)
+    }
+
+    fn block_addr(&self, port: usize, addr: Addr) -> Addr {
+        self.l1x.caches[self.l1x.route(port)].block_addr(addr)
+    }
+
+    fn backing(&self) -> &Backing {
+        &self.backing
+    }
+
+    fn backing_mut(&mut self) -> &mut Backing {
+        &mut self.backing
+    }
+
+    fn temp_read(&self, port: usize, addr: Addr) -> Option<u32> {
+        self.ports[port].temp.read(addr)
+    }
+
+    fn temp_write(&mut self, port: usize, addr: Addr, data: u32) {
+        self.ports[port].temp.write(addr, data);
+    }
+
+    fn temp_clear(&mut self, port: usize) {
+        self.ports[port].temp.clear();
+    }
+
+    fn begin_runahead_epoch(&mut self) {
+        self.prefetch_epoch += 1;
+    }
+
+    fn finalize_prefetch_stats(&mut self) {
+        MemorySubsystem::finalize_prefetch_stats(self);
+    }
+
+    fn stats(&self) -> SubsystemStats {
+        self.merged_stats()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::{BankedDramConfig, RowPolicy};
 
     fn small_cfg() -> SubsystemConfig {
         SubsystemConfig {
@@ -516,6 +489,7 @@ mod tests {
             l2_hit_latency: 8,
             dram_latency: 80,
             dram_bytes_per_cycle: 8,
+            dram: DramModelKind::Flat,
             temp_store_bytes: 64,
             shared_l1: false,
         }
@@ -602,6 +576,43 @@ mod tests {
         let r = m.request(0, MemRequest { addr: 0xF000, kind: AccessKind::Read, data: 0, pe: 0 }, 0);
         assert_eq!(r, MemResponse::MshrFull);
         assert_eq!(m.stats.mshr_full_stalls, 1);
+    }
+
+    #[test]
+    fn store_buffer_full_write_miss_reports_mshr_full() {
+        // Structural hazard distinct from MSHR-entry exhaustion: entries
+        // remain, but the store buffer has no free slot (push_store → None).
+        let mut cfg = small_cfg();
+        cfg.store_buffer_entries = 1;
+        let mut m = MemorySubsystem::new(cfg, 1 << 16);
+        m.place_spm(0, 0x0000);
+        m.place_spm(1, 0x1000);
+        let w1 = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Write, data: 1, pe: 0 }, 0);
+        assert_eq!(w1, MemResponse::WriteQueued);
+        let w2 = m.request(0, MemRequest { addr: 0x9000, kind: AccessKind::Write, data: 2, pe: 0 }, 1);
+        assert_eq!(w2, MemResponse::MshrFull, "full store buffer must stall the writer");
+        assert!(m.mshr(0).occupancy() < m.mshr(0).capacity(), "MSHR entries were not the limit");
+        // Once the first fill merges and frees the slot, the write goes in.
+        let f = m.next_event().unwrap();
+        m.tick(f);
+        let w3 = m.request(0, MemRequest { addr: 0x9000, kind: AccessKind::Write, data: 2, pe: 0 }, f + 1);
+        assert_eq!(w3, MemResponse::WriteQueued);
+    }
+
+    #[test]
+    fn prefetch_dropped_when_mshr_full() {
+        let mut m = mk();
+        for i in 0..4u32 {
+            let r = m.request(0, MemRequest { addr: 0xA000 + i * 1024, kind: AccessKind::Read, data: 0, pe: 0 }, 0);
+            assert!(matches!(r, MemResponse::ReadMiss { .. }));
+        }
+        let before = m.stats.prefetches_issued;
+        assert_eq!(m.prefetch(0, 0xF000, 1), PrefetchResponse::Dropped);
+        assert_eq!(m.stats.prefetches_issued, before, "a dropped prefetch is not issued");
+        // After a fill frees an entry, the same prefetch queues.
+        let f = m.next_event().unwrap();
+        m.tick(f);
+        assert!(matches!(m.prefetch(0, 0xF000, f + 1), PrefetchResponse::Queued { .. }));
     }
 
     #[test]
@@ -706,5 +717,30 @@ mod tests {
         let r = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, t);
         assert!(matches!(r, MemResponse::ReadMiss { .. }));
         assert_eq!(m.prefetch_evicted_useful(), 1);
+    }
+
+    #[test]
+    fn banked_channel_threads_row_stats_through_merged_stats() {
+        let mut cfg = small_cfg();
+        cfg.l2 = CacheConfig { sets: 1, ways: 0, line_bytes: 16, vline_shift: 0 }; // straight to DRAM
+        cfg.dram = DramModelKind::Banked(BankedDramConfig {
+            policy: RowPolicy::Open,
+            ..BankedDramConfig::paper_default()
+        });
+        let mut m = MemorySubsystem::new(cfg, 1 << 20);
+        m.place_spm(0, 0x0000);
+        m.place_spm(1, 0x1000);
+        // Two misses in the same DRAM row (different L1 sets): second is a
+        // row hit and arrives sooner after issue than a conflicting one.
+        let r1 = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, 0);
+        let f1 = match r1 { MemResponse::ReadMiss { fill_at, .. } => fill_at, _ => panic!() };
+        m.tick(f1);
+        let r2 = m.request(0, MemRequest { addr: 0x8010, kind: AccessKind::Read, data: 0, pe: 0 }, f1 + 1);
+        let f2 = match r2 { MemResponse::ReadMiss { fill_at, .. } => fill_at, _ => panic!() };
+        m.tick(f2);
+        assert!(f2 - (f1 + 1) < f1, "row hit must beat the cold activate");
+        let s = m.merged_stats();
+        assert_eq!(s.dram_row_hits, 1);
+        assert_eq!(s.dram_accesses, 2);
     }
 }

@@ -1,0 +1,131 @@
+//! Ideal-latency memory backend: every access hits with SPM latency —
+//! the paper's idealistic upper bound ("if memory were free"), used as a
+//! perf-ceiling series in the figures. Purely functional + a single access
+//! counter; it never stalls the array and never enters runahead.
+
+use super::cache::AccessKind;
+use super::model::{
+    MemRequest, MemResponse, MemResponseComplete, MemoryModel, PrefetchResponse, SubsystemStats,
+};
+use super::{Addr, Backing, Cycle};
+
+/// Configuration of the ideal backend. `spm_bytes` only steers the
+/// compile-time data allocator (timing is identical everywhere);
+/// `line_bytes` is the block granularity reported by `block_addr`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IdealConfig {
+    pub num_ports: usize,
+    pub spm_bytes: u32,
+    pub line_bytes: u32,
+}
+
+impl IdealConfig {
+    /// Table 3 base geometry with `num_ports` virtual SPMs.
+    pub fn with_ports(num_ports: usize) -> Self {
+        IdealConfig { num_ports, spm_bytes: 512, line_bytes: 64 }
+    }
+}
+
+pub struct IdealMemory {
+    cfg: IdealConfig,
+    backing: Backing,
+    stats: SubsystemStats,
+}
+
+impl IdealMemory {
+    pub fn new(cfg: IdealConfig, backing_bytes: usize) -> Self {
+        assert!(cfg.line_bytes.is_power_of_two() && cfg.line_bytes >= 4);
+        IdealMemory { cfg, backing: Backing::new(backing_bytes), stats: SubsystemStats::default() }
+    }
+}
+
+impl MemoryModel for IdealMemory {
+    fn num_ports(&self) -> usize {
+        self.cfg.num_ports
+    }
+
+    fn place_spm(&mut self, _port: usize, _base: Addr) {}
+
+    fn add_streamed(&mut self, _port: usize, _base: Addr, _bytes: u32) {}
+
+    fn request(&mut self, _port: usize, req: MemRequest, _cycle: Cycle) -> MemResponse {
+        self.stats.spm_accesses += 1;
+        match req.kind {
+            AccessKind::Read => MemResponse::HitSpm { data: self.backing.read_u32(req.addr) },
+            AccessKind::Write => {
+                self.backing.write_u32(req.addr, req.data);
+                MemResponse::HitSpm { data: req.data }
+            }
+        }
+    }
+
+    fn prefetch(&mut self, _port: usize, addr: Addr, _cycle: Cycle) -> PrefetchResponse {
+        // Everything is always resident; runahead is never entered because
+        // demand reads never miss, but the probe stays well-defined.
+        PrefetchResponse::AlreadyPresent { data: self.backing.read_u32(addr) }
+    }
+
+    fn tick(&mut self, _cycle: Cycle) -> Vec<MemResponseComplete> {
+        Vec::new()
+    }
+
+    fn next_event(&self) -> Option<Cycle> {
+        None
+    }
+
+    fn block_addr(&self, _port: usize, addr: Addr) -> Addr {
+        addr & !(self.cfg.line_bytes - 1)
+    }
+
+    fn backing(&self) -> &Backing {
+        &self.backing
+    }
+
+    fn backing_mut(&mut self) -> &mut Backing {
+        &mut self.backing
+    }
+
+    fn temp_read(&self, _port: usize, _addr: Addr) -> Option<u32> {
+        None
+    }
+
+    fn temp_write(&mut self, _port: usize, _addr: Addr, _data: u32) {}
+
+    fn temp_clear(&mut self, _port: usize) {}
+
+    fn begin_runahead_epoch(&mut self) {}
+
+    fn finalize_prefetch_stats(&mut self) {}
+
+    fn stats(&self) -> SubsystemStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_access_is_an_spm_hit() {
+        let mut m = IdealMemory::new(IdealConfig::with_ports(2), 1 << 16);
+        m.backing_mut().write_u32(0x8000, 42);
+        let r = m.request(
+            0,
+            MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 },
+            0,
+        );
+        assert_eq!(r, MemResponse::HitSpm { data: 42 });
+        let w = m.request(
+            1,
+            MemRequest { addr: 0x9000, kind: AccessKind::Write, data: 7, pe: 1 },
+            5,
+        );
+        assert_eq!(w, MemResponse::HitSpm { data: 7 });
+        assert_eq!(m.backing().read_u32(0x9000), 7);
+        assert_eq!(m.stats().spm_accesses, 2);
+        assert_eq!(m.next_event(), None);
+        assert!(m.tick(100).is_empty());
+        assert_eq!(m.block_addr(0, 0x8033), 0x8000);
+    }
+}

@@ -1,0 +1,117 @@
+//! Shared-L2 level: the single non-inclusive L2 (one lookup per cycle on
+//! its request port) in front of a pluggable backing channel. The SPM-only
+//! configuration is the degenerate zero-way L2: every fetch goes straight
+//! to the channel.
+
+use super::cache::{AccessKind, AccessOutcome, Cache, CacheConfig};
+use super::channel::{BackingChannel, ChannelStats};
+use super::model::SubsystemStats;
+use super::{Addr, Cycle};
+
+pub struct SharedL2 {
+    pub cache: Cache,
+    hit_latency: Cycle,
+    /// L2 request port: serialises L1-miss lookups.
+    busy_until: Cycle,
+    channel: Box<dyn BackingChannel>,
+}
+
+impl SharedL2 {
+    pub fn new(cfg: CacheConfig, hit_latency: Cycle, channel: Box<dyn BackingChannel>) -> Self {
+        SharedL2 { cache: Cache::new(cfg, usize::MAX), hit_latency, busy_until: 0, channel }
+    }
+
+    pub fn num_ways(&self) -> usize {
+        self.cache.num_ways()
+    }
+
+    pub fn channel_stats(&self) -> ChannelStats {
+        self.channel.stats()
+    }
+
+    /// L2 lookup + (on miss) channel fetch; returns the L1 fill-arrival
+    /// cycle. The L2 is non-inclusive: it is filled on the channel response
+    /// and on dirty L1 evictions.
+    pub fn fetch(
+        &mut self,
+        block: Addr,
+        l1_vline_bytes: u32,
+        cycle: Cycle,
+        stats: &mut SubsystemStats,
+    ) -> Cycle {
+        if self.cache.num_ways() == 0 {
+            // SPM-only / no-L2 configuration: straight to the channel.
+            stats.dram_accesses += 1;
+            return self.channel.schedule(cycle, block, l1_vline_bytes as u64);
+        }
+        let start = cycle.max(self.busy_until);
+        self.busy_until = start + 1; // one lookup per cycle
+        stats.l2_accesses += 1;
+        match self.cache.access(block, AccessKind::Read) {
+            AccessOutcome::Hit => {
+                stats.l2_hits += 1;
+                start + self.hit_latency
+            }
+            AccessOutcome::Miss => {
+                stats.dram_accesses += 1;
+                let arrive =
+                    self.channel.schedule(start, block, self.cache.config().vline_bytes() as u64);
+                self.cache.fill(block, false, 0);
+                arrive
+            }
+        }
+    }
+
+    /// Non-inclusive L2 absorbs a dirty L1 writeback (no-op without ways).
+    pub fn absorb_writeback(&mut self, block: Addr) {
+        if self.cache.num_ways() > 0 {
+            self.cache.fill(block, false, 0);
+            self.cache.mark_dirty(block);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Dram;
+
+    fn mk(ways: usize) -> SharedL2 {
+        let cfg = CacheConfig { sets: 16, ways, line_bytes: 64, vline_shift: 0 };
+        SharedL2::new(cfg, 8, Box::new(Dram::new(80, 8)))
+    }
+
+    #[test]
+    fn miss_goes_to_channel_then_hits() {
+        let mut l2 = mk(4);
+        let mut stats = SubsystemStats::default();
+        let a = l2.fetch(0x8000, 64, 0, &mut stats);
+        assert_eq!(a, 88); // 80 latency + 8 service
+        assert_eq!(stats.dram_accesses, 1);
+        let b = l2.fetch(0x8000, 64, 1000, &mut stats);
+        assert_eq!(b, 1008); // L2 hit latency
+        assert_eq!(stats.l2_hits, 1);
+        assert_eq!(stats.l2_accesses, 2);
+    }
+
+    #[test]
+    fn zero_way_l2_bypasses_to_channel() {
+        let mut l2 = mk(0);
+        let mut stats = SubsystemStats::default();
+        let a = l2.fetch(0x8000, 16, 0, &mut stats);
+        assert_eq!(a, 82); // 80 + 16B/8Bpc
+        assert_eq!(stats.l2_accesses, 0);
+        assert_eq!(stats.dram_accesses, 1);
+    }
+
+    #[test]
+    fn lookup_port_serialises_same_cycle_requests() {
+        let mut l2 = mk(4);
+        let mut stats = SubsystemStats::default();
+        let a = l2.fetch(0x1000, 64, 5, &mut stats);
+        l2.cache.fill(0x2000, false, 0); // make the next one a hit
+        let b = l2.fetch(0x2000, 64, 5, &mut stats);
+        assert!(a >= 5 + 80);
+        assert_eq!(b, 6 + 8); // second lookup starts one cycle later
+    }
+}

@@ -1,25 +1,48 @@
-//! The redesigned CGRA memory subsystem (paper §3.1/§3.3/§3.4.1).
+//! The redesigned CGRA memory subsystem (paper §3.1/§3.3/§3.4.1), behind
+//! a pluggable model layer.
 //!
-//! The subsystem pairs each crossbar ("virtual SPM", shared by two border
-//! PEs) with a small SPM and a private non-blocking L1 cache; all L1s share
-//! a non-inclusive L2 backed by a fixed-latency DRAM model. Caches support
-//! the paper's reconfiguration hooks: way *permission registers* (cache-size
-//! reconfiguration at way granularity, §3.4.1) and *virtual cache lines*
-//! (line-size reconfiguration by merging `2^m` adjacent physical lines).
+//! [`MemoryModel`] ([`model`]) is the seam between the execution engine and
+//! any memory backend; [`MemoryModelSpec`] is a backend as data. The
+//! default backend is the paper's hierarchy ([`hierarchy`]), composed from
+//! level modules: per-port front ends ([`frontend`]: SPM + runahead temp
+//! partition), the private-L1 array ([`l1`]: caches + MSHRs), a shared
+//! non-inclusive L2 ([`l2`]) and a pluggable backing channel ([`channel`]:
+//! flat-latency or banked with row-buffer contention). [`ideal`] provides
+//! the perf-ceiling backend where every access hits in SPM latency.
+//!
+//! Caches support the paper's reconfiguration hooks: way *permission
+//! registers* (cache-size reconfiguration at way granularity, §3.4.1) and
+//! *virtual cache lines* (line-size reconfiguration by merging `2^m`
+//! adjacent physical lines).
 
 pub mod backing;
 pub mod cache;
+pub mod channel;
 pub mod dram;
+pub mod frontend;
 pub mod hierarchy;
+pub mod ideal;
+pub mod l1;
+pub mod l2;
+pub mod model;
 pub mod mshr;
 pub mod spm;
 pub mod temp_store;
 
 pub use backing::Backing;
 pub use cache::{AccessKind, AccessOutcome, Cache, CacheConfig, CacheStats};
+pub use channel::{BackingChannel, BankedDram, BankedDramConfig, ChannelStats, DramModelKind, RowPolicy};
 pub use dram::Dram;
-pub use hierarchy::{MemRequest, MemResponse, MemResponseComplete, MemorySubsystem, PrefetchResponse, SubsystemConfig, SubsystemStats};
-pub use mshr::{LstEntry, LstDest, Mshr, MshrEntry};
+pub use frontend::PortFrontEnd;
+pub use hierarchy::{MemorySubsystem, SubsystemConfig};
+pub use ideal::{IdealConfig, IdealMemory};
+pub use l1::L1Array;
+pub use l2::SharedL2;
+pub use model::{
+    MemRequest, MemResponse, MemResponseComplete, MemoryModel, MemoryModelSpec, PrefetchResponse,
+    SubsystemStats,
+};
+pub use mshr::{LstDest, LstEntry, Mshr, MshrEntry};
 pub use spm::Spm;
 pub use temp_store::TempStore;
 

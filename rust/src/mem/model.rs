@@ -1,0 +1,209 @@
+//! The pluggable memory-model seam (the paper's central claim is that the
+//! *memory subsystem* is the lever for memory-bound CGRA performance, so
+//! "which memory system" must be data, not a hard-coded struct).
+//!
+//! [`MemoryModel`] is the complete contract between the execution engine
+//! ([`crate::sim::CgraArray`]) and any memory backend: demand requests,
+//! runahead prefetch probes, fill completion delivery, stall
+//! fast-forwarding, runahead temp-storage, and end-of-run statistics. The
+//! array is generic over it and never reaches into backend internals.
+//!
+//! Backends in tree:
+//!
+//! * [`MemorySubsystem`](super::MemorySubsystem) — the paper's SPM + L1 +
+//!   shared L2 hierarchy with a flat or banked DRAM channel;
+//! * [`IdealMemory`](super::IdealMemory) — every access hits in SPM
+//!   latency, the paper's idealistic upper bound (perf-ceiling series).
+
+use super::cache::AccessKind;
+use super::hierarchy::{MemorySubsystem, SubsystemConfig};
+use super::ideal::{IdealConfig, IdealMemory};
+use super::{Addr, Backing, Cycle};
+
+/// A memory request from a memory-accessing PE.
+#[derive(Clone, Copy, Debug)]
+pub struct MemRequest {
+    pub addr: Addr,
+    pub kind: AccessKind,
+    /// Store data (ignored for reads).
+    pub data: u32,
+    /// Identity of the issuing PE (for completion routing).
+    pub pe: usize,
+}
+
+/// Outcome of a demand request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemResponse {
+    /// Data available this cycle from the SPM.
+    HitSpm { data: u32 },
+    /// Data available after the L1 hit latency.
+    HitL1 { data: u32 },
+    /// Read miss queued: the CGRA stalls (or runs ahead) until `fill_at`.
+    ReadMiss { mshr_idx: usize, fill_at: Cycle },
+    /// Write miss absorbed by MSHR + store buffer; execution continues.
+    WriteQueued,
+    /// Structural stall: all MSHR entries (or store-buffer slots) busy.
+    MshrFull,
+}
+
+/// Outcome of a runahead prefetch request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefetchResponse {
+    /// Block already resident (SPM/L1) — nothing to do.
+    AlreadyPresent { data: u32 },
+    /// Prefetch accepted into the MSHR.
+    Queued { fill_at: Cycle },
+    /// Block already being fetched.
+    Pending,
+    /// MSHR full: prefetch dropped.
+    Dropped,
+}
+
+/// A completed read miss delivered back to the array.
+#[derive(Clone, Copy, Debug)]
+pub struct MemResponseComplete {
+    pub port: usize,
+    pub pe: usize,
+    pub addr_block: Addr,
+}
+
+/// Aggregated access counters (Fig 11b). Every backend reports this shape;
+/// backends without a given level leave its counters at zero.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubsystemStats {
+    pub spm_accesses: u64,
+    pub l1_accesses: u64,
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub l2_accesses: u64,
+    pub l2_hits: u64,
+    pub dram_accesses: u64,
+    /// Banked-channel row-buffer hits (zero on the flat channel).
+    pub dram_row_hits: u64,
+    /// Banked-channel row-buffer conflicts (precharge + activate paid).
+    pub dram_row_conflicts: u64,
+    pub prefetches_issued: u64,
+    pub prefetch_used: u64,
+    /// Demand miss arrived while its block was already being prefetched —
+    /// the stall is shortened to the fill's remaining latency.
+    pub prefetch_inflight_hits: u64,
+    pub prefetch_evicted_then_demanded: u64,
+    pub prefetch_useless: u64,
+    pub demand_misses_normal_mode: u64,
+    pub mshr_full_stalls: u64,
+}
+
+/// The complete contract between the CGRA execution engine and a memory
+/// backend. [`crate::sim::CgraArray::run`] is generic over this trait; no
+/// sim-layer code touches backend internals.
+pub trait MemoryModel: Send {
+    /// Number of memory ports (virtual SPMs) the backend exposes.
+    fn num_ports(&self) -> usize;
+
+    /// Bind port `port`'s SPM window to `[base, ...)` (no-op for backends
+    /// without software-managed SPMs).
+    fn place_spm(&mut self, port: usize, base: Addr);
+
+    /// Mark `[base, base+bytes)` as a DMA-streamed regular range on `port`
+    /// (SPM-only double-buffering; no-op where it doesn't apply).
+    fn add_streamed(&mut self, port: usize, base: Addr, bytes: u32);
+
+    /// Demand access from a border PE attached to `port`.
+    fn request(&mut self, port: usize, req: MemRequest, cycle: Cycle) -> MemResponse;
+
+    /// Runahead prefetch probe+issue (§3.2): never stalls, never disturbs
+    /// demand replacement state on a hit, returns data when resident.
+    fn prefetch(&mut self, port: usize, addr: Addr, cycle: Cycle) -> PrefetchResponse;
+
+    /// Advance fills whose data has arrived by `cycle`; returns completed
+    /// demand reads so the array can leave its stall / runahead state.
+    fn tick(&mut self, cycle: Cycle) -> Vec<MemResponseComplete>;
+
+    /// Earliest pending fill, if any (stall fast-forwarding).
+    fn next_event(&self) -> Option<Cycle>;
+
+    /// Block (line) address of `addr` as seen by `port`'s cache — the
+    /// granularity at which fills complete.
+    fn block_addr(&self, port: usize, addr: Addr) -> Addr;
+
+    /// The functional backing store (what the data is; the model itself
+    /// only decides when it arrives).
+    fn backing(&self) -> &Backing;
+    fn backing_mut(&mut self) -> &mut Backing;
+
+    /// Runahead temp-storage probe (§3.2.1). `None` on a miss or for
+    /// backends without a temp partition.
+    fn temp_read(&self, port: usize, addr: Addr) -> Option<u32>;
+
+    /// Park a valid runahead write in temp storage (may drop when full).
+    fn temp_write(&mut self, port: usize, addr: Addr, data: u32);
+
+    /// Discard `port`'s runahead temp state (runahead exit).
+    fn temp_clear(&mut self, port: usize);
+
+    /// A new runahead episode begins (prefetch epoch tagging).
+    fn begin_runahead_epoch(&mut self);
+
+    /// Close the books on prefetch classification (Fig 15) at end of run.
+    fn finalize_prefetch_stats(&mut self);
+
+    /// Aggregate counters, including channel-level (row hit/conflict)
+    /// counters where the backend has them.
+    fn stats(&self) -> SubsystemStats;
+}
+
+/// A memory backend as *data*: everything the experiment layer needs to
+/// construct a [`MemoryModel`], so specs/registry entries/sweeps can select
+/// backends by value (the `exp` analogue of [`crate::exp::SystemSpec`]).
+#[derive(Clone, Copy, Debug)]
+pub enum MemoryModelSpec {
+    /// The paper's SPM + L1 + shared L2 + DRAM hierarchy.
+    Hierarchy(SubsystemConfig),
+    /// Idealistic upper bound: every access hits in SPM latency.
+    Ideal(IdealConfig),
+}
+
+impl MemoryModelSpec {
+    pub fn num_ports(&self) -> usize {
+        match self {
+            MemoryModelSpec::Hierarchy(c) => c.num_ports,
+            MemoryModelSpec::Ideal(c) => c.num_ports,
+        }
+    }
+
+    /// Per-port SPM bytes usable by the compile-time data allocator.
+    pub fn spm_usable_bytes(&self) -> u32 {
+        match self {
+            MemoryModelSpec::Hierarchy(c) => c.spm_bytes.saturating_sub(c.temp_store_bytes),
+            MemoryModelSpec::Ideal(c) => c.spm_bytes,
+        }
+    }
+
+    /// Should the allocator pack greedily into the SPM window (the
+    /// SPM-only placement mode — there is no cache to fall back on)?
+    pub fn spm_greedy(&self) -> bool {
+        match self {
+            MemoryModelSpec::Hierarchy(c) => c.l1.ways == 0,
+            MemoryModelSpec::Ideal(_) => false,
+        }
+    }
+
+    /// Short backend name for diagnostics and `repro list`.
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            MemoryModelSpec::Hierarchy(c) => match c.dram {
+                super::channel::DramModelKind::Flat => "hierarchy",
+                super::channel::DramModelKind::Banked(_) => "hierarchy+banked-dram",
+            },
+            MemoryModelSpec::Ideal(_) => "ideal",
+        }
+    }
+
+    /// Build a live backend over a fresh `backing_bytes`-byte image.
+    pub fn build(&self, backing_bytes: usize) -> Box<dyn MemoryModel> {
+        match self {
+            MemoryModelSpec::Hierarchy(c) => Box::new(MemorySubsystem::new(*c, backing_bytes)),
+            MemoryModelSpec::Ideal(c) => Box::new(IdealMemory::new(*c, backing_bytes)),
+        }
+    }
+}

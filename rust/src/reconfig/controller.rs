@@ -30,7 +30,7 @@ pub fn plan_from_traces(
     shifts: &[u8],
 ) -> ReconfigPlan {
     let ports = mem.cfg.num_ports;
-    let budget: usize = mem.l1s.iter().map(|c| c.num_ways()).sum();
+    let budget: usize = mem.l1s().iter().map(|c| c.num_ways()).sum();
     let template = mem.cfg.l1;
     let mut profiles = Vec::with_capacity(ports);
     for p in 0..ports {
@@ -63,24 +63,24 @@ pub fn apply_plan(mem: &mut MemorySubsystem, plan: &ReconfigPlan) -> usize {
     assert_eq!(plan.ways.len(), ports);
     // Line-size reconfiguration first (flushes the cache's contents).
     for p in 0..ports {
-        if mem.l1s[p].config().vline_shift != plan.shifts[p] {
-            let _ = mem.l1s[p].set_vline_shift(plan.shifts[p]);
+        if mem.l1(p).config().vline_shift != plan.shifts[p] {
+            let _ = mem.l1_mut(p).set_vline_shift(plan.shifts[p]);
         }
     }
     // Way migration: harvest surplus ways into a pool, then grant.
     let mut pool = Vec::new();
     let mut migrated = 0usize;
     for p in 0..ports {
-        while mem.l1s[p].num_ways() > plan.ways[p] {
-            let (way, _flushed) = mem.l1s[p].take_way().expect("has ways");
+        while mem.l1(p).num_ways() > plan.ways[p] {
+            let (way, _flushed) = mem.l1_mut(p).take_way().expect("has ways");
             pool.push(way);
             migrated += 1;
         }
     }
     for p in 0..ports {
-        while mem.l1s[p].num_ways() < plan.ways[p] {
+        while mem.l1(p).num_ways() < plan.ways[p] {
             let way = pool.pop().expect("way budget conserved");
-            mem.l1s[p].grant_way(way, p);
+            mem.l1_mut(p).grant_way(way, p);
         }
     }
     assert!(pool.is_empty(), "all ways must be reassigned");
@@ -126,7 +126,7 @@ mod tests {
         let mem = mk();
         let traces = traces_with_one_irregular_port();
         let plan = plan_from_traces(&mem, &traces, &[0, 1]);
-        let budget: usize = mem.l1s.iter().map(|c| c.num_ways()).sum();
+        let budget: usize = mem.l1s().iter().map(|c| c.num_ways()).sum();
         assert_eq!(plan.ways.iter().sum::<usize>(), budget);
         assert!(
             plan.ways[3] > plan.ways[0],
@@ -140,13 +140,13 @@ mod tests {
         let mut mem = mk();
         let traces = traces_with_one_irregular_port();
         let plan = plan_from_traces(&mem, &traces, &[0, 1]);
-        let before: usize = mem.l1s.iter().map(|c| c.num_ways()).sum();
+        let before: usize = mem.l1s().iter().map(|c| c.num_ways()).sum();
         apply_plan(&mut mem, &plan);
-        let after: usize = mem.l1s.iter().map(|c| c.num_ways()).sum();
+        let after: usize = mem.l1s().iter().map(|c| c.num_ways()).sum();
         assert_eq!(before, after);
         for p in 0..4 {
-            assert_eq!(mem.l1s[p].num_ways(), plan.ways[p], "port {p}");
-            assert_eq!(mem.l1s[p].config().vline_shift, plan.shifts[p]);
+            assert_eq!(mem.l1(p).num_ways(), plan.ways[p], "port {p}");
+            assert_eq!(mem.l1(p).config().vline_shift, plan.shifts[p]);
         }
     }
 
@@ -165,7 +165,7 @@ mod tests {
         let mem = mk();
         let traces = AccessTrace::new(4, 64);
         let plan = plan_from_traces(&mem, &traces, &[0, 1]);
-        let budget: usize = mem.l1s.iter().map(|c| c.num_ways()).sum();
+        let budget: usize = mem.l1s().iter().map(|c| c.num_ways()).sum();
         assert_eq!(plan.ways.iter().sum::<usize>(), budget);
     }
 }

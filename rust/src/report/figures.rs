@@ -94,40 +94,49 @@ pub fn fig7() -> String {
 }
 
 /// Fig 11a: normalized execution time of the five systems across the
-/// suite. Paper: Cache+SPM ≈10× vs SPM-only, 7.26×/6.0× vs A72/SIMD;
-/// Runahead +3.04× (≤6.91×) on top.
+/// suite, plus the ideal-memory ceiling series (every access at SPM
+/// latency — the paper's idealistic upper bound). Paper: Cache+SPM ≈10×
+/// vs SPM-only, 7.26×/6.0× vs A72/SIMD; Runahead +3.04× (≤6.91×) on top.
 pub fn fig11a(eng: &Engine) -> String {
     let report = eng.run(&ExperimentSpec::fig11a());
     let mut s = String::from("Fig 11a — execution time normalized to A72 (lower is better)\n");
     s.push_str(&format!(
-        "{:<22} {:>8} {:>8} {:>9} {:>10} {:>9}\n",
-        "kernel", "A72", "SIMD", "SPM-only", "Cache+SPM", "Runahead"
+        "{:<22} {:>8} {:>8} {:>9} {:>10} {:>9} {:>8}\n",
+        "kernel", "A72", "SIMD", "SPM-only", "Cache+SPM", "Runahead", "Ideal"
     ));
-    let mut ratios: Vec<(f64, f64, f64, f64)> = Vec::new(); // vs A72
+    let mut ratios: Vec<(f64, f64, f64, f64, f64)> = Vec::new(); // vs A72
     for name in &report.workloads {
         let t = |sys: &str| report.time_of(name, sys).unwrap();
         let a = t("A72");
         s.push_str(&format!(
-            "{:<22} {:>8.2} {:>8.2} {:>9.2} {:>10.2} {:>9.2}\n",
+            "{:<22} {:>8.2} {:>8.2} {:>9.2} {:>10.2} {:>9.2} {:>8.2}\n",
             name,
             1.0,
             t("SIMD") / a,
             t("SPM-only") / a,
             t("Cache+SPM") / a,
-            t("Runahead") / a
+            t("Runahead") / a,
+            t("Ideal") / a
         ));
-        ratios.push((t("SIMD") / a, t("SPM-only") / a, t("Cache+SPM") / a, t("Runahead") / a));
+        ratios.push((
+            t("SIMD") / a,
+            t("SPM-only") / a,
+            t("Cache+SPM") / a,
+            t("Runahead") / a,
+            t("Ideal") / a,
+        ));
     }
-    let gm = |f: fn(&(f64, f64, f64, f64)) -> f64| {
+    let gm = |f: fn(&(f64, f64, f64, f64, f64)) -> f64| {
         stats::geomean(&ratios.iter().map(f).collect::<Vec<_>>())
     };
     s.push_str(&format!(
-        "geomean            {:>8.2} {:>8.2} {:>9.2} {:>10.2} {:>9.2}\n",
+        "geomean            {:>8.2} {:>8.2} {:>9.2} {:>10.2} {:>9.2} {:>8.2}\n",
         1.0,
         gm(|r| r.0),
         gm(|r| r.1),
         gm(|r| r.2),
-        gm(|r| r.3)
+        gm(|r| r.3),
+        gm(|r| r.4)
     ));
     s.push_str(&format!(
         "Cache+SPM vs SPM-only speedup (geomean) = {:.2}x   (paper: ~10x)\n",
@@ -136,6 +145,10 @@ pub fn fig11a(eng: &Engine) -> String {
     s.push_str(&format!(
         "Runahead vs A72 speedup (geomean)       = {:.2}x   (paper: ~22x implied)\n",
         1.0 / gm(|r| r.3)
+    ));
+    s.push_str(&format!(
+        "Runahead reaches {:.0}% of the ideal-memory ceiling (geomean)\n",
+        100.0 * gm(|r| r.4) / gm(|r| r.3)
     ));
     s
 }
@@ -307,24 +320,36 @@ fn render_series<T: std::fmt::Display>(s: &mut String, label: &str, pts: &[T], c
     }
 }
 
-/// Fig 13: runahead speedup per kernel. Paper: avg 3.04×, max 6.91×.
+/// Fig 13: runahead speedup per kernel, with the ideal-memory ceiling
+/// (Cache+SPM cycles / ideal cycles — the most any memory optimisation
+/// could gain). Paper: avg 3.04×, max 6.91×.
 pub fn fig13(eng: &Engine) -> String {
     let report = eng.run(&ExperimentSpec::campaign(
         "fig13",
-        [SystemSpec::cache_spm(), SystemSpec::runahead()],
+        [SystemSpec::cache_spm(), SystemSpec::runahead(), SystemSpec::ideal()],
     ));
-    let mut s = String::from("Fig 13 — runahead speedup over Cache+SPM\n");
+    let mut s = String::from("Fig 13 — runahead speedup over Cache+SPM (and ideal ceiling)\n");
     let mut sp = Vec::new();
+    let mut ceil = Vec::new();
     for name in &report.workloads {
-        let x = report.cycles_of(name, "Cache+SPM").unwrap() as f64
-            / report.cycles_of(name, "Runahead").unwrap() as f64;
+        let base = report.cycles_of(name, "Cache+SPM").unwrap() as f64;
+        let x = base / report.cycles_of(name, "Runahead").unwrap() as f64;
+        let c = base / report.cycles_of(name, "Ideal").unwrap() as f64;
         sp.push(x);
-        s.push_str(&format!("{:<22} {:>5.2}x |{}|\n", name, x, stats::bar(x, 7.0, 35)));
+        ceil.push(c);
+        s.push_str(&format!(
+            "{:<22} {:>5.2}x |{}| ceiling {:>6.2}x\n",
+            name,
+            x,
+            stats::bar(x, 7.0, 35),
+            c
+        ));
     }
     s.push_str(&format!(
-        "average = {:.2}x (paper: 3.04x)   max = {:.2}x (paper: 6.91x)\n",
+        "average = {:.2}x (paper: 3.04x)   max = {:.2}x (paper: 6.91x)   ceiling avg = {:.2}x\n",
         stats::mean(&sp),
-        stats::max(&sp)
+        stats::max(&sp),
+        stats::mean(&ceil)
     ));
     s
 }

@@ -28,7 +28,7 @@ use super::mapper::{Geometry, Mapping};
 use super::pe::{program, PeConfigMem};
 use super::trace::{AccessTrace, TraceEvent};
 use crate::mem::{
-    AccessKind, Cycle, MemRequest, MemResponse, MemorySubsystem, PrefetchResponse, SubsystemStats,
+    AccessKind, Cycle, MemRequest, MemResponse, MemoryModel, PrefetchResponse, SubsystemStats,
 };
 /// Execution-mode knob for a run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -259,8 +259,9 @@ impl CgraArray {
         }
     }
 
-    /// Execute the kernel for `iterations` loop iterations.
-    pub fn run(&mut self, mem: &mut MemorySubsystem, iterations: u64) -> RunResult {
+    /// Execute the kernel for `iterations` loop iterations on any memory
+    /// backend — the array speaks only the [`MemoryModel`] contract.
+    pub fn run<M: MemoryModel + ?Sized>(&mut self, mem: &mut M, iterations: u64) -> RunResult {
         let ii = self.mapping.ii as u64;
         let end_ctx = if iterations == 0 {
             0
@@ -300,7 +301,7 @@ impl CgraArray {
                             }
                         }
                         MemResponse::ReadMiss { .. } => {
-                            let block = mem.l1s[port].block_addr(req.addr);
+                            let block = mem.block_addr(port, req.addr);
                             uncovered += 1;
                             triggers.push(Trigger { port, block, node, iter, addr: req.addr });
                         }
@@ -331,7 +332,7 @@ impl CgraArray {
                     ExecMode::Runahead => {
                         // ---- Enter runahead (Fig 3b ②) ----
                         runahead_entries += 1;
-                        mem.prefetch_epoch += 1;
+                        mem.begin_runahead_epoch();
                         self.backup_vals.copy_from_slice(&self.vals);
                         backup = Some(BackupRegs { ctx });
                         ra_deadline = cycle + self.cfg.max_runahead_cycles;
@@ -435,7 +436,7 @@ impl CgraArray {
                         }
                     }
                     for port in 0..self.cfg.geom.ports {
-                        mem.temp_stores[port].clear();
+                        mem.temp_clear(port);
                     }
                     // Replay the frozen context; trigger loads consume the
                     // effects latched by drain().
@@ -453,16 +454,16 @@ impl CgraArray {
             useful_ops,
             num_pes: self.cfg.geom.num_pes(),
             ii: self.mapping.ii as u32,
-            mem: mem.stats,
+            mem: mem.stats(),
             freq_mhz: self.cfg.freq_mhz,
             uncovered_misses: uncovered,
         }
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn demand_load(
+    fn demand_load<M: MemoryModel + ?Sized>(
         &mut self,
-        mem: &mut MemorySubsystem,
+        mem: &mut M,
         node: NodeId,
         iter: u64,
         port: usize,
@@ -482,7 +483,7 @@ impl CgraArray {
                 effects.insert((node, iter), Some(data));
             }
             MemResponse::ReadMiss { .. } => {
-                let block = mem.l1s[port].block_addr(addr);
+                let block = mem.block_addr(port, addr);
                 *uncovered += 1;
                 triggers.push(Trigger { port, block, node, iter, addr });
             }
@@ -492,9 +493,9 @@ impl CgraArray {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn demand_store(
+    fn demand_store<M: MemoryModel + ?Sized>(
         &mut self,
-        mem: &mut MemorySubsystem,
+        mem: &mut M,
         node: NodeId,
         iter: u64,
         port: usize,
@@ -517,8 +518,8 @@ impl CgraArray {
 
     /// Apply fill completions; resolved triggers latch their data into the
     /// frozen context's effects for replay.
-    fn drain(
-        mem: &mut MemorySubsystem,
+    fn drain<M: MemoryModel + ?Sized>(
+        mem: &mut M,
         cycle: Cycle,
         triggers: &mut Vec<Trigger>,
         effects: &mut CycleEffects,
@@ -531,7 +532,7 @@ impl CgraArray {
                 // the shared-L1 motivation mode the completing L1 index
                 // differs from the issuing port.
                 if t.node == done.pe && t.block == done.addr_block {
-                    effects.insert((t.node, t.iter), Some(mem.backing.read_u32(t.addr)));
+                    effects.insert((t.node, t.iter), Some(mem.backing().read_u32(t.addr)));
                     triggers.swap_remove(i);
                 } else {
                     i += 1;
@@ -542,9 +543,9 @@ impl CgraArray {
 
     /// Runahead load (§3.2): dummy address → dummy; else probe temp store,
     /// SPM and L1 (no LRU disturbance); miss → precise prefetch + dummy.
-    fn runahead_load(
+    fn runahead_load<M: MemoryModel + ?Sized>(
         &mut self,
-        mem: &mut MemorySubsystem,
+        mem: &mut M,
         port: usize,
         addr: Value,
         cycle: Cycle,
@@ -558,7 +559,7 @@ impl CgraArray {
             return Value::dummy();
         }
         if self.cfg.ablation.temp_store {
-            if let Some(d) = mem.temp_stores[port].read(addr.bits) {
+            if let Some(d) = mem.temp_read(port, addr.bits) {
                 return Value::real(d);
             }
         }
@@ -571,9 +572,9 @@ impl CgraArray {
     /// Runahead store (§3.2): writes are converted into prefetch reads
     /// (never committed); valid data additionally lands in temp storage so
     /// runahead-local RAW chains stay coherent.
-    fn runahead_store(
+    fn runahead_store<M: MemoryModel + ?Sized>(
         &mut self,
-        mem: &mut MemorySubsystem,
+        mem: &mut M,
         port: usize,
         addr: Value,
         data: Value,
@@ -589,7 +590,7 @@ impl CgraArray {
             let _ = mem.prefetch(port, addr.bits, cycle);
         }
         if self.cfg.ablation.temp_store && !data.dummy {
-            mem.temp_stores[port].write(addr.bits, data.bits);
+            mem.temp_write(port, addr.bits, data.bits);
         }
     }
 }
@@ -597,13 +598,15 @@ impl CgraArray {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::{CacheConfig, SubsystemConfig};
+    use crate::mem::{
+        CacheConfig, DramModelKind, IdealConfig, IdealMemory, MemorySubsystem, SubsystemConfig,
+    };
     use crate::sim::alu::AluOp;
     use crate::sim::dfg::DfgBuilder;
     use crate::sim::mapper::Mapper;
 
-    fn small_mem(num_ports: usize) -> MemorySubsystem {
-        let cfg = SubsystemConfig {
+    fn small_cfg(num_ports: usize) -> SubsystemConfig {
+        SubsystemConfig {
             num_ports,
             spm_bytes: 512,
             l1: CacheConfig { sets: 8, ways: 2, line_bytes: 16, vline_shift: 0 },
@@ -614,10 +617,14 @@ mod tests {
             l2_hit_latency: 8,
             dram_latency: 80,
             dram_bytes_per_cycle: 8,
+            dram: DramModelKind::Flat,
             temp_store_bytes: 64,
             shared_l1: false,
-        };
-        let mut m = MemorySubsystem::new(cfg, 1 << 20);
+        }
+    }
+
+    fn small_mem(num_ports: usize) -> MemorySubsystem {
+        let mut m = MemorySubsystem::new(small_cfg(num_ports), 1 << 20);
         for p in 0..num_ports {
             m.place_spm(p, (p as u32) * 0x1000);
         }
@@ -840,5 +847,71 @@ mod tests {
             ra.cycles,
             normal.cycles
         );
+    }
+
+    #[test]
+    fn single_entry_mshr_exercises_frozen_retry_loop() {
+        // out[4*i] = a[i], both off-SPM on port 0, with a one-entry MSHR
+        // and one store-buffer slot. The stores stride one cache line per
+        // iteration, so every store is a primary write miss whose
+        // non-blocking fetch occupies the single entry for ~a DRAM
+        // latency; the next iteration's store (and every 4th load) finds
+        // the MSHR full, bounces, and is replayed by the frozen-array
+        // retry loop until the fill frees the entry.
+        let mut b = DfgBuilder::new("mshr1");
+        let i = b.iter_idx();
+        let av = b.array_load(0, 0x10000, i);
+        let two = b.konst(2);
+        let i4 = b.alu(AluOp::Shl, i, two); // 4*i words = one 16 B line per iter
+        b.array_store(0, 0x20000, i4, av);
+        let dfg = b.finish();
+        let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+        let mapping = Mapper::new(geom).map(&dfg).unwrap();
+        let mut cfg = small_cfg(2);
+        cfg.mshr_entries = 1;
+        cfg.store_buffer_entries = 1;
+        let mut mem = MemorySubsystem::new(cfg, 1 << 20);
+        mem.place_spm(0, 0x0000);
+        mem.place_spm(1, 0x1000);
+        let n = 16u64;
+        for k in 0..n as u32 {
+            mem.backing.write_u32(0x10000 + k * 4, 7 + k);
+        }
+        let mut arr = CgraArray::new(CgraConfig::hycube_4x4(ExecMode::Normal), dfg, mapping);
+        let res = arr.run(&mut mem, n);
+        assert!(res.mem.mshr_full_stalls > 0, "the structural hazard must fire");
+        for k in 0..n as u32 {
+            assert_eq!(mem.backing.read_u32(0x20000 + k * 16), 7 + k, "elem {k}");
+        }
+    }
+
+    #[test]
+    fn ideal_backend_runs_generic_array_without_stalls() {
+        // The seam proof: the same array executes unchanged on a different
+        // MemoryModel. The ideal backend never misses, so the run is the
+        // pure-schedule perf ceiling.
+        let dfg = vecadd_dfg();
+        let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+        let mapping = Mapper::new(geom).map(&dfg).unwrap();
+        let mut ideal = IdealMemory::new(IdealConfig::with_ports(2), 1 << 20);
+        let n = 64u64;
+        for i in 0..n as u32 {
+            ideal.backing_mut().write_u32(0x10000 + i * 4, i);
+            ideal.backing_mut().write_u32(0x20000 + i * 4, 100 + i);
+        }
+        let mut arr =
+            CgraArray::new(CgraConfig::hycube_4x4(ExecMode::Runahead), dfg, mapping);
+        let res = arr.run(&mut ideal, n);
+        assert_eq!(res.stall_cycles, 0);
+        assert_eq!(res.runahead_entries, 0);
+        assert_eq!(
+            res.cycles,
+            (n - 1) * res.ii as u64 + arr.mapping.schedule_len as u64
+        );
+        let (hier, _) = run_vecadd(ExecMode::Runahead, n);
+        assert!(res.cycles <= hier.cycles, "the ceiling cannot be above a real system");
+        for i in 0..n as u32 {
+            assert_eq!(ideal.backing().read_u32(0x30000 + i * 4), 100 + 2 * i);
+        }
     }
 }

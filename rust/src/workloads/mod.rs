@@ -15,7 +15,7 @@ pub mod graphs;
 pub mod media;
 pub mod sort;
 
-use crate::mem::{Addr, Backing, MemorySubsystem, SubsystemConfig};
+use crate::mem::{Addr, Backing, MemoryModel, MemoryModelSpec, MemorySubsystem, SubsystemConfig};
 use crate::sim::{CgraArray, CgraConfig, Dfg, Mapper, RunResult};
 
 pub use gcn::GcnAggregate;
@@ -179,59 +179,116 @@ pub struct WorkloadRun {
     pub irregular_share: f64,
 }
 
-/// End-to-end driver: allocate, initialise, map, execute, validate.
+/// End-to-end driver over the default hierarchy backend: allocate,
+/// initialise, map, execute, validate.
 pub fn run_workload(
     wl: &dyn Workload,
     sys_cfg: SubsystemConfig,
     cgra_cfg: CgraConfig,
 ) -> WorkloadRun {
-    let (mut mem, mut arr, layout) = prepare(wl, sys_cfg, cgra_cfg);
-    let result = arr.run(&mut mem, wl.iterations());
-    let output_ok = validate(wl, &layout, &mem);
+    run_workload_model(wl, &MemoryModelSpec::Hierarchy(sys_cfg), cgra_cfg)
+}
+
+/// End-to-end driver over any memory backend described as data.
+pub fn run_workload_model(
+    wl: &dyn Workload,
+    mem_spec: &MemoryModelSpec,
+    cgra_cfg: CgraConfig,
+) -> WorkloadRun {
+    // Hierarchy runs stay monomorphized: request/tick sit on the per-cycle
+    // hot path, so the default backend must not pay dyn dispatch there.
+    if let MemoryModelSpec::Hierarchy(sys_cfg) = mem_spec {
+        let (mut mem, mut arr, layout) = prepare(wl, *sys_cfg, cgra_cfg);
+        let result = arr.run(&mut mem, wl.iterations());
+        let output_ok = validate(wl, &layout, &mem.backing);
+        let irregular_share = layout.irregular_share();
+        return WorkloadRun { result, output_ok, layout, irregular_share };
+    }
+    let (mut mem, mut arr, layout) = prepare_model(wl, mem_spec, cgra_cfg);
+    let result = arr.run(&mut *mem, wl.iterations());
+    let output_ok = validate(wl, &layout, mem.backing());
     let irregular_share = layout.irregular_share();
     WorkloadRun { result, output_ok, layout, irregular_share }
 }
 
-/// Build the subsystem + array for a workload without running (used by the
-/// reconfiguration closed loop and the benches).
+/// Compile-time data allocation shared by every backend: build the layout
+/// and DFG for `num_ports` virtual SPMs of `spm_usable` bytes each.
+fn build_layout(wl: &dyn Workload, num_ports: usize, spm_usable: u32, spm_greedy: bool) -> (Layout, Dfg) {
+    let mut layout = if spm_greedy {
+        Layout::new_spm_only(num_ports, spm_usable)
+    } else {
+        Layout::new(num_ports, spm_usable)
+    };
+    let dfg = wl.build(&mut layout);
+    (layout, dfg)
+}
+
+/// Place SPM windows and register DMA-streamed ranges, then initialise
+/// input data — the backend-independent half of `prepare`.
+fn bind_and_init<M: MemoryModel + ?Sized>(
+    wl: &dyn Workload,
+    layout: &Layout,
+    mem: &mut M,
+    spm_greedy: bool,
+) {
+    for p in 0..mem.num_ports() {
+        mem.place_spm(p, p as u32 * PORT_STRIDE);
+        // SPM-only systems keep regular streams resident via DMA.
+        if spm_greedy {
+            for (i, s) in layout.specs.iter().enumerate() {
+                if s.port == p && s.placement == Placement::Streamed {
+                    mem.add_streamed(p, layout.bases[i], s.words * 4);
+                }
+            }
+        }
+    }
+    wl.init(layout, mem.backing_mut());
+}
+
+/// Build any backend + array for a workload without running.
+pub fn prepare_model(
+    wl: &dyn Workload,
+    mem_spec: &MemoryModelSpec,
+    cgra_cfg: CgraConfig,
+) -> (Box<dyn MemoryModel>, CgraArray, Layout) {
+    assert_eq!(mem_spec.num_ports(), cgra_cfg.geom.ports, "port count mismatch");
+    let (layout, dfg) = build_layout(
+        wl,
+        mem_spec.num_ports(),
+        mem_spec.spm_usable_bytes(),
+        mem_spec.spm_greedy(),
+    );
+    let mut mem = mem_spec.build(layout.backing_bytes(mem_spec.num_ports()));
+    bind_and_init(wl, &layout, &mut *mem, mem_spec.spm_greedy());
+    let mapping = Mapper::new(cgra_cfg.geom).map(&dfg).expect("kernel must map");
+    let arr = CgraArray::new(cgra_cfg, dfg, mapping);
+    (mem, arr, layout)
+}
+
+/// Build the concrete hierarchy subsystem + array for a workload without
+/// running (the reconfiguration closed loop and the benches need the
+/// concrete type to reach way/permission-register state).
 pub fn prepare(
     wl: &dyn Workload,
     sys_cfg: SubsystemConfig,
     cgra_cfg: CgraConfig,
 ) -> (MemorySubsystem, CgraArray, Layout) {
     assert_eq!(sys_cfg.num_ports, cgra_cfg.geom.ports, "port count mismatch");
-    let spm_usable = sys_cfg.spm_bytes.saturating_sub(sys_cfg.temp_store_bytes);
-    let spm_only = sys_cfg.l1.ways == 0;
-    let mut layout = if spm_only {
-        Layout::new_spm_only(sys_cfg.num_ports, spm_usable)
-    } else {
-        Layout::new(sys_cfg.num_ports, spm_usable)
-    };
-    let dfg = wl.build(&mut layout);
+    let spec = MemoryModelSpec::Hierarchy(sys_cfg);
+    let (layout, dfg) = build_layout(wl, sys_cfg.num_ports, spec.spm_usable_bytes(), spec.spm_greedy());
     let mut mem = MemorySubsystem::new(sys_cfg, layout.backing_bytes(sys_cfg.num_ports));
-    for p in 0..sys_cfg.num_ports {
-        mem.place_spm(p, p as u32 * PORT_STRIDE);
-        // SPM-only systems keep regular streams resident via DMA.
-        if spm_only {
-            for (i, s) in layout.specs.iter().enumerate() {
-                if s.port == p && s.placement == Placement::Streamed {
-                    mem.spms[p].add_streamed(layout.bases[i], s.words * 4);
-                }
-            }
-        }
-    }
-    wl.init(&layout, &mut mem.backing);
+    bind_and_init(wl, &layout, &mut mem, spec.spm_greedy());
     let mapping = Mapper::new(cgra_cfg.geom).map(&dfg).expect("kernel must map");
     let arr = CgraArray::new(cgra_cfg, dfg, mapping);
     (mem, arr, layout)
 }
 
 /// Compare the simulated output region against the golden executor.
-pub fn validate(wl: &dyn Workload, layout: &Layout, mem: &MemorySubsystem) -> bool {
+pub fn validate(wl: &dyn Workload, layout: &Layout, backing: &Backing) -> bool {
     let (name, words) = wl.output();
     let base = layout.base_of(name);
-    let got = mem.backing.dump_u32(base, words as usize);
-    let want = wl.golden(layout, &mem.backing);
+    let got = backing.dump_u32(base, words as usize);
+    let want = wl.golden(layout, backing);
     assert_eq!(got.len(), want.len());
     if wl.output_is_f32() {
         got.iter().zip(want.iter()).all(|(g, w)| {

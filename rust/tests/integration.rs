@@ -1,10 +1,10 @@
 //! Cross-module integration tests: full workload runs across systems and
 //! modes, output validation everywhere, and paper-shape assertions.
 
-use cgra_mem::coordinator::{measure, reconfig_experiment, System};
-use cgra_mem::mem::SubsystemConfig;
+use cgra_mem::exp::{builtin_systems, measure_spec, reconfig_experiment, SystemSpec};
+use cgra_mem::mem::{BankedDramConfig, DramModelKind, MemoryModelSpec, SubsystemConfig};
 use cgra_mem::sim::{CgraConfig, ExecMode};
-use cgra_mem::workloads::{run_workload, small_suite, GcnAggregate, GraphSpec};
+use cgra_mem::workloads::{run_workload, run_workload_model, small_suite, GcnAggregate, GraphSpec};
 
 /// Every kernel in the (reduced-size) suite computes correct output on
 /// every CGRA system in both execution modes.
@@ -74,9 +74,143 @@ fn simulation_is_deterministic() {
 #[test]
 fn baselines_measure_and_validate() {
     let wl = GcnAggregate::new(GraphSpec::tiny());
-    let a72 = measure(&wl, System::A72);
-    let simd = measure(&wl, System::Simd);
+    let a72 = measure_spec(&wl, &SystemSpec::a72());
+    let simd = measure_spec(&wl, &SystemSpec::simd());
     assert!(simd.time_us < a72.time_us, "SIMD must beat scalar");
+}
+
+/// Every named system (paper five + the extra memory backends) measures
+/// the tiny GCN kernel with a validated output (the old coordinator enum
+/// walk, now over the data-driven registry).
+#[test]
+fn all_named_systems_measure_tiny_gcn() {
+    let wl = GcnAggregate::new(GraphSpec::tiny());
+    for sys in builtin_systems().iter().chain(cgra_mem::exp::extra_systems().iter()) {
+        let m = measure_spec(&wl, sys);
+        assert!(m.time_us > 0.0, "{}", sys.name);
+        assert!(m.output_ok, "{}", sys.name);
+        assert_eq!(m.system, sys.name);
+    }
+}
+
+/// The paper's CGRA ordering on the tiny kernel, with the ideal backend
+/// as the floor: starved SPM-only > Cache+SPM > Runahead >= Ideal.
+#[test]
+fn cgra_systems_order_tiny_with_ideal_floor() {
+    let wl = GcnAggregate::new(GraphSpec::tiny());
+    let spm = run_workload(
+        &wl,
+        SubsystemConfig::spm_only(2, 4096),
+        CgraConfig::hycube_4x4(ExecMode::Normal),
+    );
+    let cache = measure_spec(&wl, &SystemSpec::cache_spm());
+    let ra = measure_spec(&wl, &SystemSpec::runahead());
+    let ideal = measure_spec(&wl, &SystemSpec::ideal());
+    assert!(spm.result.time_us() > cache.time_us);
+    assert!(cache.time_us > ra.time_us);
+    assert!(ra.cycles >= ideal.cycles, "no real system may beat the ceiling");
+}
+
+/// Banked DRAM acceptance ordering: with the L2 removed (every miss pays
+/// the channel), a bank-conflict-heavy irregular gather slows down versus
+/// the flat-latency channel, while a streaming kernel does not regress.
+#[test]
+fn banked_dram_slows_irregular_gather_but_not_streaming() {
+    use cgra_mem::sim::{AluOp, CgraArray, DfgBuilder, Geometry, Mapper};
+    let banked = DramModelKind::Banked(BankedDramConfig::paper_default());
+    let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+    let no_l2 = |dram: DramModelKind| {
+        let mut c = SubsystemConfig::paper_base();
+        c.l2 = cgra_mem::mem::CacheConfig { sets: 1, ways: 0, line_bytes: 64, vline_shift: 0 };
+        c.dram = dram;
+        c
+    };
+    // Irregular: a 64-iteration random gather over 256 KB — the indices
+    // are SPM-resident, every gathered line is a scattered DRAM fetch
+    // landing on an already-open different row (bank conflict).
+    let gather_n = 64u64;
+    let run_gather = |dram: DramModelKind| {
+        let mut b = DfgBuilder::new("gather");
+        let i = b.iter_idx();
+        let idx = b.array_load(0, 0x0000, i); // SPM-resident index array
+        let v = b.array_load(1, 0x40000, idx);
+        b.array_store(1, 0x1000, i, v); // port1 SPM window
+        let dfg = b.finish();
+        let mapping = Mapper::new(geom).map(&dfg).unwrap();
+        let mut mem = cgra_mem::mem::MemorySubsystem::new(no_l2(dram), 1 << 20);
+        mem.place_spm(0, 0x0000);
+        mem.place_spm(1, 0x1000);
+        let mut x = 7u32;
+        for k in 0..gather_n as u32 {
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+            let idx = x % 65536; // 64 K words = 256 KB
+            mem.backing.write_u32(k * 4, idx);
+            mem.backing.write_u32(0x40000 + idx * 4, k);
+        }
+        let mut arr = CgraArray::new(CgraConfig::hycube_4x4(ExecMode::Normal), dfg, mapping);
+        arr.run(&mut mem, gather_n)
+    };
+    let flat_gather = run_gather(DramModelKind::Flat);
+    let banked_gather = run_gather(banked);
+    assert!(
+        banked_gather.cycles > flat_gather.cycles,
+        "irregular gather must pay bank conflicts: banked {} vs flat {}",
+        banked_gather.cycles,
+        flat_gather.cycles
+    );
+    assert!(banked_gather.mem.dram_row_conflicts > banked_gather.mem.dram_row_hits);
+    assert_eq!(flat_gather.mem.dram_row_conflicts, 0);
+
+    // Streaming: sequential vecadd; the three arrays sit in three distinct
+    // rows on three distinct banks, so after one activate per array the
+    // whole stream rides open rows.
+    let stream_n = 256u64;
+    let run_stream = |dram: DramModelKind| {
+        let mut b = DfgBuilder::new("vecadd");
+        let i = b.iter_idx();
+        let av = b.array_load(0, 0x10000, i); // row 32 -> bank 0
+        let bv = b.array_load(1, 0x20800, i); // row 65 -> bank 1
+        let s = b.alu(AluOp::Add, av, bv);
+        b.array_store(0, 0x31000, i, s); // row 98 -> bank 2
+        let dfg = b.finish();
+        let mapping = Mapper::new(geom).map(&dfg).unwrap();
+        let mut mem = cgra_mem::mem::MemorySubsystem::new(no_l2(dram), 1 << 20);
+        mem.place_spm(0, 0x0000);
+        mem.place_spm(1, 0x1000);
+        for k in 0..stream_n as u32 {
+            mem.backing.write_u32(0x10000 + k * 4, k);
+            mem.backing.write_u32(0x20800 + k * 4, 2 * k);
+        }
+        let mut arr = CgraArray::new(CgraConfig::hycube_4x4(ExecMode::Normal), dfg, mapping);
+        arr.run(&mut mem, stream_n)
+    };
+    let flat_stream = run_stream(DramModelKind::Flat);
+    let banked_stream = run_stream(banked);
+    assert!(
+        banked_stream.cycles <= flat_stream.cycles,
+        "streaming must not regress: banked {} vs flat {}",
+        banked_stream.cycles,
+        flat_stream.cycles
+    );
+    assert!(banked_stream.mem.dram_row_hits > banked_stream.mem.dram_row_conflicts);
+}
+
+/// The full small suite stays correct on the banked channel and on the
+/// ideal backend, in both execution modes.
+#[test]
+fn small_suite_correct_on_new_backends() {
+    let mut banked = SubsystemConfig::paper_base();
+    banked.dram = DramModelKind::Banked(BankedDramConfig::paper_default());
+    let ideal = MemoryModelSpec::Ideal(cgra_mem::mem::IdealConfig::with_ports(2));
+    for wl in small_suite() {
+        for mode in [ExecMode::Normal, ExecMode::Runahead] {
+            let b = run_workload(wl.as_ref(), banked, CgraConfig::hycube_4x4(mode));
+            assert!(b.output_ok, "{} banked {:?}", wl.name(), mode);
+            let i = run_workload_model(wl.as_ref(), &ideal, CgraConfig::hycube_4x4(mode));
+            assert!(i.output_ok, "{} ideal {:?}", wl.name(), mode);
+            assert_eq!(i.result.stall_cycles, 0, "{} ideal never stalls", wl.name());
+        }
+    }
 }
 
 /// The reconfiguration loop preserves correctness on every small kernel.
@@ -131,11 +265,12 @@ fn engine_reproduces_fig11a_system_ordering() {
         .replace_system("SPM-only", starved);
     let engine = Engine::new(2);
     let report = engine.run(&spec);
-    assert_eq!(report.measurements.len(), 5);
+    assert_eq!(report.measurements.len(), 6); // five systems + ideal ceiling
     assert!(report.measurements.iter().all(|m| m.output_ok));
     let t = |sys: &str| report.time_of("aggregate/tiny", sys).unwrap();
     assert!(t(&starved_name) > t("Cache+SPM"), "SPM-starved must be slowest CGRA");
     assert!(t("Cache+SPM") > t("Runahead"), "runahead must win");
+    assert!(t("Runahead") >= t("Ideal"), "the ceiling is a floor on time");
     // Same engine pool serves a follow-up spec (persistent workers).
     let again = engine.run(&ExperimentSpec::new("again")
         .workload("aggregate/tiny")
