@@ -24,8 +24,8 @@ use cgra_mem::workloads::{prepare, GcnAggregate, Graph, GraphSpec, Workload};
 fn main() -> Result<(), String> {
     // The tiny artifact's shape contract: E=1024, N=256, F=4.
     let spec = GraphSpec::tiny();
-    let graph = Graph::synthesize(spec);
-    let wl = GcnAggregate::new(spec);
+    let graph = Graph::synthesize(spec.clone());
+    let wl = GcnAggregate::new(spec.clone());
     let (n, f) = (spec.nodes as usize, spec.feat_dim as usize);
 
     // ---- Layer 1+2 golden: AOT Pallas kernel through PJRT ----

@@ -8,7 +8,9 @@ use cgra_mem::mem::{
     BankedDramConfig, DramModelKind, IdealConfig, MemoryModelSpec, SubsystemConfig,
 };
 use cgra_mem::sim::{CgraConfig, ExecMode};
-use cgra_mem::workloads::{prepare, prepare_model, GcnAggregate, GraphSpec, Rgb, Workload};
+use cgra_mem::workloads::{
+    prepare, prepare_model, GcnAggregate, GraphSpec, HashJoin, MeshOrder, MeshSpmv, Rgb, Workload,
+};
 
 fn run_once(wl: &dyn Workload, sys: SubsystemConfig, mode: ExecMode) -> u64 {
     let (mut mem, mut arr, _l) = prepare(wl, sys, CgraConfig::hycube_4x4(mode));
@@ -47,5 +49,13 @@ fn main() {
             &MemoryModelSpec::Ideal(IdealConfig::with_ports(2)),
             ExecMode::Normal,
         )
+    });
+    let mesh = MeshSpmv::new(96, MeshOrder::Random, 101);
+    common::bench("mesh 96x96 random cache+spm", 5, || {
+        run_once(&mesh, SubsystemConfig::paper_base(), ExecMode::Normal)
+    });
+    let probe = HashJoin::default_probe();
+    common::bench("join_probe runahead", 5, || {
+        run_once(&probe, SubsystemConfig::paper_base(), ExecMode::Runahead)
     });
 }

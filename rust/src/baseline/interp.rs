@@ -120,7 +120,7 @@ mod tests {
         let mut mem2 = mem.backing.clone();
         // Reset output region to zero (the array already wrote it).
         let (oname, owords) = wl.output();
-        let obase = layout.base_of(oname);
+        let obase = layout.base_of(&oname);
         for w in 0..owords {
             mem2.write_u32(obase + w * 4, 0);
         }

@@ -118,15 +118,15 @@ impl Engine {
             return Err(format!("experiment {:?} lists no systems", spec.name));
         }
         for (i, w) in spec.workloads.iter().enumerate() {
-            if !self.registry.contains(w) {
+            // Validates the name (with nearest-name suggestions) and any
+            // family params before a job is queued; bare preset names skip
+            // the builder so no dataset is synthesized on this thread.
+            self.registry.validate(w)?;
+            if spec.workloads[..i].iter().any(|x| x.name == w.name) {
                 return Err(format!(
-                    "unknown workload {:?} (known: {})",
-                    w,
-                    self.registry.names().join(", ")
+                    "two workloads share the name {:?}; give the variant a distinct \"name\"",
+                    w.name
                 ));
-            }
-            if spec.workloads[..i].contains(w) {
-                return Err(format!("workload {w:?} listed twice"));
             }
         }
         // Reports are keyed by (workload, system) name; duplicates would
@@ -148,18 +148,18 @@ impl Engine {
             }
         }
         let registry = Arc::clone(&self.registry);
-        let measurements = self.map(jobs, move |(wname, sys, rep)| {
+        let measurements = self.map(jobs, move |(scenario, sys, rep)| {
             // Build exactly the one workload this job needs (the old
             // run_jobs rebuilt the entire suite here, every iteration).
-            let wl = registry.build(&wname).expect("name validated above");
+            let wl = registry.resolve(&scenario).expect("scenario validated above");
             let mut m = measure_spec(wl.as_ref(), &sys);
-            m.workload = wname;
+            m.workload = scenario.name;
             m.repeat = rep;
             m
         });
         Ok(Report {
             experiment: spec.name.clone(),
-            workloads: spec.workloads.clone(),
+            workloads: spec.workload_names(),
             systems: spec.systems.iter().map(|s| s.name.clone()).collect(),
             measurements,
         })

@@ -29,7 +29,9 @@ pub mod registry;
 
 pub use engine::{default_parallelism, Engine};
 pub use json::Json;
-pub use registry::{all_systems, builtin_systems, extra_systems, system_named, WorkloadRegistry};
+pub use registry::{
+    all_systems, builtin_systems, extra_systems, system_named, Params, WorkloadRegistry,
+};
 
 use crate::baseline::{run_cpu, CpuModel};
 use crate::mem::{
@@ -434,6 +436,102 @@ impl SystemSpec {
     }
 }
 
+/// One workload scenario of an experiment: a registry preset by name, or
+/// a workload *family* plus a [`Params`] bag — the workload half of a
+/// sweep spec, symmetric with [`SystemSpec`] on the system side.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    /// Report key (unique within an experiment).
+    pub name: String,
+    /// `None`: `name` is a registry preset (or a family at its defaults).
+    pub family: Option<String>,
+    pub params: Params,
+}
+
+impl ScenarioSpec {
+    /// A preset (or bare family) by registry name.
+    pub fn preset(name: impl Into<String>) -> Self {
+        ScenarioSpec { name: name.into(), family: None, params: Params::new() }
+    }
+
+    /// A parameterized family instance; the derived name is deterministic
+    /// in the params' spec order (rename with [`ScenarioSpec::named`]).
+    pub fn family(family: impl Into<String>, params: Params) -> Self {
+        let family = family.into();
+        let name = if params.is_empty() {
+            family.clone()
+        } else {
+            format!("{family}({})", params.summary())
+        };
+        ScenarioSpec { name, family: Some(family), params }
+    }
+
+    /// Rename a scenario (sweep points: "mesh/64", "join-hot", …).
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Parse one `workloads` entry object:
+    /// `{"family": "mesh", "name": "mesh/64", "dim": 64, "order":
+    /// "random"}` — `family` picks the builder, `name` the report key, and
+    /// every other key is a family param (the family checks them strictly,
+    /// like the system keys).
+    pub fn from_json(v: &Json) -> Result<ScenarioSpec, String> {
+        let Json::Obj(fields) = v else {
+            return Err("each workloads entry must be a registry name or an object".into());
+        };
+        let mut family = None;
+        let mut name = None;
+        let mut params = Params::new();
+        for (k, val) in fields {
+            match k.as_str() {
+                "family" => {
+                    family = Some(
+                        val.as_str()
+                            .ok_or_else(|| format!("\"family\" must be a string, got {}", val.render()))?
+                            .to_string(),
+                    )
+                }
+                "name" => {
+                    name = Some(
+                        val.as_str()
+                            .ok_or_else(|| format!("\"name\" must be a string, got {}", val.render()))?
+                            .to_string(),
+                    )
+                }
+                _ => params.push(k.clone(), val.clone()),
+            }
+        }
+        let family = family.ok_or(
+            "a workload object needs a \"family\" key (plain strings name registry presets)",
+        )?;
+        let mut s = ScenarioSpec::family(family, params);
+        if let Some(n) = name {
+            s.name = n;
+        }
+        Ok(s)
+    }
+}
+
+impl From<&str> for ScenarioSpec {
+    fn from(name: &str) -> Self {
+        ScenarioSpec::preset(name)
+    }
+}
+
+impl From<String> for ScenarioSpec {
+    fn from(name: String) -> Self {
+        ScenarioSpec::preset(name)
+    }
+}
+
+impl From<&String> for ScenarioSpec {
+    fn from(name: &String) -> Self {
+        ScenarioSpec::preset(name.clone())
+    }
+}
+
 /// One measured (workload, system, repeat) cell.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Measurement {
@@ -582,8 +680,9 @@ pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
 #[derive(Clone, Debug)]
 pub struct ExperimentSpec {
     pub name: String,
-    /// Workload registry names ([`WorkloadRegistry`]).
-    pub workloads: Vec<String>,
+    /// Workload scenarios: registry presets by name, or parameterized
+    /// family instances ([`ScenarioSpec`]).
+    pub workloads: Vec<ScenarioSpec>,
     pub systems: Vec<SystemSpec>,
     pub repeats: u32,
 }
@@ -593,15 +692,20 @@ impl ExperimentSpec {
         ExperimentSpec { name: name.into(), workloads: Vec::new(), systems: Vec::new(), repeats: 1 }
     }
 
-    pub fn workload(mut self, name: impl Into<String>) -> Self {
-        self.workloads.push(name.into());
+    pub fn workload(mut self, scenario: impl Into<ScenarioSpec>) -> Self {
+        self.workloads.push(scenario.into());
         self
     }
 
-    /// Replace the workload list.
-    pub fn workloads<S: Into<String>>(mut self, names: impl IntoIterator<Item = S>) -> Self {
-        self.workloads = names.into_iter().map(Into::into).collect();
+    /// Replace the workload list (names or [`ScenarioSpec`]s).
+    pub fn workloads<S: Into<ScenarioSpec>>(mut self, scenarios: impl IntoIterator<Item = S>) -> Self {
+        self.workloads = scenarios.into_iter().map(Into::into).collect();
         self
+    }
+
+    /// The scenario names, in spec order (the report's workload axis).
+    pub fn workload_names(&self) -> Vec<String> {
+        self.workloads.iter().map(|w| w.name.clone()).collect()
     }
 
     /// The full Table 1 paper suite.
@@ -682,7 +786,9 @@ impl ExperimentSpec {
     ///   ]
     /// }
     /// ```
-    /// `workloads` (a name array) may replace `suite` ("paper" | "small").
+    /// `workloads` may replace `suite` ("paper" | "small"): an array whose
+    /// entries are registry names (strings) or parameterized scenario
+    /// objects (`{"family": "mesh", "dim": 64, ...}`, [`ScenarioSpec`]).
     pub fn from_json(v: &Json) -> Result<ExperimentSpec, String> {
         const KNOWN: [&str; 5] = ["name", "workloads", "suite", "systems", "repeats"];
         if let Json::Obj(fields) = v {
@@ -697,10 +803,18 @@ impl ExperimentSpec {
         let mut spec = ExperimentSpec::new(
             v.get("name").and_then(Json::as_str).unwrap_or("sweep"),
         );
-        if let Some(names) = v.get("workloads").and_then(Json::as_arr) {
-            for n in names {
-                let n = n.as_str().ok_or("workloads entries must be strings")?;
-                spec.workloads.push(n.to_string());
+        if let Some(entries) = v.get("workloads").and_then(Json::as_arr) {
+            for n in entries {
+                spec.workloads.push(match n {
+                    Json::Str(s) => ScenarioSpec::preset(s),
+                    obj @ Json::Obj(_) => ScenarioSpec::from_json(obj)?,
+                    other => {
+                        return Err(format!(
+                            "workloads entries must be names or objects, got {}",
+                            other.render()
+                        ))
+                    }
+                });
             }
         } else {
             spec = match v.get("suite").and_then(Json::as_str).unwrap_or("paper") {
@@ -930,7 +1044,7 @@ mod tests {
         let spec = ExperimentSpec::from_json(&Json::parse(text).unwrap()).unwrap();
         assert_eq!(spec.name, "custom");
         assert_eq!(spec.repeats, 2);
-        assert_eq!(spec.workloads, vec!["aggregate/tiny"]);
+        assert_eq!(spec.workload_names(), vec!["aggregate/tiny"]);
         assert_eq!(spec.systems.len(), 2);
         match &spec.systems[0].exec {
             ExecModel::Cgra { mem: MemoryModelSpec::Hierarchy(subsystem), .. } => {
@@ -1067,8 +1181,34 @@ mod tests {
             &Json::parse(r#"{"suite": "small", "systems": [{"base": "SPM-only"}]}"#).unwrap(),
         )
         .unwrap();
-        assert_eq!(spec.workloads.len(), 7);
-        assert!(spec.workloads.iter().any(|w| w == "aggregate/tiny"));
+        // Registry-derived count: the suite selector mirrors the registry.
+        assert_eq!(spec.workloads.len(), WorkloadRegistry::builtin().small_names().len());
+        assert!(spec.workload_names().iter().any(|w| w == "aggregate/tiny"));
+    }
+
+    #[test]
+    fn spec_parses_parameterized_workload_scenarios() {
+        let text = r#"{
+            "name": "scales",
+            "workloads": [
+                "small/mesh",
+                {"family": "mesh", "name": "mesh/32", "dim": 32, "order": "random"},
+                {"family": "join", "phase": "probe", "buckets": 2048, "rows": 512}
+            ],
+            "systems": [{"base": "Cache+SPM"}]
+        }"#;
+        let spec = ExperimentSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.workloads.len(), 3);
+        assert_eq!(spec.workloads[0], ScenarioSpec::preset("small/mesh"));
+        assert_eq!(spec.workloads[1].name, "mesh/32");
+        assert_eq!(spec.workloads[1].family.as_deref(), Some("mesh"));
+        assert_eq!(spec.workloads[1].params.u64("dim", 0).unwrap(), 32);
+        // The derived name is deterministic in spec order.
+        assert_eq!(spec.workloads[2].name, "join(phase=probe,buckets=2048,rows=512)");
+        // A scenario object without "family" is a parse error.
+        let bad = r#"{"workloads": [{"dim": 32}], "systems": [{"base": "Cache+SPM"}]}"#;
+        let e = ExperimentSpec::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert!(e.contains("family"), "{e}");
     }
 
     #[test]

@@ -1,112 +1,577 @@
-//! Data-driven registries: workloads by name, systems by name.
+//! Data-driven registries: workload *families* with parameterized
+//! builders, named scenario presets, and systems by name.
 //!
-//! The workload registry replaces `paper_suite()` indexing as the way
-//! experiments refer to kernels — specs carry names, the engine builds
-//! instances on demand inside worker threads. The system list replaces the
-//! old closed five-system enum: the paper systems (and the extra memory
-//! backends) are plain [`SystemSpec`] values, and callers can register or
-//! construct new ones ("Runahead-8x8", "Cache+SPM 2-way") without
-//! touching this module.
+//! PR 1 made systems data and PR 2 made memory backends data; this module
+//! does the same for workloads. A family ("mesh", "join", "aggregate", …)
+//! is a builder taking a [`Params`] bag — the workload half of a sweep
+//! spec — and every named kernel ("aggregate/cora", "small/grad",
+//! "join_probe") is a *preset*: a family plus stored params, plain data.
+//! Unknown params, out-of-range values and misspelled names are hard
+//! errors with nearest-name suggestions, mirroring the system-spec keys.
 
-use super::SystemSpec;
+use super::json::Json;
+use super::{ScenarioSpec, SystemSpec};
 use crate::workloads::{
-    GcnAggregate, Grad, GraphSpec, PermSort, RadixHist, RadixUpdate, Rgb, Src2Dest, Workload,
+    GcnAggregate, Grad, GraphSpec, HashJoin, MeshOrder, MeshSpmv, PermSort, RadixHist,
+    RadixUpdate, Rgb, Src2Dest, Workload,
 };
 use std::sync::Arc;
 
-/// Builds one fresh workload instance (deterministic seeds make every
-/// instance identical).
-pub type WorkloadFactory = Arc<dyn Fn() -> Box<dyn Workload> + Send + Sync>;
+/// Workload parameter bag: the family-specific keys of one `workloads`
+/// entry in a sweep spec (everything except `family`/`name`). Families
+/// check keys strictly — a typo never silently runs default inputs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Params {
+    pairs: Vec<(String, Json)>,
+}
 
-struct Entry {
+impl Params {
+    pub fn new() -> Self {
+        Params::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Append a key (builder style; later duplicates win on lookup order —
+    /// `set` replaces instead to keep derived names canonical).
+    pub fn set(mut self, key: impl Into<String>, v: Json) -> Self {
+        let key = key.into();
+        self.pairs.retain(|(k, _)| *k != key);
+        self.pairs.push((key, v));
+        self
+    }
+
+    pub fn set_u64(self, key: impl Into<String>, v: u64) -> Self {
+        self.set(key, Json::u64(v))
+    }
+
+    pub fn set_str(self, key: impl Into<String>, v: impl Into<String>) -> Self {
+        self.set(key, Json::str(v.into()))
+    }
+
+    /// Raw insertion used by the spec parser (preserves spec order for
+    /// deterministic derived names).
+    pub(crate) fn push(&mut self, key: impl Into<String>, v: Json) {
+        self.pairs.push((key.into(), v));
+    }
+
+    /// Strict key check: every present key must be known to the family.
+    pub fn check_keys(&self, family: &str, known: &[&str]) -> Result<(), String> {
+        for (k, _) in &self.pairs {
+            if !known.contains(&k.as_str()) {
+                let hint = nearest(k, known.iter().copied())
+                    .map(|n| format!(" (did you mean {n:?}?)"))
+                    .unwrap_or_default();
+                return Err(format!(
+                    "unknown {family} param {k:?}{hint}; known: {}",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Checked numeric access, as for system keys: present-but-invalid
+    /// (negative, fractional, non-numeric) is an error, absent = default.
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(j) => j
+                .as_u64()
+                .ok_or_else(|| format!("{key:?} must be a non-negative integer, got {}", j.render())),
+        }
+    }
+
+    pub fn u32(&self, key: &str, default: u32) -> Result<u32, String> {
+        let v = self.u64(key, default as u64)?;
+        u32::try_from(v).map_err(|_| format!("{key:?} must fit in 32 bits, got {v}"))
+    }
+
+    /// A fraction in [0, 1] (skew knobs).
+    pub fn fraction(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(j) => j
+                .as_f64()
+                .filter(|f| (0.0..=1.0).contains(f))
+                .ok_or_else(|| format!("{key:?} must be a number in [0, 1], got {}", j.render())),
+        }
+    }
+
+    /// A string drawn from a closed set of choices.
+    pub fn choice(&self, key: &str, allowed: &[&str], default: &str) -> Result<String, String> {
+        match self.get(key) {
+            None => Ok(default.to_string()),
+            Some(j) => match j.as_str() {
+                Some(s) if allowed.contains(&s) => Ok(s.to_string()),
+                _ => Err(format!(
+                    "{key:?} must be one of {}, got {}",
+                    allowed.iter().map(|a| format!("{a:?}")).collect::<Vec<_>>().join("/"),
+                    j.render()
+                )),
+            },
+        }
+    }
+
+    /// Compact `k=v` rendering for derived scenario names (spec order).
+    pub fn summary(&self) -> String {
+        self.pairs
+            .iter()
+            .map(|(k, v)| match v {
+                Json::Str(s) => format!("{k}={s}"),
+                other => format!("{k}={}", other.render()),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Builds one workload instance from a parameter bag (deterministic seeds
+/// make every instance with equal params identical).
+pub type FamilyBuilder = Arc<dyn Fn(&Params) -> Result<Box<dyn Workload>, String> + Send + Sync>;
+
+struct Family {
     name: String,
-    factory: WorkloadFactory,
+    builder: FamilyBuilder,
+}
+
+struct Preset {
+    name: String,
+    family: String,
+    params: Params,
     /// Part of the Table 1 paper suite (figure campaigns iterate these).
     paper: bool,
 }
 
-/// Name → workload factory table.
+/// Name → workload-family/preset table.
 pub struct WorkloadRegistry {
-    entries: Vec<Entry>,
+    families: Vec<Family>,
+    presets: Vec<Preset>,
 }
 
 impl WorkloadRegistry {
     pub fn empty() -> Self {
-        WorkloadRegistry { entries: Vec::new() }
+        WorkloadRegistry { families: Vec::new(), presets: Vec::new() }
     }
 
-    /// Table 1 paper suite (full-size inputs) plus fast variants:
-    /// `aggregate/tiny` and the `small/<kernel>` reduced-input set.
+    /// The built-in families plus the named presets: the Table 1 paper
+    /// suite (full-size inputs), the irregular database/HPC additions
+    /// (`join_build`, `join_probe`, `mesh`, `mesh/random`) and the
+    /// reduced-input fast set (`aggregate/tiny`, `small/<kernel>`).
     pub fn builtin() -> Self {
         let mut r = WorkloadRegistry::empty();
-        for spec in GraphSpec::paper_datasets() {
-            r.add(format!("aggregate/{}", spec.name), true, move || {
-                Box::new(GcnAggregate::new(spec))
-            });
+        r.install_families();
+        // Table 1, in paper order.
+        for ds in ["citeseer", "cora", "pubmed", "ogbn_arxiv"] {
+            r.preset(
+                format!("aggregate/{ds}"),
+                "aggregate",
+                Params::new().set_str("dataset", ds),
+                true,
+            );
         }
-        r.add("grad", true, || Box::new(Grad::default()));
-        r.add("perm_sort", true, || Box::new(PermSort::default()));
-        r.add("radix_hist", true, || Box::new(RadixHist::default()));
-        r.add("radix_update", true, || Box::new(RadixUpdate::default()));
-        r.add("rgb", true, || Box::new(Rgb::default()));
-        r.add("src2dest", true, || Box::new(Src2Dest::default()));
-        // Reduced-size variants for fast sweeps and tests.
-        r.add("aggregate/tiny", false, || Box::new(GcnAggregate::new(GraphSpec::tiny())));
-        r.add("small/grad", false, || Box::new(Grad::small()));
-        r.add("small/perm_sort", false, || Box::new(PermSort::small()));
-        r.add("small/radix_hist", false, || Box::new(RadixHist::small()));
-        r.add("small/radix_update", false, || Box::new(RadixUpdate::small()));
-        r.add("small/rgb", false, || Box::new(Rgb::small()));
-        r.add("small/src2dest", false, || Box::new(Src2Dest::small()));
+        for k in ["grad", "perm_sort", "radix_hist", "radix_update", "rgb", "src2dest"] {
+            r.preset(k, k, Params::new(), true);
+        }
+        // Irregular additions (abstract: databases, unstructured meshes).
+        r.preset("join_build", "join", Params::new().set_str("phase", "build"), false);
+        r.preset("join_probe", "join", Params::new().set_str("phase", "probe"), false);
+        r.preset("mesh", "mesh", Params::new(), false);
+        r.preset("mesh/random", "mesh", Params::new().set_str("order", "random"), false);
+        // Reduced-size variants for fast sweeps and tests (same order as
+        // `workloads::small_suite`, which a test asserts).
+        r.preset("aggregate/tiny", "aggregate", Params::new().set_str("dataset", "tiny"), false);
+        for k in ["grad", "perm_sort", "radix_hist", "radix_update", "rgb", "src2dest"] {
+            r.preset(format!("small/{k}"), k, Params::new().set_str("scale", "small"), false);
+        }
+        r.preset(
+            "small/join_build",
+            "join",
+            Params::new().set_str("scale", "small").set_str("phase", "build"),
+            false,
+        );
+        r.preset(
+            "small/join_probe",
+            "join",
+            Params::new().set_str("scale", "small").set_str("phase", "probe"),
+            false,
+        );
+        r.preset("small/mesh", "mesh", Params::new().set_str("scale", "small"), false);
         r
     }
 
-    fn add(
-        &mut self,
-        name: impl Into<String>,
-        paper: bool,
-        f: impl Fn() -> Box<dyn Workload> + Send + Sync + 'static,
-    ) {
-        self.entries.push(Entry { name: name.into(), factory: Arc::new(f), paper });
+    fn install_families(&mut self) {
+        self.add_family("aggregate", |p| {
+            p.check_keys("aggregate", &["scale", "dataset", "nodes", "edges", "feat_dim", "seed"])?;
+            let scale = p.choice("scale", &["paper", "small"], "paper")?;
+            let default_ds = if scale == "small" { "tiny" } else { "cora" };
+            let ds = p.choice(
+                "dataset",
+                &["citeseer", "cora", "pubmed", "ogbn_arxiv", "tiny"],
+                default_ds,
+            )?;
+            let base = if ds == "tiny" {
+                GraphSpec::tiny()
+            } else {
+                GraphSpec::paper_datasets().into_iter().find(|s| s.name == ds).expect("paper dataset")
+            };
+            let nodes = p.u32("nodes", base.nodes)?;
+            let edges = p.u32("edges", base.edges)?;
+            let feat_dim = p.u32("feat_dim", base.feat_dim)?;
+            let seed = p.u64("seed", base.seed)?;
+            if nodes == 0 || edges == 0 {
+                return Err("\"nodes\" and \"edges\" must be at least 1".into());
+            }
+            if feat_dim == 0 || !feat_dim.is_power_of_two() {
+                return Err(format!("\"feat_dim\" must be a power of two, got {feat_dim}"));
+            }
+            // The feature/output arrays hold nodes*feat_dim words; guard
+            // the u64 product (a u32 wrap would silently allocate tiny
+            // arrays) and keep the worst-loaded port — two edge streams
+            // plus one node-feature array — inside its address region.
+            let nf_words = nodes as u64 * feat_dim as u64;
+            if 2 * edges as u64 + nf_words > 390_000 {
+                return Err(format!(
+                    "graph too large: 2*edges + nodes*feat_dim must stay <= 390000 \
+                     words per port (got edges={edges}, nodes*feat_dim={nf_words})"
+                ));
+            }
+            let custom = (nodes, edges, feat_dim, seed)
+                != (base.nodes, base.edges, base.feat_dim, base.seed);
+            let spec =
+                if custom { GraphSpec::custom(nodes, edges, feat_dim, seed) } else { base };
+            Ok(Box::new(GcnAggregate::new(spec)))
+        });
+        self.add_family("grad", |p| {
+            p.check_keys("grad", &["scale", "cells", "faces", "seed"])?;
+            let mut wl =
+                if p.choice("scale", &["paper", "small"], "paper")? == "small" {
+                    Grad::small()
+                } else {
+                    Grad::default()
+                };
+            wl.cells = p.u32("cells", wl.cells)?;
+            wl.faces = p.u32("faces", wl.faces)?;
+            wl.seed = p.u64("seed", wl.seed)?;
+            if wl.cells == 0 || wl.faces == 0 {
+                return Err("\"cells\" and \"faces\" must be at least 1".into());
+            }
+            Ok(Box::new(wl))
+        });
+        self.add_family("perm_sort", |p| {
+            p.check_keys("perm_sort", &["scale", "n", "seed"])?;
+            let mut wl = if p.choice("scale", &["paper", "small"], "paper")? == "small" {
+                PermSort::small()
+            } else {
+                PermSort::default()
+            };
+            wl.n = p.u32("n", wl.n)?;
+            wl.seed = p.u64("seed", wl.seed)?;
+            if wl.n == 0 {
+                return Err("\"n\" must be at least 1".into());
+            }
+            Ok(Box::new(wl))
+        });
+        self.add_family("radix_hist", |p| {
+            p.check_keys("radix_hist", &["scale", "n", "buckets", "shift", "seed"])?;
+            let mut wl = if p.choice("scale", &["paper", "small"], "paper")? == "small" {
+                RadixHist::small()
+            } else {
+                RadixHist::default()
+            };
+            wl.n = p.u32("n", wl.n)?;
+            wl.buckets = p.u32("buckets", wl.buckets)?;
+            wl.shift = p.u32("shift", wl.shift)?;
+            wl.seed = p.u64("seed", wl.seed)?;
+            check_radix(wl.n, wl.buckets, wl.shift)?;
+            Ok(Box::new(wl))
+        });
+        self.add_family("radix_update", |p| {
+            p.check_keys("radix_update", &["scale", "n", "buckets", "shift", "seed"])?;
+            let mut wl = if p.choice("scale", &["paper", "small"], "paper")? == "small" {
+                RadixUpdate::small()
+            } else {
+                RadixUpdate::default()
+            };
+            wl.n = p.u32("n", wl.n)?;
+            wl.buckets = p.u32("buckets", wl.buckets)?;
+            wl.shift = p.u32("shift", wl.shift)?;
+            wl.seed = p.u64("seed", wl.seed)?;
+            check_radix(wl.n, wl.buckets, wl.shift)?;
+            Ok(Box::new(wl))
+        });
+        self.add_family("rgb", |p| {
+            p.check_keys("rgb", &["scale", "pixels", "palette", "seed"])?;
+            let mut wl = if p.choice("scale", &["paper", "small"], "paper")? == "small" {
+                Rgb::small()
+            } else {
+                Rgb::default()
+            };
+            wl.pixels = p.u32("pixels", wl.pixels)?;
+            wl.palette = p.u32("palette", wl.palette)?;
+            wl.seed = p.u64("seed", wl.seed)?;
+            if wl.pixels == 0 || wl.palette == 0 {
+                return Err("\"pixels\" and \"palette\" must be at least 1".into());
+            }
+            Ok(Box::new(wl))
+        });
+        self.add_family("src2dest", |p| {
+            p.check_keys("src2dest", &["scale", "n", "jitter", "seed"])?;
+            let mut wl = if p.choice("scale", &["paper", "small"], "paper")? == "small" {
+                Src2Dest::small()
+            } else {
+                Src2Dest::default()
+            };
+            wl.n = p.u32("n", wl.n)?;
+            wl.jitter = p.u32("jitter", wl.jitter)?;
+            wl.seed = p.u64("seed", wl.seed)?;
+            if wl.n == 0 {
+                return Err("\"n\" must be at least 1".into());
+            }
+            Ok(Box::new(wl))
+        });
+        self.add_family("join", |p| {
+            p.check_keys("join", &["scale", "phase", "rows", "buckets", "probes", "skew", "seed"])?;
+            let small = p.choice("scale", &["paper", "small"], "paper")? == "small";
+            let phase = p.choice("phase", &["build", "probe"], "probe")?;
+            let mut wl = match (phase.as_str(), small) {
+                ("build", false) => HashJoin::default_build(),
+                ("build", true) => HashJoin::small_build(),
+                ("probe", false) => HashJoin::default_probe(),
+                _ => HashJoin::small_probe(),
+            };
+            wl.rows = p.u32("rows", wl.rows)?;
+            wl.buckets = p.u32("buckets", wl.buckets)?;
+            wl.skew = p.fraction("skew", wl.skew)?;
+            wl.seed = p.u64("seed", wl.seed)?;
+            const CAP: u32 = 1 << 17; // keeps every array inside its port region
+            if wl.rows == 0 || wl.rows > CAP {
+                return Err(format!("\"rows\" must be in 1..={CAP}, got {}", wl.rows));
+            }
+            if wl.buckets == 0 || wl.buckets > CAP || !wl.buckets.is_power_of_two() {
+                return Err(format!(
+                    "\"buckets\" must be a power of two in 1..={CAP}, got {}",
+                    wl.buckets
+                ));
+            }
+            if phase == "build" {
+                if p.get("probes").is_some() {
+                    return Err("\"probes\" applies to the probe phase only".into());
+                }
+            } else {
+                wl.probes = p.u32("probes", wl.probes)?;
+                if wl.probes == 0 || wl.probes > CAP {
+                    return Err(format!("\"probes\" must be in 1..={CAP}, got {}", wl.probes));
+                }
+                // Divide, don't multiply: 2*rows would wrap for huge rows.
+                if wl.rows > wl.buckets / 2 {
+                    return Err(format!(
+                        "probe needs rows <= buckets/2 (one tuple per bucket; \
+                         got rows={} buckets={})",
+                        wl.rows, wl.buckets
+                    ));
+                }
+            }
+            Ok(Box::new(wl))
+        });
+        self.add_family("mesh", |p| {
+            p.check_keys("mesh", &["scale", "dim", "order", "seed"])?;
+            let mut wl = if p.choice("scale", &["paper", "small"], "paper")? == "small" {
+                MeshSpmv::small()
+            } else {
+                MeshSpmv::default()
+            };
+            wl.dim = p.u32("dim", wl.dim)?;
+            wl.order = match p.choice("order", &["natural", "random"], "natural")?.as_str() {
+                "random" => MeshOrder::Random,
+                _ => wl.order,
+            };
+            wl.seed = p.u64("seed", wl.seed)?;
+            // dim 160 keeps row+col (nnz words each) inside a port region.
+            if wl.dim < 2 || wl.dim > 160 {
+                return Err(format!("\"dim\" must be in 2..=160, got {}", wl.dim));
+            }
+            Ok(Box::new(wl))
+        });
     }
 
-    /// Register (or override) a workload under `name`.
+    /// Register (or replace) a parameterized workload family.
+    pub fn add_family(
+        &mut self,
+        name: impl Into<String>,
+        f: impl Fn(&Params) -> Result<Box<dyn Workload>, String> + Send + Sync + 'static,
+    ) {
+        let name = name.into();
+        self.families.retain(|e| e.name != name);
+        self.families.push(Family { name, builder: Arc::new(f) });
+    }
+
+    fn preset(&mut self, name: impl Into<String>, family: &str, params: Params, paper: bool) {
+        let name = name.into();
+        assert!(self.family(family).is_some(), "preset {name:?} names unknown family {family:?}");
+        self.presets.retain(|e| e.name != name);
+        self.presets.push(Preset { name, family: family.to_string(), params, paper });
+    }
+
+    /// Register (or override) a fixed workload under `name` — closure
+    /// convenience for custom kernels; the family of the same name rejects
+    /// any params.
     pub fn register(
         &mut self,
         name: impl Into<String>,
         f: impl Fn() -> Box<dyn Workload> + Send + Sync + 'static,
     ) {
         let name = name.into();
-        self.entries.retain(|e| e.name != name);
-        self.add(name, false, f);
+        self.add_family(name.clone(), move |p: &Params| {
+            p.check_keys("custom workload", &[])?;
+            Ok(f())
+        });
+        let family = name.clone();
+        self.preset(name, &family, Params::new(), false);
+    }
+
+    fn family(&self, name: &str) -> Option<&Family> {
+        self.families.iter().find(|e| e.name == name)
     }
 
     pub fn contains(&self, name: &str) -> bool {
-        self.entries.iter().any(|e| e.name == name)
+        self.presets.iter().any(|e| e.name == name) || self.family(name).is_some()
     }
 
-    /// Build a fresh instance of the named workload.
+    /// Build a fresh instance of the named preset (or a family at default
+    /// params). `None` for unknown names; [`WorkloadRegistry::resolve`]
+    /// adds error text with suggestions.
     pub fn build(&self, name: &str) -> Option<Box<dyn Workload>> {
-        self.entries.iter().find(|e| e.name == name).map(|e| (e.factory)())
+        self.resolve(&ScenarioSpec::preset(name)).ok()
+    }
+
+    /// Validate a scenario without keeping the instance. Bare preset
+    /// names are existence checks (no dataset synthesis on the caller
+    /// thread); parameterized scenarios run the family builder so param
+    /// errors surface before any job is queued.
+    pub fn validate(&self, s: &ScenarioSpec) -> Result<(), String> {
+        if s.family.is_none() && s.params.is_empty() {
+            if self.presets.iter().any(|p| p.name == s.name) || self.family(&s.name).is_some() {
+                return Ok(());
+            }
+            return Err(self.unknown_name_error(&s.name));
+        }
+        self.resolve(s).map(|_| ())
+    }
+
+    /// Build the workload a scenario describes: a preset by name, a family
+    /// at default params, or a family with explicit params. Unknown names
+    /// and bad params are errors with nearest-name suggestions.
+    pub fn resolve(&self, s: &ScenarioSpec) -> Result<Box<dyn Workload>, String> {
+        match &s.family {
+            None => {
+                if !s.params.is_empty() {
+                    // Params on a bare name would be dropped silently.
+                    return Err(format!(
+                        "workload {:?} carries params but no \"family\"",
+                        s.name
+                    ));
+                }
+                if let Some(p) = self.presets.iter().find(|p| p.name == s.name) {
+                    let fam = self.family(&p.family).expect("preset family registered");
+                    return (fam.builder)(&p.params)
+                        .map_err(|e| format!("workload {:?}: {e}", s.name));
+                }
+                if let Some(fam) = self.family(&s.name) {
+                    // A bare family name runs at its default params.
+                    return (fam.builder)(&Params::new())
+                        .map_err(|e| format!("workload {:?}: {e}", s.name));
+                }
+                Err(self.unknown_name_error(&s.name))
+            }
+            Some(f) => {
+                let fam = self.family(f).ok_or_else(|| {
+                    let hint = nearest(f, self.families.iter().map(|e| e.name.as_str()))
+                        .map(|n| format!(" (did you mean {n:?}?)"))
+                        .unwrap_or_default();
+                    format!(
+                        "unknown workload family {f:?}{hint}; families: {}",
+                        self.family_names().join(", ")
+                    )
+                })?;
+                (fam.builder)(&s.params).map_err(|e| format!("workload {:?}: {e}", s.name))
+            }
+        }
+    }
+
+    fn unknown_name_error(&self, name: &str) -> String {
+        let hint = nearest(name, self.presets.iter().map(|e| e.name.as_str()))
+            .map(|n| format!(" (did you mean {n:?}?)"))
+            .unwrap_or_default();
+        format!("unknown workload {name:?}{hint}; known: {}", self.names().join(", "))
     }
 
     pub fn names(&self) -> Vec<String> {
-        self.entries.iter().map(|e| e.name.clone()).collect()
+        self.presets.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// The registered family names (parameterizable in sweep specs).
+    pub fn family_names(&self) -> Vec<String> {
+        self.families.iter().map(|e| e.name.clone()).collect()
     }
 
     /// The Table 1 suite names, in paper order.
     pub fn paper_names(&self) -> Vec<String> {
-        self.entries.iter().filter(|e| e.paper).map(|e| e.name.clone()).collect()
+        self.presets.iter().filter(|e| e.paper).map(|e| e.name.clone()).collect()
     }
 
     /// The reduced-input fast set (same kernels, small inputs).
     pub fn small_names(&self) -> Vec<String> {
-        self.entries
+        self.presets
             .iter()
             .filter(|e| e.name == "aggregate/tiny" || e.name.starts_with("small/"))
             .map(|e| e.name.clone())
             .collect()
     }
+}
+
+fn check_radix(n: u32, buckets: u32, shift: u32) -> Result<(), String> {
+    if n == 0 {
+        return Err("\"n\" must be at least 1".into());
+    }
+    if buckets == 0 || !buckets.is_power_of_two() {
+        return Err(format!("\"buckets\" must be a power of two, got {buckets}"));
+    }
+    if shift >= 32 {
+        return Err(format!("\"shift\" must be below 32, got {shift}"));
+    }
+    Ok(())
+}
+
+/// Levenshtein distance, for did-you-mean suggestions on misspelled
+/// workload/family/param names.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur.push((prev[j + 1] + 1).min(cur[j] + 1).min(prev[j] + cost));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// Closest candidate within an edit-distance budget, if any.
+fn nearest<'a>(name: &str, candidates: impl Iterator<Item = &'a str>) -> Option<String> {
+    candidates
+        .map(|c| (edit_distance(name, c), c))
+        .min()
+        .filter(|(d, _)| *d <= 3 && *d < name.chars().count())
+        .map(|(_, c)| c.to_string())
 }
 
 /// The five systems of Fig 11a as data (Table 2 CPUs, Table 3 CGRAs).
@@ -156,14 +621,71 @@ mod tests {
     }
 
     #[test]
-    fn small_set_and_registration_work() {
+    fn small_set_matches_small_suite_by_construction() {
+        // Registry-derived count, not a hard-coded literal: the small
+        // preset list and `small_suite()` must stay in lockstep.
+        let reg = WorkloadRegistry::builtin();
+        let suite = crate::workloads::small_suite();
+        let names = reg.small_names();
+        assert_eq!(names.len(), suite.len());
+        for (name, wl) in names.iter().zip(suite.iter()) {
+            let built = reg.build(name).unwrap();
+            assert_eq!(built.name(), wl.name(), "preset {name}");
+            assert_eq!(built.iterations(), wl.iterations(), "preset {name}");
+        }
+    }
+
+    #[test]
+    fn closure_registration_still_works() {
         let mut reg = WorkloadRegistry::builtin();
-        assert_eq!(reg.small_names().len(), 7);
         assert!(reg.build("small/rgb").is_some());
-        reg.register("tiny2", || {
-            Box::new(GcnAggregate::new(GraphSpec::tiny()))
-        });
+        reg.register("tiny2", || Box::new(GcnAggregate::new(GraphSpec::tiny())));
         assert!(reg.contains("tiny2"));
+        assert!(reg.build("tiny2").is_some());
+        // The auto-family of a closure registration rejects params.
+        let s = ScenarioSpec::family("tiny2", Params::new().set_u64("nodes", 8));
+        assert!(reg.resolve(&s).unwrap_err().contains("nodes"));
+    }
+
+    #[test]
+    fn families_build_with_params_and_reject_typos() {
+        let reg = WorkloadRegistry::builtin();
+        // Parameterized mesh instance.
+        let s = ScenarioSpec::family(
+            "mesh",
+            Params::new().set_u64("dim", 24).set_str("order", "random"),
+        );
+        let wl = reg.resolve(&s).unwrap();
+        assert_eq!(wl.name(), "mesh/24x24-random");
+        assert_eq!(wl.iterations(), 5 * 24 * 24 - 4 * 24);
+        // Unknown param key is a hard error with a suggestion.
+        let bad = ScenarioSpec::family("mesh", Params::new().set_u64("dims", 24));
+        let e = reg.resolve(&bad).unwrap_err();
+        assert!(e.contains("dims") && e.contains("dim"), "{e}");
+        // Out-of-range values are hard errors.
+        let bad = ScenarioSpec::family("mesh", Params::new().set_u64("dim", 1));
+        assert!(reg.resolve(&bad).unwrap_err().contains("dim"));
+        let bad = ScenarioSpec::family("join", Params::new().set_u64("buckets", 3));
+        assert!(reg.resolve(&bad).unwrap_err().contains("power of two"));
+        // Probe-only keys are rejected on the build phase.
+        let bad = ScenarioSpec::family(
+            "join",
+            Params::new().set_str("phase", "build").set_u64("probes", 64),
+        );
+        assert!(reg.resolve(&bad).unwrap_err().contains("probe phase"));
+    }
+
+    #[test]
+    fn unknown_names_suggest_nearest() {
+        let reg = WorkloadRegistry::builtin();
+        let e = reg.resolve(&ScenarioSpec::preset("join_prob")).unwrap_err();
+        assert!(e.contains("join_probe"), "{e}");
+        let mut s = ScenarioSpec::preset("x");
+        s.family = Some("mish".into());
+        let e = reg.resolve(&s).unwrap_err();
+        assert!(e.contains("mesh"), "{e}");
+        // A bare family name resolves at default params.
+        assert!(reg.build("join").is_some());
     }
 
     #[test]

@@ -18,6 +18,7 @@ USAGE:
   repro figure <id|all> [-j N]      regenerate a figure: fig2 fig5 fig7
                                     fig11a fig11b fig12a..fig12f fig13 fig14
                                     fig15 fig16 fig17 fig18 motivation ablation
+                                    scaling (working-set scaling per system)
   repro table <1|2|3|all>           regenerate a table
   repro bench                       run the fixed kernel x system perf
                                     matrix serially and write BENCH_sim.json
@@ -85,12 +86,14 @@ fn take_flag(args: &mut Vec<String>, flag: &str) -> bool {
 fn list() {
     // No engine needed: the registry is plain data.
     let registry = cgra_mem::exp::WorkloadRegistry::builtin();
-    println!("kernels (Table 1 + fast variants):");
+    println!("kernels (Table 1 + irregular additions + fast variants):");
     for name in registry.names() {
         if let Some(wl) = registry.build(&name) {
             println!("  {:<22} {} ({} iterations)", name, wl.domain(), wl.iterations());
         }
     }
+    println!("workload families (parameterize in a sweep spec's workloads array):");
+    println!("  {}", registry.family_names().join(", "));
     println!("systems (Fig 11a):");
     for s in cgra_mem::exp::builtin_systems() {
         println!("  {}", s.name);
@@ -99,7 +102,7 @@ fn list() {
     for s in cgra_mem::exp::extra_systems() {
         println!("  {}", s.name);
     }
-    println!("new systems: describe them in a sweep spec (repro sweep; see DESIGN.md)");
+    println!("new systems/scenarios: describe them in a sweep spec (repro sweep; see DESIGN.md)");
 }
 
 fn run(args: &[String], threads: usize, json_out: bool) {
@@ -191,6 +194,7 @@ fn figure(id: &str, threads: usize) {
             "fig18" => report::fig18(),
             "motivation" => report::motivation(&eng),
             "ablation" => report::ablation(&eng),
+            "scaling" => report::scaling(&eng),
             _ => return None,
         })
     };
@@ -198,7 +202,7 @@ fn figure(id: &str, threads: usize) {
         vec![
             "fig2", "fig5", "fig7", "fig11a", "fig11b", "fig12a", "fig12b", "fig12c", "fig12d",
             "fig12e", "fig12f", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18",
-            "motivation", "ablation",
+            "motivation", "ablation", "scaling",
         ]
     } else {
         vec![id]
@@ -236,7 +240,15 @@ fn table(id: &str) {
 fn bench() {
     use std::time::Instant;
     let registry = cgra_mem::exp::WorkloadRegistry::builtin();
-    let kernels = ["aggregate/tiny", "small/rgb", "small/grad", "small/radix_update"];
+    let kernels = [
+        "aggregate/tiny",
+        "small/rgb",
+        "small/grad",
+        "small/radix_update",
+        "small/join_build",
+        "small/join_probe",
+        "small/mesh",
+    ];
     let systems = [
         SystemSpec::cache_spm(),
         SystemSpec::runahead(),

@@ -38,21 +38,28 @@ pub fn plan_from_traces(
     }
     let h: Vec<Vec<f64>> = profiles.iter().map(|p| p.profit.clone()).collect();
     let (expected_profit, mut ways) = max_profit(&h, budget);
-    // Ways are physical: any budget the DP left unspent (flat profits)
-    // is parked round-robin so every way keeps an owner.
-    let mut leftover = budget - ways.iter().sum::<usize>();
-    let mut p = 0usize;
-    while leftover > 0 {
-        ways[p % ports] += 1;
-        p += 1;
-        leftover -= 1;
-    }
+    park_leftover_ways(&mut ways, budget);
     let shifts_out: Vec<u8> = profiles
         .iter()
         .zip(ways.iter())
         .map(|(p, &w)| p.best_shift[w])
         .collect();
     ReconfigPlan { ways, shifts: shifts_out, expected_profit, profiles }
+}
+
+/// Ways are physical: any budget the DP left unspent (flat profits) is
+/// parked round-robin so every way keeps an owner. Parking starts at the
+/// least-provisioned port — always starting at port 0 systematically
+/// over-granted it (and its cache paid the flush on every replan).
+fn park_leftover_ways(ways: &mut [usize], budget: usize) {
+    let ports = ways.len();
+    let mut leftover = budget - ways.iter().sum::<usize>();
+    let mut p = (0..ports).min_by_key(|&p| ways[p]).unwrap_or(0);
+    while leftover > 0 {
+        ways[p % ports] += 1;
+        p += 1;
+        leftover -= 1;
+    }
 }
 
 /// Apply a plan to the live subsystem: move ways between L1s via their
@@ -158,6 +165,23 @@ mod tests {
         apply_plan(&mut mem, &plan);
         let migrated_second = apply_plan(&mut mem, &plan);
         assert_eq!(migrated_second, 0);
+    }
+
+    #[test]
+    fn leftover_ways_park_at_least_provisioned_port_first() {
+        // One leftover way on an uneven allocation lands on the starved
+        // port, not on port 0.
+        let mut ways = vec![3, 1, 3, 2];
+        park_leftover_ways(&mut ways, 10);
+        assert_eq!(ways, vec![3, 2, 3, 2]);
+        // Several leftovers wrap round-robin from that starting point.
+        let mut ways = vec![2, 2, 0, 0];
+        park_leftover_ways(&mut ways, 7);
+        assert_eq!(ways, vec![3, 2, 1, 1]);
+        // Already-spent budgets are untouched.
+        let mut ways = vec![1, 1];
+        park_leftover_ways(&mut ways, 2);
+        assert_eq!(ways, vec![1, 1]);
     }
 
     #[test]

@@ -4,11 +4,13 @@
 //! worker pool, so `repro figure all` reuses one pool for every figure.
 //! EXPERIMENTS.md records these outputs against the published values.
 
-use crate::exp::{reconfig_experiment, Engine, ExperimentSpec, Report, SystemSpec};
+use crate::exp::{
+    reconfig_experiment, Engine, ExperimentSpec, Params, Report, ScenarioSpec, SystemSpec,
+};
 use crate::mem::{CacheConfig, SubsystemConfig};
 use crate::sim::{CgraConfig, ExecMode};
 use crate::stats;
-use crate::workloads::{prepare, GcnAggregate, GraphSpec};
+use crate::workloads::{prepare, GcnAggregate, GraphSpec, MeshOrder, MeshSpmv, Workload};
 
 const CORA: &str = "aggregate/cora";
 
@@ -517,6 +519,63 @@ pub fn fig18() -> String {
         "§4.5 runahead area overhead vs native HyCUBE = {:.2}%   (paper: 14.78%)\n",
         crate::area::RUNAHEAD_PE_OVERHEAD * 100.0
     ));
+    s
+}
+
+/// Working-set scaling: performance vs. array size as the data outgrows
+/// the SPM window, per system. A randomly-ordered mesh SpMV is swept
+/// across grid sizes through the parameterized scenario layer; the
+/// SPM-only series collapses once x/y spill past its window, the cache
+/// systems degrade gracefully, and the ideal backend stays the flat floor.
+pub fn scaling(eng: &Engine) -> String {
+    scaling_with(eng, &[16, 32, 64, 96, 128])
+}
+
+/// The scaling sweep at caller-chosen mesh dims (tests use small grids).
+pub fn scaling_with(eng: &Engine, dims: &[u32]) -> String {
+    let systems = [
+        SystemSpec::spm_only(),
+        SystemSpec::cache_spm(),
+        SystemSpec::runahead(),
+        SystemSpec::ideal(),
+    ];
+    let sys_names: Vec<String> = systems.iter().map(|s| s.name.clone()).collect();
+    let scenarios: Vec<ScenarioSpec> = dims
+        .iter()
+        .map(|&d| {
+            ScenarioSpec::family(
+                "mesh",
+                Params::new().set_u64("dim", d as u64).set_str("order", "random"),
+            )
+            .named(format!("mesh/{d}x{d}"))
+        })
+        .collect();
+    let report = eng.run(&ExperimentSpec::new("scaling").workloads(scenarios).systems(systems));
+    let mut s = String::from(
+        "Scaling — cycles per nonzero vs. mesh size (unstructured SpMV, random order)\n",
+    );
+    s.push_str(&format!("{:<14} {:>9}", "mesh", "x+y KB"));
+    for n in &sys_names {
+        s.push_str(&format!(" {:>10}", n));
+    }
+    s.push('\n');
+    for (&d, w) in dims.iter().zip(report.workloads.iter()) {
+        // One authoritative nonzero count — the workload's own (the
+        // scenario above runs the same family defaults).
+        let nnz = MeshSpmv::new(d, MeshOrder::Random, 101).iterations() as f64;
+        let kb = (d as f64) * (d as f64) * 8.0 / 1024.0;
+        s.push_str(&format!("{:<14} {:>9.1}", w, kb));
+        for n in &sys_names {
+            let m = report.get(w, n).unwrap();
+            assert!(m.output_ok, "{w} on {n} diverged");
+            s.push_str(&format!(" {:>10.2}", m.cycles as f64 / nnz));
+        }
+        s.push('\n');
+    }
+    s.push_str(
+        "(SPM-only holds until x/y outgrow its window, then pays off-SPM latency per\n\
+         gather; Cache+SPM/Runahead degrade with cache reach; Ideal is the floor)\n",
+    );
     s
 }
 

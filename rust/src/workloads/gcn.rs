@@ -41,7 +41,7 @@ impl Workload for GcnAggregate {
     }
 
     fn build(&self, l: &mut Layout) -> Dfg {
-        let s = self.graph.spec;
+        let s = &self.graph.spec;
         let (e, n, f) = (s.edges, s.nodes, s.feat_dim);
         // Data partitioning across virtual SPMs (§3.3). With 4+ ports the
         // regular streams, the output RMW and the feature gather each get
@@ -51,19 +51,19 @@ impl Workload for GcnAggregate {
         let (p_edge, p_out, p_w, p_feat) =
             if four { (0, 1, 2, 3) } else { (0, 0, 1, 1) };
         let b_src = l.alloc(ArraySpec {
-            name: "edge_start", port: p_edge, words: e, placement: Placement::Streamed, irregular: false,
+            name: "edge_start".into(), port: p_edge, words: e, placement: Placement::Streamed, irregular: false,
         });
         let b_dst = l.alloc(ArraySpec {
-            name: "edge_end", port: p_edge, words: e, placement: Placement::Streamed, irregular: false,
+            name: "edge_end".into(), port: p_edge, words: e, placement: Placement::Streamed, irregular: false,
         });
         let b_out = l.alloc(ArraySpec {
-            name: "output", port: p_out, words: n * f, placement: Placement::Cached, irregular: true,
+            name: "output".into(), port: p_out, words: n * f, placement: Placement::Cached, irregular: true,
         });
         let b_w = l.alloc(ArraySpec {
-            name: "weight", port: p_w, words: e, placement: Placement::Streamed, irregular: false,
+            name: "weight".into(), port: p_w, words: e, placement: Placement::Streamed, irregular: false,
         });
         let b_feat = l.alloc(ArraySpec {
-            name: "feature", port: p_feat, words: n * f, placement: Placement::Cached, irregular: true,
+            name: "feature".into(), port: p_feat, words: n * f, placement: Placement::Cached, irregular: true,
         });
 
         let log2f = f.trailing_zeros();
@@ -96,7 +96,7 @@ impl Workload for GcnAggregate {
     }
 
     fn init(&self, l: &Layout, mem: &mut Backing) {
-        let s = self.graph.spec;
+        let s = &self.graph.spec;
         mem.load_u32_slice(l.base_of("edge_start"), &self.graph.src);
         mem.load_u32_slice(l.base_of("edge_end"), &self.graph.dst);
         mem.load_u32_slice(l.base_of("weight"), &self.graph.weight);
@@ -108,7 +108,7 @@ impl Workload for GcnAggregate {
     }
 
     fn golden(&self, l: &Layout, mem: &Backing) -> Vec<u32> {
-        let s = self.graph.spec;
+        let s = &self.graph.spec;
         let f = s.feat_dim as usize;
         let feat_base = l.base_of("feature");
         let mut out = vec![0f32; (s.nodes * s.feat_dim) as usize];
@@ -123,8 +123,8 @@ impl Workload for GcnAggregate {
         out.into_iter().map(f32::to_bits).collect()
     }
 
-    fn output(&self) -> (&'static str, u32) {
-        ("output", self.graph.spec.nodes * self.graph.spec.feat_dim)
+    fn output(&self) -> (String, u32) {
+        ("output".into(), self.graph.spec.nodes * self.graph.spec.feat_dim)
     }
 
     fn output_is_f32(&self) -> bool {

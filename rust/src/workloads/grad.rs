@@ -63,19 +63,19 @@ impl Workload for Grad {
         let four = l.num_ports() >= 4;
         let (p_idx, p_grad, p_coef, p_phi) = if four { (0, 1, 2, 3) } else { (0, 0, 1, 1) };
         let b_own = l.alloc(ArraySpec {
-            name: "own", port: p_idx, words: self.faces, placement: Placement::Streamed, irregular: false,
+            name: "own".into(), port: p_idx, words: self.faces, placement: Placement::Streamed, irregular: false,
         });
         let b_nei = l.alloc(ArraySpec {
-            name: "nei", port: p_idx, words: self.faces, placement: Placement::Streamed, irregular: false,
+            name: "nei".into(), port: p_idx, words: self.faces, placement: Placement::Streamed, irregular: false,
         });
         let b_grad = l.alloc(ArraySpec {
-            name: "grad", port: p_grad, words: self.cells, placement: Placement::Cached, irregular: true,
+            name: "grad".into(), port: p_grad, words: self.cells, placement: Placement::Cached, irregular: true,
         });
         let b_coef = l.alloc(ArraySpec {
-            name: "coef", port: p_coef, words: self.faces, placement: Placement::Streamed, irregular: false,
+            name: "coef".into(), port: p_coef, words: self.faces, placement: Placement::Streamed, irregular: false,
         });
         let b_phi = l.alloc(ArraySpec {
-            name: "phi", port: p_phi, words: self.cells, placement: Placement::Cached, irregular: true,
+            name: "phi".into(), port: p_phi, words: self.cells, placement: Placement::Cached, irregular: true,
         });
 
         let mut b = DfgBuilder::new("grad");
@@ -122,8 +122,8 @@ impl Workload for Grad {
         grad.into_iter().map(f32::to_bits).collect()
     }
 
-    fn output(&self) -> (&'static str, u32) {
-        ("grad", self.cells)
+    fn output(&self) -> (String, u32) {
+        ("grad".into(), self.cells)
     }
     fn output_is_f32(&self) -> bool {
         true

@@ -10,10 +10,12 @@
 
 use crate::util::Rng;
 
-/// Static description of a graph dataset.
-#[derive(Clone, Copy, Debug)]
+/// Static description of a graph dataset. The name is owned so
+/// parameter-generated datasets (scale sweeps) can exist beside the
+/// paper's four.
+#[derive(Clone, Debug)]
 pub struct GraphSpec {
-    pub name: &'static str,
+    pub name: String,
     pub nodes: u32,
     pub edges: u32,
     /// Feature dimension (paper: reduced; must be a power of two so the
@@ -27,23 +29,29 @@ impl GraphSpec {
     /// The four evaluation datasets of Table 1.
     pub fn paper_datasets() -> Vec<GraphSpec> {
         vec![
-            GraphSpec { name: "citeseer", nodes: 3327, edges: 9104, feat_dim: 16, seed: 11 },
-            GraphSpec { name: "cora", nodes: 2708, edges: 10556, feat_dim: 16, seed: 12 },
+            GraphSpec { name: "citeseer".into(), nodes: 3327, edges: 9104, feat_dim: 16, seed: 11 },
+            GraphSpec { name: "cora".into(), nodes: 2708, edges: 10556, feat_dim: 16, seed: 12 },
             // PubMed: 19717 nodes / 88648 edges in reality; edge count
             // scaled to keep full-suite simulation tractable.
-            GraphSpec { name: "pubmed", nodes: 19717, edges: 24000, feat_dim: 16, seed: 13 },
+            GraphSpec { name: "pubmed".into(), nodes: 19717, edges: 24000, feat_dim: 16, seed: 13 },
             // OGBN-Arxiv: 169k nodes / 1.17M edges; scaled likewise.
-            GraphSpec { name: "ogbn_arxiv", nodes: 16384, edges: 30000, feat_dim: 16, seed: 14 },
+            GraphSpec { name: "ogbn_arxiv".into(), nodes: 16384, edges: 30000, feat_dim: 16, seed: 14 },
         ]
     }
 
     pub fn cora() -> GraphSpec {
-        Self::paper_datasets()[1]
+        Self::paper_datasets().remove(1)
+    }
+
+    /// A generated dataset for scale sweeps: same skewed synthesis, caller
+    /// -chosen size (feat_dim must stay a power of two — no divider).
+    pub fn custom(nodes: u32, edges: u32, feat_dim: u32, seed: u64) -> GraphSpec {
+        GraphSpec { name: format!("n{nodes}-e{edges}-s{seed}"), nodes, edges, feat_dim, seed }
     }
 
     /// Tiny graph for unit tests and quick sweeps.
     pub fn tiny() -> GraphSpec {
-        GraphSpec { name: "tiny", nodes: 256, edges: 1024, feat_dim: 4, seed: 7 }
+        GraphSpec { name: "tiny".into(), nodes: 256, edges: 1024, feat_dim: 4, seed: 7 }
     }
 }
 

@@ -1,0 +1,352 @@
+//! Database hash join — the "irregular database operations" family the
+//! paper's abstract motivates the memory subsystem with. Two phases, each
+//! a Table-1-style kernel with a golden executor:
+//!
+//! * **build** — insert every build-relation tuple into a bucket-chained
+//!   hash table:
+//!
+//!   ```c
+//!   for (i = 0; i < ROWS; i++) {
+//!       b = hash(key[i]);
+//!       next[i] = head[b];      // chain link
+//!       head[b] = i + 1;        // 0 is the empty sentinel
+//!   }
+//!   ```
+//!
+//!   The head array is a data-dependent read-modify-write through a
+//!   computed bucket index (the radix kernels' "computed locality", §4.4),
+//!   and skewed keys concentrate chains into hot buckets.
+//!
+//! * **probe** — foreign-key lookups against the built table. The build
+//!   keys are constructed one-per-bucket (a ≤50%-full table, rejection
+//!   sampled at init), so each probe resolves in one directory step:
+//!
+//!   ```c
+//!   for (i = 0; i < PROBES; i++)
+//!       out[i] = payload[slot[hash(pkey[i])]];
+//!   ```
+//!
+//!   Two dependent irregular gathers per tuple — the directory lookup and
+//!   the payload fetch — over skewed probe keys. Longer chains appear in
+//!   the build phase; DESIGN.md documents this split.
+
+use super::{ArraySpec, Layout, Placement, Workload};
+use crate::mem::Backing;
+use crate::sim::{AluOp, Dfg, DfgBuilder};
+use crate::util::Rng;
+
+/// Which half of the join the kernel executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JoinPhase {
+    Build,
+    Probe,
+}
+
+pub struct HashJoin {
+    pub phase: JoinPhase,
+    /// Build-relation tuples.
+    pub rows: u32,
+    /// Hash-table directory size (power of two; probe needs `2*rows <=
+    /// buckets` so the one-per-bucket construction terminates).
+    pub buckets: u32,
+    /// Probe-relation tuples (probe phase only).
+    pub probes: u32,
+    /// Fraction of references drawn from the hot head (0.0 = uniform).
+    pub skew: f64,
+    pub seed: u64,
+}
+
+/// Shift/XOR/AND bucket hash — computable on HyCUBE (no divider, §4.5)
+/// and replayed identically by the golden executors.
+fn hash(k: u32, mask: u32) -> u32 {
+    (k ^ (k >> 7)) & mask
+}
+
+impl HashJoin {
+    pub fn build_phase(rows: u32, buckets: u32, skew: f64, seed: u64) -> Self {
+        assert!(buckets.is_power_of_two(), "buckets must be a power of two");
+        HashJoin { phase: JoinPhase::Build, rows, buckets, probes: 0, skew, seed }
+    }
+
+    pub fn probe_phase(rows: u32, buckets: u32, probes: u32, skew: f64, seed: u64) -> Self {
+        assert!(buckets.is_power_of_two(), "buckets must be a power of two");
+        assert!(rows <= buckets / 2, "probe table must be at most half full");
+        HashJoin { phase: JoinPhase::Probe, rows, buckets, probes, skew, seed }
+    }
+
+    /// Paper-scale build: 49152 tuples into 8192 buckets (mean chain 6).
+    pub fn default_build() -> Self {
+        Self::build_phase(49152, 8192, 0.33, 81)
+    }
+
+    /// Paper-scale probe: 49152 lookups against an 8192-tuple table.
+    pub fn default_probe() -> Self {
+        Self::probe_phase(8192, 32768, 49152, 0.33, 91)
+    }
+
+    pub fn small_build() -> Self {
+        Self::build_phase(2048, 256, 0.33, 81)
+    }
+
+    pub fn small_probe() -> Self {
+        Self::probe_phase(256, 1024, 2048, 0.33, 91)
+    }
+
+    /// Build-relation keys, skew-concentrated into a small hot set.
+    fn build_keys(&self) -> Vec<u32> {
+        let mut rng = Rng::new(self.seed);
+        let hot: Vec<u32> = (0..64).map(|_| rng.next_u64() as u32 & 0x3f_ffff).collect();
+        (0..self.rows)
+            .map(|_| {
+                if (rng.gen_f32() as f64) < self.skew {
+                    hot[rng.gen_range(0, hot.len() as u64) as usize]
+                } else {
+                    rng.next_u64() as u32 & 0x3f_ffff
+                }
+            })
+            .collect()
+    }
+
+    /// Probe-phase table: distinct keys rejection-sampled one per bucket,
+    /// directory `slot[b] = tuple+1` (0 empty), payload per tuple.
+    fn table(&self) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let mask = self.buckets - 1;
+        let mut rng = Rng::new(self.seed);
+        let mut slot = vec![0u32; self.buckets as usize];
+        let mut keys = Vec::with_capacity(self.rows as usize);
+        let mut payload = vec![0u32; self.rows as usize + 1];
+        for t in 0..self.rows {
+            loop {
+                let k = rng.next_u64() as u32 & 0x3f_ffff;
+                let b = hash(k, mask) as usize;
+                if slot[b] == 0 {
+                    slot[b] = t + 1;
+                    keys.push(k);
+                    break;
+                }
+            }
+            payload[t as usize + 1] = rng.next_u64() as u32;
+        }
+        (keys, slot, payload)
+    }
+
+    /// Probe keys: skewed selection over the inserted tuples (hot tuples
+    /// are probed more often, as in a skewed foreign-key distribution).
+    fn probe_keys(&self, keys: &[u32]) -> Vec<u32> {
+        let mut rng = Rng::new(self.seed ^ 0x9e37);
+        // Hot head never larger than the key set (rows == 1 would
+        // otherwise index past it).
+        let hot = ((keys.len() as f64).sqrt() as u64 + 1).min(keys.len() as u64);
+        (0..self.probes)
+            .map(|_| {
+                let t = if (rng.gen_f32() as f64) < self.skew {
+                    rng.gen_range(0, hot)
+                } else {
+                    rng.gen_range(0, keys.len() as u64)
+                };
+                keys[t as usize]
+            })
+            .collect()
+    }
+
+    /// Emit the shared shift/XOR/AND hash subgraph for `key`.
+    fn dfg_hash(&self, b: &mut DfgBuilder, key: usize) -> usize {
+        let k7 = b.konst(7);
+        let h1 = b.alu(AluOp::Lshr, key, k7);
+        let hx = b.alu(AluOp::Xor, key, h1);
+        let km = b.konst(self.buckets - 1);
+        b.alu(AluOp::And, hx, km)
+    }
+}
+
+impl Workload for HashJoin {
+    fn name(&self) -> String {
+        match self.phase {
+            JoinPhase::Build => "join_build".into(),
+            JoinPhase::Probe => "join_probe".into(),
+        }
+    }
+
+    fn domain(&self) -> &'static str {
+        "Database Operations"
+    }
+
+    fn iterations(&self) -> u64 {
+        match self.phase {
+            JoinPhase::Build => self.rows as u64,
+            JoinPhase::Probe => self.probes as u64,
+        }
+    }
+
+    fn build(&self, l: &mut Layout) -> Dfg {
+        match self.phase {
+            JoinPhase::Build => {
+                let b_key = l.alloc(ArraySpec {
+                    name: "key".into(),
+                    port: 0,
+                    words: self.rows,
+                    placement: Placement::Streamed,
+                    irregular: false,
+                });
+                let b_next = l.alloc(ArraySpec {
+                    name: "next".into(),
+                    port: 0,
+                    words: self.rows,
+                    placement: Placement::Streamed,
+                    irregular: false,
+                });
+                let b_head = l.alloc(ArraySpec {
+                    name: "head".into(),
+                    port: 1,
+                    words: self.buckets,
+                    placement: Placement::Cached,
+                    irregular: true,
+                });
+                let mut b = DfgBuilder::new("join_build");
+                let i = b.iter_idx();
+                let key = b.array_load(0, b_key, i);
+                let bkt = self.dfg_hash(&mut b, key);
+                let old = b.array_load(1, b_head, bkt); // head[b]
+                b.array_store(0, b_next, i, old); // next[i] = head[b]
+                let one = b.konst(1);
+                let ip1 = b.alu(AluOp::Add, i, one);
+                let st = b.array_store(1, b_head, bkt, ip1); // head[b] = i+1
+                b.mem_dep(st, old, 1); // adjacent tuples may share a bucket
+                b.finish()
+            }
+            JoinPhase::Probe => {
+                let b_pkey = l.alloc(ArraySpec {
+                    name: "pkey".into(),
+                    port: 0,
+                    words: self.probes,
+                    placement: Placement::Streamed,
+                    irregular: false,
+                });
+                let b_payload = l.alloc(ArraySpec {
+                    name: "payload".into(),
+                    port: 0,
+                    words: self.rows + 1,
+                    placement: Placement::Cached,
+                    irregular: true,
+                });
+                let b_slot = l.alloc(ArraySpec {
+                    name: "slot".into(),
+                    port: 1,
+                    words: self.buckets,
+                    placement: Placement::Cached,
+                    irregular: true,
+                });
+                let b_out = l.alloc(ArraySpec {
+                    name: "out".into(),
+                    port: 1,
+                    words: self.probes,
+                    placement: Placement::Streamed,
+                    irregular: false,
+                });
+                let mut b = DfgBuilder::new("join_probe");
+                let i = b.iter_idx();
+                let p = b.array_load(0, b_pkey, i);
+                let bkt = self.dfg_hash(&mut b, p);
+                let s = b.array_load(1, b_slot, bkt); // directory
+                let v = b.array_load(0, b_payload, s); // matching tuple
+                b.array_store(1, b_out, i, v);
+                b.finish()
+            }
+        }
+    }
+
+    fn init(&self, l: &Layout, mem: &mut Backing) {
+        match self.phase {
+            JoinPhase::Build => {
+                mem.load_u32_slice(l.base_of("key"), &self.build_keys());
+                // head starts all-empty (Backing is zero-initialised).
+            }
+            JoinPhase::Probe => {
+                let (keys, slot, payload) = self.table();
+                mem.load_u32_slice(l.base_of("pkey"), &self.probe_keys(&keys));
+                mem.load_u32_slice(l.base_of("slot"), &slot);
+                mem.load_u32_slice(l.base_of("payload"), &payload);
+            }
+        }
+    }
+
+    fn golden(&self, _l: &Layout, _mem: &Backing) -> Vec<u32> {
+        match self.phase {
+            JoinPhase::Build => {
+                let mask = self.buckets - 1;
+                let mut head = vec![0u32; self.buckets as usize];
+                for (i, k) in self.build_keys().into_iter().enumerate() {
+                    head[hash(k, mask) as usize] = i as u32 + 1;
+                }
+                head
+            }
+            JoinPhase::Probe => {
+                let mask = self.buckets - 1;
+                let (keys, slot, payload) = self.table();
+                self.probe_keys(&keys)
+                    .into_iter()
+                    .map(|p| payload[slot[hash(p, mask) as usize] as usize])
+                    .collect()
+            }
+        }
+    }
+
+    fn output(&self) -> (String, u32) {
+        match self.phase {
+            JoinPhase::Build => ("head".into(), self.buckets),
+            JoinPhase::Probe => ("out".into(), self.probes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::SubsystemConfig;
+    use crate::sim::{CgraConfig, ExecMode};
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn join_build_correct_both_modes() {
+        let wl = HashJoin::small_build();
+        for mode in [ExecMode::Normal, ExecMode::Runahead] {
+            let run = run_workload(&wl, SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(mode));
+            assert!(run.output_ok, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn join_probe_correct_both_modes() {
+        let wl = HashJoin::small_probe();
+        for mode in [ExecMode::Normal, ExecMode::Runahead] {
+            let run = run_workload(&wl, SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(mode));
+            assert!(run.output_ok, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn build_keys_are_skewed_and_deterministic() {
+        let wl = HashJoin::small_build();
+        let a = wl.build_keys();
+        assert_eq!(a, wl.build_keys());
+        // Skew concentrates a visible share of tuples on the 64 hot keys.
+        let mut hot = a.clone();
+        hot.sort_unstable();
+        hot.dedup();
+        assert!(hot.len() < a.len(), "duplicate hot keys must occur");
+    }
+
+    #[test]
+    fn probe_table_is_injective_and_half_empty() {
+        let wl = HashJoin::small_probe();
+        let (keys, slot, _payload) = wl.table();
+        assert_eq!(keys.len(), wl.rows as usize);
+        let filled = slot.iter().filter(|&&s| s != 0).count();
+        assert_eq!(filled, wl.rows as usize, "one bucket per tuple");
+        // Every probe key finds exactly its own tuple.
+        let mask = wl.buckets - 1;
+        for (t, k) in keys.iter().enumerate() {
+            assert_eq!(slot[hash(*k, mask) as usize], t as u32 + 1);
+        }
+    }
+}

@@ -52,13 +52,13 @@ impl Workload for Rgb {
 
     fn build(&self, l: &mut Layout) -> Dfg {
         let b_img = l.alloc(ArraySpec {
-            name: "img", port: 0, words: self.pixels, placement: Placement::Streamed, irregular: false,
+            name: "img".into(), port: 0, words: self.pixels, placement: Placement::Streamed, irregular: false,
         });
         let b_out = l.alloc(ArraySpec {
-            name: "out", port: 0, words: self.pixels, placement: Placement::Streamed, irregular: false,
+            name: "out".into(), port: 0, words: self.pixels, placement: Placement::Streamed, irregular: false,
         });
         let b_pal = l.alloc(ArraySpec {
-            name: "palette", port: 1, words: self.palette, placement: Placement::Cached, irregular: true,
+            name: "palette".into(), port: 1, words: self.palette, placement: Placement::Cached, irregular: true,
         });
         let mut b = DfgBuilder::new("rgb");
         let i = b.iter_idx();
@@ -80,8 +80,8 @@ impl Workload for Rgb {
         self.img().iter().map(|&p| mem.read_u32(pal_base + p * 4)).collect()
     }
 
-    fn output(&self) -> (&'static str, u32) {
-        ("out", self.pixels)
+    fn output(&self) -> (String, u32) {
+        ("out".into(), self.pixels)
     }
 }
 
@@ -131,16 +131,16 @@ impl Workload for Src2Dest {
 
     fn build(&self, l: &mut Layout) -> Dfg {
         let b_sidx = l.alloc(ArraySpec {
-            name: "src_idx", port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
+            name: "src_idx".into(), port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
         });
         let b_didx = l.alloc(ArraySpec {
-            name: "dst_idx", port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
+            name: "dst_idx".into(), port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
         });
         let b_dst = l.alloc(ArraySpec {
-            name: "dst", port: 0, words: self.n, placement: Placement::Cached, irregular: true,
+            name: "dst".into(), port: 0, words: self.n, placement: Placement::Cached, irregular: true,
         });
         let b_src = l.alloc(ArraySpec {
-            name: "src", port: 1, words: self.n, placement: Placement::Cached, irregular: true,
+            name: "src".into(), port: 1, words: self.n, placement: Placement::Cached, irregular: true,
         });
         let mut b = DfgBuilder::new("src2dest");
         let i = b.iter_idx();
@@ -170,8 +170,8 @@ impl Workload for Src2Dest {
         dst
     }
 
-    fn output(&self) -> (&'static str, u32) {
-        ("dst", self.n)
+    fn output(&self) -> (String, u32) {
+        ("dst".into(), self.n)
     }
 }
 

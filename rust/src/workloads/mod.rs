@@ -12,7 +12,9 @@
 pub mod gcn;
 pub mod grad;
 pub mod graphs;
+pub mod join;
 pub mod media;
+pub mod mesh;
 pub mod sort;
 
 use crate::mem::{Addr, Backing, MemoryModel, MemoryModelSpec, MemorySubsystem, SubsystemConfig};
@@ -21,7 +23,9 @@ use crate::sim::{CgraArray, CgraConfig, Dfg, Mapper, RunResult};
 pub use gcn::GcnAggregate;
 pub use grad::Grad;
 pub use graphs::{Graph, GraphSpec};
+pub use join::{HashJoin, JoinPhase};
 pub use media::{Rgb, Src2Dest};
+pub use mesh::{MeshOrder, MeshSpmv};
 pub use sort::{PermSort, RadixHist, RadixUpdate};
 
 /// How an array wants to be placed by the compile-time allocator.
@@ -37,9 +41,11 @@ pub enum Placement {
 }
 
 /// One logical array of 32-bit words, bound to a virtual-SPM port.
+/// Names are owned so parameter-generated scenarios (whose array sets and
+/// labels are computed at build time) can exist alongside the static suite.
 #[derive(Clone, Debug)]
 pub struct ArraySpec {
-    pub name: &'static str,
+    pub name: String,
     pub port: usize,
     pub words: u32,
     pub placement: Placement,
@@ -115,6 +121,14 @@ impl Layout {
         } else {
             let b = port * PORT_STRIDE + self.cached_fill[spec.port];
             self.cached_fill[spec.port] += bytes.next_multiple_of(256);
+            // Spilling past the port region would silently alias the next
+            // port's address space — make exhaustion a loud failure.
+            assert!(
+                self.cached_fill[spec.port] <= PORT_STRIDE,
+                "port {} address space exhausted allocating array {:?}",
+                spec.port,
+                spec.name
+            );
             b
         };
         self.bases.push(base);
@@ -127,8 +141,13 @@ impl Layout {
     }
 
     pub fn base_of(&self, name: &str) -> Addr {
-        let i = self.specs.iter().position(|s| s.name == name).expect("unknown array");
-        self.bases[i]
+        match self.specs.iter().position(|s| s.name == name) {
+            Some(i) => self.bases[i],
+            None => panic!(
+                "unknown array {name:?} (known arrays: {})",
+                self.specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", ")
+            ),
+        }
     }
 
     /// Total bytes beyond any address used (for sizing the backing store).
@@ -164,7 +183,7 @@ pub trait Workload {
     /// Compute the expected output (same semantics, plain Rust).
     fn golden(&self, layout: &Layout, mem: &Backing) -> Vec<u32>;
     /// Where the output lives: (array name, word count).
-    fn output(&self) -> (&'static str, u32);
+    fn output(&self) -> (String, u32);
     /// f32 outputs compared with tolerance instead of bit equality.
     fn output_is_f32(&self) -> bool {
         false
@@ -286,7 +305,7 @@ pub fn prepare(
 /// Compare the simulated output region against the golden executor.
 pub fn validate(wl: &dyn Workload, layout: &Layout, backing: &Backing) -> bool {
     let (name, words) = wl.output();
-    let base = layout.base_of(name);
+    let base = layout.base_of(&name);
     let got = backing.dump_u32(base, words as usize);
     let want = wl.golden(layout, backing);
     assert_eq!(got.len(), want.len());
@@ -300,7 +319,10 @@ pub fn validate(wl: &dyn Workload, layout: &Layout, backing: &Backing) -> bool {
     }
 }
 
-/// The full Table 1 suite with the paper's dataset variants.
+/// The full Table 1 suite with the paper's dataset variants. (The scenario
+/// registry — `exp::WorkloadRegistry` — is the general, parameterized way
+/// to name workloads; this in-code enumeration stays as the paper's fixed
+/// Table 1 set, and a registry test asserts the two agree.)
 pub fn paper_suite() -> Vec<Box<dyn Workload>> {
     let mut v: Vec<Box<dyn Workload>> = Vec::new();
     for spec in graphs::GraphSpec::paper_datasets() {
@@ -315,7 +337,9 @@ pub fn paper_suite() -> Vec<Box<dyn Workload>> {
     v
 }
 
-/// A reduced-size suite for fast sweeps (same kernels, smaller inputs).
+/// A reduced-size suite for fast sweeps: the Table 1 kernels plus the
+/// irregular database/HPC families (hash join, unstructured-mesh SpMV),
+/// all at small inputs.
 pub fn small_suite() -> Vec<Box<dyn Workload>> {
     let mut v: Vec<Box<dyn Workload>> = Vec::new();
     v.push(Box::new(GcnAggregate::new(graphs::GraphSpec::tiny())));
@@ -325,6 +349,9 @@ pub fn small_suite() -> Vec<Box<dyn Workload>> {
     v.push(Box::new(RadixUpdate::small()));
     v.push(Box::new(Rgb::small()));
     v.push(Box::new(Src2Dest::small()));
+    v.push(Box::new(HashJoin::small_build()));
+    v.push(Box::new(HashJoin::small_probe()));
+    v.push(Box::new(MeshSpmv::small()));
     v
 }
 
@@ -336,21 +363,21 @@ mod tests {
     fn layout_places_spm_then_cached() {
         let mut l = Layout::new(2, 512);
         let a = l.alloc(ArraySpec {
-            name: "a",
+            name: "a".into(),
             port: 0,
             words: 64, // 256 B fits
             placement: Placement::SpmPreferred,
             irregular: false,
         });
         let b = l.alloc(ArraySpec {
-            name: "b",
+            name: "b".into(),
             port: 0,
             words: 128, // 512 B overflows remaining 256 B
             placement: Placement::SpmPreferred,
             irregular: false,
         });
         let c = l.alloc(ArraySpec {
-            name: "c",
+            name: "c".into(),
             port: 1,
             words: 16,
             placement: Placement::Cached,
@@ -369,7 +396,7 @@ mod tests {
         // tail spilling past it (served off-SPM) — and exhausts the window.
         let mut l = Layout::new_spm_only(1, 512);
         let big = l.alloc(ArraySpec {
-            name: "big",
+            name: "big".into(),
             port: 0,
             words: 256, // 1024 B > 512 B window, < CACHED_OFFSET
             placement: Placement::Cached,
@@ -381,7 +408,7 @@ mod tests {
         assert!(big + 256 * 4 <= CACHED_OFFSET);
         // The window is exhausted: the next SPM-hungry array goes cached.
         let next = l.alloc(ArraySpec {
-            name: "next",
+            name: "next".into(),
             port: 0,
             words: 16,
             placement: Placement::Cached,
@@ -391,7 +418,7 @@ mod tests {
         // Streamed arrays never take the window in greedy mode (DMA keeps
         // them resident instead).
         let streamed = l.alloc(ArraySpec {
-            name: "s",
+            name: "s".into(),
             port: 0,
             words: 4,
             placement: Placement::Streamed,
@@ -407,7 +434,7 @@ mod tests {
         let mut l = Layout::new_spm_only(1, 512);
         let huge_words = (CACHED_OFFSET / 4) as u32; // bytes == CACHED_OFFSET
         let huge = l.alloc(ArraySpec {
-            name: "huge",
+            name: "huge".into(),
             port: 0,
             words: huge_words,
             placement: Placement::Cached,
@@ -416,7 +443,7 @@ mod tests {
         assert_eq!(huge, CACHED_OFFSET);
         // The window stays free for a later small array.
         let small = l.alloc(ArraySpec {
-            name: "small",
+            name: "small".into(),
             port: 0,
             words: 8,
             placement: Placement::SpmPreferred,
@@ -429,7 +456,7 @@ mod tests {
     fn base_of_finds_arrays() {
         let mut l = Layout::new(1, 512);
         l.alloc(ArraySpec {
-            name: "x",
+            name: "x".into(),
             port: 0,
             words: 4,
             placement: Placement::Cached,

@@ -53,13 +53,13 @@ impl Workload for PermSort {
 
     fn build(&self, l: &mut Layout) -> Dfg {
         let b_perm = l.alloc(ArraySpec {
-            name: "perm", port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
+            name: "perm".into(), port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
         });
         let b_out = l.alloc(ArraySpec {
-            name: "out", port: 0, words: self.n, placement: Placement::Cached, irregular: true,
+            name: "out".into(), port: 0, words: self.n, placement: Placement::Cached, irregular: true,
         });
         let b_val = l.alloc(ArraySpec {
-            name: "val", port: 1, words: self.n, placement: Placement::Streamed, irregular: false,
+            name: "val".into(), port: 1, words: self.n, placement: Placement::Streamed, irregular: false,
         });
         let mut b = DfgBuilder::new("perm_sort");
         let i = b.iter_idx();
@@ -86,8 +86,8 @@ impl Workload for PermSort {
         out
     }
 
-    fn output(&self) -> (&'static str, u32) {
-        ("out", self.n)
+    fn output(&self) -> (String, u32) {
+        ("out".into(), self.n)
     }
 }
 
@@ -129,10 +129,10 @@ impl Workload for RadixHist {
 
     fn build(&self, l: &mut Layout) -> Dfg {
         let b_keys = l.alloc(ArraySpec {
-            name: "keys", port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
+            name: "keys".into(), port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
         });
         let b_hist = l.alloc(ArraySpec {
-            name: "hist", port: 1, words: self.buckets, placement: Placement::Cached, irregular: true,
+            name: "hist".into(), port: 1, words: self.buckets, placement: Placement::Cached, irregular: true,
         });
         let mut b = DfgBuilder::new("radix_hist");
         let i = b.iter_idx();
@@ -161,8 +161,8 @@ impl Workload for RadixHist {
         hist
     }
 
-    fn output(&self) -> (&'static str, u32) {
-        ("hist", self.buckets)
+    fn output(&self) -> (String, u32) {
+        ("hist".into(), self.buckets)
     }
 }
 
@@ -220,13 +220,13 @@ impl Workload for RadixUpdate {
 
     fn build(&self, l: &mut Layout) -> Dfg {
         let b_keys = l.alloc(ArraySpec {
-            name: "keys", port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
+            name: "keys".into(), port: 0, words: self.n, placement: Placement::Streamed, irregular: false,
         });
         let b_out = l.alloc(ArraySpec {
-            name: "out", port: 0, words: self.n, placement: Placement::Cached, irregular: true,
+            name: "out".into(), port: 0, words: self.n, placement: Placement::Cached, irregular: true,
         });
         let b_off = l.alloc(ArraySpec {
-            name: "off", port: 1, words: self.buckets, placement: Placement::Cached, irregular: true,
+            name: "off".into(), port: 1, words: self.buckets, placement: Placement::Cached, irregular: true,
         });
         let mut b = DfgBuilder::new("radix_update");
         let i = b.iter_idx();
@@ -261,8 +261,8 @@ impl Workload for RadixUpdate {
         out
     }
 
-    fn output(&self) -> (&'static str, u32) {
-        ("out", self.n)
+    fn output(&self) -> (String, u32) {
+        ("out".into(), self.n)
     }
 }
 

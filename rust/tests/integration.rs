@@ -4,7 +4,10 @@
 use cgra_mem::exp::{builtin_systems, measure_spec, reconfig_experiment, SystemSpec};
 use cgra_mem::mem::{BankedDramConfig, DramModelKind, MemoryModelSpec, SubsystemConfig};
 use cgra_mem::sim::{CgraConfig, ExecMode};
-use cgra_mem::workloads::{run_workload, run_workload_model, small_suite, GcnAggregate, GraphSpec};
+use cgra_mem::workloads::{
+    run_workload, run_workload_model, small_suite, GcnAggregate, GraphSpec, HashJoin, MeshOrder,
+    MeshSpmv, Workload,
+};
 
 /// Every kernel in the (reduced-size) suite computes correct output on
 /// every CGRA system in both execution modes.
@@ -277,6 +280,111 @@ fn engine_reproduces_fig11a_system_ordering() {
         .system(SystemSpec::runahead()));
     assert_eq!(again.cycles_of("aggregate/tiny", "Runahead"),
                report.cycles_of("aggregate/tiny", "Runahead"));
+}
+
+/// Acceptance (irregular families): at working sets beyond the caches,
+/// hash-join probe and unstructured-mesh SpMV are memory-bound under
+/// Cache+SPM — utilization collapses versus the ideal-latency ceiling —
+/// and runahead recovers part of the gap.
+#[test]
+fn join_and_mesh_are_memory_bound_and_runahead_recovers() {
+    // skew 0 keeps every probe a cold gather; the random mesh order
+    // scatters the x gathers across 36 KB per port.
+    let join = HashJoin::probe_phase(8192, 32768, 16384, 0.0, 91);
+    let mesh = MeshSpmv::new(96, MeshOrder::Random, 101);
+    for wl in [&join as &dyn Workload, &mesh as &dyn Workload] {
+        let cache = measure_spec(wl, &SystemSpec::cache_spm());
+        let ra = measure_spec(wl, &SystemSpec::runahead());
+        let ideal = measure_spec(wl, &SystemSpec::ideal());
+        assert!(cache.output_ok && ra.output_ok && ideal.output_ok, "{}", wl.name());
+        assert!(
+            cache.cycles > 2 * ideal.cycles,
+            "{} must be memory-bound: cache {} vs ideal {}",
+            wl.name(),
+            cache.cycles,
+            ideal.cycles
+        );
+        assert!(
+            cache.utilization < ideal.utilization,
+            "{} utilization must collapse under Cache+SPM",
+            wl.name()
+        );
+        assert!(
+            ra.cycles < cache.cycles,
+            "{} runahead must win: ra {} vs cache {}",
+            wl.name(),
+            ra.cycles,
+            cache.cycles
+        );
+    }
+}
+
+/// Acceptance (scenario layer): a sweep spec with parameterized workload
+/// entries (mesh size × system) parses strictly, runs through the Engine,
+/// and the working-set-scaling figure renders over the same seam.
+#[test]
+fn param_sweep_spec_runs_end_to_end_and_scaling_figure_renders() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, Json};
+    let text = r#"{
+        "name": "mesh-scaling",
+        "workloads": [
+            {"family": "mesh", "name": "mesh/8",  "dim": 8,  "order": "random"},
+            {"family": "mesh", "name": "mesh/12", "dim": 12, "order": "random"},
+            {"family": "join", "name": "join-tiny", "phase": "probe",
+             "rows": 64, "buckets": 256, "probes": 512, "skew": 0.5}
+        ],
+        "systems": [{"base": "Cache+SPM"}, {"base": "Ideal"}]
+    }"#;
+    let spec = ExperimentSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+    let engine = Engine::new(2);
+    let report = engine.run(&spec);
+    assert_eq!(report.workloads, vec!["mesh/8", "mesh/12", "join-tiny"]);
+    assert_eq!(report.measurements.len(), 6);
+    assert!(report.measurements.iter().all(|m| m.output_ok));
+    // Larger mesh, more cycles — the params really reached the workload.
+    assert!(
+        report.cycles_of("mesh/12", "Cache+SPM").unwrap()
+            > report.cycles_of("mesh/8", "Cache+SPM").unwrap()
+    );
+
+    // Strictness: a typoed param key is a hard error naming the key...
+    let bad = r#"{"workloads": [{"family": "mesh", "dims": 8}],
+                  "systems": [{"base": "Cache+SPM"}]}"#;
+    let spec = ExperimentSpec::from_json(&Json::parse(bad).unwrap()).unwrap();
+    let e = engine.try_run(&spec).unwrap_err();
+    assert!(e.contains("dims"), "{e}");
+    // ...and a misspelled preset suggests the nearest name.
+    let bad = r#"{"workloads": ["small/meshh"], "systems": [{"base": "Cache+SPM"}]}"#;
+    let spec = ExperimentSpec::from_json(&Json::parse(bad).unwrap()).unwrap();
+    let e = engine.try_run(&spec).unwrap_err();
+    assert!(e.contains("small/mesh"), "{e}");
+
+    // The scaling figure runs over the same parameterized seam.
+    let fig = cgra_mem::report::scaling_with(&engine, &[8, 12]);
+    assert!(fig.contains("mesh/8x8") && fig.contains("mesh/12x12"), "{fig}");
+    assert!(fig.contains("SPM-only") && fig.contains("Ideal"), "{fig}");
+}
+
+/// Scenario determinism: the same spec JSON (workload params + seed)
+/// yields byte-identical report JSON across independent engines.
+#[test]
+fn same_spec_json_runs_to_byte_identical_reports() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, Json};
+    let text = r#"{
+        "name": "det",
+        "workloads": [
+            "small/join_build",
+            {"family": "mesh", "dim": 10, "order": "random", "seed": 7}
+        ],
+        "systems": [{"base": "Cache+SPM"}, {"base": "Runahead"}]
+    }"#;
+    let render = || {
+        let spec = ExperimentSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+        Engine::new(2).run(&spec).to_json().render_pretty()
+    };
+    let a = render();
+    let b = render();
+    assert_eq!(a, b, "identical specs must produce identical report bytes");
 }
 
 /// A JSON sweep spec (the `repro sweep` path) round-trips end to end:

@@ -67,6 +67,29 @@ fn assert_valid(dfg: &Dfg, g: &Geometry, m: &cgra_mem::sim::Mapping) {
     }
 }
 
+/// Every registered workload family builds at small scale and validates
+/// bit-for-bit against its golden executor under the Ideal backend (the
+/// backend with no timing noise: any mismatch is a semantic bug in the
+/// family's DFG or golden, not a memory artifact).
+#[test]
+fn prop_every_family_validates_against_golden_under_ideal() {
+    use cgra_mem::exp::{Params, ScenarioSpec, WorkloadRegistry};
+    use cgra_mem::mem::{IdealConfig, MemoryModelSpec};
+    use cgra_mem::sim::{CgraConfig, ExecMode};
+    use cgra_mem::workloads::run_workload_model;
+    let reg = WorkloadRegistry::builtin();
+    let ideal = MemoryModelSpec::Ideal(IdealConfig::with_ports(2));
+    let families = reg.family_names();
+    assert!(families.len() >= 9, "expected the full family set, got {families:?}");
+    for fam in families {
+        let s = ScenarioSpec::family(fam.as_str(), Params::new().set_str("scale", "small"));
+        let wl = reg.resolve(&s).unwrap_or_else(|e| panic!("{e}"));
+        let run =
+            run_workload_model(wl.as_ref(), &ideal, CgraConfig::hycube_4x4(ExecMode::Normal));
+        assert!(run.output_ok, "family {fam} diverged from golden under Ideal");
+    }
+}
+
 #[test]
 fn prop_mapper_produces_valid_schedules() {
     let mut rng = Rng::new(2024);
