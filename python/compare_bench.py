@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Gate a fresh BENCH_sim.json against the committed baseline.
+
+Usage:
+    python3 compare_bench.py BASELINE FRESH [--tolerance 0.20]
+    python3 compare_bench.py BASELINE FRESH --refresh
+
+The gated column is ``sim_cycles`` — it is deterministic and
+machine-independent, so a drift beyond the tolerance means the simulator's
+timing behaviour changed (intentional changes should refresh the baseline
+in the same PR). Wall-clock columns (``wall_s`` / ``iters_per_sec``) are
+machine-dependent and reported for information only. ``output_ok`` must be
+true in every fresh row regardless of the baseline.
+
+A baseline with ``"bootstrap": true`` (or no rows) passes with a notice:
+it marks a trajectory that has not been seeded from a real run yet.
+``--refresh`` copies the fresh result over the baseline (dropping the
+bootstrap marker) — run it on a toolchain machine and commit the result.
+"""
+
+import argparse
+import json
+import shutil
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_by_cell(doc):
+    return {(r["kernel"], r["system"]): r for r in doc.get("rows", [])}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed relative drift in sim_cycles (default 0.20)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="overwrite BASELINE with FRESH instead of comparing")
+    args = ap.parse_args()
+
+    if args.refresh:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"baseline refreshed from {args.fresh} -> {args.baseline}")
+        return 0
+
+    fresh = load(args.fresh)
+    fresh_rows = rows_by_cell(fresh)
+    failures = []
+
+    for (k, s), row in sorted(fresh_rows.items()):
+        if not row.get("output_ok", False):
+            failures.append(f"{k} x {s}: output_ok is false")
+
+    baseline = load(args.baseline)
+    if baseline.get("bootstrap") or not baseline.get("rows"):
+        print("NOTICE: baseline is a bootstrap marker (no seeded rows).")
+        print("Seed it from a real run and commit:")
+        print(f"  python3 compare_bench.py {args.baseline} {args.fresh} --refresh")
+        for f in failures:
+            print(f"FAIL {f}")
+        return 1 if failures else 0
+
+    base_rows = rows_by_cell(baseline)
+    for cell, base in sorted(base_rows.items()):
+        k, s = cell
+        row = fresh_rows.get(cell)
+        if row is None:
+            failures.append(f"{k} x {s}: present in baseline, missing from fresh run")
+            continue
+        b, f = base["sim_cycles"], row["sim_cycles"]
+        drift = abs(f - b) / max(b, 1)
+        status = "FAIL" if drift > args.tolerance else "ok"
+        print(f"{status:>4} {k:<22} {s:<14} cycles {b:>12} -> {f:>12} "
+              f"({drift * 100:+.1f}% vs ±{args.tolerance * 100:.0f}%) "
+              f"[{row.get('iters_per_sec', 0):.0f} iters/s, informational]")
+        if drift > args.tolerance:
+            failures.append(
+                f"{k} x {s}: sim_cycles {b} -> {f} drifts {drift * 100:.1f}% "
+                f"(> {args.tolerance * 100:.0f}%)")
+    for cell in sorted(set(fresh_rows) - set(base_rows)):
+        print(f"note {cell[0]} x {cell[1]}: new cell, not in baseline (refresh to adopt)")
+
+    if failures:
+        print(f"\n{len(failures)} failure(s):")
+        for f in failures:
+            print(f"  - {f}")
+        print("If the drift is intentional, refresh and commit the baseline:")
+        print(f"  python3 compare_bench.py {args.baseline} {args.fresh} --refresh")
+        return 1
+    print("\nbench within tolerance of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,65 @@
+//! Session-layer overhead bench: cell-key hashing throughput, warm-vs-cold
+//! session assembly, and result-store load. The dedup machinery must cost
+//! microseconds against simulations that cost seconds — this bench keeps
+//! that ratio visible in the perf trajectory.
+
+mod common;
+
+use cgra_mem::exp::{
+    CellKey, Engine, ExperimentSpec, ResultStore, ScenarioSpec, SystemSpec, WorkloadRegistry,
+};
+
+fn main() {
+    println!("cellstore — session/cell-layer overhead");
+    let registry = WorkloadRegistry::builtin();
+
+    // Key hashing over the full paper grid (10 workloads × 7 systems).
+    let scenarios: Vec<ScenarioSpec> =
+        registry.paper_names().into_iter().map(ScenarioSpec::preset).collect();
+    let systems = cgra_mem::exp::all_systems();
+    common::bench("cell-key hash, paper grid x100", 5, || {
+        let mut keys = 0u64;
+        for _ in 0..100 {
+            for w in &scenarios {
+                for s in &systems {
+                    let _ = CellKey::compute(&registry, w, s, 0).unwrap();
+                    keys += 1;
+                }
+            }
+        }
+        keys
+    });
+
+    // Cold run vs warm re-collect of the same spec on one session: the
+    // warm path is pure table assembly (zero simulation).
+    let eng = Engine::auto();
+    let spec = ExperimentSpec::new("bench-warm")
+        .small_workloads()
+        .systems([SystemSpec::cache_spm(), SystemSpec::runahead()]);
+    common::bench("cold small-suite x 2 systems", 3, || {
+        // Fresh session per repetition: every rep measures a cold run.
+        eng.session().run(&spec).measurements.len() as u64
+    });
+    let session = eng.session();
+    session.run(&spec);
+    assert_eq!(session.stats().executed, spec.workloads.len() as u64 * 2);
+    common::bench("warm re-run (assembly only)", 5, || {
+        session.run(&spec).measurements.len() as u64
+    });
+    assert_eq!(
+        session.stats().executed,
+        spec.workloads.len() as u64 * 2,
+        "warm re-runs must be fully session-cached"
+    );
+
+    // Store round-trip: persist the session's cells, then reload.
+    let path = std::env::temp_dir().join(format!("cellstore-bench-{}.jsonl", std::process::id()));
+    let _ = ResultStore::clear(&path);
+    {
+        let store = ResultStore::open(&path).expect("open temp store");
+        let warm = eng.session_with_store(store);
+        warm.run(&spec);
+    }
+    common::bench("store load", 5, || ResultStore::open(&path).unwrap().len() as u64);
+    let _ = ResultStore::clear(&path);
+}

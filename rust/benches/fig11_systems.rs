@@ -10,13 +10,15 @@ use cgra_mem::report;
 fn main() {
     let eng = Engine::auto();
     common::bench("fig11a five-system campaign", 1, || {
-        let text = report::fig11a(&eng);
+        let session = eng.session();
+        let text = report::fig11a(&session);
         println!("{text}");
         let _ = report::save("fig11a", &text);
         1
     });
     common::bench("fig11b access distribution", 1, || {
-        let text = report::fig11b(&eng);
+        let session = eng.session();
+        let text = report::fig11b(&session);
         println!("{text}");
         let _ = report::save("fig11b", &text);
         1

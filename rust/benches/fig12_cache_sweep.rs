@@ -10,7 +10,8 @@ fn main() {
     let eng = Engine::auto();
     for part in ['a', 'b', 'c', 'd', 'e', 'f'] {
         common::bench(&format!("fig12{part} sweep"), 1, || {
-            let text = report::fig12(part, &eng);
+            let session = eng.session();
+            let text = report::fig12(part, &session);
             println!("{text}");
             let _ = report::save(&format!("fig12{part}"), &text);
             1

@@ -9,19 +9,22 @@ use cgra_mem::report;
 fn main() {
     let eng = Engine::auto();
     common::bench("fig13 runahead speedups", 1, || {
-        let text = report::fig13(&eng);
+        let session = eng.session();
+        let text = report::fig13(&session);
         println!("{text}");
         let _ = report::save("fig13", &text);
         1
     });
     common::bench("fig15 prefetch classification", 1, || {
-        let text = report::fig15(&eng);
+        let session = eng.session();
+        let text = report::fig15(&session);
         println!("{text}");
         let _ = report::save("fig15", &text);
         1
     });
     common::bench("fig16 coverage", 1, || {
-        let text = report::fig16(&eng);
+        let session = eng.session();
+        let text = report::fig16(&session);
         println!("{text}");
         let _ = report::save("fig16", &text);
         1

@@ -8,7 +8,8 @@ use cgra_mem::report;
 fn main() {
     let eng = Engine::auto();
     common::bench("fig14 MSHR sweep", 1, || {
-        let text = report::fig14(&eng);
+        let session = eng.session();
+        let text = report::fig14(&session);
         println!("{text}");
         let _ = report::save("fig14", &text);
         1

@@ -9,7 +9,8 @@ use cgra_mem::report;
 fn main() {
     let eng = Engine::auto();
     common::bench("fig17 reconfiguration", 1, || {
-        let text = report::fig17(&eng);
+        let session = eng.session();
+        let text = report::fig17(&session);
         println!("{text}");
         let _ = report::save("fig17", &text);
         1

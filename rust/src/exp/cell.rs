@@ -1,0 +1,332 @@
+//! Content-addressed experiment cells.
+//!
+//! A *cell* is the atomic unit of the evaluation matrix: one fully
+//! resolved (scenario, system, repeat) measurement. [`CellKey`] is its
+//! content address — a 64-bit FNV-1a hash over the canonical JSON of the
+//! cell's identity, salted with [`STORE_FORMAT_VERSION`]. Two spec
+//! spellings that describe the same experiment hash to the same key:
+//!
+//! * presentation names never enter the hash (`ScenarioSpec::name` /
+//!   `SystemSpec::name` are report labels, not identity);
+//! * presets resolve to their stored (family, params) pair, so
+//!   `"small/mesh"` and `{"family": "mesh", "scale": "small"}` collide
+//!   by construction;
+//! * object-key order is erased by [`Json::canonical`], so JSON spellings
+//!   of the same params/system hash identically.
+//!
+//! Params are hashed *as written* (after preset resolution): a family
+//! default stated explicitly (`{"dim": 96}` on `mesh`) is a different
+//! preimage from the default left implicit. Deduplicating those would
+//! require every family to expose its resolved config; the registry only
+//! guarantees preset-vs-equivalent-params and key-order invariance.
+//!
+//! The key hashes the *spec*, not the code: the simulator and the
+//! workload builders behind a family name are outside the preimage. Bump
+//! [`STORE_FORMAT_VERSION`] on ANY change that alters what a cell would
+//! measure — simulator timing semantics, workload/dataset synthesis,
+//! family defaults, or the store line format: the salt makes every old
+//! key unreachable, so a stale [`crate::exp::ResultStore`] degrades to
+//! misses instead of serving wrong measurements. (Without the bump, a
+//! warm store reproduces pre-change results byte-for-byte — which is
+//! exactly the caching guarantee, turned against you.)
+
+use super::json::Json;
+use super::registry::{Params, WorkloadRegistry};
+use super::{ExecModel, ScenarioSpec, SystemSpec};
+use crate::baseline::CpuModel;
+use crate::mem::{
+    BankedDramConfig, CacheConfig, DramModelKind, IdealConfig, MemoryModelSpec, RowPolicy,
+    SubsystemConfig,
+};
+use crate::sim::CgraConfig;
+
+/// Salt folded into every [`CellKey`] preimage and stamped on every
+/// result-store line. Bump on any change that alters what a cell
+/// measures: simulator timing semantics, workload/dataset synthesis or
+/// family defaults, or the store schema.
+pub const STORE_FORMAT_VERSION: u64 = 1;
+
+/// Content address of one (scenario, system, repeat) cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CellKey(pub u64);
+
+impl CellKey {
+    /// Hash the fully resolved identity of a cell. Fails only on
+    /// scenarios the registry cannot resolve (unknown preset names).
+    pub fn compute(
+        registry: &WorkloadRegistry,
+        scenario: &ScenarioSpec,
+        system: &SystemSpec,
+        repeat: u32,
+    ) -> Result<CellKey, String> {
+        Ok(Self::from_identities(
+            &scenario_identity(registry, scenario)?,
+            &system_identity(system),
+            repeat,
+        ))
+    }
+
+    /// Key from prebuilt identity JSON — the session computes each
+    /// scenario/system identity once and feeds the *same* values to the
+    /// hash and to the store lines, so the two can never diverge.
+    pub fn from_identities(scenario: &Json, system: &Json, repeat: u32) -> CellKey {
+        let doc = Json::obj(vec![
+            ("repeat", Json::u64(repeat as u64)),
+            ("scenario", scenario.clone()),
+            ("system", system.clone()),
+            ("v", Json::u64(STORE_FORMAT_VERSION)),
+        ]);
+        CellKey(fnv1a(doc.canonical().render().as_bytes()))
+    }
+
+    /// Fixed-width lowercase hex, the store's key spelling.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    pub fn from_hex(s: &str) -> Option<CellKey> {
+        if s.len() != 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().map(CellKey)
+    }
+}
+
+/// 64-bit FNV-1a. Hand-rolled (no new deps); at the scale of an
+/// evaluation matrix — hundreds of cells — the 64-bit space makes
+/// accidental collisions a non-concern.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The canonical identity of a workload scenario: its family plus the
+/// resolved parameter bag. The display name is deliberately absent.
+pub fn scenario_identity(
+    registry: &WorkloadRegistry,
+    s: &ScenarioSpec,
+) -> Result<Json, String> {
+    let (family, params) = match &s.family {
+        Some(f) => (f.clone(), s.params.clone()),
+        None => {
+            if !s.params.is_empty() {
+                // Mirrors WorkloadRegistry::resolve: params on a bare name
+                // would be dropped silently.
+                return Err(format!("workload {:?} carries params but no \"family\"", s.name));
+            }
+            registry
+                .preset_of(&s.name)
+                .ok_or_else(|| format!("unknown workload {:?}", s.name))?
+        }
+    };
+    Ok(Json::obj(vec![("family", Json::str(family)), ("params", params_json(&params))]))
+}
+
+/// Params as a JSON object with [`Params::get`]'s first-key-wins
+/// semantics applied (later duplicates never reach a builder, so they
+/// must not reach the hash either).
+fn params_json(p: &Params) -> Json {
+    let mut fields: Vec<(String, Json)> = Vec::new();
+    for (k, v) in p.iter() {
+        if fields.iter().any(|(seen, _)| seen == k) {
+            continue;
+        }
+        fields.push((k.to_string(), v.clone()));
+    }
+    Json::Obj(fields)
+}
+
+/// The canonical identity of a system under test: every field that can
+/// change a measurement, and nothing that cannot (the display name).
+pub fn system_identity(s: &SystemSpec) -> Json {
+    match &s.exec {
+        ExecModel::Cpu(model) => Json::obj(vec![("cpu", cpu_json(model))]),
+        ExecModel::Cgra { mem, cgra } => Json::obj(vec![
+            ("cgra", cgra_json(cgra)),
+            (
+                "mem",
+                match mem {
+                    MemoryModelSpec::Hierarchy(sub) => {
+                        Json::obj(vec![("hierarchy", subsystem_json(sub))])
+                    }
+                    MemoryModelSpec::Ideal(cfg) => Json::obj(vec![("ideal", ideal_json(cfg))]),
+                },
+            ),
+        ]),
+    }
+}
+
+fn cpu_json(m: &CpuModel) -> Json {
+    Json::obj(vec![
+        ("freq_mhz", Json::num(m.freq_mhz)),
+        ("ipc", Json::num(m.ipc)),
+        ("simd_width", Json::u64(m.simd_width as u64)),
+        ("l1", cache_json(&m.l1)),
+        ("l2", cache_json(&m.l2)),
+        ("l2_latency", Json::u64(m.l2_latency)),
+        ("dram_latency", Json::u64(m.dram_latency)),
+        ("exposed_miss_fraction", Json::num(m.exposed_miss_fraction)),
+    ])
+}
+
+fn cache_json(c: &CacheConfig) -> Json {
+    Json::obj(vec![
+        ("sets", Json::u64(c.sets as u64)),
+        ("ways", Json::u64(c.ways as u64)),
+        ("line_bytes", Json::u64(c.line_bytes as u64)),
+        ("vline_shift", Json::u64(c.vline_shift as u64)),
+    ])
+}
+
+fn subsystem_json(c: &SubsystemConfig) -> Json {
+    Json::obj(vec![
+        ("num_ports", Json::u64(c.num_ports as u64)),
+        ("spm_bytes", Json::u64(c.spm_bytes as u64)),
+        ("l1", cache_json(&c.l1)),
+        ("l2", cache_json(&c.l2)),
+        ("mshr_entries", Json::u64(c.mshr_entries as u64)),
+        ("store_buffer_entries", Json::u64(c.store_buffer_entries as u64)),
+        ("l1_hit_latency", Json::u64(c.l1_hit_latency)),
+        ("l2_hit_latency", Json::u64(c.l2_hit_latency)),
+        ("dram_latency", Json::u64(c.dram_latency)),
+        ("dram_bytes_per_cycle", Json::u64(c.dram_bytes_per_cycle)),
+        ("dram", dram_json(&c.dram)),
+        ("temp_store_bytes", Json::u64(c.temp_store_bytes as u64)),
+        ("shared_l1", Json::Bool(c.shared_l1)),
+    ])
+}
+
+fn dram_json(d: &DramModelKind) -> Json {
+    match d {
+        DramModelKind::Flat => Json::obj(vec![("model", Json::str("flat"))]),
+        DramModelKind::Banked(b) => banked_json(b),
+    }
+}
+
+fn banked_json(b: &BankedDramConfig) -> Json {
+    Json::obj(vec![
+        ("model", Json::str("banked")),
+        ("banks", Json::u64(b.banks as u64)),
+        ("row_bytes", Json::u64(b.row_bytes as u64)),
+        ("t_rp", Json::u64(b.t_rp)),
+        ("t_rcd", Json::u64(b.t_rcd)),
+        ("t_cas", Json::u64(b.t_cas)),
+        (
+            "policy",
+            Json::str(match b.policy {
+                RowPolicy::Open => "open",
+                RowPolicy::Closed => "closed",
+            }),
+        ),
+    ])
+}
+
+fn ideal_json(c: &IdealConfig) -> Json {
+    Json::obj(vec![
+        ("num_ports", Json::u64(c.num_ports as u64)),
+        ("spm_bytes", Json::u64(c.spm_bytes as u64)),
+        ("line_bytes", Json::u64(c.line_bytes as u64)),
+    ])
+}
+
+fn cgra_json(c: &CgraConfig) -> Json {
+    Json::obj(vec![
+        (
+            "geom",
+            Json::obj(vec![
+                ("rows", Json::u64(c.geom.rows as u64)),
+                ("cols", Json::u64(c.geom.cols as u64)),
+                ("ports", Json::u64(c.geom.ports as u64)),
+                ("hop_budget", Json::u64(c.geom.hop_budget as u64)),
+            ]),
+        ),
+        (
+            "mode",
+            Json::str(match c.mode {
+                crate::sim::ExecMode::Normal => "normal",
+                crate::sim::ExecMode::Runahead => "runahead",
+            }),
+        ),
+        ("max_runahead_cycles", Json::u64(c.max_runahead_cycles)),
+        ("freq_mhz", Json::num(c.freq_mhz)),
+        ("trace_window", Json::u64(c.trace_window as u64)),
+        (
+            "ablation",
+            Json::obj(vec![
+                ("temp_store", Json::Bool(c.ablation.temp_store)),
+                ("convert_writes", Json::Bool(c.ablation.convert_writes)),
+                ("dummy_tracking", Json::Bool(c.ablation.dummy_tracking)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(scenario: &ScenarioSpec, system: &SystemSpec, rep: u32) -> CellKey {
+        CellKey::compute(&WorkloadRegistry::builtin(), scenario, system, rep).unwrap()
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn display_names_never_enter_the_key() {
+        let a = ScenarioSpec::preset("small/rgb");
+        let b = ScenarioSpec::preset("small/rgb").named("totally-different-label");
+        let sys = SystemSpec::cache_spm();
+        let renamed = SystemSpec::cache_spm().named("Cache+SPM (relabeled)");
+        assert_eq!(key(&a, &sys, 0), key(&b, &sys, 0));
+        assert_eq!(key(&a, &sys, 0), key(&a, &renamed, 0));
+    }
+
+    #[test]
+    fn preset_and_equivalent_family_params_collide() {
+        let preset = ScenarioSpec::preset("small/mesh");
+        let spelled =
+            ScenarioSpec::family("mesh", Params::new().set_str("scale", "small"));
+        let sys = SystemSpec::runahead();
+        assert_eq!(key(&preset, &sys, 0), key(&spelled, &sys, 0));
+        // A bare family name equals the family with empty params.
+        let bare = ScenarioSpec::preset("join");
+        let empty = ScenarioSpec::family("join", Params::new());
+        assert_eq!(key(&bare, &sys, 0), key(&empty, &sys, 0));
+    }
+
+    #[test]
+    fn distinct_identity_distinct_key() {
+        let mesh = ScenarioSpec::family("mesh", Params::new().set_u64("dim", 24));
+        let mesh2 = ScenarioSpec::family("mesh", Params::new().set_u64("dim", 25));
+        let sys = SystemSpec::cache_spm();
+        assert_ne!(key(&mesh, &sys, 0), key(&mesh2, &sys, 0));
+        assert_ne!(key(&mesh, &sys, 0), key(&mesh, &sys, 1), "repeat index is identity");
+        assert_ne!(
+            key(&mesh, &SystemSpec::cache_spm(), 0),
+            key(&mesh, &SystemSpec::runahead(), 0)
+        );
+        assert_ne!(
+            key(&mesh, &SystemSpec::a72(), 0),
+            key(&mesh, &SystemSpec::simd(), 0),
+            "CPU models differ in simd_width"
+        );
+    }
+
+    #[test]
+    fn hex_round_trips() {
+        let k = CellKey(0x0123_4567_89ab_cdef);
+        assert_eq!(CellKey::from_hex(&k.hex()), Some(k));
+        assert_eq!(CellKey::from_hex("nope"), None);
+        assert_eq!(CellKey::from_hex(""), None);
+    }
+}

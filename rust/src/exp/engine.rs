@@ -7,9 +7,16 @@
 //! [`Engine::map`] fans any work list over them, and [`Engine::run`] turns a
 //! declarative [`ExperimentSpec`] into a structured [`Report`], building only
 //! the single workload each job needs, exactly once per job.
+//!
+//! Execution itself lives in the session layer: [`Engine::session`]
+//! returns a [`Session`] that decomposes specs into content-addressed
+//! cells and executes each unique cell once ([`Engine::run`] is a
+//! one-shot session under the hood).
 
 use super::registry::WorkloadRegistry;
-use super::{measure_spec, ExperimentSpec, Report};
+use super::session::Session;
+use super::store::ResultStore;
+use super::{ExperimentSpec, Report};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -80,6 +87,21 @@ impl Engine {
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
+        self.map_with(items, f, |_, _| {})
+    }
+
+    /// [`Engine::map`] plus a completion observer: `on_each(index,
+    /// &result)` runs on the *calling* thread as each result arrives, in
+    /// completion (not input) order — this is how a
+    /// [`Session`](super::Session) streams per-cell progress while the
+    /// pool is still busy. The returned vector is in input order.
+    pub fn map_with<T, R, F, O>(&self, items: Vec<T>, f: F, mut on_each: O) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+        O: FnMut(usize, &R),
+    {
         let n = items.len();
         let f = Arc::new(f);
         let (rtx, rrx) = channel::<(usize, R)>();
@@ -96,10 +118,27 @@ impl Engine {
         drop(rtx);
         // Every job eventually runs or is dropped (on worker panic its
         // result sender is dropped with it), so this drains without hanging.
-        let mut out: Vec<(usize, R)> = rrx.into_iter().collect();
+        let mut out: Vec<(usize, R)> = Vec::with_capacity(n);
+        for (i, r) in rrx {
+            on_each(i, &r);
+            out.push((i, r));
+        }
         assert_eq!(out.len(), n, "an engine task panicked; see stderr for the worker backtrace");
         out.sort_by_key(|(i, _)| *i);
         out.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Open a [`Session`] over this engine: the stateful front door that
+    /// dedups (scenario, system, repeat) cells across submitted specs.
+    pub fn session(&self) -> Session<'_> {
+        Session::new(self, None)
+    }
+
+    /// A session whose cells also persist to (and load from) a
+    /// [`ResultStore`], so re-runs skip measured cells across process
+    /// invocations.
+    pub fn session_with_store(&self, store: ResultStore) -> Session<'_> {
+        Session::new(self, Some(store))
     }
 
     /// Execute a declarative experiment: every (workload × system × repeat)
@@ -110,7 +149,23 @@ impl Engine {
 
     /// Like [`Engine::run`] but surfacing spec errors (unknown workload
     /// names, empty axes) instead of panicking.
+    ///
+    /// One-shot convenience over the session layer: a throwaway
+    /// [`Session`] executes the spec, so even a single spec dedups
+    /// identical cells (two same-config systems under different names
+    /// simulate once). Callers running *several* related specs should
+    /// hold their own [`Engine::session`] to reuse cells across them.
     pub fn try_run(&self, spec: &ExperimentSpec) -> Result<Report, String> {
+        self.session().try_run(spec)
+    }
+
+    /// Validate a spec without executing it: non-empty axes, resolvable
+    /// workload names/params (with nearest-name suggestions), and unique
+    /// presentation names on both axes (reports are keyed by name;
+    /// duplicates would make every lookup silently resolve to the first
+    /// row). Bare preset names skip the builder, so no dataset is
+    /// synthesized on this thread.
+    pub fn validate_spec(&self, spec: &ExperimentSpec) -> Result<(), String> {
         if spec.workloads.is_empty() {
             return Err(format!("experiment {:?} lists no workloads", spec.name));
         }
@@ -118,9 +173,6 @@ impl Engine {
             return Err(format!("experiment {:?} lists no systems", spec.name));
         }
         for (i, w) in spec.workloads.iter().enumerate() {
-            // Validates the name (with nearest-name suggestions) and any
-            // family params before a job is queued; bare preset names skip
-            // the builder so no dataset is synthesized on this thread.
             self.registry.validate(w)?;
             if spec.workloads[..i].iter().any(|x| x.name == w.name) {
                 return Err(format!(
@@ -129,8 +181,6 @@ impl Engine {
                 ));
             }
         }
-        // Reports are keyed by (workload, system) name; duplicates would
-        // make every lookup silently resolve to the first row.
         for (i, sys) in spec.systems.iter().enumerate() {
             if spec.systems[..i].iter().any(|s| s.name == sys.name) {
                 return Err(format!(
@@ -139,30 +189,7 @@ impl Engine {
                 ));
             }
         }
-        let mut jobs = Vec::new();
-        for w in &spec.workloads {
-            for sys in &spec.systems {
-                for rep in 0..spec.repeats.max(1) {
-                    jobs.push((w.clone(), sys.clone(), rep));
-                }
-            }
-        }
-        let registry = Arc::clone(&self.registry);
-        let measurements = self.map(jobs, move |(scenario, sys, rep)| {
-            // Build exactly the one workload this job needs (the old
-            // run_jobs rebuilt the entire suite here, every iteration).
-            let wl = registry.resolve(&scenario).expect("scenario validated above");
-            let mut m = measure_spec(wl.as_ref(), &sys);
-            m.workload = scenario.name;
-            m.repeat = rep;
-            m
-        });
-        Ok(Report {
-            experiment: spec.name.clone(),
-            workloads: spec.workload_names(),
-            systems: spec.systems.iter().map(|s| s.name.clone()).collect(),
-            measurements,
-        })
+        Ok(())
     }
 }
 
@@ -212,6 +239,18 @@ mod tests {
         // Second batch on the same (persistent) pool.
         let b = eng.map(vec!["a", "bb", "ccc"], |s: &str| s.len());
         assert_eq!(b, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn map_with_streams_every_completion_on_the_calling_thread() {
+        let eng = Engine::new(3);
+        let mut seen = Vec::new();
+        let out = eng.map_with((0..9).collect(), |x: u64| x * x, |i, r| seen.push((i, *r)));
+        assert_eq!(out, (0..9).map(|x| x * x).collect::<Vec<_>>());
+        // Completion order is arbitrary; coverage must be total.
+        assert_eq!(seen.len(), 9);
+        seen.sort();
+        assert_eq!(seen, (0..9).map(|x| (x as usize, (x * x) as u64)).collect::<Vec<_>>());
     }
 
     #[test]

@@ -150,6 +150,24 @@ impl Json {
         }
     }
 
+    /// Canonical form for content hashing: object keys sorted (bytewise,
+    /// recursively), arrays kept in order. Combined with [`Json::render`]
+    /// (compact, shortest-float numbers) this gives every semantically
+    /// equal value one byte representation — the preimage contract of
+    /// [`crate::exp::CellKey`].
+    pub fn canonical(&self) -> Json {
+        match self {
+            Json::Arr(items) => Json::Arr(items.iter().map(Json::canonical).collect()),
+            Json::Obj(fields) => {
+                let mut sorted: Vec<(String, Json)> =
+                    fields.iter().map(|(k, v)| (k.clone(), v.canonical())).collect();
+                sorted.sort_by(|a, b| a.0.cmp(&b.0));
+                Json::Obj(sorted)
+            }
+            other => other.clone(),
+        }
+    }
+
     /// Parse a complete JSON document (trailing whitespace allowed).
     pub fn parse(text: &str) -> Result<Json, String> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
@@ -400,6 +418,17 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("\"open").is_err());
+    }
+
+    #[test]
+    fn canonical_sorts_keys_recursively_and_keeps_arrays() {
+        let a = Json::parse(r#"{"b": {"y": 1, "x": 2}, "a": [3, {"q": 1, "p": 2}]}"#).unwrap();
+        let b = Json::parse(r#"{"a": [3, {"p": 2, "q": 1}], "b": {"x": 2, "y": 1}}"#).unwrap();
+        assert_eq!(a.canonical().render(), b.canonical().render());
+        assert_eq!(a.canonical().render(), r#"{"a":[3,{"p":2,"q":1}],"b":{"x":2,"y":1}}"#);
+        // Arrays are ordered data: no reordering.
+        let c = Json::parse("[2, 1]").unwrap();
+        assert_eq!(c.canonical().render(), "[2,1]");
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //!   campaign, buildable in code or parsed from JSON (`repro sweep`).
 //! * [`Engine`]: a persistent worker pool executing specs into structured
 //!   [`Report`]s with hand-rolled JSON serialization ([`json`]).
+//! * [`Session`] ([`Engine::session`]): the stateful execution front
+//!   door — specs decompose into content-addressed cells ([`CellKey`]),
+//!   each unique (scenario, system, repeat) simulates once per session,
+//!   and a persistent [`ResultStore`] extends the reuse across process
+//!   invocations (`repro all`, `--store`, `--no-cache`).
 //!
 //! ```no_run
 //! use cgra_mem::exp::{Engine, ExperimentSpec, SystemSpec};
@@ -23,15 +28,21 @@
 //! println!("{}", report.to_json().render_pretty());
 //! ```
 
+pub mod cell;
 pub mod engine;
 pub mod json;
 pub mod registry;
+pub mod session;
+pub mod store;
 
+pub use cell::{CellKey, STORE_FORMAT_VERSION};
 pub use engine::{default_parallelism, Engine};
 pub use json::Json;
 pub use registry::{
     all_systems, builtin_systems, extra_systems, system_named, Params, WorkloadRegistry,
 };
+pub use session::{CellEvent, JobId, Provenance, Session, SessionStats};
+pub use store::ResultStore;
 
 use crate::baseline::{run_cpu, CpuModel};
 use crate::mem::{

@@ -119,6 +119,13 @@ impl Params {
         }
     }
 
+    /// The stored pairs in spec order. Lookup semantics ([`Params::get`])
+    /// are first-key-wins, so callers that need one value per key should
+    /// skip later duplicates (as [`crate::exp::cell`] does when hashing).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Json)> {
+        self.pairs.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
     /// Compact `k=v` rendering for derived scenario names (spec order).
     pub fn summary(&self) -> String {
         self.pairs
@@ -510,6 +517,18 @@ impl WorkloadRegistry {
             .map(|n| format!(" (did you mean {n:?}?)"))
             .unwrap_or_default();
         format!("unknown workload {name:?}{hint}; known: {}", self.names().join(", "))
+    }
+
+    /// The (family, params) identity behind a registry name: a preset's
+    /// stored pair, or — for a bare family name — the family itself at
+    /// empty params. This is what makes `"small/mesh"` and
+    /// `{"family": "mesh", "scale": "small"}` the *same* experiment cell:
+    /// both resolve to one canonical identity before hashing.
+    pub fn preset_of(&self, name: &str) -> Option<(String, Params)> {
+        if let Some(p) = self.presets.iter().find(|p| p.name == name) {
+            return Some((p.family.clone(), p.params.clone()));
+        }
+        self.family(name).map(|f| (f.name.clone(), Params::new()))
     }
 
     pub fn names(&self) -> Vec<String> {

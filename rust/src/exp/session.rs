@@ -1,0 +1,447 @@
+//! The session layer: submit experiment specs, execute each unique cell
+//! once, assemble reports from a shared cell table.
+//!
+//! [`Engine::run`] is one-shot: every caller recomputes its cells. A
+//! [`Session`] is the stateful successor — `Engine::session()` returns
+//! one, and every spec submitted to it is decomposed into
+//! content-addressed cells ([`CellKey`]): cells already measured (by an
+//! earlier job in this session, or by a previous process via the
+//! [`ResultStore`]) are reused; only the remainder executes on the
+//! engine's worker pool. `repro all` renders every figure and table from
+//! one session, so the overlapping campaigns behind Fig 5/11/12/13/14/15/16
+//! and the scaling figure each simulate their shared cells exactly once.
+//!
+//! The split API is `submit` (dedup + execute, returns a [`JobId`]) and
+//! `collect` (assemble a [`Report`] from the cell table, rewriting each
+//! canonical cell measurement with the job's presentation names). Cells
+//! are stored presentation-free, so a report collected from cached cells
+//! is byte-identical to one collected from freshly computed cells — the
+//! figure text of a warm re-run matches the cold run exactly.
+//!
+//! A `Session` is a single-threaded front door (interior `RefCell`
+//! state); the parallelism lives behind it in the engine pool. Per-cell
+//! completion streams through the progress callback
+//! ([`Session::set_progress`]) as results arrive from the workers.
+
+use super::cell::{scenario_identity, system_identity, CellKey};
+use super::engine::Engine;
+use super::store::{ResultStore, StoreEntry};
+use super::{measure_spec, ExperimentSpec, Measurement, Report};
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+
+/// Handle to one submitted experiment; redeem with [`Session::collect`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobId(usize);
+
+/// How a cell's measurement got into the session table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Provenance {
+    /// Simulated by this session.
+    Computed,
+    /// Already resident: measured by an earlier job of this session (or
+    /// an earlier cell of the same job).
+    SessionCache,
+    /// Loaded from the persistent [`ResultStore`].
+    StoreCache,
+}
+
+/// One resolved cell, streamed to the progress callback.
+#[derive(Clone, Debug)]
+pub struct CellEvent {
+    pub key: CellKey,
+    pub workload: String,
+    pub system: String,
+    pub repeat: u32,
+    pub provenance: Provenance,
+    /// Cells resolved so far in this submit (cached first, then computed
+    /// in completion order).
+    pub done: usize,
+    /// Total cells in this submit.
+    pub total: usize,
+}
+
+/// Session counters — the dedup ledger `repro cache stats` reports and
+/// the exactly-once tests assert on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Specs submitted.
+    pub jobs: u64,
+    /// All (workload × system × repeat) cells across submits, before
+    /// dedup.
+    pub cells_requested: u64,
+    /// Cells actually simulated on the worker pool.
+    pub executed: u64,
+    /// Cells served from the in-session table (cross-job reuse and
+    /// intra-job duplicates).
+    pub session_hits: u64,
+    /// Cells served from the persistent store.
+    pub store_hits: u64,
+}
+
+struct JobRecord {
+    name: String,
+    workloads: Vec<String>,
+    systems: Vec<String>,
+    /// (workload, system, repeat, key) in spec grid order.
+    grid: Vec<(String, String, u32, CellKey)>,
+}
+
+struct Inner {
+    /// Completed cells, presentation-free (workload/system cleared,
+    /// repeat zeroed) — collect() stamps the job's names back on.
+    cells: HashMap<CellKey, Measurement>,
+    origin: HashMap<CellKey, Provenance>,
+    jobs: Vec<JobRecord>,
+    store: Option<ResultStore>,
+    stats: SessionStats,
+}
+
+/// A stateful run of related experiments over one [`Engine`].
+pub struct Session<'e> {
+    engine: &'e Engine,
+    inner: RefCell<Inner>,
+    progress: Option<Box<dyn Fn(&CellEvent)>>,
+}
+
+impl<'e> Session<'e> {
+    pub(super) fn new(engine: &'e Engine, store: Option<ResultStore>) -> Session<'e> {
+        Session {
+            engine,
+            inner: RefCell::new(Inner {
+                cells: HashMap::new(),
+                origin: HashMap::new(),
+                jobs: Vec::new(),
+                store,
+                stats: SessionStats::default(),
+            }),
+            progress: None,
+        }
+    }
+
+    /// The engine behind this session (for non-cell work such as the
+    /// Fig 17 closed loop, which fans out via [`Engine::map`]).
+    pub fn engine(&self) -> &'e Engine {
+        self.engine
+    }
+
+    /// Stream per-cell completion: cached cells fire immediately at
+    /// submit, computed cells as each result arrives from the pool.
+    pub fn set_progress(&mut self, f: impl Fn(&CellEvent) + 'static) {
+        self.progress = Some(Box::new(f));
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        self.inner.borrow().stats
+    }
+
+    /// (path, resident cells) of the persistent store, if one is attached.
+    pub fn store_summary(&self) -> Option<(PathBuf, usize)> {
+        let inner = self.inner.borrow();
+        inner.store.as_ref().map(|s| (s.path().to_path_buf(), s.len()))
+    }
+
+    /// Submit a spec: validate, decompose into cells, dedup against the
+    /// session table / in-flight batch / persistent store, execute the
+    /// unique remainder on the worker pool, and persist fresh results.
+    pub fn try_submit(&self, spec: &ExperimentSpec) -> Result<JobId, String> {
+        self.engine.validate_spec(spec)?;
+        let registry = self.engine.registry();
+
+        // One identity JSON per axis value, shared by the key hash and
+        // the store lines (so the two cannot diverge, and nothing is
+        // recomputed per repeat or per persisted cell).
+        let mut scen_ids = Vec::with_capacity(spec.workloads.len());
+        for w in &spec.workloads {
+            scen_ids.push(scenario_identity(registry, w)?);
+        }
+        let sys_ids: Vec<_> = spec.systems.iter().map(system_identity).collect();
+
+        // Decompose into the (workload × system × repeat) grid.
+        struct Pending {
+            key: CellKey,
+            w_idx: usize,
+            s_idx: usize,
+            repeat: u32,
+        }
+        let mut grid: Vec<(String, String, u32, CellKey)> = Vec::new();
+        let mut to_run: Vec<Pending> = Vec::new();
+        let mut events: Vec<CellEvent> = Vec::new();
+        {
+            let mut inner = self.inner.borrow_mut();
+            inner.stats.jobs += 1;
+            let mut batch: HashSet<CellKey> = HashSet::new();
+            for (w_idx, w) in spec.workloads.iter().enumerate() {
+                for (s_idx, sys) in spec.systems.iter().enumerate() {
+                    for rep in 0..spec.repeats.max(1) {
+                        let key = CellKey::from_identities(&scen_ids[w_idx], &sys_ids[s_idx], rep);
+                        grid.push((w.name.clone(), sys.name.clone(), rep, key));
+                        inner.stats.cells_requested += 1;
+                        let provenance = if inner.cells.contains_key(&key)
+                            || batch.contains(&key)
+                        {
+                            inner.stats.session_hits += 1;
+                            Provenance::SessionCache
+                        } else {
+                            // Hoisted so the store borrow ends before the
+                            // table insert below (RefMut field borrows
+                            // cannot split through Deref).
+                            let from_store =
+                                inner.store.as_ref().and_then(|st| st.get(key)).cloned();
+                            match from_store {
+                                Some(m) => {
+                                    inner.cells.insert(key, m);
+                                    inner.origin.insert(key, Provenance::StoreCache);
+                                    inner.stats.store_hits += 1;
+                                    Provenance::StoreCache
+                                }
+                                None => {
+                                    batch.insert(key);
+                                    to_run.push(Pending { key, w_idx, s_idx, repeat: rep });
+                                    continue; // its event fires on completion
+                                }
+                            }
+                        };
+                        events.push(CellEvent {
+                            key,
+                            workload: w.name.clone(),
+                            system: sys.name.clone(),
+                            repeat: rep,
+                            provenance,
+                            done: 0,
+                            total: 0,
+                        });
+                    }
+                }
+            }
+        }
+
+        // Fire cached-cell events (outside the borrow: callbacks may call
+        // back into the session, e.g. stats()).
+        let total = grid.len();
+        let mut done = 0usize;
+        for mut ev in events {
+            done += 1;
+            ev.done = done;
+            ev.total = total;
+            if let Some(cb) = &self.progress {
+                cb(&ev);
+            }
+        }
+
+        // Execute the unique remainder; stream completions.
+        let executed = to_run.len() as u64;
+        let registry_arc = self.engine.registry_arc();
+        let items: Vec<(CellKey, super::ScenarioSpec, super::SystemSpec)> = to_run
+            .iter()
+            .map(|p| (p.key, spec.workloads[p.w_idx].clone(), spec.systems[p.s_idx].clone()))
+            .collect();
+        let results: Vec<(CellKey, Measurement)> = self.engine.map_with(
+            items,
+            move |(key, scenario, sys)| {
+                let wl = registry_arc.resolve(&scenario).expect("scenario validated above");
+                let mut m = measure_spec(wl.as_ref(), &sys);
+                // Canonical cell form: presentation fields are the job's
+                // business, not the cell's.
+                m.workload = String::new();
+                m.system = String::new();
+                m.repeat = 0;
+                (key, m)
+            },
+            |i, (key, _)| {
+                done += 1;
+                if let Some(cb) = &self.progress {
+                    // `i` is the input index, so `to_run[i]` is this cell.
+                    let p = &to_run[i];
+                    cb(&CellEvent {
+                        key: *key,
+                        workload: spec.workloads[p.w_idx].name.clone(),
+                        system: spec.systems[p.s_idx].name.clone(),
+                        repeat: p.repeat,
+                        provenance: Provenance::Computed,
+                        done,
+                        total,
+                    });
+                }
+            },
+        );
+
+        // Merge results, persist, record the job.
+        let mut inner = self.inner.borrow_mut();
+        inner.stats.executed += executed;
+        if inner.store.is_some() {
+            let mut lines = Vec::with_capacity(results.len());
+            for (p, (key, m)) in to_run.iter().zip(results.iter()) {
+                debug_assert_eq!(*key, p.key);
+                lines.push(StoreEntry {
+                    key: *key,
+                    scenario: scen_ids[p.w_idx].clone(),
+                    system: sys_ids[p.s_idx].clone(),
+                    repeat: p.repeat,
+                    measurement: m.clone(),
+                });
+            }
+            let store = inner.store.as_mut().expect("checked above");
+            if let Err(e) = store.append_batch(lines) {
+                // Best-effort persistence: a read-only disk must not fail
+                // the experiment itself.
+                eprintln!("(cellstore: could not append to {}: {e})", store.path().display());
+            }
+        }
+        for (key, m) in results {
+            inner.cells.insert(key, m);
+            inner.origin.insert(key, Provenance::Computed);
+        }
+        inner.jobs.push(JobRecord {
+            name: spec.name.clone(),
+            workloads: spec.workload_names(),
+            systems: spec.systems.iter().map(|s| s.name.clone()).collect(),
+            grid,
+        });
+        Ok(JobId(inner.jobs.len() - 1))
+    }
+
+    /// [`Session::try_submit`], panicking on spec errors.
+    pub fn submit(&self, spec: &ExperimentSpec) -> JobId {
+        self.try_submit(spec).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Assemble a job's [`Report`] from the shared cell table, stamping
+    /// the job's presentation names onto each canonical cell. Idempotent;
+    /// call any time after submit.
+    pub fn collect(&self, job: JobId) -> Result<Report, String> {
+        let inner = self.inner.borrow();
+        let rec = inner.jobs.get(job.0).ok_or_else(|| format!("unknown job id {:?}", job))?;
+        let mut measurements = Vec::with_capacity(rec.grid.len());
+        for (w, s, rep, key) in &rec.grid {
+            let mut m = inner
+                .cells
+                .get(key)
+                .ok_or_else(|| format!("cell {} missing from the session table", key.hex()))?
+                .clone();
+            m.workload = w.clone();
+            m.system = s.clone();
+            m.repeat = *rep;
+            measurements.push(m);
+        }
+        Ok(Report {
+            experiment: rec.name.clone(),
+            workloads: rec.workloads.clone(),
+            systems: rec.systems.clone(),
+            measurements,
+        })
+    }
+
+    /// Per-cell provenance of a job, in grid order: whether each
+    /// measurement was computed by this session or served from a cache.
+    pub fn provenance(&self, job: JobId) -> Result<Vec<(String, String, u32, Provenance)>, String> {
+        let inner = self.inner.borrow();
+        let rec = inner.jobs.get(job.0).ok_or_else(|| format!("unknown job id {:?}", job))?;
+        rec.grid
+            .iter()
+            .map(|(w, s, rep, key)| {
+                let p = inner
+                    .origin
+                    .get(key)
+                    .copied()
+                    .ok_or_else(|| format!("cell {} missing", key.hex()))?;
+                Ok((w.clone(), s.clone(), *rep, p))
+            })
+            .collect()
+    }
+
+    /// Submit + collect in one call — the session-backed successor of
+    /// [`Engine::try_run`].
+    pub fn try_run(&self, spec: &ExperimentSpec) -> Result<Report, String> {
+        let job = self.try_submit(spec)?;
+        self.collect(job)
+    }
+
+    /// [`Session::try_run`], panicking on spec errors.
+    pub fn run(&self, spec: &ExperimentSpec) -> Report {
+        self.try_run(spec).unwrap_or_else(|e| panic!("{e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::SystemSpec;
+
+    fn tiny_spec(name: &str, systems: Vec<SystemSpec>) -> ExperimentSpec {
+        ExperimentSpec::new(name).workload("aggregate/tiny").systems(systems)
+    }
+
+    #[test]
+    fn session_dedups_across_jobs_and_within_a_job() {
+        let eng = Engine::new(2);
+        let session = eng.session();
+        // Two systems with identical configs under different names: one cell.
+        let spec = tiny_spec(
+            "dup-config",
+            vec![SystemSpec::cache_spm(), SystemSpec::cache_spm().named("Cache+SPM bis")],
+        );
+        let report = session.run(&spec);
+        assert_eq!(report.measurements.len(), 2, "report keeps both presentation rows");
+        assert_eq!(
+            report.cycles_of("aggregate/tiny", "Cache+SPM"),
+            report.cycles_of("aggregate/tiny", "Cache+SPM bis")
+        );
+        let st = session.stats();
+        assert_eq!(st.cells_requested, 2);
+        assert_eq!(st.executed, 1, "identical configs are one cell");
+        assert_eq!(st.session_hits, 1);
+        // A second job over the same cell executes nothing.
+        let job = session.submit(&tiny_spec("again", vec![SystemSpec::cache_spm()]));
+        assert_eq!(session.stats().executed, 1);
+        assert_eq!(session.stats().session_hits, 2);
+        let prov = session.provenance(job).unwrap();
+        assert_eq!(prov[0].3, Provenance::Computed, "origin is where the cell came from");
+    }
+
+    #[test]
+    fn collect_is_idempotent_and_reports_match_engine_run() {
+        let eng = Engine::new(2);
+        let session = eng.session();
+        let spec = tiny_spec("match", vec![SystemSpec::cache_spm(), SystemSpec::runahead()]);
+        let job = session.submit(&spec);
+        let a = session.collect(job).unwrap();
+        let b = session.collect(job).unwrap();
+        assert_eq!(a, b);
+        // The session path reproduces the one-shot path bit for bit.
+        let direct = Engine::new(2).run(&spec);
+        assert_eq!(a, direct);
+    }
+
+    #[test]
+    fn progress_streams_every_cell_with_provenance() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let eng = Engine::new(2);
+        let mut session = eng.session();
+        let seen: Rc<RefCell<Vec<(Provenance, usize, usize)>>> = Rc::new(RefCell::new(Vec::new()));
+        let sink = Rc::clone(&seen);
+        session.set_progress(move |ev| sink.borrow_mut().push((ev.provenance, ev.done, ev.total)));
+        session.run(&tiny_spec("p1", vec![SystemSpec::cache_spm()]));
+        session.run(&tiny_spec("p2", vec![SystemSpec::cache_spm(), SystemSpec::runahead()]));
+        let events = seen.borrow();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0], (Provenance::Computed, 1, 1));
+        // Second submit: the cached cell fires first, then the computed one.
+        assert_eq!(events[1], (Provenance::SessionCache, 1, 2));
+        assert_eq!(events[2], (Provenance::Computed, 2, 2));
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_before_any_execution() {
+        let eng = Engine::new(1);
+        let session = eng.session();
+        let spec = ExperimentSpec::new("bad")
+            .workload("no-such-kernel")
+            .system(SystemSpec::cache_spm());
+        assert!(session.try_submit(&spec).unwrap_err().contains("no-such-kernel"));
+        assert_eq!(session.stats().executed, 0);
+        assert!(session.collect(JobId(0)).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! Persistent result store: the on-disk half of the session layer.
+//!
+//! An append-only JSON-lines file (default `target/cellstore.jsonl`)
+//! mapping [`CellKey`]s to canonicalized [`Measurement`]s, so re-running
+//! `repro all` / `figure` / `sweep` across process invocations skips
+//! every already-measured cell. One line per cell:
+//!
+//! ```json
+//! {"key":"9f3a…16 hex…","measurement":{…},"repeat":0,
+//!  "scenario":{…identity…},"system":{…identity…},"v":1}
+//! ```
+//!
+//! `v` is [`STORE_FORMAT_VERSION`]; the same value salts the key
+//! preimage, so bumping it on any measurement-semantics change
+//! (simulator timing, workload synthesis, family defaults, line schema)
+//! invalidates the whole store (every lookup misses) without any
+//! migration code.
+//! The `scenario`/`system` identity objects are for humans and tooling —
+//! loads trust only `key`. Corrupt or foreign-version lines are skipped
+//! (and counted), never fatal: a truncated tail from a killed process
+//! costs those cells, not the store. Later duplicates of a key win, so
+//! appending is always safe.
+
+use super::cell::{CellKey, STORE_FORMAT_VERSION};
+use super::json::Json;
+use super::Measurement;
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// One entry queued for [`ResultStore::append_batch`].
+pub struct StoreEntry {
+    pub key: CellKey,
+    pub scenario: Json,
+    pub system: Json,
+    pub repeat: u32,
+    pub measurement: Measurement,
+}
+
+/// Loaded view of the cell store plus its backing path.
+pub struct ResultStore {
+    path: PathBuf,
+    cells: HashMap<CellKey, Measurement>,
+    skipped: usize,
+}
+
+impl ResultStore {
+    /// The conventional location (under cargo's target dir, so `git
+    /// status` stays clean and `cargo clean` resets the cache).
+    pub fn default_path() -> PathBuf {
+        PathBuf::from("target/cellstore.jsonl")
+    }
+
+    /// Open (and load) a store. A missing file is an empty store — it is
+    /// created on first append.
+    pub fn open(path: impl Into<PathBuf>) -> std::io::Result<ResultStore> {
+        let path = path.into();
+        let mut store = ResultStore { path, cells: HashMap::new(), skipped: 0 };
+        let text = match std::fs::read_to_string(&store.path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(store),
+            Err(e) => return Err(e),
+        };
+        let expected = schema_keys();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_line(line, &expected) {
+                Some((key, m)) => {
+                    store.cells.insert(key, m);
+                }
+                None => store.skipped += 1,
+            }
+        }
+        Ok(store)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Distinct cells resident after load + appends.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Lines ignored at load (corrupt, truncated, or foreign-version).
+    pub fn skipped_lines(&self) -> usize {
+        self.skipped
+    }
+
+    pub fn get(&self, key: CellKey) -> Option<&Measurement> {
+        self.cells.get(&key)
+    }
+
+    /// Append a batch of freshly computed cells: one file open, one line
+    /// per cell, then the in-memory view is updated. Measurements are
+    /// expected in canonical cell form (presentation fields cleared by
+    /// the session).
+    pub fn append_batch(&mut self, entries: Vec<StoreEntry>) -> std::io::Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
+        let mut text = String::new();
+        for e in &entries {
+            text.push_str(&render_line(e));
+            text.push('\n');
+        }
+        f.write_all(text.as_bytes())?;
+        for e in entries {
+            self.cells.insert(e.key, e.measurement);
+        }
+        Ok(())
+    }
+
+    /// Delete a store file. `Ok(true)` if a file was removed, `Ok(false)`
+    /// if there was nothing to remove.
+    pub fn clear(path: &Path) -> std::io::Result<bool> {
+        match std::fs::remove_file(path) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+fn render_line(e: &StoreEntry) -> String {
+    Json::obj(vec![
+        ("key", Json::str(e.key.hex())),
+        ("measurement", e.measurement.to_json()),
+        ("repeat", Json::u64(e.repeat as u64)),
+        ("scenario", e.scenario.clone()),
+        ("system", e.system.clone()),
+        ("v", Json::u64(STORE_FORMAT_VERSION)),
+    ])
+    .render()
+}
+
+/// The current measurement schema's key set — whatever `to_json` emits,
+/// derived once per load so it never drifts from the code.
+fn schema_keys() -> Vec<String> {
+    let zero = Measurement::from_json(&Json::obj(vec![
+        ("workload", Json::str("")),
+        ("system", Json::str("")),
+    ]))
+    .expect("a minimal measurement object parses");
+    match zero.to_json() {
+        Json::Obj(fields) => fields.into_iter().map(|(k, _)| k).collect(),
+        _ => Vec::new(),
+    }
+}
+
+fn parse_line(line: &str, expected: &[String]) -> Option<(CellKey, Measurement)> {
+    let v = Json::parse(line).ok()?;
+    if v.get("v")?.as_u64()? != STORE_FORMAT_VERSION {
+        return None;
+    }
+    let key = CellKey::from_hex(v.get("key")?.as_str()?)?;
+    let mj = v.get("measurement")?;
+    // Strict schema check: `Measurement::from_json` is lenient (absent
+    // counters default to zero, for hand-written report JSON), but a
+    // store line from a schema that drifted without a version bump must
+    // be a skip, not a cache hit full of silent zeros.
+    let Json::Obj(stored) = mj else {
+        return None;
+    };
+    if stored.len() != expected.len()
+        || !expected.iter().all(|k| stored.iter().any(|(k2, _)| k2 == k))
+    {
+        return None;
+    }
+    let m = Measurement::from_json(mj).ok()?;
+    Some((key, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn temp_path(tag: &str) -> PathBuf {
+        static N: AtomicU32 = AtomicU32::new(0);
+        std::env::temp_dir().join(format!(
+            "cgra-cellstore-{tag}-{}-{}.jsonl",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    fn tiny_measurement() -> Measurement {
+        Measurement {
+            workload: String::new(),
+            system: String::new(),
+            repeat: 0,
+            time_us: 12.625,
+            cycles: 8888,
+            stall_cycles: 1234,
+            utilization: 0.4375,
+            output_ok: true,
+            spm_accesses: 10,
+            l1_accesses: 20,
+            l1_hits: 15,
+            l2_accesses: 5,
+            dram_accesses: 2,
+            dram_row_hits: 1,
+            dram_row_conflicts: 1,
+            prefetch_used: 1,
+            prefetch_evicted: 0,
+            prefetch_useless: 0,
+            coverage: 0.875,
+            irregular_share: 0.5,
+            runahead_entries: 3,
+        }
+    }
+
+    fn entry(key: u64, cycles: u64) -> StoreEntry {
+        let mut m = tiny_measurement();
+        m.cycles = cycles;
+        StoreEntry {
+            key: CellKey(key),
+            scenario: Json::obj(vec![("family", Json::str("rgb"))]),
+            system: Json::obj(vec![("cpu", Json::Null)]),
+            repeat: 0,
+            measurement: m,
+        }
+    }
+
+    #[test]
+    fn store_round_trips_and_last_duplicate_wins() {
+        let path = temp_path("roundtrip");
+        let mut s = ResultStore::open(&path).unwrap();
+        assert!(s.is_empty());
+        s.append_batch(vec![entry(1, 100), entry(2, 200)]).unwrap();
+        s.append_batch(vec![entry(1, 111)]).unwrap(); // append-only update
+        drop(s);
+        let back = ResultStore::open(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.skipped_lines(), 0);
+        assert_eq!(back.get(CellKey(1)).unwrap().cycles, 111);
+        assert_eq!(back.get(CellKey(2)).unwrap().cycles, 200);
+        assert_eq!(back.get(CellKey(1)).unwrap(), &{
+            let mut m = tiny_measurement();
+            m.cycles = 111;
+            m
+        });
+        assert!(ResultStore::clear(&path).unwrap());
+        assert!(!ResultStore::clear(&path).unwrap());
+    }
+
+    #[test]
+    fn corrupt_foreign_and_drifted_lines_are_skipped_not_fatal() {
+        let path = temp_path("corrupt");
+        let mut s = ResultStore::open(&path).unwrap();
+        s.append_batch(vec![entry(7, 700)]).unwrap();
+        let good_line = std::fs::read_to_string(&path).unwrap();
+        // Simulate a truncated tail, a future-format line, and a
+        // same-version line whose measurement schema drifted (renamed
+        // field): the lenient Measurement::from_json would zero-default
+        // it, so the strict schema check must skip it instead.
+        let mut text = good_line.clone();
+        text.push_str("{\"key\":\"00000000000000\n");
+        text.push_str(&format!(
+            "{{\"key\":\"{}\",\"measurement\":{{}},\"v\":{}}}\n",
+            CellKey(8).hex(),
+            STORE_FORMAT_VERSION + 1
+        ));
+        text.push_str(
+            &good_line
+                .replace(&CellKey(7).hex(), &CellKey(9).hex())
+                .replace("\"cycles\":", "\"cyclez\":"),
+        );
+        std::fs::write(&path, text).unwrap();
+        let back = ResultStore::open(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.skipped_lines(), 3);
+        assert!(back.get(CellKey(7)).is_some());
+        assert!(back.get(CellKey(9)).is_none(), "drifted schema must not be a cache hit");
+        ResultStore::clear(&path).unwrap();
+    }
+}

@@ -1,11 +1,17 @@
 //! `repro` — the leader CLI for the reproduction: runs kernels on any
 //! registered system, executes declarative JSON sweeps, regenerates every
 //! figure/table of the paper, and drives the reconfiguration loop. All
-//! execution goes through the `exp` Engine (one persistent worker pool).
+//! execution goes through the `exp` session layer (one persistent worker
+//! pool + one content-addressed cell table per invocation, persisted in
+//! the result store so re-runs skip already-measured cells).
 //! (Hand-rolled arg parsing: the vendored offline crate set has no clap.)
 
-use cgra_mem::exp::{system_named, Engine, ExperimentSpec, Json, SystemSpec};
+use cgra_mem::exp::{
+    system_named, CellEvent, Engine, ExperimentSpec, Json, Provenance, ResultStore, Session,
+    SessionStats, SystemSpec,
+};
 use cgra_mem::report;
+use std::path::{Path, PathBuf};
 
 const USAGE: &str = "\
 repro — 'Re-thinking Memory-Bound Limitations in CGRAs' reproduction
@@ -15,47 +21,86 @@ USAGE:
   repro run <kernel> [system]       run one kernel (default: all 5 systems)
   repro sweep <spec.json>           run a declarative (workloads x systems
                                     x repeats) experiment; see DESIGN.md
+  repro all [-j N]                  regenerate every figure AND table from
+                                    one session: each unique (scenario,
+                                    system, repeat) cell simulates once
   repro figure <id|all> [-j N]      regenerate a figure: fig2 fig5 fig7
                                     fig11a fig11b fig12a..fig12f fig13 fig14
                                     fig15 fig16 fig17 fig18 motivation ablation
                                     scaling (working-set scaling per system)
   repro table <1|2|3|all>           regenerate a table
-  repro bench                       run the fixed kernel x system perf
-                                    matrix serially and write BENCH_sim.json
-                                    (iterations/sec; the perf trajectory)
+  repro cache stats                 cell count + size of the result store and
+                                    the last session's hit/miss ledger
+  repro cache clear                 delete the result store
+  repro bench [-j N]                run the fixed kernel x system perf
+                                    matrix and write BENCH_sim.json
+                                    (iterations/sec; the perf trajectory;
+                                    default -j 1 for stable wall times)
   repro golden <artifact>           load + execute an AOT artifact via PJRT
                                     (requires building with --features pjrt)
 
 FLAGS:
-  -j N      worker threads (default: all hardware threads)
-  --json    emit the structured report as JSON on stdout (run/sweep)
+  -j N          worker threads (default: all hardware threads; bench: 1)
+  --json        emit the structured report as JSON on stdout (run/sweep)
+  --store PATH  result-store location (default: target/cellstore.jsonl)
+  --no-cache    skip the persistent store (in-session dedup still applies)
 
-Figures are written to artifacts/figures/<id>.txt; run/sweep reports to
-artifacts/reports/<name>.json.
+Figures are written to artifacts/figures/<id>.txt, tables to
+artifacts/tables/table<n>.txt; run/sweep reports to
+artifacts/reports/<name>.json. Cached cells are reused from the result
+store; `repro cache clear` (or --no-cache) forces fresh simulation.
 ";
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
-    let threads = match take_jobs_flag(&mut args) {
-        Ok(n) => n.unwrap_or_else(cgra_mem::exp::default_parallelism),
+    let jobs = match take_jobs_flag(&mut args) {
+        Ok(n) => n,
         Err(e) => {
             eprintln!("{e}");
             std::process::exit(2);
         }
     };
+    let threads = jobs.unwrap_or_else(cgra_mem::exp::default_parallelism);
     let json_out = take_flag(&mut args, "--json");
+    let no_cache = take_flag(&mut args, "--no-cache");
+    let store_path = match take_value_flag(&mut args, "--store") {
+        Ok(p) => p.map(PathBuf::from),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let store_given = store_path.is_some();
+    if no_cache && store_given {
+        eprintln!("--store and --no-cache are mutually exclusive");
+        std::process::exit(2);
+    }
+    let cache = CacheOpts { no_cache, path: store_path.unwrap_or_else(ResultStore::default_path) };
     let cmd = args.first().map(String::as_str);
     if json_out && !matches!(cmd, Some("run") | Some("sweep")) {
         eprintln!("--json is only supported for `repro run` and `repro sweep`");
         std::process::exit(2);
     }
+    // The cache flags must never be silently ignored (bench/table/list
+    // never consult the store).
+    let session_cmd = matches!(cmd, Some("run") | Some("sweep") | Some("all") | Some("figure"));
+    if no_cache && !session_cmd {
+        eprintln!("--no-cache is only supported for `repro run/sweep/all/figure`");
+        std::process::exit(2);
+    }
+    if store_given && !(session_cmd || matches!(cmd, Some("cache"))) {
+        eprintln!("--store is only supported for `repro run/sweep/all/figure/cache`");
+        std::process::exit(2);
+    }
     match cmd {
         Some("list") => list(),
-        Some("run") => run(&args[1..], threads, json_out),
-        Some("sweep") => sweep(&args[1..], threads, json_out),
-        Some("figure") => figure(args.get(1).map(String::as_str).unwrap_or("all"), threads),
+        Some("run") => run(&args[1..], threads, json_out, &cache),
+        Some("sweep") => sweep(&args[1..], threads, json_out, &cache),
+        Some("all") => all(threads, &cache),
+        Some("figure") => figure(args.get(1).map(String::as_str).unwrap_or("all"), threads, &cache),
         Some("table") => table(args.get(1).map(String::as_str).unwrap_or("all")),
-        Some("bench") => bench(),
+        Some("cache") => cache_cmd(args.get(1).map(String::as_str), &cache),
+        Some("bench") => bench(jobs.unwrap_or(1)),
         Some("golden") => golden(args.get(1).map(String::as_str).unwrap_or("aggregate")),
         _ => print!("{USAGE}"),
     }
@@ -83,6 +128,96 @@ fn take_flag(args: &mut Vec<String>, flag: &str) -> bool {
     }
 }
 
+fn take_value_flag(args: &mut Vec<String>, flag: &str) -> Result<Option<String>, String> {
+    let Some(i) = args.iter().position(|a| a == flag) else {
+        return Ok(None);
+    };
+    let Some(val) = args.get(i + 1).cloned() else {
+        return Err(format!("{flag} needs a value (e.g. {flag} target/cellstore.jsonl)"));
+    };
+    args.drain(i..=i + 1);
+    Ok(Some(val))
+}
+
+/// Where (and whether) this invocation persists cells.
+struct CacheOpts {
+    no_cache: bool,
+    path: PathBuf,
+}
+
+impl CacheOpts {
+    /// Open a session honoring the flags. Exits on an unreadable store
+    /// (a corrupt line is skipped inside the store, not an open error).
+    fn session<'e>(&self, eng: &'e Engine) -> Session<'e> {
+        if self.no_cache {
+            return eng.session();
+        }
+        match ResultStore::open(&self.path) {
+            Ok(store) => {
+                if store.skipped_lines() > 0 {
+                    eprintln!(
+                        "(cellstore: skipped {} corrupt/foreign line(s) in {})",
+                        store.skipped_lines(),
+                        self.path.display()
+                    );
+                }
+                eng.session_with_store(store)
+            }
+            Err(e) => {
+                eprintln!("cannot open result store {}: {e}", self.path.display());
+                std::process::exit(1);
+            }
+        }
+    }
+
+    fn sidecar_path(&self) -> PathBuf {
+        stats_sidecar_path(&self.path)
+    }
+}
+
+fn stats_sidecar_path(store: &Path) -> PathBuf {
+    let mut name = store.file_name().unwrap_or_default().to_os_string();
+    name.push(".stats.json");
+    store.with_file_name(name)
+}
+
+/// Persist the session ledger next to the store so `repro cache stats`
+/// can report the last session's hit/miss totals.
+fn write_stats_sidecar(opts: &CacheOpts, session: &Session) {
+    if opts.no_cache {
+        return;
+    }
+    let st = session.stats();
+    let store_cells = session.store_summary().map(|(_, n)| n).unwrap_or(0);
+    let doc = Json::obj(vec![
+        ("jobs", Json::u64(st.jobs)),
+        ("cells_requested", Json::u64(st.cells_requested)),
+        ("executed", Json::u64(st.executed)),
+        ("session_hits", Json::u64(st.session_hits)),
+        ("store_hits", Json::u64(st.store_hits)),
+        ("store_cells", Json::u64(store_cells as u64)),
+    ]);
+    let path = opts.sidecar_path();
+    if let Err(e) = std::fs::write(&path, doc.render_pretty()) {
+        eprintln!("(could not write {}: {e})", path.display());
+    }
+}
+
+fn summary_line(st: SessionStats) -> String {
+    format!(
+        "session: {} cell(s) requested, {} simulated, {} session-cached, {} store-cached",
+        st.cells_requested, st.executed, st.session_hits, st.store_hits
+    )
+}
+
+/// Progress callback for long campaigns: one stderr line per *simulated*
+/// cell (cached cells resolve instantly and would only be noise).
+fn print_computed(ev: &CellEvent) {
+    if ev.provenance == Provenance::Computed {
+        eprintln!("[{}/{}] {} × {}", ev.done, ev.total, ev.workload, ev.system);
+    }
+}
+
 fn list() {
     // No engine needed: the registry is plain data.
     let registry = cgra_mem::exp::WorkloadRegistry::builtin();
@@ -105,7 +240,7 @@ fn list() {
     println!("new systems/scenarios: describe them in a sweep spec (repro sweep; see DESIGN.md)");
 }
 
-fn run(args: &[String], threads: usize, json_out: bool) {
+fn run(args: &[String], threads: usize, json_out: bool, cache: &CacheOpts) {
     let Some(kernel) = args.first() else {
         eprintln!("usage: repro run <kernel> [system] [--json]");
         std::process::exit(2);
@@ -121,13 +256,15 @@ fn run(args: &[String], threads: usize, json_out: bool) {
         None => cgra_mem::exp::builtin_systems(),
     };
     let eng = Engine::new(threads);
+    let session = cache.session(&eng);
     let spec = ExperimentSpec::new(format!("run-{kernel}"))
         .workload(kernel.clone())
         .systems(systems);
-    emit(&eng, &spec, json_out);
+    emit(&session, &spec, json_out);
+    write_stats_sidecar(cache, &session);
 }
 
-fn sweep(args: &[String], threads: usize, json_out: bool) {
+fn sweep(args: &[String], threads: usize, json_out: bool, cache: &CacheOpts) {
     let Some(path) = args.first() else {
         eprintln!("usage: repro sweep <spec.json> [--json]");
         std::process::exit(2);
@@ -147,13 +284,15 @@ fn sweep(args: &[String], threads: usize, json_out: bool) {
         }
     };
     let eng = Engine::new(threads);
-    emit(&eng, &spec, json_out);
+    let session = cache.session(&eng);
+    emit(&session, &spec, json_out);
+    write_stats_sidecar(cache, &session);
 }
 
-/// Run a spec, print the report (table or JSON), save the JSON artifact.
-/// Exits non-zero on spec/engine errors so scripts can trust `&&`.
-fn emit(eng: &Engine, spec: &ExperimentSpec, json_out: bool) {
-    let report = match eng.try_run(spec) {
+/// Run a spec on the session, print the report (table or JSON), save the
+/// JSON artifact. Exits non-zero on spec errors so scripts can trust `&&`.
+fn emit(session: &Session, spec: &ExperimentSpec, json_out: bool) {
+    let report = match session.try_run(spec) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("{e}");
@@ -169,46 +308,47 @@ fn emit(eng: &Engine, spec: &ExperimentSpec, json_out: bool) {
         Ok(path) => eprintln!("(report saved to {})", path.display()),
         Err(e) => eprintln!("(could not save report: {e})"),
     }
+    eprintln!("({})", summary_line(session.stats()));
 }
 
-fn figure(id: &str, threads: usize) {
+/// The whole evaluation — every figure and every table — from one shared
+/// session: overlapping campaigns (Fig 5/11/12/13/14/15/16/scaling all
+/// re-plot common cells) each simulate their cells exactly once, and a
+/// warm result store drops the count to zero.
+fn all(threads: usize, cache: &CacheOpts) {
     let eng = Engine::new(threads);
-    let render = |id: &str| -> Option<String> {
-        Some(match id {
-            "fig2" => report::fig2(),
-            "fig5" => report::fig5(&eng),
-            "fig7" => report::fig7(),
-            "fig11a" => report::fig11a(&eng),
-            "fig11b" => report::fig11b(&eng),
-            "fig12a" => report::fig12('a', &eng),
-            "fig12b" => report::fig12('b', &eng),
-            "fig12c" => report::fig12('c', &eng),
-            "fig12d" => report::fig12('d', &eng),
-            "fig12e" => report::fig12('e', &eng),
-            "fig12f" => report::fig12('f', &eng),
-            "fig13" => report::fig13(&eng),
-            "fig14" => report::fig14(&eng),
-            "fig15" => report::fig15(&eng),
-            "fig16" => report::fig16(&eng),
-            "fig17" => report::fig17(&eng),
-            "fig18" => report::fig18(),
-            "motivation" => report::motivation(&eng),
-            "ablation" => report::ablation(&eng),
-            "scaling" => report::scaling(&eng),
-            _ => return None,
-        })
-    };
-    let ids: Vec<&str> = if id == "all" {
-        vec![
-            "fig2", "fig5", "fig7", "fig11a", "fig11b", "fig12a", "fig12b", "fig12c", "fig12d",
-            "fig12e", "fig12f", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18",
-            "motivation", "ablation", "scaling",
-        ]
-    } else {
-        vec![id]
-    };
+    let mut session = cache.session(&eng);
+    session.set_progress(print_computed);
+    render_figures(&report::FIGURE_IDS, &session);
+    for (id, text) in [
+        ("1", report::table1(session.engine().registry())),
+        ("2", report::table2()),
+        ("3", report::table3()),
+    ] {
+        println!("{text}");
+        if let Err(e) = report::save_table(id, &text) {
+            eprintln!("(could not save table {id}: {e})");
+        }
+    }
+    write_stats_sidecar(cache, &session);
+    eprintln!("({})", summary_line(session.stats()));
+}
+
+fn figure(id: &str, threads: usize, cache: &CacheOpts) {
+    let eng = Engine::new(threads);
+    let mut session = cache.session(&eng);
+    session.set_progress(print_computed);
+    let ids: Vec<&str> = if id == "all" { report::FIGURE_IDS.to_vec() } else { vec![id] };
+    render_figures(&ids, &session);
+    write_stats_sidecar(cache, &session);
+    eprintln!("({})", summary_line(session.stats()));
+}
+
+/// Render + print + save each figure on the shared session (the one loop
+/// behind both `repro all` and `repro figure`).
+fn render_figures(ids: &[&str], session: &Session) {
     for id in ids {
-        match render(id) {
+        match report::render_figure(id, session) {
             Some(text) => {
                 println!("{text}");
                 if let Err(e) = report::save(id, &text) {
@@ -221,12 +361,14 @@ fn figure(id: &str, threads: usize) {
 }
 
 fn table(id: &str) {
+    // Tables need the registry, not measurements: no engine pool.
+    let registry = cgra_mem::exp::WorkloadRegistry::builtin();
     match id {
-        "1" => println!("{}", report::table1()),
+        "1" => println!("{}", report::table1(&registry)),
         "2" => println!("{}", report::table2()),
         "3" => println!("{}", report::table3()),
         "all" => {
-            println!("{}", report::table1());
+            println!("{}", report::table1(&registry));
             println!("{}", report::table2());
             println!("{}", report::table3());
         }
@@ -234,12 +376,77 @@ fn table(id: &str) {
     }
 }
 
-/// Fixed kernel × system perf matrix, run serially (one thread, stable
-/// numbers): simulator throughput as kernel iterations per wall second.
-/// Written to BENCH_sim.json so successive PRs have a perf trajectory.
-fn bench() {
+/// `repro cache stats|clear` — inspect or reset the persistent store.
+fn cache_cmd(sub: Option<&str>, cache: &CacheOpts) {
+    match sub {
+        Some("stats") => {
+            let path = &cache.path;
+            match ResultStore::open(path) {
+                Ok(store) => {
+                    let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+                    println!("store:        {}", path.display());
+                    println!("cells:        {}", store.len());
+                    println!("size:         {bytes} bytes");
+                    if store.skipped_lines() > 0 {
+                        println!("skipped:      {} corrupt/foreign line(s)", store.skipped_lines());
+                    }
+                }
+                Err(e) => {
+                    eprintln!("cannot open {}: {e}", path.display());
+                    std::process::exit(1);
+                }
+            }
+            let sidecar = stats_sidecar_path(path);
+            match std::fs::read_to_string(&sidecar) {
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    println!("last session: (no session has run against this store yet)")
+                }
+                Err(e) => println!("last session: (cannot read {}: {e})", sidecar.display()),
+                Ok(t) => match Json::parse(&t) {
+                    Ok(v) => {
+                        let g = |k: &str| v.get(k).and_then(Json::as_u64).unwrap_or(0);
+                        println!(
+                            "last session: {} job(s), {} cell(s) requested, {} simulated, \
+                             {} session hit(s), {} store hit(s)",
+                            g("jobs"),
+                            g("cells_requested"),
+                            g("executed"),
+                            g("session_hits"),
+                            g("store_hits")
+                        );
+                    }
+                    Err(e) => {
+                        println!("last session: ({} is corrupt: {e})", sidecar.display())
+                    }
+                },
+            }
+        }
+        Some("clear") => {
+            match ResultStore::clear(&cache.path) {
+                Ok(true) => println!("removed {}", cache.path.display()),
+                Ok(false) => println!("nothing to remove at {}", cache.path.display()),
+                Err(e) => {
+                    eprintln!("cannot remove {}: {e}", cache.path.display());
+                    std::process::exit(1);
+                }
+            }
+            let _ = std::fs::remove_file(stats_sidecar_path(&cache.path));
+        }
+        _ => {
+            eprintln!("usage: repro cache <stats|clear> [--store PATH]");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Fixed kernel × system perf matrix: simulator throughput as kernel
+/// iterations per wall second, written to BENCH_sim.json so successive
+/// PRs have a perf trajectory. Default is one worker (serial, stable
+/// wall times); `-j N` fans the per-kernel jobs over N workers — faster,
+/// but the per-cell wall times then share the machine. Never cached: the
+/// wall clock is the measurement.
+fn bench(threads: usize) {
     use std::time::Instant;
-    let registry = cgra_mem::exp::WorkloadRegistry::builtin();
     let kernels = [
         "aggregate/tiny",
         "small/rgb",
@@ -255,34 +462,42 @@ fn bench() {
         SystemSpec::banked_dram(),
         SystemSpec::ideal(),
     ];
-    let mut rows = Vec::new();
+    let eng = Engine::new(threads);
+    let registry = eng.registry_arc();
+    // One job per kernel (dataset synthesized once, shared by all four
+    // systems), rows kernel-major as before.
+    let rows = eng.map(kernels.iter().map(|k| k.to_string()).collect(), move |k| {
+        let wl = registry.build(&k).expect("bench kernel is registered");
+        systems
+            .iter()
+            .map(|sys| {
+                let t0 = Instant::now();
+                let m = cgra_mem::exp::measure_spec(wl.as_ref(), sys);
+                let secs = t0.elapsed().as_secs_f64().max(1e-9);
+                let ips = wl.iterations() as f64 / secs;
+                (k.clone(), sys.name.clone(), wl.iterations(), m, secs, ips)
+            })
+            .collect::<Vec<_>>()
+    });
     println!("{:<22} {:<14} {:>12} {:>10} {:>14}", "kernel", "system", "sim_cycles", "wall_ms", "iters/sec");
-    for k in &kernels {
-        let wl = registry.build(k).expect("bench kernel is registered");
-        for sys in &systems {
-            let t0 = Instant::now();
-            let m = cgra_mem::exp::measure_spec(wl.as_ref(), sys);
-            let secs = t0.elapsed().as_secs_f64().max(1e-9);
-            let ips = wl.iterations() as f64 / secs;
-            println!(
-                "{:<22} {:<14} {:>12} {:>10.2} {:>14.0}",
-                k, sys.name, m.cycles, secs * 1e3, ips
-            );
-            rows.push(Json::obj(vec![
-                ("kernel", Json::str(*k)),
-                ("system", Json::str(&sys.name)),
-                ("iterations", Json::u64(wl.iterations())),
-                ("sim_cycles", Json::u64(m.cycles)),
-                ("output_ok", Json::Bool(m.output_ok)),
-                ("wall_s", Json::num(secs)),
-                ("iters_per_sec", Json::num(ips)),
-            ]));
-        }
+    let mut out = Vec::new();
+    for (k, sys, iters, m, secs, ips) in rows.into_iter().flatten() {
+        println!("{:<22} {:<14} {:>12} {:>10.2} {:>14.0}", k, sys, m.cycles, secs * 1e3, ips);
+        out.push(Json::obj(vec![
+            ("kernel", Json::str(&k)),
+            ("system", Json::str(&sys)),
+            ("iterations", Json::u64(iters)),
+            ("sim_cycles", Json::u64(m.cycles)),
+            ("output_ok", Json::Bool(m.output_ok)),
+            ("wall_s", Json::num(secs)),
+            ("iters_per_sec", Json::num(ips)),
+        ]));
     }
     let doc = Json::obj(vec![
         ("bench", Json::str("sim")),
         ("unit", Json::str("kernel iterations per wall second")),
-        ("rows", Json::Arr(rows)),
+        ("threads", Json::u64(threads as u64)),
+        ("rows", Json::Arr(out)),
     ]);
     match std::fs::write("BENCH_sim.json", doc.render_pretty()) {
         Ok(()) => eprintln!("(written to BENCH_sim.json)"),

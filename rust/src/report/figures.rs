@@ -1,11 +1,15 @@
 //! Per-figure regeneration harnesses (§4 evaluation). Each figure is an
 //! [`ExperimentSpec`] (what to run) plus a formatter over the resulting
-//! [`Report`] (what the paper plots); the caller's [`Engine`] supplies the
-//! worker pool, so `repro figure all` reuses one pool for every figure.
-//! EXPERIMENTS.md records these outputs against the published values.
+//! [`Report`] (what the paper plots); the caller's [`Session`] supplies
+//! the worker pool *and* the shared cell table, so `repro all` /
+//! `repro figure all` simulate each unique (scenario, system, repeat)
+//! cell exactly once no matter how many figures re-plot it (Fig 5, 11a/b,
+//! 12, 13, 14, 15, 16 and the scaling figure all slice overlapping
+//! cells). EXPERIMENTS.md records these outputs against the published
+//! values.
 
 use crate::exp::{
-    reconfig_experiment, Engine, ExperimentSpec, Params, Report, ScenarioSpec, SystemSpec,
+    reconfig_experiment, ExperimentSpec, Params, Report, ScenarioSpec, Session, SystemSpec,
 };
 use crate::mem::{CacheConfig, SubsystemConfig};
 use crate::sim::{CgraConfig, ExecMode};
@@ -20,9 +24,13 @@ fn cgra_4x4(name: impl Into<String>, sub: SubsystemConfig, mode: ExecMode) -> Sy
 
 /// Fig 2: CGRA utilization of the SPM-only design (4×4 HyCUBE, 4 KB SPM)
 /// on the GCN/Cora aggregate kernel. Paper: average ≈ 1.43%.
-pub fn fig2() -> String {
+/// (One cell of Fig 5's campaign — a session serves both from a single
+/// simulation.)
+pub fn fig2(s: &Session) -> String {
     let sys = SystemSpec::spm_starved(4096);
-    let m = crate::exp::measure_spec(&GcnAggregate::new(GraphSpec::cora()), &sys);
+    let sys_name = sys.name.clone();
+    let report = s.run(&ExperimentSpec::new("fig2").workload(CORA).system(sys));
+    let m = report.get(CORA, &sys_name).unwrap();
     format!(
         "Fig 2 — SPM-only (4KB) utilization on GCN aggregate / Cora\n\
          cycles={} stall={} ({:.1}%)\n\
@@ -36,10 +44,10 @@ pub fn fig2() -> String {
 
 /// Fig 5: share of irregular accesses vs CGRA utilization per workload
 /// (SPM-only 4 KB). Paper: average utilization ≈ 1.7%.
-pub fn fig5(eng: &Engine) -> String {
+pub fn fig5(s: &Session) -> String {
     let sys = SystemSpec::spm_starved(4096);
     let sys_name = sys.name.clone();
-    let report = eng.run(&ExperimentSpec::new("fig5").paper_workloads().system(sys));
+    let report = s.run(&ExperimentSpec::new("fig5").paper_workloads().system(sys));
     let mut s = String::from("Fig 5 — irregular access share vs CGRA utilization (SPM-only 4KB)\n");
     s.push_str(&format!("{:<22} {:>10} {:>12}\n", "kernel", "irregular%", "utilization%"));
     let mut utils = Vec::new();
@@ -99,8 +107,8 @@ pub fn fig7() -> String {
 /// suite, plus the ideal-memory ceiling series (every access at SPM
 /// latency — the paper's idealistic upper bound). Paper: Cache+SPM ≈10×
 /// vs SPM-only, 7.26×/6.0× vs A72/SIMD; Runahead +3.04× (≤6.91×) on top.
-pub fn fig11a(eng: &Engine) -> String {
-    let report = eng.run(&ExperimentSpec::fig11a());
+pub fn fig11a(s: &Session) -> String {
+    let report = s.run(&ExperimentSpec::fig11a());
     let mut s = String::from("Fig 11a — execution time normalized to A72 (lower is better)\n");
     s.push_str(&format!(
         "{:<22} {:>8} {:>8} {:>9} {:>10} {:>9} {:>8}\n",
@@ -157,8 +165,8 @@ pub fn fig11a(eng: &Engine) -> String {
 
 /// Fig 11b: memory access counts per level for the three CGRA systems.
 /// Paper: Cache+SPM cuts DRAM accesses by ~77% vs SPM-only.
-pub fn fig11b(eng: &Engine) -> String {
-    let report = eng.run(&ExperimentSpec::fig11b());
+pub fn fig11b(s: &Session) -> String {
+    let report = s.run(&ExperimentSpec::fig11b());
     let mut s = String::from("Fig 11b — total memory accesses by level (suite sum)\n");
     s.push_str(&format!(
         "{:<10} {:>12} {:>12} {:>12} {:>12}\n",
@@ -185,15 +193,15 @@ pub fn fig11b(eng: &Engine) -> String {
 }
 
 /// Run one sweep over Cora: each modified config is a [`SystemSpec`] row.
-fn cora_sweep(eng: &Engine, name: &str, systems: Vec<SystemSpec>) -> (Report, Vec<u64>) {
+fn cora_sweep(s: &Session, name: &str, systems: Vec<SystemSpec>) -> (Report, Vec<u64>) {
     let order: Vec<String> = systems.iter().map(|s| s.name.clone()).collect();
-    let report = eng.run(&ExperimentSpec::new(name).workload(CORA).systems(systems));
+    let report = s.run(&ExperimentSpec::new(name).workload(CORA).systems(systems));
     let cycles = order.iter().map(|s| report.cycles_of(CORA, s).unwrap()).collect();
     (report, cycles)
 }
 
 /// Fig 12a-f: impact of cache configuration on execution time.
-pub fn fig12(part: char, eng: &Engine) -> String {
+pub fn fig12(part: char, session: &Session) -> String {
     let base = SubsystemConfig::paper_base();
     let mut s = format!("Fig 12{part} — GCN/Cora execution cycles vs parameter (Table 3 base)\n");
     match part {
@@ -208,7 +216,7 @@ pub fn fig12(part: char, eng: &Engine) -> String {
                     cgra_4x4(format!("assoc-{w}"), c, ExecMode::Normal)
                 })
                 .collect();
-            let (_, cycles) = cora_sweep(eng, "fig12a", systems);
+            let (_, cycles) = cora_sweep(session, "fig12a", systems);
             render_series(&mut s, "assoc", &pts, &cycles);
             s.push_str("(paper: saturates at associativity 8)\n");
         }
@@ -224,7 +232,7 @@ pub fn fig12(part: char, eng: &Engine) -> String {
                     cgra_4x4(format!("line-{lb}B"), c, ExecMode::Normal)
                 })
                 .collect();
-            let (_, cycles) = cora_sweep(eng, "fig12b", systems);
+            let (_, cycles) = cora_sweep(session, "fig12b", systems);
             render_series(&mut s, "line B", &pts, &cycles);
             s.push_str("(paper: saturates around 64 B)\n");
         }
@@ -238,7 +246,7 @@ pub fn fig12(part: char, eng: &Engine) -> String {
                     cgra_4x4(format!("l1-{sz}B"), c, ExecMode::Normal)
                 })
                 .collect();
-            let (_, cycles) = cora_sweep(eng, "fig12c", systems);
+            let (_, cycles) = cora_sweep(session, "fig12c", systems);
             render_series(&mut s, "L1 size", &pts, &cycles);
         }
         'd' => {
@@ -252,7 +260,7 @@ pub fn fig12(part: char, eng: &Engine) -> String {
                     cgra_4x4(format!("mshr-{m}"), c, ExecMode::Normal)
                 })
                 .collect();
-            let (_, cycles) = cora_sweep(eng, "fig12d", systems);
+            let (_, cycles) = cora_sweep(session, "fig12d", systems);
             render_series(&mut s, "MSHR", &pts, &cycles);
             s.push_str("(paper: demand misses saturate at 4)\n");
         }
@@ -266,7 +274,7 @@ pub fn fig12(part: char, eng: &Engine) -> String {
                     cgra_4x4(format!("spm-{b}B"), c, ExecMode::Normal)
                 })
                 .collect();
-            let (_, cycles) = cora_sweep(eng, "fig12e", systems);
+            let (_, cycles) = cora_sweep(session, "fig12e", systems);
             render_series(&mut s, "SPM B", &pts, &cycles);
             s.push_str("(paper: SPM size has little impact for large kernels)\n");
         }
@@ -283,7 +291,7 @@ pub fn fig12(part: char, eng: &Engine) -> String {
             systems.extend(sizes.iter().map(|&sz| {
                 cgra_4x4(format!("spm-only-{sz}B"), SubsystemConfig::spm_only(2, sz), ExecMode::Normal)
             }));
-            let (_, cycles) = cora_sweep(eng, "fig12f", systems);
+            let (_, cycles) = cora_sweep(session, "fig12f", systems);
             let cache_cycles = cycles[0];
             s.push_str(&format!(
                 "Cache+SPM (2KB L1 + 1KB SPM, no L2): {} cycles, {} B storage\n",
@@ -325,8 +333,8 @@ fn render_series<T: std::fmt::Display>(s: &mut String, label: &str, pts: &[T], c
 /// Fig 13: runahead speedup per kernel, with the ideal-memory ceiling
 /// (Cache+SPM cycles / ideal cycles — the most any memory optimisation
 /// could gain). Paper: avg 3.04×, max 6.91×.
-pub fn fig13(eng: &Engine) -> String {
-    let report = eng.run(&ExperimentSpec::campaign(
+pub fn fig13(s: &Session) -> String {
+    let report = s.run(&ExperimentSpec::campaign(
         "fig13",
         [SystemSpec::cache_spm(), SystemSpec::runahead(), SystemSpec::ideal()],
     ));
@@ -357,7 +365,7 @@ pub fn fig13(eng: &Engine) -> String {
 }
 
 /// Fig 14: runahead speedup vs MSHR size. Paper: saturates around 16.
-pub fn fig14(eng: &Engine) -> String {
+pub fn fig14(s: &Session) -> String {
     let kernels = [CORA, "grad", "rgb", "src2dest"];
     let mshrs: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
     let mut systems = Vec::new();
@@ -369,7 +377,7 @@ pub fn fig14(eng: &Engine) -> String {
             systems.push(cgra_4x4(format!("M{m}/{tag}"), c, mode));
         }
     }
-    let report = eng.run(&ExperimentSpec::new("fig14").workloads(kernels).systems(systems));
+    let report = s.run(&ExperimentSpec::new("fig14").workloads(kernels).systems(systems));
     let mut s = String::from("Fig 14 — runahead speedup vs MSHR entries\n");
     s.push_str(&format!("{:<22}", "kernel"));
     for m in &mshrs {
@@ -391,8 +399,8 @@ pub fn fig14(eng: &Engine) -> String {
 
 /// Fig 15: prefetched-block classification. Paper: "Useless" ≈ 0
 /// (prefetch accuracy ≈ 100%); evictions pronounced for grad/rgb.
-pub fn fig15(eng: &Engine) -> String {
-    let report = eng.run(&ExperimentSpec::campaign("fig15", [SystemSpec::runahead()]));
+pub fn fig15(s: &Session) -> String {
+    let report = s.run(&ExperimentSpec::campaign("fig15", [SystemSpec::runahead()]));
     let mut s = String::from("Fig 15 — prefetched cache blocks: Used / Evicted / Useless\n");
     s.push_str(&format!(
         "{:<22} {:>9} {:>9} {:>9} {:>10}\n",
@@ -414,8 +422,8 @@ pub fn fig15(eng: &Engine) -> String {
 }
 
 /// Fig 16: runahead coverage. Paper: average 87%.
-pub fn fig16(eng: &Engine) -> String {
-    let report = eng.run(&ExperimentSpec::campaign("fig16", [SystemSpec::runahead()]));
+pub fn fig16(s: &Session) -> String {
+    let report = s.run(&ExperimentSpec::campaign("fig16", [SystemSpec::runahead()]));
     let mut s = String::from("Fig 16 — runahead coverage (share of misses addressed)\n");
     let mut cov = Vec::new();
     for m in &report.measurements {
@@ -433,18 +441,19 @@ pub fn fig16(eng: &Engine) -> String {
 
 /// Fig 17: cache reconfiguration gains on the 8×8 Reconfig system.
 /// Paper: real data 4.59%/3.22% (no-RA / RA), random 2.10%/1.58%.
-/// (The closed-loop protocol doesn't fit the campaign shape; it fans out
-/// over the engine's pool via [`Engine::map`].)
-pub fn fig17(eng: &Engine) -> String {
-    let names = eng.registry().paper_names();
+/// (The closed-loop protocol doesn't fit the campaign shape — not a
+/// cacheable cell; it fans out over the engine's pool via
+/// [`crate::exp::Engine::map`].)
+pub fn fig17(s: &Session) -> String {
+    let names = s.engine().registry().paper_names();
     let mut jobs = Vec::new();
     for name in &names {
         for mode in [ExecMode::Normal, ExecMode::Runahead] {
             jobs.push((name.clone(), mode));
         }
     }
-    let registry = eng.registry_arc();
-    let rows = eng.map(jobs, move |(name, mode)| {
+    let registry = s.engine().registry_arc();
+    let rows = s.engine().map(jobs, move |(name, mode)| {
         let wl = registry.build(&name).expect("paper workload");
         let out = reconfig_experiment(wl.as_ref(), mode, 4096);
         let red = 100.0 * (1.0 - out.reconf_cycles as f64 / out.base_cycles as f64);
@@ -527,12 +536,12 @@ pub fn fig18() -> String {
 /// across grid sizes through the parameterized scenario layer; the
 /// SPM-only series collapses once x/y spill past its window, the cache
 /// systems degrade gracefully, and the ideal backend stays the flat floor.
-pub fn scaling(eng: &Engine) -> String {
-    scaling_with(eng, &[16, 32, 64, 96, 128])
+pub fn scaling(s: &Session) -> String {
+    scaling_with(s, &[16, 32, 64, 96, 128])
 }
 
 /// The scaling sweep at caller-chosen mesh dims (tests use small grids).
-pub fn scaling_with(eng: &Engine, dims: &[u32]) -> String {
+pub fn scaling_with(s: &Session, dims: &[u32]) -> String {
     let systems = [
         SystemSpec::spm_only(),
         SystemSpec::cache_spm(),
@@ -550,7 +559,7 @@ pub fn scaling_with(eng: &Engine, dims: &[u32]) -> String {
             .named(format!("mesh/{d}x{d}"))
         })
         .collect();
-    let report = eng.run(&ExperimentSpec::new("scaling").workloads(scenarios).systems(systems));
+    let report = s.run(&ExperimentSpec::new("scaling").workloads(scenarios).systems(systems));
     let mut s = String::from(
         "Scaling — cycles per nonzero vs. mesh size (unstructured SpMV, random order)\n",
     );
@@ -581,7 +590,7 @@ pub fn scaling_with(eng: &Engine, dims: &[u32]) -> String {
 
 /// Motivation study (Fig 3a ⑤⑥): one shared L1 for all memory PEs vs the
 /// multi-cache virtual-SPM design at equal total capacity.
-pub fn motivation(eng: &Engine) -> String {
+pub fn motivation(s: &Session) -> String {
     // Multi-cache: 2 x 4 KB private L1s (Table 3 base).
     let multi = cgra_4x4("multi-cache", SubsystemConfig::paper_base(), ExecMode::Normal);
     // Shared: one 8 KB L1 serving both crossbars (equal storage).
@@ -589,7 +598,7 @@ pub fn motivation(eng: &Engine) -> String {
     shared_cfg.shared_l1 = true;
     shared_cfg.l1 = CacheConfig::from_size(8192, 8, 64);
     let shared = cgra_4x4("shared-L1", shared_cfg, ExecMode::Normal);
-    let report = eng.run(&ExperimentSpec::campaign("motivation", [multi, shared]));
+    let report = s.run(&ExperimentSpec::campaign("motivation", [multi, shared]));
     let mut s =
         String::from("Motivation (Fig 3a) — shared single L1 vs multi-cache at equal capacity\n");
     let mut ratios = Vec::new();
@@ -614,7 +623,7 @@ pub fn motivation(eng: &Engine) -> String {
 /// §3.2.1 ablation: switch off each runahead design choice in turn and
 /// measure the speedup that remains (DESIGN.md calls these out as the
 /// paper's named design aspects).
-pub fn ablation(eng: &Engine) -> String {
+pub fn ablation(s: &Session) -> String {
     use crate::sim::RunaheadAblation;
     let kernels = [CORA, "grad", "radix_update", "rgb"];
     let variants: Vec<(&str, RunaheadAblation)> = vec![
@@ -629,7 +638,7 @@ pub fn ablation(eng: &Engine) -> String {
         cfg.ablation = *abl;
         systems.push(SystemSpec::cgra(*name, SubsystemConfig::paper_base(), cfg));
     }
-    let report = eng.run(&ExperimentSpec::new("ablation").workloads(kernels).systems(systems));
+    let report = s.run(&ExperimentSpec::new("ablation").workloads(kernels).systems(systems));
     let mut s = String::from("Ablation (§3.2.1) — runahead speedup with each mechanism disabled\n");
     s.push_str(&format!("{:<22}", "kernel"));
     for (name, _) in &variants {
@@ -662,7 +671,11 @@ mod tests {
 
     #[test]
     fn fig2_reports_low_utilization() {
-        let s = fig2();
+        let eng = crate::exp::Engine::new(2);
+        let session = eng.session();
+        let s = fig2(&session);
+        // The figure's one cell went through the session table.
+        assert_eq!(session.stats().executed, 1);
         let pct: f64 = s
             .lines()
             .find(|l| l.starts_with("CGRA utilization"))

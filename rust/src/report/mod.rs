@@ -1,7 +1,9 @@
 //! Figure/table harness: regenerates every table and figure of the
 //! paper's evaluation (§4) as aligned text (plus CSV lines) — the mapping
 //! from figure id to modules is the per-experiment index in DESIGN.md.
-//! Figures run on a caller-supplied [`crate::exp::Engine`].
+//! Figures run on a caller-supplied [`crate::exp::Session`], so every
+//! harness shares one cell table (`repro all` renders the whole
+//! evaluation with each unique cell simulated once).
 
 pub mod figures;
 pub mod tables;
@@ -9,12 +11,56 @@ pub mod tables;
 pub use figures::*;
 pub use tables::*;
 
+use crate::exp::Session;
+
+/// Every figure id, in `repro figure all` order.
+pub const FIGURE_IDS: [&str; 20] = [
+    "fig2", "fig5", "fig7", "fig11a", "fig11b", "fig12a", "fig12b", "fig12c", "fig12d",
+    "fig12e", "fig12f", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "motivation",
+    "ablation", "scaling",
+];
+
+/// Render one figure by id on the shared session, `None` for unknown ids.
+pub fn render_figure(id: &str, session: &Session) -> Option<String> {
+    Some(match id {
+        "fig2" => fig2(session),
+        "fig5" => fig5(session),
+        "fig7" => fig7(),
+        "fig11a" => fig11a(session),
+        "fig11b" => fig11b(session),
+        "fig12a" => fig12('a', session),
+        "fig12b" => fig12('b', session),
+        "fig12c" => fig12('c', session),
+        "fig12d" => fig12('d', session),
+        "fig12e" => fig12('e', session),
+        "fig12f" => fig12('f', session),
+        "fig13" => fig13(session),
+        "fig14" => fig14(session),
+        "fig15" => fig15(session),
+        "fig16" => fig16(session),
+        "fig17" => fig17(session),
+        "fig18" => fig18(),
+        "motivation" => motivation(session),
+        "ablation" => ablation(session),
+        "scaling" => scaling(session),
+        _ => return None,
+    })
+}
+
 /// Write a rendered figure to `artifacts/figures/<id>.txt` (best-effort)
 /// and return the text.
 pub fn save(id: &str, text: &str) -> std::io::Result<()> {
     let dir = std::path::Path::new("artifacts/figures");
     std::fs::create_dir_all(dir)?;
     std::fs::write(dir.join(format!("{id}.txt")), text)
+}
+
+/// Write a rendered table to `artifacts/tables/table<id>.txt`
+/// (best-effort, like figures).
+pub fn save_table(id: &str, text: &str) -> std::io::Result<()> {
+    let dir = std::path::Path::new("artifacts/tables");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("table{id}.txt")), text)
 }
 
 /// Write a machine-readable report to `artifacts/reports/<name>.json`.

@@ -1,16 +1,21 @@
 //! Tables 1-3 of the paper, regenerated from the live configuration
-//! structs (so they stay true to what the code actually runs).
+//! structs (so they stay true to what the code actually runs). Table 1
+//! enumerates the paper suite through the caller's [`WorkloadRegistry`] —
+//! `repro all` passes its session's registry, so a session over an
+//! extended registry lists exactly what its figures run.
 
 use crate::baseline::CpuModel;
+use crate::exp::WorkloadRegistry;
 use crate::mem::SubsystemConfig;
-use crate::workloads::paper_suite;
 
-/// Table 1: application kernels used in the evaluation.
-pub fn table1() -> String {
+/// Table 1: application kernels used in the evaluation (the registry's
+/// paper presets, in paper order).
+pub fn table1(registry: &WorkloadRegistry) -> String {
     let mut s = String::new();
     s.push_str("Table 1. Application kernels used in the evaluation\n");
     s.push_str(&format!("{:<22} {:<28} {:>12} {}\n", "Kernel", "Domain", "Iterations", "Irregular arrays"));
-    for wl in paper_suite() {
+    for name in registry.paper_names() {
+        let wl = registry.build(&name).expect("paper preset builds");
         let mut l = crate::workloads::Layout::new(2, 384);
         let _ = wl.build(&mut l);
         let irr: Vec<&str> =
@@ -91,7 +96,7 @@ mod tests {
 
     #[test]
     fn tables_render_nonempty() {
-        assert!(table1().contains("aggregate/cora"));
+        assert!(table1(&WorkloadRegistry::builtin()).contains("aggregate/cora"));
         assert!(table2().contains("Cortex-A72"));
         assert!(table3().contains("4x4"));
     }

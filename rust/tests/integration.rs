@@ -360,7 +360,8 @@ fn param_sweep_spec_runs_end_to_end_and_scaling_figure_renders() {
     assert!(e.contains("small/mesh"), "{e}");
 
     // The scaling figure runs over the same parameterized seam.
-    let fig = cgra_mem::report::scaling_with(&engine, &[8, 12]);
+    let session = engine.session();
+    let fig = cgra_mem::report::scaling_with(&session, &[8, 12]);
     assert!(fig.contains("mesh/8x8") && fig.contains("mesh/12x12"), "{fig}");
     assert!(fig.contains("SPM-only") && fig.contains("Ideal"), "{fig}");
 }
@@ -385,6 +386,83 @@ fn same_spec_json_runs_to_byte_identical_reports() {
     let a = render();
     let b = render();
     assert_eq!(a, b, "identical specs must produce identical report bytes");
+}
+
+/// Acceptance (session layer): overlapping campaigns submitted to one
+/// session — the `repro all` shape, where Fig 13/15/16 all re-plot
+/// Runahead cells — execute each unique (scenario, system, repeat) cell
+/// exactly once; everything else is served from the session table.
+#[test]
+fn overlapping_campaigns_execute_each_unique_cell_exactly_once() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, SystemSpec};
+    let eng = Engine::new(2);
+    let session = eng.session();
+    let workloads = ["aggregate/tiny", "small/rgb", "small/mesh"];
+    // fig13 shape: suite × {Cache+SPM, Runahead, Ideal}.
+    let a = session.run(&ExperimentSpec::new("f13").workloads(workloads).systems([
+        SystemSpec::cache_spm(),
+        SystemSpec::runahead(),
+        SystemSpec::ideal(),
+    ]));
+    // fig15/fig16 shape: suite × Runahead — fully contained in the above.
+    let b = session
+        .run(&ExperimentSpec::new("f15").workloads(workloads).system(SystemSpec::runahead()));
+    let c = session
+        .run(&ExperimentSpec::new("f16").workloads(workloads).system(SystemSpec::runahead()));
+    let st = session.stats();
+    assert_eq!(st.cells_requested, (workloads.len() * 3 + workloads.len() * 2) as u64);
+    assert_eq!(st.executed, (workloads.len() * 3) as u64, "each unique cell simulates once");
+    assert_eq!(st.session_hits, (workloads.len() * 2) as u64);
+    assert_eq!(st.store_hits, 0);
+    // The shared cells carry identical measurements under every job.
+    for w in &workloads {
+        assert_eq!(a.cycles_of(w, "Runahead"), b.cycles_of(w, "Runahead"));
+        assert_eq!(b.cycles_of(w, "Runahead"), c.cycles_of(w, "Runahead"));
+    }
+    assert!(a.measurements.iter().all(|m| m.output_ok));
+}
+
+/// Acceptance (result store): a second session against a warm store
+/// performs zero simulations while emitting byte-identical report JSON
+/// and byte-identical figure text.
+#[test]
+fn warm_store_rerun_is_byte_identical_with_zero_simulations() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, ResultStore, SystemSpec};
+    let path = std::env::temp_dir().join(format!(
+        "cgra-itest-cellstore-{}-warmrerun.jsonl",
+        std::process::id()
+    ));
+    let _ = ResultStore::clear(&path);
+    let spec = ExperimentSpec::new("warm")
+        .workloads(["aggregate/tiny", "small/join_probe"])
+        .systems([SystemSpec::cache_spm(), SystemSpec::runahead()]);
+
+    // Cold run: everything simulates, everything persists.
+    let eng = Engine::new(2);
+    let cold = eng.session_with_store(ResultStore::open(&path).unwrap());
+    let cold_report = cold.run(&spec);
+    let cold_fig = cgra_mem::report::scaling_with(&cold, &[8]);
+    let cold_stats = cold.stats();
+    assert_eq!(cold_stats.store_hits, 0);
+    assert!(cold_stats.executed > 0);
+    drop(cold);
+
+    // Warm run in a fresh engine (a new process, as far as the store is
+    // concerned): zero simulations, identical bytes.
+    let eng2 = Engine::new(3);
+    let warm = eng2.session_with_store(ResultStore::open(&path).unwrap());
+    let warm_report = warm.run(&spec);
+    assert_eq!(warm.stats().executed, 0, "warm store must satisfy every cell");
+    assert_eq!(warm.stats().store_hits, spec.workloads.len() as u64 * 2);
+    assert_eq!(
+        warm_report.to_json().render_pretty(),
+        cold_report.to_json().render_pretty(),
+        "cached re-run must reproduce the report byte for byte"
+    );
+    let warm_fig = cgra_mem::report::scaling_with(&warm, &[8]);
+    assert_eq!(warm.stats().executed, 0, "the figure must also be served from the store");
+    assert_eq!(warm_fig, cold_fig, "figure text must be byte-identical on a warm store");
+    let _ = ResultStore::clear(&path);
 }
 
 /// A JSON sweep spec (the `repro sweep` path) round-trips end to end:

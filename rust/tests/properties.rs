@@ -90,6 +90,91 @@ fn prop_every_family_validates_against_golden_under_ideal() {
     }
 }
 
+/// Cell identity is invariant under spelling: JSON key order (of both
+/// system objects and scenario params), display names, and
+/// preset-vs-equivalent-family-params spellings all hash to the same
+/// [`CellKey`] — while any change to a measured quantity changes it.
+#[test]
+fn prop_cell_key_invariant_under_key_order_and_preset_spelling() {
+    use cgra_mem::exp::{CellKey, Json, Params, ScenarioSpec, SystemSpec, WorkloadRegistry};
+    let reg = WorkloadRegistry::builtin();
+    let key = |scen: &ScenarioSpec, sys: &SystemSpec, rep: u32| {
+        CellKey::compute(&reg, scen, sys, rep).unwrap()
+    };
+
+    // System JSON: same overrides, shuffled key order, different name.
+    let sys_a = SystemSpec::from_json(
+        &Json::parse(r#"{"base": "Cache+SPM", "l1_ways": 2, "mshr": 4, "spm_bytes": 1024}"#)
+            .unwrap(),
+    )
+    .unwrap();
+    let sys_b = SystemSpec::from_json(
+        &Json::parse(
+            r#"{"spm_bytes": 1024, "mshr": 4, "name": "renamed", "base": "Cache+SPM",
+                "l1_ways": 2}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let scen = ScenarioSpec::preset("aggregate/tiny");
+    assert_eq!(key(&scen, &sys_a, 0), key(&scen, &sys_b, 0));
+
+    // Scenario params: every insertion order of the same bag is one cell.
+    let mut rng = Rng::new(99);
+    let reference = {
+        let p = Params::new().set_u64("dim", 24).set_u64("seed", 7).set_str("order", "random");
+        key(&ScenarioSpec::family("mesh", p), &sys_a, 0)
+    };
+    for _ in 0..20 {
+        // Random insertion order, random display name: same key.
+        let mut order: Vec<usize> = (0..3).collect();
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.gen_range(0, (i + 1) as u64) as usize);
+        }
+        let mut p = Params::new();
+        for &i in &order {
+            p = match i {
+                0 => p.set_u64("dim", 24),
+                1 => p.set_u64("seed", 7),
+                _ => p.set_str("order", "random"),
+            };
+        }
+        let scen = ScenarioSpec::family("mesh", p).named(format!("label-{:x}", rng.next_u64()));
+        assert_eq!(key(&scen, &sys_a, 0), reference);
+    }
+
+    // Preset names and their stored (family, params) identity collide.
+    for (preset, family, params) in [
+        ("small/mesh", "mesh", Params::new().set_str("scale", "small")),
+        ("aggregate/cora", "aggregate", Params::new().set_str("dataset", "cora")),
+        (
+            "small/join_probe",
+            "join",
+            Params::new().set_str("phase", "probe").set_str("scale", "small"),
+        ),
+    ] {
+        assert_eq!(
+            key(&ScenarioSpec::preset(preset), &sys_a, 0),
+            key(&ScenarioSpec::family(family, params), &sys_a, 0),
+            "{preset} must equal its family spelling"
+        );
+    }
+
+    // Distinct identities stay distinct.
+    assert_ne!(key(&scen, &sys_a, 0), key(&scen, &sys_a, 1));
+    let other = SystemSpec::from_json(
+        &Json::parse(r#"{"base": "Cache+SPM", "l1_ways": 4, "mshr": 4, "spm_bytes": 1024}"#)
+            .unwrap(),
+    )
+    .unwrap();
+    assert_ne!(key(&scen, &sys_a, 0), key(&scen, &other, 0));
+    assert_ne!(
+        key(&ScenarioSpec::preset("small/mesh"), &sys_a, 0),
+        key(&ScenarioSpec::preset("mesh"), &sys_a, 0),
+        "small and paper scale are different cells"
+    );
+}
+
 #[test]
 fn prop_mapper_produces_valid_schedules() {
     let mut rng = Rng::new(2024);
