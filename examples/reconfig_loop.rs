@@ -1,41 +1,56 @@
-//! Cache-reconfiguration closed loop on the 8×8 Reconfig system (§3.4,
-//! Fig 8): monitor → tracker sample → software model (time hit rate) →
-//! Algorithm 1 DP → permission-register rewrite → measured gain.
+//! The online cache-reconfiguration closed loop on the 8×8 Reconfig
+//! system (§3.4, Fig 8): monitor → tracker sample → software model (time
+//! hit rate) → Algorithm 1 DP → permission-register rewrite — firing
+//! *during* execution through the array's epoch hook, with the
+//! flush/migration cost charged in-band.
 //!
 //! ```bash
 //! cargo run --release --example reconfig_loop [kernel]
 //! ```
 
-use cgra_mem::exp::reconfig_experiment;
-use cgra_mem::sim::ExecMode;
-use cgra_mem::workloads::paper_suite;
+use cgra_mem::exp::WorkloadRegistry;
+use cgra_mem::mem::SubsystemConfig;
+use cgra_mem::reconfig::OnlineController;
+use cgra_mem::sim::{CgraConfig, ExecMode, ReconfigPolicy};
+use cgra_mem::workloads::{prepare, validate};
 
 fn main() {
-    let which = std::env::args().nth(1).unwrap_or_else(|| "aggregate/cora".into());
-    let suite = paper_suite();
-    let wl = suite
-        .iter()
-        .find(|w| w.name() == which)
+    let which = std::env::args().nth(1).unwrap_or_else(|| "small/phased".into());
+    let registry = WorkloadRegistry::builtin();
+    let wl = registry
+        .build(&which)
         .unwrap_or_else(|| panic!("unknown kernel {which:?} — try `repro list`"));
-    println!("reconfiguration loop on {} (8x8 HyCUBE, Table 3 Reconfig)\n", wl.name());
+    println!("online reconfiguration on {} (8x8 HyCUBE, Table 3 Reconfig)\n", wl.name());
     for mode in [ExecMode::Normal, ExecMode::Runahead] {
-        let out = reconfig_experiment(wl.as_ref(), mode, 4096);
-        println!("mode {:?}:", mode);
-        println!("  monitor triggered: {}", out.monitor_triggered);
-        println!("  plan: ways per L1 {:?}, vline shifts {:?}", out.plan.ways, out.plan.shifts);
-        for (p, prof) in out.plan.profiles.iter().enumerate() {
-            let w = out.plan.ways[p];
-            println!(
-                "    port {p}: time-hit(k={w}) = {:.3}  access-hit = {:.3} (inflation §3.4.2 warns about)",
-                prof.time_hit[w], prof.access_hit[w]
-            );
-        }
+        let policy = ReconfigPolicy::online();
+        // Baseline: the same system with the controller off.
+        let mut cgra = CgraConfig::hycube_8x8(mode);
+        let (mut mem0, mut arr0, _) =
+            prepare(wl.as_ref(), SubsystemConfig::paper_reconfig(), cgra);
+        let base = arr0.run(&mut mem0, wl.iterations());
+        // Online: the controller rides the epoch hook, sampling the live
+        // trace window and rewriting way permissions mid-run.
+        cgra.trace_window = policy.window;
+        let (mut mem, mut arr, layout) =
+            prepare(wl.as_ref(), SubsystemConfig::paper_reconfig(), cgra);
+        let mut ctl = OnlineController::from_policy(&policy);
+        let res = arr.run_with(&mut mem, wl.iterations(), Some((&mut ctl, policy.period)));
+        let ok = validate(wl.as_ref(), &layout, &mem.backing);
+        println!("mode {mode:?}:");
         println!(
-            "  cycles {} -> {}  ({:+.2}% runtime)  output_ok={}",
-            out.base_cycles,
-            out.reconf_cycles,
-            100.0 * (out.reconf_cycles as f64 / out.base_cycles as f64 - 1.0),
-            out.output_ok
+            "  plans applied: {} ({} ways migrated, {} lines flushed)",
+            ctl.applies, ctl.ways_migrated, ctl.lines_flushed
+        );
+        println!(
+            "  final ways per L1: {:?}  vline shifts: {:?}",
+            (0..4).map(|p| mem.l1(p).num_ways()).collect::<Vec<_>>(),
+            (0..4).map(|p| mem.l1(p).config().vline_shift).collect::<Vec<_>>()
+        );
+        println!(
+            "  cycles {} -> {}  ({:+.2}% runtime, flush cost charged in-band)  output_ok={ok}",
+            base.cycles,
+            res.cycles,
+            100.0 * (res.cycles as f64 / base.cycles as f64 - 1.0)
         );
     }
 }

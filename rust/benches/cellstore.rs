@@ -13,7 +13,8 @@ fn main() {
     println!("cellstore — session/cell-layer overhead");
     let registry = WorkloadRegistry::builtin();
 
-    // Key hashing over the full paper grid (10 workloads × 7 systems).
+    // Key hashing over the full paper grid (10 workloads × all named
+    // systems).
     let scenarios: Vec<ScenarioSpec> =
         registry.paper_names().into_iter().map(ScenarioSpec::preset).collect();
     let systems = cgra_mem::exp::all_systems();

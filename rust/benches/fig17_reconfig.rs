@@ -1,5 +1,7 @@
-//! Fig 17 bench: the cache-reconfiguration closed loop (8×8 Reconfig
-//! system) across the suite, with and without runahead.
+//! Fig 17 bench: the online cache-reconfiguration closed loop (8×8
+//! Reconfig system) across the suite, with and without runahead. The
+//! figure now renders through ordinary session cells; the bench holds a
+//! fresh (storeless) session so the wall time below is real simulation.
 
 mod common;
 

@@ -44,7 +44,10 @@ use crate::sim::CgraConfig;
 /// result-store line. Bump on any change that alters what a cell
 /// measures: simulator timing semantics, workload/dataset synthesis or
 /// family defaults, or the store schema.
-pub const STORE_FORMAT_VERSION: u64 = 1;
+///
+/// v2: the system identity gained the reconfiguration policy and the
+/// measurement schema gained the `reconfig_*` counters (PR 5).
+pub const STORE_FORMAT_VERSION: u64 = 2;
 
 /// Content address of one (scenario, system, repeat) cell.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -262,6 +265,33 @@ fn cgra_json(c: &CgraConfig) -> Json {
                 ("dummy_tracking", Json::Bool(c.ablation.dummy_tracking)),
             ]),
         ),
+        ("reconfig", reconfig_json(&c.reconfig)),
+    ])
+}
+
+/// Off-mode policies hash as `{"mode": "off"}` alone: the controller
+/// never runs, so its knobs are dead state that must not fork the cell
+/// identity (an off policy cloned from a tuned online one is the same
+/// simulation as the default off).
+fn reconfig_json(r: &crate::sim::ReconfigPolicy) -> Json {
+    use crate::sim::ReconfigMode;
+    if r.mode == ReconfigMode::Off {
+        return Json::obj(vec![("mode", Json::str("off"))]);
+    }
+    Json::obj(vec![
+        (
+            "mode",
+            Json::str(match r.mode {
+                ReconfigMode::Off => unreachable!("handled above"),
+                ReconfigMode::Static => "static",
+                ReconfigMode::Online => "online",
+            }),
+        ),
+        ("period", Json::u64(r.period)),
+        ("threshold", Json::num(r.threshold)),
+        ("min_accesses", Json::u64(r.min_accesses)),
+        ("window", Json::u64(r.window as u64)),
+        ("cooldown", Json::u64(r.cooldown as u64)),
     ])
 }
 
@@ -319,6 +349,33 @@ mod tests {
             key(&mesh, &SystemSpec::a72(), 0),
             key(&mesh, &SystemSpec::simd(), 0),
             "CPU models differ in simd_width"
+        );
+    }
+
+    #[test]
+    fn reconfig_policy_is_part_of_system_identity() {
+        let scen = ScenarioSpec::preset("small/phased");
+        let off = SystemSpec::cache_spm();
+        let mut online = SystemSpec::cache_spm();
+        if let ExecModel::Cgra { cgra, .. } = &mut online.exec {
+            cgra.reconfig = crate::sim::ReconfigPolicy::online();
+        }
+        assert_ne!(key(&scen, &off, 0), key(&scen, &online, 0), "mode is identity");
+        let mut tuned = online.clone();
+        if let ExecModel::Cgra { cgra, .. } = &mut tuned.exec {
+            cgra.reconfig.period = 4096;
+        }
+        assert_ne!(key(&scen, &online, 0), key(&scen, &tuned, 0), "knobs are identity");
+        // Off-mode knobs are dead state: a tuned policy with the mode
+        // flipped off is the same cell as the default off system.
+        let mut tuned_off = tuned.clone();
+        if let ExecModel::Cgra { cgra, .. } = &mut tuned_off.exec {
+            cgra.reconfig.mode = crate::sim::ReconfigMode::Off;
+        }
+        assert_eq!(
+            key(&scen, &off, 0),
+            key(&scen, &tuned_off, 0),
+            "dead knobs must not fork the identity"
         );
     }
 

@@ -49,9 +49,8 @@ use crate::mem::{
     BankedDramConfig, CacheConfig, DramModelKind, IdealConfig, MemoryModelSpec, RowPolicy,
     SubsystemConfig,
 };
-use crate::reconfig::{apply_plan, plan_from_traces, MissRateMonitor, ReconfigPlan};
-use crate::sim::{CgraConfig, ExecMode, Geometry};
-use crate::workloads::{prepare, run_workload_model, validate, Workload};
+use crate::sim::{CgraConfig, ExecMode, Geometry, ReconfigMode, ReconfigPolicy};
+use crate::workloads::{run_workload_model, Workload};
 
 /// Checked numeric field access: present-but-invalid (negative,
 /// fractional, non-numeric) is an error, absent is `None` — a bad value
@@ -145,6 +144,15 @@ impl SystemSpec {
         )
     }
 
+    /// The Table 3 Reconfig column (8×8 HyCUBE, 4 virtual SPMs) with the
+    /// online phase-adaptive cache-reconfiguration loop enabled on top of
+    /// runahead — the paper's full system (Fig 17, +6.02% over runahead).
+    pub fn runahead_reconfig() -> Self {
+        let mut cgra = CgraConfig::hycube_8x8(ExecMode::Runahead);
+        cgra.reconfig = ReconfigPolicy::online();
+        Self::cgra("Runahead+Reconfig", SubsystemConfig::paper_reconfig(), cgra)
+    }
+
     /// Cache+SPM over the banked DRAM channel (row-buffer + bank-conflict
     /// contention instead of the flat latency constant).
     pub fn banked_dram() -> Self {
@@ -174,12 +182,17 @@ impl SystemSpec {
     /// keys override the CGRA configuration (ignored for CPU bases).
     /// `"memory"` selects the backend (`"hierarchy"` | `"ideal"`);
     /// `"dram_model": "banked"` plus `dram_banks` / `dram_row_bytes` /
-    /// `dram_policy` selects and shapes the banked DRAM channel.
+    /// `dram_policy` selects and shapes the banked DRAM channel;
+    /// `"reconfig"` (`"off"` | `"static"` | `"online"`) plus
+    /// `reconfig_period` / `reconfig_threshold` / `reconfig_window`
+    /// enables and tunes the online cache-reconfiguration loop (cache-
+    /// bearing hierarchy systems only).
     pub fn from_json(v: &Json) -> Result<SystemSpec, String> {
-        const KNOWN: [&str; 20] = [
+        const KNOWN: [&str; 24] = [
             "base", "name", "mode", "geometry", "memory", "spm_bytes", "mshr", "freq_mhz",
             "shared_l1", "l1_bytes", "l1_ways", "l1_line", "l2_bytes", "l2_ways", "l2_line",
             "dram_model", "dram_banks", "dram_row_bytes", "dram_policy", "dram_latency",
+            "reconfig", "reconfig_period", "reconfig_threshold", "reconfig_window",
         ];
         // Keys that configure the hierarchy backend and are meaningless
         // (and therefore hard errors) on the ideal backend.
@@ -188,6 +201,11 @@ impl SystemSpec {
             "l2_ways", "l2_line", "dram_model", "dram_banks", "dram_row_bytes", "dram_policy",
             "dram_latency",
         ];
+        // Reconfiguration needs a reconfigurable L1 array: the knobs are
+        // hard errors on the ideal backend (and any non-off mode there,
+        // or on zero-way L1s, is rejected below).
+        const RECONFIG_KEYS: [&str; 3] =
+            ["reconfig_period", "reconfig_threshold", "reconfig_window"];
         if let Json::Obj(fields) = v {
             // A mistyped key would otherwise run the unmodified base config
             // and silently produce a flat sweep.
@@ -238,6 +256,56 @@ impl SystemSpec {
                 })?;
                 cgra.freq_mhz = f;
             }
+            // ---- reconfiguration policy (strict: the sub-keys on an
+            // off-mode system would be the silent-flat-sweep trap) ----
+            if let Some(j) = v.get("reconfig") {
+                cgra.reconfig = match j.as_str() {
+                    Some("off") => ReconfigPolicy { mode: ReconfigMode::Off, ..cgra.reconfig },
+                    Some("static") => {
+                        ReconfigPolicy { mode: ReconfigMode::Static, ..cgra.reconfig }
+                    }
+                    Some("online") => {
+                        ReconfigPolicy { mode: ReconfigMode::Online, ..cgra.reconfig }
+                    }
+                    _ => {
+                        return Err(format!(
+                            "\"reconfig\" must be \"off\", \"static\" or \"online\", got {}",
+                            j.render()
+                        ))
+                    }
+                };
+            }
+            let reconfig_key = RECONFIG_KEYS.into_iter().find(|k| v.get(k).is_some());
+            if cgra.reconfig.mode == ReconfigMode::Off {
+                if let Some(k) = reconfig_key {
+                    return Err(format!(
+                        "{k:?} requires \"reconfig\": \"static\" or \"online\""
+                    ));
+                }
+            }
+            if let Some(p) = u64_field(v, "reconfig_period")? {
+                if p == 0 {
+                    return Err("\"reconfig_period\" must be at least 1".into());
+                }
+                cgra.reconfig.period = p;
+            }
+            if let Some(j) = v.get("reconfig_threshold") {
+                let t = j.as_f64().filter(|t| *t > 0.0 && *t <= 1.0).ok_or_else(|| {
+                    format!(
+                        "\"reconfig_threshold\" must be a number in (0, 1], got {}",
+                        j.render()
+                    )
+                })?;
+                cgra.reconfig.threshold = t;
+            }
+            if let Some(w) = u64_field(v, "reconfig_window")? {
+                if w == 0 || w > (1 << 20) {
+                    return Err(format!(
+                        "\"reconfig_window\" must be in 1..=1048576, got {w}"
+                    ));
+                }
+                cgra.reconfig.window = w as usize;
+            }
             // ---- memory-backend selection (strict: a bad value must
             // never silently run the base's backend) ----
             let mem = match v.get("memory") {
@@ -265,12 +333,23 @@ impl SystemSpec {
             };
             let mut subsystem = match mem {
                 MemoryModelSpec::Ideal(mut ideal) => {
-                    for k in HIERARCHY_ONLY {
+                    for k in HIERARCHY_ONLY.iter().chain(RECONFIG_KEYS.iter()) {
                         if v.get(k).is_some() {
                             return Err(format!(
                                 "{k:?} does not apply to the ideal memory model"
                             ));
                         }
+                    }
+                    if cgra.reconfig.mode != ReconfigMode::Off {
+                        // Inherited (e.g. a Runahead+Reconfig base) or
+                        // explicit: either way there is nothing to
+                        // reconfigure, and a dead policy must not fork
+                        // the cell identity.
+                        return Err(
+                            "the ideal memory model has no reconfigurable caches; \
+                             set \"reconfig\": \"off\" (or pick a hierarchy base)"
+                                .into(),
+                        );
                     }
                     ideal.num_ports = cgra.geom.ports;
                     spec.exec = ExecModel::Cgra { mem: MemoryModelSpec::Ideal(ideal), cgra };
@@ -441,7 +520,44 @@ impl SystemSpec {
             if let Some(b) = v.get("shared_l1").and_then(Json::as_bool) {
                 subsystem.shared_l1 = b;
             }
+            if cgra.reconfig.mode != ReconfigMode::Off && subsystem.l1.ways == 0 {
+                // Nothing to reconfigure on a cache-less system — running
+                // anyway would silently measure the off-mode cells.
+                return Err(
+                    "\"reconfig\" needs a cache-bearing system (this base has no L1 ways; \
+                     set l1_ways/l1_bytes or pick a cache-ful base)"
+                        .into(),
+                );
+            }
+            if cgra.reconfig.mode != ReconfigMode::Off && subsystem.shared_l1 {
+                // The shared-L1 motivation mode routes every port to cache
+                // 0; planning per-port way moves there would migrate ways
+                // into caches that receive no traffic — a silently
+                // crippled system under a reconfig-labelled row.
+                return Err(
+                    "\"reconfig\" does not apply to the shared-L1 motivation mode \
+                     (all traffic is routed to one cache)"
+                        .into(),
+                );
+            }
             spec.exec = ExecModel::Cgra { mem: MemoryModelSpec::Hierarchy(subsystem), cgra };
+        } else {
+            // CPU bases silently ignore the CGRA shape keys (documented),
+            // but a reconfig-labelled row that measures the plain baseline
+            // would be the flat-sweep trap again — hard error instead. An
+            // explicit "off" stays legal (spec symmetry), as on the ideal
+            // backend.
+            if let Some(k) = RECONFIG_KEYS.into_iter().find(|k| v.get(k).is_some()) {
+                return Err(format!("{k:?} does not apply to a CPU system"));
+            }
+            if let Some(j) = v.get("reconfig") {
+                if j.as_str() != Some("off") {
+                    return Err(format!(
+                        "\"reconfig\" does not apply to a CPU system, got {}",
+                        j.render()
+                    ));
+                }
+            }
         }
         Ok(spec)
     }
@@ -567,6 +683,11 @@ pub struct Measurement {
     pub coverage: f64,
     pub irregular_share: f64,
     pub runahead_entries: u64,
+    /// Online-reconfiguration plans applied during the run (0 when the
+    /// system's policy is off or the monitor never triggered).
+    pub reconfig_applies: u64,
+    /// Ways that changed owner across those applies.
+    pub reconfig_ways_moved: u64,
 }
 
 impl Measurement {
@@ -593,6 +714,8 @@ impl Measurement {
             ("coverage", Json::num(self.coverage)),
             ("irregular_share", Json::num(self.irregular_share)),
             ("runahead_entries", Json::u64(self.runahead_entries)),
+            ("reconfig_applies", Json::u64(self.reconfig_applies)),
+            ("reconfig_ways_moved", Json::u64(self.reconfig_ways_moved)),
         ])
     }
 
@@ -624,6 +747,8 @@ impl Measurement {
             coverage: n("coverage"),
             irregular_share: n("irregular_share"),
             runahead_entries: u("runahead_entries"),
+            reconfig_applies: u("reconfig_applies"),
+            reconfig_ways_moved: u("reconfig_ways_moved"),
         })
     }
 }
@@ -655,6 +780,8 @@ pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
                 coverage: 0.0,
                 irregular_share: 0.0,
                 runahead_entries: 0,
+                reconfig_applies: 0,
+                reconfig_ways_moved: 0,
             }
         }
         ExecModel::Cgra { mem, cgra } => {
@@ -682,6 +809,8 @@ pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
                 coverage: r.coverage(),
                 irregular_share: run.irregular_share,
                 runahead_entries: r.runahead_entries,
+                reconfig_applies: run.reconfig_applies,
+                reconfig_ways_moved: run.reconfig_ways_moved,
             }
         }
     }
@@ -943,48 +1072,12 @@ impl Report {
     }
 }
 
-/// Fig 17 protocol outcome (base vs reconfigured run).
-pub struct ReconfigOutcome {
-    pub base_cycles: u64,
-    pub reconf_cycles: u64,
-    pub plan: ReconfigPlan,
-    pub output_ok: bool,
-    pub monitor_triggered: bool,
-}
-
-/// Fig 17 protocol: run a workload on the 8×8 Reconfig system with and
-/// without the closed-loop cache reconfiguration (sample → plan → apply →
-/// run).
-pub fn reconfig_experiment(wl: &dyn Workload, mode: ExecMode, sample_window: usize) -> ReconfigOutcome {
-    let sys = SubsystemConfig::paper_reconfig();
-    let mut cgra = CgraConfig::hycube_8x8(mode);
-    cgra.trace_window = sample_window;
-
-    // Baseline run (uniform ways, default line size) — also the sampling
-    // run: the hardware tracker records each port's access window.
-    let (mut mem, mut arr, _layout) = prepare(wl, sys, cgra);
-    let mut monitor = MissRateMonitor::new(0.05, 1024);
-    let base = arr.run(&mut mem, wl.iterations());
-    let monitor_triggered = monitor.observe(&mem);
-    let plan = plan_from_traces(&mem, &arr.trace, &[0, 1]);
-
-    // Reconfigured run: apply the plan to a fresh system (steady-state
-    // behaviour; the flush/migration cost is a handful of cycles and is
-    // charged below).
-    let (mut mem2, mut arr2, layout2) = prepare(wl, sys, cgra);
-    let migrated = apply_plan(&mut mem2, &plan);
-    let reconf = arr2.run(&mut mem2, wl.iterations());
-    let output_ok = validate(wl, &layout2, &mem2.backing);
-    ReconfigOutcome {
-        base_cycles: base.cycles,
-        // Way migration costs one flush per moved way (§4.5: reuses the
-        // existing invalidate machinery).
-        reconf_cycles: reconf.cycles + migrated as u64 * 64,
-        plan,
-        output_ok,
-        monitor_triggered,
-    }
-}
+// NOTE: the old `reconfig_experiment` offline protocol (run twice, apply
+// the plan to a fresh subsystem, bolt the migration cost onto the total —
+// and apply even when the monitor never triggered) is gone. The closed
+// loop now runs *inside* the simulation: set `"reconfig": "static" |
+// "online"` on any cache-bearing [`SystemSpec`] and the session executes
+// it as ordinary content-addressed cells.
 
 #[cfg(test)]
 mod tests {
@@ -1013,6 +1106,8 @@ mod tests {
             coverage: 0.875,
             irregular_share: 0.5,
             runahead_entries: 3,
+            reconfig_applies: 2,
+            reconfig_ways_moved: 4,
         }
     }
 
@@ -1158,6 +1253,93 @@ mod tests {
         // The flat constant is meaningless on the banked channel.
         let bad = Json::parse(r#"{"base": "Banked-DRAM", "dram_latency": 40}"#).unwrap();
         assert!(SystemSpec::from_json(&bad).unwrap_err().contains("flat DRAM model only"));
+    }
+
+    #[test]
+    fn spec_parses_reconfig_keys_strictly() {
+        let sys = Json::parse(
+            r#"{"base": "Cache+SPM", "reconfig": "online", "reconfig_period": 512,
+                "reconfig_threshold": 0.1, "reconfig_window": 256}"#,
+        )
+        .unwrap();
+        let spec = SystemSpec::from_json(&sys).unwrap();
+        match &spec.exec {
+            ExecModel::Cgra { cgra, .. } => {
+                assert_eq!(cgra.reconfig.mode, ReconfigMode::Online);
+                assert_eq!(cgra.reconfig.period, 512);
+                assert!((cgra.reconfig.threshold - 0.1).abs() < 1e-12);
+                assert_eq!(cgra.reconfig.window, 256);
+            }
+            other => panic!("expected CGRA exec, got {other:?}"),
+        }
+        // "static" parses too.
+        let st = SystemSpec::from_json(
+            &Json::parse(r#"{"base": "Runahead", "reconfig": "static"}"#).unwrap(),
+        )
+        .unwrap();
+        match &st.exec {
+            ExecModel::Cgra { cgra, .. } => assert_eq!(cgra.reconfig.mode, ReconfigMode::Static),
+            other => panic!("{other:?}"),
+        }
+        // The named base already carries the online policy; its knobs are
+        // tunable without restating "reconfig" (the banked-DRAM pattern).
+        let named = SystemSpec::from_json(
+            &Json::parse(r#"{"base": "Runahead+Reconfig", "reconfig_period": 1024}"#).unwrap(),
+        )
+        .unwrap();
+        match &named.exec {
+            ExecModel::Cgra { cgra, .. } => {
+                assert_eq!(cgra.reconfig.mode, ReconfigMode::Online);
+                assert_eq!(cgra.reconfig.period, 1024);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Sub-keys without enabling reconfig: the flat-sweep trap.
+        let bad = Json::parse(r#"{"base": "Cache+SPM", "reconfig_period": 512}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("reconfig"));
+        // Explicitly switching it off while tuning it is the same error.
+        let bad = Json::parse(
+            r#"{"base": "Runahead+Reconfig", "reconfig": "off", "reconfig_window": 64}"#,
+        )
+        .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("reconfig_window"));
+        // Unknown modes and out-of-range values are hard errors.
+        let bad = Json::parse(r#"{"base": "Cache+SPM", "reconfig": "sometimes"}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("reconfig"));
+        let bad = Json::parse(
+            r#"{"base": "Cache+SPM", "reconfig": "online", "reconfig_threshold": 1.5}"#,
+        )
+        .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("reconfig_threshold"));
+        let bad =
+            Json::parse(r#"{"base": "Cache+SPM", "reconfig": "online", "reconfig_period": 0}"#)
+                .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("reconfig_period"));
+        // Backends without a reconfigurable L1 array reject the keys.
+        let bad = Json::parse(r#"{"base": "Ideal", "reconfig": "online"}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("ideal"));
+        let bad = Json::parse(r#"{"base": "A72", "reconfig": "online"}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("CPU"));
+        let bad = Json::parse(r#"{"base": "SIMD", "reconfig_period": 512}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("CPU"));
+        // An explicit "off" is a harmless no-op everywhere (spec symmetry).
+        let ok = Json::parse(r#"{"base": "A72", "reconfig": "off"}"#).unwrap();
+        assert!(SystemSpec::from_json(&ok).is_ok());
+        let ok = Json::parse(r#"{"base": "Ideal", "reconfig": "off"}"#).unwrap();
+        assert!(SystemSpec::from_json(&ok).is_ok());
+        let bad = Json::parse(r#"{"base": "SPM-only", "reconfig": "online"}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("cache-bearing"));
+        let bad = Json::parse(
+            r#"{"base": "Cache+SPM", "shared_l1": true, "reconfig": "online"}"#,
+        )
+        .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("shared-L1"));
+        // ...but a cache granted via overrides makes it legal again.
+        let ok = Json::parse(
+            r#"{"base": "SPM-only", "l1_bytes": 4096, "l1_ways": 4, "reconfig": "online"}"#,
+        )
+        .unwrap();
+        assert!(SystemSpec::from_json(&ok).is_ok());
     }
 
     #[test]

@@ -12,8 +12,8 @@
 use super::json::Json;
 use super::{ScenarioSpec, SystemSpec};
 use crate::workloads::{
-    GcnAggregate, Grad, GraphSpec, HashJoin, MeshOrder, MeshSpmv, PermSort, RadixHist,
-    RadixUpdate, Rgb, Src2Dest, Workload,
+    GcnAggregate, Grad, GraphSpec, HashJoin, MeshOrder, MeshSpmv, PermSort, PhasedGather,
+    RadixHist, RadixUpdate, Rgb, Src2Dest, Workload,
 };
 use std::sync::Arc;
 
@@ -191,6 +191,8 @@ impl WorkloadRegistry {
         r.preset("join_probe", "join", Params::new().set_str("phase", "probe"), false);
         r.preset("mesh", "mesh", Params::new(), false);
         r.preset("mesh/random", "mesh", Params::new().set_str("order", "random"), false);
+        // Phase-alternating gather (the adaptivity figure's family).
+        r.preset("phased", "phased", Params::new(), false);
         // Reduced-size variants for fast sweeps and tests (same order as
         // `workloads::small_suite`, which a test asserts).
         r.preset("aggregate/tiny", "aggregate", Params::new().set_str("dataset", "tiny"), false);
@@ -210,6 +212,7 @@ impl WorkloadRegistry {
             false,
         );
         r.preset("small/mesh", "mesh", Params::new().set_str("scale", "small"), false);
+        r.preset("small/phased", "phased", Params::new().set_str("scale", "small"), false);
         r
     }
 
@@ -384,6 +387,29 @@ impl WorkloadRegistry {
                         wl.rows, wl.buckets
                     ));
                 }
+            }
+            Ok(Box::new(wl))
+        });
+        self.add_family("phased", |p| {
+            p.check_keys("phased", &["scale", "n", "period", "span", "seed"])?;
+            let mut wl = if p.choice("scale", &["paper", "small"], "paper")? == "small" {
+                PhasedGather::small()
+            } else {
+                PhasedGather::default()
+            };
+            wl.n = p.u32("n", wl.n)?;
+            wl.period = p.u32("period", wl.period)?;
+            wl.span = p.u32("span", wl.span)?;
+            wl.seed = p.u64("seed", wl.seed)?;
+            const CAP: u32 = 1 << 17; // keeps idx/out/data inside a port region
+            if wl.n == 0 || wl.n > CAP {
+                return Err(format!("\"n\" must be in 1..={CAP}, got {}", wl.n));
+            }
+            if wl.span == 0 || wl.span > CAP {
+                return Err(format!("\"span\" must be in 1..={CAP}, got {}", wl.span));
+            }
+            if wl.period == 0 {
+                return Err("\"period\" must be at least 1".into());
             }
             Ok(Box::new(wl))
         });
@@ -604,10 +630,11 @@ pub fn builtin_systems() -> Vec<SystemSpec> {
     ]
 }
 
-/// Additional named memory backends beyond the five paper systems: the
-/// ideal-latency perf ceiling and the banked-DRAM contention channel.
+/// Additional named systems beyond the five paper ones: the
+/// ideal-latency perf ceiling, the banked-DRAM contention channel, and
+/// the Table 3 Reconfig column with the online closed loop enabled.
 pub fn extra_systems() -> Vec<SystemSpec> {
-    vec![SystemSpec::ideal(), SystemSpec::banked_dram()]
+    vec![SystemSpec::ideal(), SystemSpec::banked_dram(), SystemSpec::runahead_reconfig()]
 }
 
 /// Every system addressable by name (sweep-spec `base`, `repro run`).
@@ -718,11 +745,30 @@ mod tests {
 
     #[test]
     fn extra_backends_resolve_by_name() {
-        for n in ["Ideal", "ideal", "Banked-DRAM", "banked-dram"] {
+        for n in ["Ideal", "ideal", "Banked-DRAM", "banked-dram", "Runahead+Reconfig"] {
             assert!(system_named(n).is_some(), "{n}");
         }
         // The paper's five-system list stays exactly the paper's list.
         assert!(builtin_systems().iter().all(|s| s.name != "Ideal"));
-        assert_eq!(all_systems().len(), 7);
+        assert_eq!(all_systems().len(), 8);
+    }
+
+    #[test]
+    fn phased_family_builds_and_checks_params() {
+        let reg = WorkloadRegistry::builtin();
+        assert!(reg.build("phased").is_some());
+        assert!(reg.build("small/phased").is_some());
+        let s = ScenarioSpec::family(
+            "phased",
+            Params::new().set_u64("n", 512).set_u64("period", 64).set_u64("span", 256),
+        );
+        let wl = reg.resolve(&s).unwrap();
+        assert_eq!(wl.iterations(), 512);
+        // Out-of-range and typoed params are hard errors.
+        let bad = ScenarioSpec::family("phased", Params::new().set_u64("period", 0));
+        assert!(reg.resolve(&bad).unwrap_err().contains("period"));
+        let bad = ScenarioSpec::family("phased", Params::new().set_u64("spam", 64));
+        let e = reg.resolve(&bad).unwrap_err();
+        assert!(e.contains("spam") && e.contains("span"), "{e}");
     }
 }

@@ -120,8 +120,9 @@ impl<'e> Session<'e> {
         }
     }
 
-    /// The engine behind this session (for non-cell work such as the
-    /// Fig 17 closed loop, which fans out via [`Engine::map`]).
+    /// The engine behind this session (for non-cell work — e.g. trace
+    /// dumps — that fans out via [`Engine::map`], and for registry
+    /// access).
     pub fn engine(&self) -> &'e Engine {
         self.engine
     }

@@ -221,6 +221,8 @@ mod tests {
             coverage: 0.875,
             irregular_share: 0.5,
             runahead_entries: 3,
+            reconfig_applies: 0,
+            reconfig_ways_moved: 0,
         }
     }
 

@@ -13,21 +13,44 @@ use cgra_mem::exp::{
 use cgra_mem::report;
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "\
+/// The figure-id list for help/`list` output, wrapped to the usage
+/// column — derived from [`report::FIGURE_IDS`] so new figures appear
+/// automatically (the old hand-written list had already drifted once).
+fn figure_id_lines(indent: usize, width: usize) -> String {
+    let mut lines: Vec<String> = vec![String::new()];
+    for id in report::FIGURE_IDS {
+        let needs_break = {
+            let cur = lines.last().expect("non-empty");
+            !cur.is_empty() && cur.len() + 1 + id.len() > width
+        };
+        if needs_break {
+            lines.push(String::new());
+        }
+        let cur = lines.last_mut().expect("non-empty");
+        if !cur.is_empty() {
+            cur.push(' ');
+        }
+        cur.push_str(id);
+    }
+    lines.join(&format!("\n{}", " ".repeat(indent)))
+}
+
+fn usage() -> String {
+    format!(
+        "\
 repro — 'Re-thinking Memory-Bound Limitations in CGRAs' reproduction
 
 USAGE:
-  repro list                        list kernels and systems
+  repro list                        list kernels, systems and figures
   repro run <kernel> [system]       run one kernel (default: all 5 systems)
   repro sweep <spec.json>           run a declarative (workloads x systems
                                     x repeats) experiment; see DESIGN.md
-  repro all [-j N]                  regenerate every figure AND table from
+  repro all [-j N] [--json]         regenerate every figure AND table from
                                     one session: each unique (scenario,
-                                    system, repeat) cell simulates once
-  repro figure <id|all> [-j N]      regenerate a figure: fig2 fig5 fig7
-                                    fig11a fig11b fig12a..fig12f fig13 fig14
-                                    fig15 fig16 fig17 fig18 motivation ablation
-                                    scaling (working-set scaling per system)
+                                    system, repeat) cell simulates once;
+                                    --json emits a per-figure status doc
+  repro figure <id|all> [-j N]      regenerate a figure:
+                                    {figures}
   repro table <1|2|3|all>           regenerate a table
   repro cache stats                 cell count + size of the result store and
                                     the last session's hit/miss ledger
@@ -41,15 +64,23 @@ USAGE:
 
 FLAGS:
   -j N          worker threads (default: all hardware threads; bench: 1)
-  --json        emit the structured report as JSON on stdout (run/sweep)
+  --json        structured JSON on stdout (run/sweep reports; all status)
   --store PATH  result-store location (default: target/cellstore.jsonl)
   --no-cache    skip the persistent store (in-session dedup still applies)
+
+ENVIRONMENT:
+  REPRO_SMOKE=1  shrink every figure campaign to the reduced-input suite
+                 and smaller sweeps (the CI smoke run; smoke cells hash
+                 differently from paper-scale ones, so the store is safe)
 
 Figures are written to artifacts/figures/<id>.txt, tables to
 artifacts/tables/table<n>.txt; run/sweep reports to
 artifacts/reports/<name>.json. Cached cells are reused from the result
 store; `repro cache clear` (or --no-cache) forces fresh simulation.
-";
+",
+        figures = figure_id_lines(36, 42)
+    )
+}
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
@@ -77,8 +108,8 @@ fn main() {
     }
     let cache = CacheOpts { no_cache, path: store_path.unwrap_or_else(ResultStore::default_path) };
     let cmd = args.first().map(String::as_str);
-    if json_out && !matches!(cmd, Some("run") | Some("sweep")) {
-        eprintln!("--json is only supported for `repro run` and `repro sweep`");
+    if json_out && !matches!(cmd, Some("run") | Some("sweep") | Some("all")) {
+        eprintln!("--json is only supported for `repro run`, `repro sweep` and `repro all`");
         std::process::exit(2);
     }
     // The cache flags must never be silently ignored (bench/table/list
@@ -96,13 +127,13 @@ fn main() {
         Some("list") => list(),
         Some("run") => run(&args[1..], threads, json_out, &cache),
         Some("sweep") => sweep(&args[1..], threads, json_out, &cache),
-        Some("all") => all(threads, &cache),
+        Some("all") => all(threads, &cache, json_out),
         Some("figure") => figure(args.get(1).map(String::as_str).unwrap_or("all"), threads, &cache),
         Some("table") => table(args.get(1).map(String::as_str).unwrap_or("all")),
         Some("cache") => cache_cmd(args.get(1).map(String::as_str), &cache),
         Some("bench") => bench(jobs.unwrap_or(1)),
         Some("golden") => golden(args.get(1).map(String::as_str).unwrap_or("aggregate")),
-        _ => print!("{USAGE}"),
+        _ => print!("{}", usage()),
     }
 }
 
@@ -233,10 +264,12 @@ fn list() {
     for s in cgra_mem::exp::builtin_systems() {
         println!("  {}", s.name);
     }
-    println!("memory-model backends (ceiling / contention series):");
+    println!("extra systems (ceiling / contention / online-reconfig series):");
     for s in cgra_mem::exp::extra_systems() {
         println!("  {}", s.name);
     }
+    println!("figures (repro figure <id>):");
+    println!("  {}", figure_id_lines(2, 72));
     println!("new systems/scenarios: describe them in a sweep spec (repro sweep; see DESIGN.md)");
 }
 
@@ -315,23 +348,75 @@ fn emit(session: &Session, spec: &ExperimentSpec, json_out: bool) {
 /// session: overlapping campaigns (Fig 5/11/12/13/14/15/16/scaling all
 /// re-plot common cells) each simulate their cells exactly once, and a
 /// warm result store drops the count to zero.
-fn all(threads: usize, cache: &CacheOpts) {
+fn all(threads: usize, cache: &CacheOpts, json_out: bool) {
     let eng = Engine::new(threads);
     let mut session = cache.session(&eng);
-    session.set_progress(print_computed);
-    render_figures(&report::FIGURE_IDS, &session);
+    if !json_out {
+        session.set_progress(print_computed);
+    }
+    let figs = render_figures(&report::FIGURE_IDS, &session, json_out);
+    let mut tables = Vec::new();
     for (id, text) in [
         ("1", report::table1(session.engine().registry())),
         ("2", report::table2()),
         ("3", report::table3()),
     ] {
-        println!("{text}");
+        if !json_out {
+            println!("{text}");
+        }
         if let Err(e) = report::save_table(id, &text) {
             eprintln!("(could not save table {id}: {e})");
         }
+        tables.push((id, text.len()));
     }
     write_stats_sidecar(cache, &session);
-    eprintln!("({})", summary_line(session.stats()));
+    let st = session.stats();
+    if json_out {
+        // The CI smoke contract: one machine-checkable document proving
+        // every figure and table rendered, plus the session ledger.
+        let doc = Json::obj(vec![
+            (
+                "figures",
+                Json::Arr(
+                    figs.iter()
+                        .map(|(id, chars)| {
+                            Json::obj(vec![
+                                ("id", Json::str(id)),
+                                ("ok", Json::Bool(chars.is_some())),
+                                ("chars", Json::u64(chars.unwrap_or(0) as u64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "tables",
+                Json::Arr(
+                    tables
+                        .iter()
+                        .map(|(id, chars)| {
+                            Json::obj(vec![
+                                ("id", Json::str(*id)),
+                                ("chars", Json::u64(*chars as u64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "session",
+                Json::obj(vec![
+                    ("cells_requested", Json::u64(st.cells_requested)),
+                    ("executed", Json::u64(st.executed)),
+                    ("session_hits", Json::u64(st.session_hits)),
+                    ("store_hits", Json::u64(st.store_hits)),
+                ]),
+            ),
+        ]);
+        println!("{}", doc.render_pretty());
+    } else {
+        eprintln!("({})", summary_line(st));
+    }
 }
 
 fn figure(id: &str, threads: usize, cache: &CacheOpts) {
@@ -339,25 +424,35 @@ fn figure(id: &str, threads: usize, cache: &CacheOpts) {
     let mut session = cache.session(&eng);
     session.set_progress(print_computed);
     let ids: Vec<&str> = if id == "all" { report::FIGURE_IDS.to_vec() } else { vec![id] };
-    render_figures(&ids, &session);
+    render_figures(&ids, &session, false);
     write_stats_sidecar(cache, &session);
     eprintln!("({})", summary_line(session.stats()));
 }
 
-/// Render + print + save each figure on the shared session (the one loop
-/// behind both `repro all` and `repro figure`).
-fn render_figures(ids: &[&str], session: &Session) {
+/// Render + save each figure on the shared session (the one loop behind
+/// both `repro all` and `repro figure`); prints the text unless `quiet`.
+/// Returns `(id, Some(rendered chars))` per figure, `None` for unknown
+/// ids.
+fn render_figures(ids: &[&str], session: &Session, quiet: bool) -> Vec<(String, Option<usize>)> {
+    let mut out = Vec::new();
     for id in ids {
         match report::render_figure(id, session) {
             Some(text) => {
-                println!("{text}");
+                if !quiet {
+                    println!("{text}");
+                }
                 if let Err(e) = report::save(id, &text) {
                     eprintln!("(could not save {id}: {e})");
                 }
+                out.push((id.to_string(), Some(text.len())));
             }
-            None => eprintln!("unknown figure {id:?}"),
+            None => {
+                eprintln!("unknown figure {id:?}");
+                out.push((id.to_string(), None));
+            }
         }
     }
+    out
 }
 
 fn table(id: &str) {

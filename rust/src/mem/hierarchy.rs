@@ -21,7 +21,8 @@ use super::frontend::PortFrontEnd;
 use super::l1::L1Array;
 use super::l2::SharedL2;
 use super::model::{
-    MemRequest, MemResponse, MemResponseComplete, MemoryModel, PrefetchResponse, SubsystemStats,
+    MemRequest, MemResponse, MemResponseComplete, MemoryModel, PrefetchResponse, Reconfigurable,
+    SubsystemStats,
 };
 use super::mshr::{LstDest, Mshr};
 use super::{Addr, Backing, Cycle};
@@ -470,6 +471,67 @@ impl MemoryModel for MemorySubsystem {
     fn stats(&self) -> SubsystemStats {
         self.merged_stats()
     }
+
+    fn reconfig(&mut self) -> Option<&mut dyn Reconfigurable> {
+        // No capability without something to reconfigure: a zero-way L1
+        // array has no ways to move, and the shared-L1 motivation mode
+        // routes every port to cache 0, so per-port way planning would
+        // migrate ways into caches that receive no traffic. The spec
+        // layer rejects these combinations up front; this guard enforces
+        // the same invariant for programmatic callers.
+        if self.cfg.shared_l1 || self.cfg.l1.ways == 0 {
+            return None;
+        }
+        Some(self)
+    }
+}
+
+impl Reconfigurable for MemorySubsystem {
+    fn num_l1s(&self) -> usize {
+        self.l1x.len()
+    }
+
+    fn l1_template(&self) -> CacheConfig {
+        self.cfg.l1
+    }
+
+    fn l1_ways(&self, i: usize) -> usize {
+        self.l1x.caches[i].num_ways()
+    }
+
+    fn l1_vline_shift(&self, i: usize) -> u8 {
+        self.l1x.caches[i].config().vline_shift
+    }
+
+    fn l1_counters(&self) -> super::cache::CacheStats {
+        self.l1x.stats_sum()
+    }
+
+    fn set_vline_shift(&mut self, i: usize, m: u8) -> usize {
+        let flushed = self.l1x.caches[i].set_vline_shift(m);
+        for ev in &flushed {
+            if ev.dirty {
+                // The non-inclusive L2 absorbs reconfiguration writebacks
+                // exactly like demand-eviction ones.
+                self.l2.absorb_writeback(ev.block_addr);
+            }
+        }
+        flushed.len()
+    }
+
+    fn take_way(&mut self, i: usize) -> Option<(super::cache::Way, usize)> {
+        let (way, flushed) = self.l1x.caches[i].take_way()?;
+        for ev in &flushed {
+            if ev.dirty {
+                self.l2.absorb_writeback(ev.block_addr);
+            }
+        }
+        Some((way, flushed.len()))
+    }
+
+    fn grant_way(&mut self, i: usize, way: super::cache::Way) {
+        self.l1x.caches[i].grant_way(way, i);
+    }
 }
 
 #[cfg(test)]
@@ -717,6 +779,21 @@ mod tests {
         let r = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, t);
         assert!(matches!(r, MemResponse::ReadMiss { .. }));
         assert_eq!(m.prefetch_evicted_useful(), 1);
+    }
+
+    #[test]
+    fn reconfig_capability_requires_private_cacheful_l1s() {
+        let mut m = mk();
+        assert!(MemoryModel::reconfig(&mut m).is_some());
+        // Shared-L1 motivation mode: all traffic routes to cache 0, so
+        // per-port way planning is meaningless — no capability.
+        let mut cfg = small_cfg();
+        cfg.shared_l1 = true;
+        let mut shared = MemorySubsystem::new(cfg, 1 << 16);
+        assert!(MemoryModel::reconfig(&mut shared).is_none());
+        // Zero-way L1s (SPM-only) have no ways to move.
+        let mut spm = MemorySubsystem::new(SubsystemConfig::spm_only(2, 512), 1 << 16);
+        assert!(MemoryModel::reconfig(&mut spm).is_none());
     }
 
     #[test]

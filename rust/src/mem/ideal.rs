@@ -1,7 +1,10 @@
 //! Ideal-latency memory backend: every access hits with SPM latency —
 //! the paper's idealistic upper bound ("if memory were free"), used as a
 //! perf-ceiling series in the figures. Purely functional + a single access
-//! counter; it never stalls the array and never enters runahead.
+//! counter; it never stalls the array and never enters runahead. It has
+//! no reconfigurable cache array either: [`MemoryModel::reconfig`] stays
+//! at its default `None`, so every reconfiguration epoch hook is a no-op
+//! on this backend.
 
 use super::cache::AccessKind;
 use super::model::{

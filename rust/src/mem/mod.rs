@@ -30,7 +30,7 @@ pub mod spm;
 pub mod temp_store;
 
 pub use backing::Backing;
-pub use cache::{AccessKind, AccessOutcome, Cache, CacheConfig, CacheStats};
+pub use cache::{AccessKind, AccessOutcome, Cache, CacheConfig, CacheStats, Way};
 pub use channel::{BackingChannel, BankedDram, BankedDramConfig, ChannelStats, DramModelKind, RowPolicy};
 pub use dram::Dram;
 pub use frontend::PortFrontEnd;
@@ -40,7 +40,7 @@ pub use l1::L1Array;
 pub use l2::SharedL2;
 pub use model::{
     MemRequest, MemResponse, MemResponseComplete, MemoryModel, MemoryModelSpec, PrefetchResponse,
-    SubsystemStats,
+    Reconfigurable, SubsystemStats,
 };
 pub use mshr::{LstDest, LstEntry, Mshr, MshrEntry};
 pub use spm::Spm;

@@ -15,7 +15,7 @@
 //! * [`IdealMemory`](super::IdealMemory) — every access hits in SPM
 //!   latency, the paper's idealistic upper bound (perf-ceiling series).
 
-use super::cache::AccessKind;
+use super::cache::{AccessKind, CacheConfig, CacheStats, Way};
 use super::hierarchy::{MemorySubsystem, SubsystemConfig};
 use super::ideal::{IdealConfig, IdealMemory};
 use super::{Addr, Backing, Cycle};
@@ -93,6 +93,52 @@ pub struct SubsystemStats {
     pub mshr_full_stalls: u64,
 }
 
+/// Cache-reconfiguration capability (§3.4.1), exposed through the
+/// [`MemoryModel`] seam so an online controller can observe and rewrite
+/// the L1 array of *any* backend that has one — without downcasting.
+///
+/// The primitives mirror the hardware registers: way *permission*
+/// rewrites move whole [`Way`]s between L1s (`take_way` / `grant_way`,
+/// contents invalidated — the flush the hardware's invalidate-on-reassign
+/// performs), and virtual-line-size registers regroup sets
+/// (`set_vline_shift`, also a flush). Both report how many valid lines
+/// they flushed so the caller can charge the cost *in-band*, inside the
+/// simulated run — not bolted onto the total afterwards.
+pub trait Reconfigurable {
+    /// Number of reconfigurable L1 caches (one per port).
+    fn num_l1s(&self) -> usize;
+
+    /// Template geometry (sets / physical line size) candidate configs
+    /// derive from during profiling.
+    fn l1_template(&self) -> CacheConfig;
+
+    /// Ways currently owned by L1 `i` (its permission-register view).
+    fn l1_ways(&self, i: usize) -> usize;
+
+    /// Virtual-line shift currently programmed on L1 `i`.
+    fn l1_vline_shift(&self, i: usize) -> u8;
+
+    /// Global way budget: Σ ways across L1s, invariant under
+    /// reconfiguration (ways are physical — they only move).
+    fn way_budget(&self) -> usize {
+        (0..self.num_l1s()).map(|i| self.l1_ways(i)).sum()
+    }
+
+    /// Summed L1 hit/access counters — the miss-rate monitor's input.
+    fn l1_counters(&self) -> CacheStats;
+
+    /// Rewrite L1 `i`'s virtual-line-size register; returns the number
+    /// of valid lines flushed by the regrouping.
+    fn set_vline_shift(&mut self, i: usize, m: u8) -> usize;
+
+    /// Harvest one way from L1 `i` (permission-register rewrite);
+    /// returns the way and its flushed valid-line count.
+    fn take_way(&mut self, i: usize) -> Option<(Way, usize)>;
+
+    /// Grant a harvested way to L1 `i` (contents arrive invalidated).
+    fn grant_way(&mut self, i: usize, way: Way);
+}
+
 /// The complete contract between the CGRA execution engine and a memory
 /// backend. [`crate::sim::CgraArray::run`] is generic over this trait; no
 /// sim-layer code touches backend internals.
@@ -150,6 +196,14 @@ pub trait MemoryModel: Send {
     /// Aggregate counters, including channel-level (row hit/conflict)
     /// counters where the backend has them.
     fn stats(&self) -> SubsystemStats;
+
+    /// The backend's reconfiguration capability, if it has one. The
+    /// default is `None` — backends without a reconfigurable L1 array
+    /// (e.g. [`IdealMemory`](super::IdealMemory)) make every epoch hook
+    /// a no-op.
+    fn reconfig(&mut self) -> Option<&mut dyn Reconfigurable> {
+        None
+    }
 }
 
 /// A memory backend as *data*: everything the experiment layer needs to

@@ -1,12 +1,15 @@
 //! Reconfiguration controller (Fig 8b): turns a set of sampled access
 //! windows into a concrete plan — per-L1 way counts (permission-register
 //! rewrites) and virtual-line shifts — and applies it to a live memory
-//! subsystem by migrating ways between caches (flushing their contents,
-//! which is what the hardware's invalidate-on-reassign does).
+//! backend through the [`Reconfigurable`] seam by migrating ways between
+//! caches (flushing their contents, which is what the hardware's
+//! invalidate-on-reassign does). The backend is any [`Reconfigurable`],
+//! not a concrete subsystem type, so the same planner drives offline
+//! experiments and the in-run [`super::OnlineController`].
 
 use super::allocator::max_profit;
 use super::model::{profile_port, PortProfile};
-use crate::mem::MemorySubsystem;
+use crate::mem::Reconfigurable;
 use crate::sim::AccessTrace;
 
 /// The plan produced by the software phase.
@@ -22,16 +25,27 @@ pub struct ReconfigPlan {
     pub profiles: Vec<PortProfile>,
 }
 
+/// What applying a plan physically did — the basis of the in-band cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ApplyOutcome {
+    /// Ways that changed owner (each is one permission-register rewrite
+    /// plus a whole-way invalidate).
+    pub migrated_ways: usize,
+    /// Valid lines flushed in total: by way harvesting *and* by
+    /// virtual-line regrouping.
+    pub flushed_lines: usize,
+}
+
 /// Phase 1+2 of §3.4: profile each port's sample ignoring the global
 /// budget, then allocate the real budget with Algorithm 1.
 pub fn plan_from_traces(
-    mem: &MemorySubsystem,
+    mem: &dyn Reconfigurable,
     traces: &AccessTrace,
     shifts: &[u8],
 ) -> ReconfigPlan {
-    let ports = mem.cfg.num_ports;
-    let budget: usize = mem.l1s().iter().map(|c| c.num_ways()).sum();
-    let template = mem.cfg.l1;
+    let ports = mem.num_l1s();
+    let budget = mem.way_budget();
+    let template = mem.l1_template();
     let mut profiles = Vec::with_capacity(ports);
     for p in 0..ports {
         profiles.push(profile_port(&traces.events[p], template, budget, shifts));
@@ -62,42 +76,43 @@ fn park_leftover_ways(ways: &mut [usize], budget: usize) {
     }
 }
 
-/// Apply a plan to the live subsystem: move ways between L1s via their
-/// permission registers and set virtual-line shifts. Returns the number of
-/// ways migrated (each costs a flush of that way).
-pub fn apply_plan(mem: &mut MemorySubsystem, plan: &ReconfigPlan) -> usize {
-    let ports = mem.cfg.num_ports;
+/// Apply a plan to a live backend: move ways between L1s via their
+/// permission registers and set virtual-line shifts. Returns what was
+/// physically migrated/flushed so the caller can charge the cost in-band.
+pub fn apply_plan(mem: &mut dyn Reconfigurable, plan: &ReconfigPlan) -> ApplyOutcome {
+    let ports = mem.num_l1s();
     assert_eq!(plan.ways.len(), ports);
+    let mut out = ApplyOutcome::default();
     // Line-size reconfiguration first (flushes the cache's contents).
     for p in 0..ports {
-        if mem.l1(p).config().vline_shift != plan.shifts[p] {
-            let _ = mem.l1_mut(p).set_vline_shift(plan.shifts[p]);
+        if mem.l1_vline_shift(p) != plan.shifts[p] {
+            out.flushed_lines += mem.set_vline_shift(p, plan.shifts[p]);
         }
     }
     // Way migration: harvest surplus ways into a pool, then grant.
     let mut pool = Vec::new();
-    let mut migrated = 0usize;
     for p in 0..ports {
-        while mem.l1(p).num_ways() > plan.ways[p] {
-            let (way, _flushed) = mem.l1_mut(p).take_way().expect("has ways");
+        while mem.l1_ways(p) > plan.ways[p] {
+            let (way, flushed) = mem.take_way(p).expect("has ways");
             pool.push(way);
-            migrated += 1;
+            out.migrated_ways += 1;
+            out.flushed_lines += flushed;
         }
     }
     for p in 0..ports {
-        while mem.l1(p).num_ways() < plan.ways[p] {
+        while mem.l1_ways(p) < plan.ways[p] {
             let way = pool.pop().expect("way budget conserved");
-            mem.l1_mut(p).grant_way(way, p);
+            mem.grant_way(p, way);
         }
     }
     assert!(pool.is_empty(), "all ways must be reassigned");
-    migrated
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mem::{MemorySubsystem, SubsystemConfig};
+    use crate::mem::{AccessKind, MemRequest, MemorySubsystem, SubsystemConfig};
     use crate::sim::trace::TraceEvent;
     use crate::sim::AccessTrace;
 
@@ -163,8 +178,42 @@ mod tests {
         let traces = traces_with_one_irregular_port();
         let plan = plan_from_traces(&mem, &traces, &[0, 1]);
         apply_plan(&mut mem, &plan);
-        let migrated_second = apply_plan(&mut mem, &plan);
-        assert_eq!(migrated_second, 0);
+        let second = apply_plan(&mut mem, &plan);
+        assert_eq!(second.migrated_ways, 0);
+        assert_eq!(second.flushed_lines, 0);
+    }
+
+    #[test]
+    fn apply_reports_exact_flush_counts() {
+        // Warm port 0's cache with 5 lines in distinct sets (fills land in
+        // way 0 — invalid ways are taken lowest-index-first), then move
+        // two ways away from port 0: the first take harvests way 0 (5
+        // valid lines), the second an empty way. flushed_lines must be
+        // exactly 5, migrated_ways exactly 2.
+        let mut mem = mk();
+        let line = mem.cfg.l1.line_bytes;
+        // Distinct sets: consecutive lines map to consecutive sets.
+        for i in 0..5u32 {
+            let _ = mem.request(
+                0,
+                MemRequest { addr: 0x8_0000 + i * line, kind: AccessKind::Read, data: 0, pe: 0 },
+                i as u64,
+            );
+        }
+        mem.tick(100_000); // complete all fills
+        assert_eq!(mem.l1(0).stats.fills, 5);
+        let ways0 = mem.l1(0).num_ways();
+        let plan = ReconfigPlan {
+            ways: vec![ways0 - 2, mem.l1(1).num_ways() + 2, mem.l1(2).num_ways(), mem.l1(3).num_ways()],
+            shifts: (0..4).map(|p| mem.l1(p).config().vline_shift).collect(),
+            expected_profit: 0.0,
+            profiles: Vec::new(),
+        };
+        let out = apply_plan(&mut mem, &plan);
+        assert_eq!(out.migrated_ways, 2);
+        assert_eq!(out.flushed_lines, 5, "only way 0 held valid lines");
+        let budget: usize = (0..4).map(|p| mem.l1(p).num_ways()).sum();
+        assert_eq!(budget, plan.ways.iter().sum::<usize>());
     }
 
     #[test]

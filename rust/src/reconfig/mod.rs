@@ -12,13 +12,23 @@
 //!    budget to maximise `Σ log H_i(S_i)`;
 //! 5. the **controller** rewrites way permission registers (moving whole
 //!    ways between L1s) and virtual-line-size registers.
+//!
+//! The loop runs **online**: [`OnlineController`] implements the
+//! execution engine's epoch hook ([`crate::sim::EpochController`]), so
+//! steps 1–5 fire *during* a simulated run against the backend's
+//! [`crate::mem::Reconfigurable`] capability, with the flush/migration
+//! cost charged in-band where it occurs. `ReconfigPolicy` (in
+//! [`crate::sim`]) selects off / static (profile once, lock) / online
+//! (phase-adaptive) and is ordinary system-spec data.
 
 pub mod allocator;
 pub mod controller;
 pub mod model;
 pub mod monitor;
+pub mod online;
 
 pub use allocator::max_profit;
-pub use controller::{apply_plan, plan_from_traces, ReconfigPlan};
+pub use controller::{apply_plan, plan_from_traces, ApplyOutcome, ReconfigPlan};
 pub use model::{profile_port, PortProfile};
 pub use monitor::MissRateMonitor;
+pub use online::{OnlineController, WAY_FLUSH_CYCLES};

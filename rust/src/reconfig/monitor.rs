@@ -2,8 +2,14 @@
 //! rate over a window against an MMIO-programmed threshold register and
 //! raises the tracker trigger. Trivial hardware — a pair of counters and a
 //! comparator per cache — so we model it faithfully but simply.
+//!
+//! The monitor is the *gate* of the closed loop: the planner only runs
+//! when a window actually crossed the threshold, and a programmable
+//! cooldown keeps it quiet for the next few windows after a trigger
+//! (hysteresis), so one noisy phase boundary cannot thrash the way
+//! permissions back and forth.
 
-use crate::mem::MemorySubsystem;
+use crate::mem::{CacheStats, MemorySubsystem};
 
 #[derive(Clone, Copy, Debug)]
 pub struct MissRateMonitor {
@@ -11,28 +17,66 @@ pub struct MissRateMonitor {
     pub threshold: f64,
     /// Minimum accesses before the monitor may trigger (debounce).
     pub min_accesses: u64,
+    /// Windows the monitor stays quiet after a trigger (hysteresis).
+    pub cooldown: u32,
     last_hits: u64,
     last_accesses: u64,
+    cooldown_left: u32,
 }
 
 impl MissRateMonitor {
     pub fn new(threshold: f64, min_accesses: u64) -> Self {
-        MissRateMonitor { threshold, min_accesses, last_hits: 0, last_accesses: 0 }
+        MissRateMonitor {
+            threshold,
+            min_accesses,
+            cooldown: 0,
+            last_hits: 0,
+            last_accesses: 0,
+            cooldown_left: 0,
+        }
     }
 
-    /// Observe the subsystem; returns true when the windowed miss rate
-    /// exceeds the threshold (and re-arms the window).
-    pub fn observe(&mut self, mem: &MemorySubsystem) -> bool {
-        let s = mem.l1_stats_sum();
-        let acc = s.accesses() - self.last_accesses;
-        let hits = s.hits - self.last_hits;
+    /// Builder knob: stay quiet for `windows` observations after a
+    /// trigger.
+    pub fn with_cooldown(mut self, windows: u32) -> Self {
+        self.cooldown = windows;
+        self
+    }
+
+    /// Observe cumulative access/hit counters (any backend's summed L1
+    /// counters — the [`crate::mem::Reconfigurable`] seam); returns true
+    /// when the *windowed* miss rate since the previous armed observation
+    /// exceeds the threshold. Re-arms the window whenever it has enough
+    /// accesses, and burns one cooldown window instead of triggering
+    /// while the post-trigger hysteresis is active.
+    pub fn observe_counters(&mut self, accesses: u64, hits: u64) -> bool {
+        let acc = accesses - self.last_accesses;
+        let hit = hits - self.last_hits;
         if acc < self.min_accesses {
             return false;
         }
-        let miss_rate = 1.0 - hits as f64 / acc as f64;
-        self.last_accesses = s.accesses();
-        self.last_hits = s.hits;
-        miss_rate > self.threshold
+        self.last_accesses = accesses;
+        self.last_hits = hits;
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return false;
+        }
+        let miss_rate = 1.0 - hit as f64 / acc as f64;
+        let fired = miss_rate > self.threshold;
+        if fired {
+            self.cooldown_left = self.cooldown;
+        }
+        fired
+    }
+
+    /// [`MissRateMonitor::observe_counters`] over a live subsystem's
+    /// summed L1 statistics.
+    pub fn observe(&mut self, mem: &MemorySubsystem) -> bool {
+        self.observe_stats(&mem.l1_stats_sum())
+    }
+
+    pub fn observe_stats(&mut self, s: &CacheStats) -> bool {
+        self.observe_counters(s.accesses(), s.hits)
     }
 }
 
@@ -67,5 +111,43 @@ mod tests {
             );
         }
         assert!(!mon.observe(&mem), "warm re-hits must not trigger");
+    }
+
+    #[test]
+    fn threshold_crossing_is_exact_on_raw_counters() {
+        let mut mon = MissRateMonitor::new(0.25, 4);
+        // Below the debounce: never fires, window stays armed.
+        assert!(!mon.observe_counters(3, 0));
+        // 8 accesses, 5 hits → miss rate 0.375 > 0.25: fires.
+        assert!(mon.observe_counters(8, 5));
+        // Next window: 8 more accesses, 7 more hits → 0.125: quiet.
+        assert!(!mon.observe_counters(16, 12));
+        // Exactly at the threshold is NOT a crossing (strict >).
+        assert!(!mon.observe_counters(24, 18));
+    }
+
+    #[test]
+    fn cooldown_suppresses_retriggers_then_rearms() {
+        let mut mon = MissRateMonitor::new(0.5, 4).with_cooldown(2);
+        // Window 1: all misses → trigger, cooldown armed.
+        assert!(mon.observe_counters(8, 0));
+        // Windows 2 and 3: still all misses, but inside the cooldown.
+        assert!(!mon.observe_counters(16, 0), "first cooldown window");
+        assert!(!mon.observe_counters(24, 0), "second cooldown window");
+        // Window 4: cooldown expired — the persistent miss storm retriggers.
+        assert!(mon.observe_counters(32, 0), "cooldown over, must re-fire");
+        // ...which re-arms the cooldown again.
+        assert!(!mon.observe_counters(40, 0));
+    }
+
+    #[test]
+    fn under_debounce_windows_do_not_burn_cooldown() {
+        let mut mon = MissRateMonitor::new(0.5, 8).with_cooldown(1);
+        assert!(mon.observe_counters(8, 0));
+        // A tiny window (below min_accesses) neither observes nor burns
+        // the cooldown; the next full window does.
+        assert!(!mon.observe_counters(10, 0));
+        assert!(!mon.observe_counters(16, 0), "full window burns the cooldown");
+        assert!(mon.observe_counters(24, 0), "then the storm re-fires");
     }
 }

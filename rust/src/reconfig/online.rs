@@ -1,0 +1,217 @@
+//! The online phase-adaptive controller: the closed loop of §3.4 run
+//! *inside* the simulation. At every epoch boundary the execution engine
+//! ([`crate::sim::CgraArray::run_with`]) hands this controller the live
+//! backend's [`Reconfigurable`] capability and the current access-trace
+//! window; the [`MissRateMonitor`] gates planning (no trigger → no plan,
+//! the bug the old offline `reconfig_experiment` had), the software model
+//! replans from the *live* sample, and [`apply_plan`] rewrites the way
+//! permission / virtual-line registers mid-run. The flush/migration cost
+//! is returned to the engine and charged as in-band stall cycles — not
+//! bolted onto the total afterwards.
+
+use super::controller::{apply_plan, plan_from_traces};
+use super::monitor::MissRateMonitor;
+use crate::mem::{Cycle, Reconfigurable};
+use crate::sim::{AccessTrace, EpochController, ReconfigMode, ReconfigPolicy};
+
+/// Cycles charged per migrated way: one whole-way invalidate through the
+/// existing flush machinery (§4.5).
+pub const WAY_FLUSH_CYCLES: u64 = 64;
+
+/// Monitor → tracker sample → model/DP → live apply, as an
+/// [`EpochController`] plugged into the execution engine's epoch seam.
+pub struct OnlineController {
+    monitor: MissRateMonitor,
+    /// Candidate virtual-line shifts the model replays.
+    shifts: Vec<u8>,
+    /// `Some(n)`: stop adapting after `n` plan applications
+    /// ([`ReconfigMode::Static`] uses 1 — profile once, lock).
+    max_applies: Option<u64>,
+    /// Plans applied (a triggering epoch that replans counts even when
+    /// the plan turns out to be a no-op — the decision was made).
+    pub applies: u64,
+    /// Ways that changed owner across all applies.
+    pub ways_migrated: u64,
+    /// Valid lines flushed across all applies (way harvests + vline
+    /// regroupings).
+    pub lines_flushed: u64,
+}
+
+impl OnlineController {
+    /// Build the controller a [`ReconfigPolicy`] describes.
+    /// [`ReconfigMode::Off`] has no controller; callers must not
+    /// construct one for it.
+    pub fn from_policy(p: &ReconfigPolicy) -> Self {
+        assert!(p.mode != ReconfigMode::Off, "Off mode runs without a controller");
+        OnlineController {
+            monitor: MissRateMonitor::new(p.threshold, p.min_accesses).with_cooldown(p.cooldown),
+            shifts: vec![0, 1, 2],
+            max_applies: match p.mode {
+                ReconfigMode::Static => Some(1),
+                _ => None,
+            },
+            applies: 0,
+            ways_migrated: 0,
+            lines_flushed: 0,
+        }
+    }
+}
+
+impl EpochController for OnlineController {
+    fn on_epoch(
+        &mut self,
+        mem: &mut dyn Reconfigurable,
+        trace: &mut AccessTrace,
+        _cycle: Cycle,
+    ) -> u64 {
+        if self.max_applies.is_some_and(|m| self.applies >= m) {
+            // Static mode after its one shot: configuration is locked.
+            trace.rearm();
+            return 0;
+        }
+        let triggered = self.monitor.observe_stats(&mem.l1_counters());
+        if !triggered {
+            // The trigger gates planning: a healthy window costs nothing
+            // and changes nothing.
+            trace.rearm();
+            return 0;
+        }
+        let plan = plan_from_traces(mem, trace, &self.shifts);
+        let out = apply_plan(mem, &plan);
+        trace.rearm();
+        self.applies += 1;
+        self.ways_migrated += out.migrated_ways as u64;
+        self.lines_flushed += out.flushed_lines as u64;
+        // In-band cost: a whole-way invalidate per migrated way plus one
+        // cycle per flushed valid line (writeback/invalidate slots).
+        out.migrated_ways as u64 * WAY_FLUSH_CYCLES + out.flushed_lines as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{AccessKind, MemRequest, MemorySubsystem, Reconfigurable, SubsystemConfig};
+    use crate::sim::trace::TraceEvent;
+
+    fn mk() -> MemorySubsystem {
+        let mut m = MemorySubsystem::new(SubsystemConfig::paper_reconfig(), 1 << 22);
+        for p in 0..4 {
+            m.place_spm(p, p as u32 * 0x20_0000);
+        }
+        m
+    }
+
+    fn policy() -> ReconfigPolicy {
+        let mut p = ReconfigPolicy::online();
+        p.min_accesses = 8;
+        p.threshold = 0.5;
+        p.cooldown = 0;
+        p
+    }
+
+    /// Drive all-miss traffic so the monitor's window crosses threshold.
+    fn storm(mem: &mut MemorySubsystem) {
+        for i in 0..32u32 {
+            let _ = mem.request(
+                0,
+                MemRequest { addr: 0x10000 + i * 4160, kind: AccessKind::Read, data: 0, pe: 0 },
+                i as u64,
+            );
+            mem.tick(10_000 + i as u64 * 200);
+        }
+    }
+
+    fn irregular_trace() -> AccessTrace {
+        let mut t = AccessTrace::new(4, 512);
+        let mut x = 5u32;
+        for i in 0..512u64 {
+            t.record(TraceEvent { cycle: i, pe: 0, port: 0, addr: (i as u32) * 4, is_write: false });
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+            t.record(TraceEvent {
+                cycle: i,
+                pe: 12,
+                port: 3,
+                addr: 0x10_0000 + (x % 262144) & !3,
+                is_write: false,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn quiet_window_never_plans_and_costs_nothing() {
+        let mut mem = mk();
+        let mut ctl = OnlineController::from_policy(&policy());
+        let mut trace = irregular_trace();
+        let ways_before: Vec<usize> = (0..4).map(|p| mem.l1(p).num_ways()).collect();
+        // No traffic at all: debounce keeps the monitor quiet.
+        let cost = ctl.on_epoch(&mut mem, &mut trace, 1000);
+        assert_eq!(cost, 0);
+        assert_eq!(ctl.applies, 0, "no trigger, no plan");
+        let ways_after: Vec<usize> = (0..4).map(|p| mem.l1(p).num_ways()).collect();
+        assert_eq!(ways_before, ways_after, "geometry untouched without a trigger");
+        // The trace window was re-armed for the next epoch regardless.
+        assert!(trace.events[0].is_empty());
+    }
+
+    #[test]
+    fn triggered_epoch_plans_applies_and_charges_in_band_cost() {
+        let mut mem = mk();
+        let mut ctl = OnlineController::from_policy(&policy());
+        storm(&mut mem);
+        let mut trace = irregular_trace();
+        let budget: usize = (0..4).map(|p| mem.l1(p).num_ways()).sum();
+        let cost = ctl.on_epoch(&mut mem, &mut trace, 50_000);
+        assert_eq!(ctl.applies, 1);
+        assert!(ctl.ways_migrated > 0, "the skewed sample must move ways");
+        assert_eq!(
+            cost,
+            ctl.ways_migrated * WAY_FLUSH_CYCLES + ctl.lines_flushed,
+            "cost is exactly the migration/flush work"
+        );
+        let after: usize = (0..4).map(|p| mem.l1(p).num_ways()).sum();
+        assert_eq!(after, budget, "way budget conserved");
+        assert!(
+            mem.l1(3).num_ways() > mem.l1(0).num_ways(),
+            "the irregular port won ways: {:?}",
+            (0..4).map(|p| mem.l1(p).num_ways()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn static_mode_locks_after_its_single_apply() {
+        let mut p = policy();
+        p.mode = ReconfigMode::Static;
+        let mut mem = mk();
+        let mut ctl = OnlineController::from_policy(&p);
+        storm(&mut mem);
+        let mut trace = irregular_trace();
+        let _ = ctl.on_epoch(&mut mem, &mut trace, 50_000);
+        assert_eq!(ctl.applies, 1);
+        let locked: Vec<usize> = (0..4).map(|p| mem.l1(p).num_ways()).collect();
+        // Another storm + a *different* sample: static must not replan.
+        storm(&mut mem);
+        let mut t2 = AccessTrace::new(4, 512);
+        for i in 0..512u64 {
+            t2.record(TraceEvent { cycle: i, pe: 0, port: 1, addr: (i as u32) * 4, is_write: false });
+        }
+        let cost = ctl.on_epoch(&mut mem, &mut t2, 100_000);
+        assert_eq!(cost, 0);
+        assert_eq!(ctl.applies, 1, "static mode is one-shot");
+        let after: Vec<usize> = (0..4).map(|p| mem.l1(p).num_ways()).collect();
+        assert_eq!(locked, after);
+    }
+
+    #[test]
+    fn capability_seam_matches_subsystem_view() {
+        // The trait view and the concrete accessors must agree.
+        let mut mem = mk();
+        storm(&mut mem);
+        let r: &mut dyn Reconfigurable = &mut mem;
+        assert_eq!(r.num_l1s(), 4);
+        assert_eq!(r.way_budget(), (0..4).map(|i| r.l1_ways(i)).sum::<usize>());
+        let counters = r.l1_counters();
+        assert!(counters.accesses() >= 32);
+    }
+}

@@ -4,19 +4,47 @@
 //! the worker pool *and* the shared cell table, so `repro all` /
 //! `repro figure all` simulate each unique (scenario, system, repeat)
 //! cell exactly once no matter how many figures re-plot it (Fig 5, 11a/b,
-//! 12, 13, 14, 15, 16 and the scaling figure all slice overlapping
-//! cells). EXPERIMENTS.md records these outputs against the published
-//! values.
+//! 12, 13, 14, 15, 16, 17 and the scaling/adaptivity figures all slice
+//! overlapping cells — since the reconfiguration loop went online, every
+//! simulating figure except the fig7 trace dump is cell-shaped and
+//! warm-replayable; fig18 is a static area model and runs nothing).
+//! EXPERIMENTS.md records these outputs against the published values.
 
-use crate::exp::{
-    reconfig_experiment, ExperimentSpec, Params, Report, ScenarioSpec, Session, SystemSpec,
-};
+use crate::exp::{ExperimentSpec, Params, Report, ScenarioSpec, Session, SystemSpec};
 use crate::mem::{CacheConfig, SubsystemConfig};
-use crate::sim::{CgraConfig, ExecMode};
+use crate::sim::{CgraConfig, ExecMode, ReconfigPolicy};
 use crate::stats;
 use crate::workloads::{prepare, GcnAggregate, GraphSpec, MeshOrder, MeshSpmv, Workload};
 
 const CORA: &str = "aggregate/cora";
+
+/// CI smoke mode (`REPRO_SMOKE=1`): every figure swaps its paper-scale
+/// campaign for the reduced-input suite and smaller sweeps, so
+/// `repro all --json` exercises every figure path end-to-end in seconds.
+/// Smoke cells are ordinary content-addressed cells (the scenario params
+/// differ, so they never collide with paper-scale ones in the store).
+fn smoke() -> bool {
+    std::env::var_os("REPRO_SMOKE").is_some_and(|v| v != "0" && !v.is_empty())
+}
+
+/// The single-kernel anchor of the parameter sweeps (Cora; its tiny
+/// stand-in under smoke).
+fn anchor() -> &'static str {
+    if smoke() {
+        "aggregate/tiny"
+    } else {
+        CORA
+    }
+}
+
+/// Replace a campaign's workload axis with the fast suite under smoke.
+fn sized(spec: ExperimentSpec) -> ExperimentSpec {
+    if smoke() {
+        spec.small_workloads()
+    } else {
+        spec
+    }
+}
 
 fn cgra_4x4(name: impl Into<String>, sub: SubsystemConfig, mode: ExecMode) -> SystemSpec {
     SystemSpec::cgra(name, sub, CgraConfig::hycube_4x4(mode))
@@ -27,12 +55,13 @@ fn cgra_4x4(name: impl Into<String>, sub: SubsystemConfig, mode: ExecMode) -> Sy
 /// (One cell of Fig 5's campaign — a session serves both from a single
 /// simulation.)
 pub fn fig2(s: &Session) -> String {
+    let kernel = anchor();
     let sys = SystemSpec::spm_starved(4096);
     let sys_name = sys.name.clone();
-    let report = s.run(&ExperimentSpec::new("fig2").workload(CORA).system(sys));
-    let m = report.get(CORA, &sys_name).unwrap();
+    let report = s.run(&ExperimentSpec::new("fig2").workload(kernel).system(sys));
+    let m = report.get(kernel, &sys_name).unwrap();
     format!(
-        "Fig 2 — SPM-only (4KB) utilization on GCN aggregate / Cora\n\
+        "Fig 2 — SPM-only (4KB) utilization on {kernel}\n\
          cycles={} stall={} ({:.1}%)\n\
          CGRA utilization = {:.2}%   (paper: 1.43%)\n",
         m.cycles,
@@ -47,7 +76,7 @@ pub fn fig2(s: &Session) -> String {
 pub fn fig5(s: &Session) -> String {
     let sys = SystemSpec::spm_starved(4096);
     let sys_name = sys.name.clone();
-    let report = s.run(&ExperimentSpec::new("fig5").paper_workloads().system(sys));
+    let report = s.run(&sized(ExperimentSpec::new("fig5").paper_workloads()).system(sys));
     let mut s = String::from("Fig 5 — irregular access share vs CGRA utilization (SPM-only 4KB)\n");
     s.push_str(&format!("{:<22} {:>10} {:>12}\n", "kernel", "irregular%", "utilization%"));
     let mut utils = Vec::new();
@@ -73,12 +102,16 @@ pub fn fig5(s: &Session) -> String {
 /// taxonomy. Rendered as classified stride statistics plus CSV samples.
 /// (A trace dump, not a campaign — runs outside the engine.)
 pub fn fig7() -> String {
-    let wl = GcnAggregate::new(GraphSpec::cora());
+    let (wl, iters) = if smoke() {
+        (GcnAggregate::new(GraphSpec::tiny()), 2_000u64)
+    } else {
+        (GcnAggregate::new(GraphSpec::cora()), 20_000u64)
+    };
     let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
     cgra.trace_window = 4096;
     let (mut mem, mut arr, _layout) = prepare(&wl, SubsystemConfig::paper_base(), cgra);
-    arr.run(&mut mem, 20_000);
-    let mut s = String::from("Fig 7 — per-port access patterns (GCN aggregate / Cora)\n");
+    arr.run(&mut mem, iters);
+    let mut s = format!("Fig 7 — per-port access patterns ({})\n", wl.name());
     for p in 0..2 {
         let irr = arr.trace.irregularity(p);
         let class = if irr < 0.05 {
@@ -108,7 +141,7 @@ pub fn fig7() -> String {
 /// latency — the paper's idealistic upper bound). Paper: Cache+SPM ≈10×
 /// vs SPM-only, 7.26×/6.0× vs A72/SIMD; Runahead +3.04× (≤6.91×) on top.
 pub fn fig11a(s: &Session) -> String {
-    let report = s.run(&ExperimentSpec::fig11a());
+    let report = s.run(&sized(ExperimentSpec::fig11a()));
     let mut s = String::from("Fig 11a — execution time normalized to A72 (lower is better)\n");
     s.push_str(&format!(
         "{:<22} {:>8} {:>8} {:>9} {:>10} {:>9} {:>8}\n",
@@ -166,7 +199,7 @@ pub fn fig11a(s: &Session) -> String {
 /// Fig 11b: memory access counts per level for the three CGRA systems.
 /// Paper: Cache+SPM cuts DRAM accesses by ~77% vs SPM-only.
 pub fn fig11b(s: &Session) -> String {
-    let report = s.run(&ExperimentSpec::fig11b());
+    let report = s.run(&sized(ExperimentSpec::fig11b()));
     let mut s = String::from("Fig 11b — total memory accesses by level (suite sum)\n");
     s.push_str(&format!(
         "{:<10} {:>12} {:>12} {:>12} {:>12}\n",
@@ -192,11 +225,13 @@ pub fn fig11b(s: &Session) -> String {
     s
 }
 
-/// Run one sweep over Cora: each modified config is a [`SystemSpec`] row.
+/// Run one sweep over the anchor kernel (Cora; tiny under smoke): each
+/// modified config is a [`SystemSpec`] row.
 fn cora_sweep(s: &Session, name: &str, systems: Vec<SystemSpec>) -> (Report, Vec<u64>) {
+    let kernel = anchor();
     let order: Vec<String> = systems.iter().map(|s| s.name.clone()).collect();
-    let report = s.run(&ExperimentSpec::new(name).workload(CORA).systems(systems));
-    let cycles = order.iter().map(|s| report.cycles_of(CORA, s).unwrap()).collect();
+    let report = s.run(&ExperimentSpec::new(name).workload(kernel).systems(systems));
+    let cycles = order.iter().map(|s| report.cycles_of(kernel, s).unwrap()).collect();
     (report, cycles)
 }
 
@@ -334,10 +369,10 @@ fn render_series<T: std::fmt::Display>(s: &mut String, label: &str, pts: &[T], c
 /// (Cache+SPM cycles / ideal cycles — the most any memory optimisation
 /// could gain). Paper: avg 3.04×, max 6.91×.
 pub fn fig13(s: &Session) -> String {
-    let report = s.run(&ExperimentSpec::campaign(
+    let report = s.run(&sized(ExperimentSpec::campaign(
         "fig13",
         [SystemSpec::cache_spm(), SystemSpec::runahead(), SystemSpec::ideal()],
-    ));
+    )));
     let mut s = String::from("Fig 13 — runahead speedup over Cache+SPM (and ideal ceiling)\n");
     let mut sp = Vec::new();
     let mut ceil = Vec::new();
@@ -366,7 +401,11 @@ pub fn fig13(s: &Session) -> String {
 
 /// Fig 14: runahead speedup vs MSHR size. Paper: saturates around 16.
 pub fn fig14(s: &Session) -> String {
-    let kernels = [CORA, "grad", "rgb", "src2dest"];
+    let kernels = if smoke() {
+        ["aggregate/tiny", "small/grad", "small/rgb", "small/src2dest"]
+    } else {
+        [CORA, "grad", "rgb", "src2dest"]
+    };
     let mshrs: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
     let mut systems = Vec::new();
     for &m in &mshrs {
@@ -400,7 +439,7 @@ pub fn fig14(s: &Session) -> String {
 /// Fig 15: prefetched-block classification. Paper: "Useless" ≈ 0
 /// (prefetch accuracy ≈ 100%); evictions pronounced for grad/rgb.
 pub fn fig15(s: &Session) -> String {
-    let report = s.run(&ExperimentSpec::campaign("fig15", [SystemSpec::runahead()]));
+    let report = s.run(&sized(ExperimentSpec::campaign("fig15", [SystemSpec::runahead()])));
     let mut s = String::from("Fig 15 — prefetched cache blocks: Used / Evicted / Useless\n");
     s.push_str(&format!(
         "{:<22} {:>9} {:>9} {:>9} {:>10}\n",
@@ -423,7 +462,7 @@ pub fn fig15(s: &Session) -> String {
 
 /// Fig 16: runahead coverage. Paper: average 87%.
 pub fn fig16(s: &Session) -> String {
-    let report = s.run(&ExperimentSpec::campaign("fig16", [SystemSpec::runahead()]));
+    let report = s.run(&sized(ExperimentSpec::campaign("fig16", [SystemSpec::runahead()])));
     let mut s = String::from("Fig 16 — runahead coverage (share of misses addressed)\n");
     let mut cov = Vec::new();
     for m in &report.measurements {
@@ -439,58 +478,93 @@ pub fn fig16(s: &Session) -> String {
     s
 }
 
-/// Fig 17: cache reconfiguration gains on the 8×8 Reconfig system.
+/// Fig 17: cache-reconfiguration gains on the 8×8 Reconfig system —
+/// measured *online*: the monitor-gated closed loop fires during each
+/// run, so every (workload, mode, reconfig) point is an ordinary
+/// content-addressed session cell. It dedups across `repro all` and
+/// replays byte-identically from a warm store; the old offline
+/// double-run (`reconfig_experiment`) is gone.
 /// Paper: real data 4.59%/3.22% (no-RA / RA), random 2.10%/1.58%.
-/// (The closed-loop protocol doesn't fit the campaign shape — not a
-/// cacheable cell; it fans out over the engine's pool via
-/// [`crate::exp::Engine::map`].)
 pub fn fig17(s: &Session) -> String {
-    let names = s.engine().registry().paper_names();
-    let mut jobs = Vec::new();
-    for name in &names {
-        for mode in [ExecMode::Normal, ExecMode::Runahead] {
-            jobs.push((name.clone(), mode));
+    let names = if smoke() {
+        s.engine().registry().small_names()
+    } else {
+        s.engine().registry().paper_names()
+    };
+    fig17_with(s, &names)
+}
+
+/// The Fig 17 campaign at caller-chosen workloads (tests use small ones).
+pub fn fig17_with(s: &Session, names: &[String]) -> String {
+    let sys = |mode: ExecMode, online: bool| -> SystemSpec {
+        let tag = match mode {
+            ExecMode::Normal => "base",
+            ExecMode::Runahead => "ra",
+        };
+        let mut cgra = CgraConfig::hycube_8x8(mode);
+        if online {
+            cgra.reconfig = ReconfigPolicy::online();
         }
-    }
-    let registry = s.engine().registry_arc();
-    let rows = s.engine().map(jobs, move |(name, mode)| {
-        let wl = registry.build(&name).expect("paper workload");
-        let out = reconfig_experiment(wl.as_ref(), mode, 4096);
-        let red = 100.0 * (1.0 - out.reconf_cycles as f64 / out.base_cycles as f64);
-        (name, mode, red, out.output_ok, out.plan.ways.clone())
-    });
-    let mut s = String::from("Fig 17 — runtime reduction from cache reconfiguration (8x8)\n");
-    s.push_str(&format!("{:<22} {:>12} {:>12}  plan(ways)\n", "kernel", "no-runahead", "runahead"));
+        SystemSpec::cgra(
+            format!("8x8/{tag}{}", if online { "+reconfig" } else { "" }),
+            SubsystemConfig::paper_reconfig(),
+            cgra,
+        )
+    };
+    let systems = vec![
+        sys(ExecMode::Normal, false),
+        sys(ExecMode::Normal, true),
+        sys(ExecMode::Runahead, false),
+        sys(ExecMode::Runahead, true),
+    ];
+    let report =
+        s.run(&ExperimentSpec::new("fig17").workloads(names.iter().cloned()).systems(systems));
+    let mut out =
+        String::from("Fig 17 — runtime reduction from online cache reconfiguration (8x8)\n");
+    out.push_str(&format!(
+        "{:<22} {:>12} {:>12} {:>7}\n",
+        "kernel", "no-runahead", "runahead", "plans"
+    ));
     let mut real_n = Vec::new();
     let mut real_r = Vec::new();
     let mut rand_n = Vec::new();
     let mut rand_r = Vec::new();
-    for name in &names {
-        let get = |mode: ExecMode| rows.iter().find(|(n, m, ..)| n == name && *m == mode).unwrap();
-        let (_, _, rn, okn, ways) = get(ExecMode::Normal);
-        let (_, _, rr, okr, _) = get(ExecMode::Runahead);
-        assert!(okn & okr, "reconfigured output must stay correct");
-        let real = name.starts_with("aggregate");
-        if real {
-            real_n.push(*rn);
-            real_r.push(*rr);
+    for name in &report.workloads {
+        let base_n = report.get(name, "8x8/base").unwrap();
+        let rec_n = report.get(name, "8x8/base+reconfig").unwrap();
+        let base_r = report.get(name, "8x8/ra").unwrap();
+        let rec_r = report.get(name, "8x8/ra+reconfig").unwrap();
+        assert!(
+            rec_n.output_ok && rec_r.output_ok,
+            "reconfigured output must stay correct ({name})"
+        );
+        let rn = 100.0 * (1.0 - rec_n.cycles as f64 / base_n.cycles as f64);
+        let rr = 100.0 * (1.0 - rec_r.cycles as f64 / base_r.cycles as f64);
+        if name.starts_with("aggregate") {
+            real_n.push(rn);
+            real_r.push(rr);
         } else {
-            rand_n.push(*rn);
-            rand_r.push(*rr);
+            rand_n.push(rn);
+            rand_r.push(rr);
         }
-        s.push_str(&format!("{:<22} {:>11.2}% {:>11.2}%  {:?}\n", name, rn, rr, ways));
+        out.push_str(&format!(
+            "{:<22} {:>11.2}% {:>11.2}% {:>7}\n",
+            name, rn, rr, rec_n.reconfig_applies
+        ));
     }
-    s.push_str(&format!(
+    out.push_str(&format!(
         "real-data avg:   {:>6.2}% / {:>6.2}%   (paper: 4.59% / 3.22%)\n",
         stats::mean(&real_n),
         stats::mean(&real_r)
     ));
-    s.push_str(&format!(
+    out.push_str(&format!(
         "random-data avg: {:>6.2}% / {:>6.2}%   (paper: 2.10% / 1.58%)\n",
         stats::mean(&rand_n),
         stats::mean(&rand_r)
     ));
-    s
+    out.push_str("(plans = monitor-gated reconfigurations applied during the no-RA run;\n");
+    out.push_str(" zero plans means the trigger never fired and the runs are identical)\n");
+    out
 }
 
 /// Fig 18 + §4.5: area breakdown and runahead overhead.
@@ -537,7 +611,11 @@ pub fn fig18() -> String {
 /// SPM-only series collapses once x/y spill past its window, the cache
 /// systems degrade gracefully, and the ideal backend stays the flat floor.
 pub fn scaling(s: &Session) -> String {
-    scaling_with(s, &[16, 32, 64, 96, 128])
+    if smoke() {
+        scaling_with(s, &[8, 12])
+    } else {
+        scaling_with(s, &[16, 32, 64, 96, 128])
+    }
 }
 
 /// The scaling sweep at caller-chosen mesh dims (tests use small grids).
@@ -598,7 +676,7 @@ pub fn motivation(s: &Session) -> String {
     shared_cfg.shared_l1 = true;
     shared_cfg.l1 = CacheConfig::from_size(8192, 8, 64);
     let shared = cgra_4x4("shared-L1", shared_cfg, ExecMode::Normal);
-    let report = s.run(&ExperimentSpec::campaign("motivation", [multi, shared]));
+    let report = s.run(&sized(ExperimentSpec::campaign("motivation", [multi, shared])));
     let mut s =
         String::from("Motivation (Fig 3a) — shared single L1 vs multi-cache at equal capacity\n");
     let mut ratios = Vec::new();
@@ -625,7 +703,11 @@ pub fn motivation(s: &Session) -> String {
 /// paper's named design aspects).
 pub fn ablation(s: &Session) -> String {
     use crate::sim::RunaheadAblation;
-    let kernels = [CORA, "grad", "radix_update", "rgb"];
+    let kernels = if smoke() {
+        ["aggregate/tiny", "small/grad", "small/radix_update", "small/rgb"]
+    } else {
+        [CORA, "grad", "radix_update", "rgb"]
+    };
     let variants: Vec<(&str, RunaheadAblation)> = vec![
         ("full runahead", RunaheadAblation::default()),
         ("no temp store", RunaheadAblation { temp_store: false, ..Default::default() }),
@@ -657,6 +739,75 @@ pub fn ablation(s: &Session) -> String {
     }
     s.push_str("(correctness is preserved in every variant — ablations only change prefetch quality)\n");
     s
+}
+
+/// Adaptivity — the phase-adaptive payoff figure: cycles vs phase period
+/// on the phase-alternating gather (`phased` family), with the cache
+/// reconfiguration off, static (profile-once-and-lock) and online.
+/// Online re-plans at phase boundaries (paying its flush cost in-band);
+/// static locks whichever phase triggered first and loses the other one.
+pub fn adaptivity(s: &Session) -> String {
+    if smoke() {
+        adaptivity_with(s, 2048, 2048, &[256, 512])
+    } else {
+        adaptivity_with(s, 24576, 16384, &[1024, 2048, 4096, 8192])
+    }
+}
+
+/// The adaptivity sweep at caller-chosen trip count, working set and
+/// phase periods (tests use tiny ones).
+pub fn adaptivity_with(s: &Session, n: u64, span: u64, periods: &[u64]) -> String {
+    let mode_sys = |name: &str, policy: ReconfigPolicy| {
+        let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
+        cgra.reconfig = policy;
+        SystemSpec::cgra(name, SubsystemConfig::paper_base(), cgra)
+    };
+    let systems = vec![
+        mode_sys("Reconfig-off", ReconfigPolicy::off()),
+        mode_sys("Static", ReconfigPolicy::adapt_static()),
+        mode_sys("Online", ReconfigPolicy::online()),
+    ];
+    let sys_names: Vec<String> = systems.iter().map(|s| s.name.clone()).collect();
+    let scenarios: Vec<ScenarioSpec> = periods
+        .iter()
+        .map(|&p| {
+            ScenarioSpec::family(
+                "phased",
+                Params::new().set_u64("n", n).set_u64("span", span).set_u64("period", p),
+            )
+            .named(format!("phased/p{p}"))
+        })
+        .collect();
+    let report = s.run(&ExperimentSpec::new("adaptivity").workloads(scenarios).systems(systems));
+    let mut out = format!(
+        "Adaptivity — phased gather ({n} iters, {span}-word set): cycles vs phase period\n"
+    );
+    out.push_str(&format!("{:<14}", "period"));
+    for nm in &sys_names {
+        out.push_str(&format!(" {:>12}", nm));
+    }
+    out.push_str(&format!(" {:>11} {:>6}\n", "vs static", "plans"));
+    for w in &report.workloads {
+        let m_online = report.get(w, "Online").unwrap();
+        out.push_str(&format!("{:<14}", w));
+        for nm in &sys_names {
+            let m = report.get(w, nm).unwrap();
+            assert!(m.output_ok, "{w} on {nm} diverged");
+            out.push_str(&format!(" {:>12}", m.cycles));
+        }
+        // Online's speedup over static: > 1 means online wins.
+        let stat = report.cycles_of(w, "Static").unwrap() as f64;
+        out.push_str(&format!(
+            " {:>10.2}x {:>6}\n",
+            stat / m_online.cycles as f64,
+            m_online.reconfig_applies
+        ));
+    }
+    out.push_str(
+        "(online re-plans at phase boundaries with its flush cost charged in-band;\n\
+         static locks the first triggering phase's plan; off is the uniform baseline)\n",
+    );
+    out
 }
 
 #[cfg(test)]

@@ -21,6 +21,12 @@
 //! tracking. When every miss of the trigger cycle has resolved, state is
 //! restored and normal execution resumes with future data already resident
 //! or in flight.
+//!
+//! Execution is factored into [`RunState`] + `step_cycle` (one machine
+//! step) driven by [`CgraArray::run_with`], whose epoch boundary hands an
+//! [`EpochController`] the live memory backend and trace window — the seam
+//! the online cache-reconfiguration layer (§3.4, `crate::reconfig`) plugs
+//! into, with its flush/migration cost charged in-band.
 
 use super::alu::Value;
 use super::dfg::{Dfg, NodeId, Op};
@@ -28,7 +34,8 @@ use super::mapper::{Geometry, Mapping};
 use super::pe::{program, PeConfigMem};
 use super::trace::{AccessTrace, TraceEvent};
 use crate::mem::{
-    AccessKind, Cycle, MemRequest, MemResponse, MemoryModel, PrefetchResponse, SubsystemStats,
+    AccessKind, Cycle, MemRequest, MemResponse, MemoryModel, PrefetchResponse, Reconfigurable,
+    SubsystemStats,
 };
 /// Execution-mode knob for a run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,6 +44,80 @@ pub enum ExecMode {
     Normal,
     /// Enter runahead on stall-triggering read misses.
     Runahead,
+}
+
+/// When (if ever) the cache-reconfiguration controller may act during a
+/// run (§3.4 as an *online* mechanism — the closed loop fires inside the
+/// simulation, not as an offline pre-pass).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReconfigMode {
+    /// No controller: the L1 array keeps its configured geometry.
+    Off,
+    /// Adapt once: the first triggering epoch plans and applies, then the
+    /// configuration is locked for the rest of the run (the classic
+    /// profile-once protocol, expressed in-band).
+    Static,
+    /// Closed loop: every triggering epoch may replan (with the monitor's
+    /// cooldown as hysteresis) — the phase-adaptive mechanism.
+    Online,
+}
+
+/// Reconfiguration policy as plain data, carried by [`CgraConfig`] so a
+/// system spec (and its content-addressed cell identity) fully describes
+/// the controller. The controller itself lives in `crate::reconfig`; the
+/// sim layer only defines the data and the epoch-hook seam.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReconfigPolicy {
+    pub mode: ReconfigMode,
+    /// Epoch length in cycles between controller observations.
+    pub period: u64,
+    /// Miss-rate trigger threshold (windowed L1 miss rate above this
+    /// arms the planner).
+    pub threshold: f64,
+    /// Minimum windowed L1 accesses before the monitor may fire
+    /// (debounce).
+    pub min_accesses: u64,
+    /// Observation-window capacity sampled per port (the run's trace
+    /// window is opened to at least this).
+    pub window: usize,
+    /// Epochs the monitor stays quiet after a trigger (hysteresis).
+    pub cooldown: u32,
+}
+
+impl ReconfigPolicy {
+    pub fn off() -> Self {
+        ReconfigPolicy {
+            mode: ReconfigMode::Off,
+            period: 2048,
+            threshold: 0.05,
+            min_accesses: 256,
+            window: 1024,
+            cooldown: 1,
+        }
+    }
+
+    pub fn online() -> Self {
+        ReconfigPolicy { mode: ReconfigMode::Online, ..Self::off() }
+    }
+
+    pub fn adapt_static() -> Self {
+        ReconfigPolicy { mode: ReconfigMode::Static, ..Self::off() }
+    }
+}
+
+/// Epoch-boundary controller hook: [`CgraArray::run_with`] calls this at
+/// the first *clean* cycle (normal mode, no frozen context, no bounced
+/// requests) at or past each epoch boundary, handing over the backend's
+/// [`Reconfigurable`] capability and the live access-trace window. The
+/// returned cycle count is charged **in-band** as stall cycles — the
+/// flush/migration cost lands inside the simulated run, where it occurs.
+pub trait EpochController {
+    fn on_epoch(
+        &mut self,
+        mem: &mut dyn Reconfigurable,
+        trace: &mut AccessTrace,
+        cycle: Cycle,
+    ) -> u64;
 }
 
 /// Ablation switches for the runahead design choices of §3.2.1. All on
@@ -75,6 +156,9 @@ pub struct CgraConfig {
     pub trace_window: usize,
     /// §3.2.1 design-choice switches (all on = the paper's design).
     pub ablation: RunaheadAblation,
+    /// Online cache-reconfiguration policy (§3.4; [`ReconfigMode::Off`]
+    /// runs without a controller).
+    pub reconfig: ReconfigPolicy,
 }
 
 impl CgraConfig {
@@ -86,6 +170,7 @@ impl CgraConfig {
             freq_mhz: 704.0,
             trace_window: 0,
             ablation: RunaheadAblation::default(),
+            reconfig: ReconfigPolicy::off(),
         }
     }
     pub fn hycube_8x8(mode: ExecMode) -> Self {
@@ -96,6 +181,7 @@ impl CgraConfig {
             freq_mhz: 704.0,
             trace_window: 0,
             ablation: RunaheadAblation::default(),
+            reconfig: ReconfigPolicy::off(),
         }
     }
 }
@@ -198,6 +284,66 @@ impl CycleEffects {
     }
 }
 
+/// Mutable per-run machine state, factored out of the old monolithic
+/// `run` loop so the epoch driver ([`CgraArray::run_with`]) can
+/// interleave controller hooks between steps.
+struct RunState {
+    iterations: u64,
+    ii: u64,
+    end_ctx: u64,
+    cycle: Cycle,
+    ctx: u64,
+    stall_cycles: Cycle,
+    runahead_cycles: Cycle,
+    runahead_entries: u64,
+    useful_ops: u64,
+    uncovered: u64,
+    backup: Option<BackupRegs>,
+    triggers: Vec<Trigger>,
+    ra_deadline: Cycle,
+    effects: CycleEffects,
+    /// Requests bounced by a full MSHR, retried while the array is frozen.
+    retry: Vec<(usize, MemRequest, NodeId, u64, bool)>,
+}
+
+impl RunState {
+    fn new(iterations: u64, ii: u64, schedule_len: u64) -> Self {
+        let end_ctx = if iterations == 0 { 0 } else { (iterations - 1) * ii + schedule_len };
+        RunState {
+            iterations,
+            ii,
+            end_ctx,
+            cycle: 0,
+            ctx: 0,
+            stall_cycles: 0,
+            runahead_cycles: 0,
+            runahead_entries: 0,
+            useful_ops: 0,
+            uncovered: 0,
+            backup: None,
+            triggers: Vec::new(),
+            ra_deadline: 0,
+            effects: CycleEffects::default(),
+            retry: Vec::new(),
+        }
+    }
+
+    /// The run still has work: schedule left, or a frozen/speculative
+    /// context with outstanding misses or bounced requests.
+    fn active(&self) -> bool {
+        self.ctx < self.end_ctx
+            || self.backup.is_some()
+            || !self.triggers.is_empty()
+            || !self.retry.is_empty()
+    }
+
+    /// Safe for reconfiguration: normal mode, no frozen context, nothing
+    /// bounced — no in-flight state references the cache geometry.
+    fn clean(&self) -> bool {
+        self.backup.is_none() && self.triggers.is_empty() && self.retry.is_empty()
+    }
+}
+
 pub struct CgraArray {
     pub cfg: CgraConfig,
     dfg: Dfg,
@@ -262,201 +408,224 @@ impl CgraArray {
     /// Execute the kernel for `iterations` loop iterations on any memory
     /// backend — the array speaks only the [`MemoryModel`] contract.
     pub fn run<M: MemoryModel + ?Sized>(&mut self, mem: &mut M, iterations: u64) -> RunResult {
-        let ii = self.mapping.ii as u64;
-        let end_ctx = if iterations == 0 {
-            0
-        } else {
-            (iterations - 1) * ii + self.mapping.schedule_len as u64
+        self.run_with(mem, iterations, None)
+    }
+
+    /// [`CgraArray::run`] with an epoch-boundary controller: every
+    /// `period` cycles — at the first *clean* cycle past the boundary —
+    /// the controller observes the backend's [`Reconfigurable`]
+    /// capability plus the live trace window, and any cycles it returns
+    /// (way-migration flushes) are charged in-band as stall cycles.
+    /// Backends without the capability (ideal memory) skip the hook.
+    pub fn run_with<M: MemoryModel + ?Sized>(
+        &mut self,
+        mem: &mut M,
+        iterations: u64,
+        mut hook: Option<(&mut dyn EpochController, u64)>,
+    ) -> RunResult {
+        let mut st =
+            RunState::new(iterations, self.mapping.ii as u64, self.mapping.schedule_len as u64);
+        let mut next_epoch = match &hook {
+            Some((_, period)) => (*period).max(1),
+            None => u64::MAX,
         };
-        let mut cycle: Cycle = 0;
-        let mut ctx: u64 = 0;
-        let mut stall_cycles: Cycle = 0;
-        let mut runahead_cycles: Cycle = 0;
-        let mut runahead_entries: u64 = 0;
-        let mut useful_ops: u64 = 0;
-        let mut uncovered = 0u64;
-
-        let mut backup: Option<BackupRegs> = None;
-        let mut triggers: Vec<Trigger> = Vec::new();
-        let mut ra_deadline: Cycle = 0;
-        let mut effects = CycleEffects::default();
-        // Requests bounced by a full MSHR, retried while the array is frozen.
-        let mut retry: Vec<(usize, MemRequest, NodeId, u64, bool)> = Vec::new();
-
         // The loop must also cover cycles where the array is frozen or in
         // runahead at the end of the schedule (speculative ctx may pass
         // end_ctx; real progress resumes only after restore).
-        while ctx < end_ctx || backup.is_some() || !triggers.is_empty() || !retry.is_empty() {
-            // ---- Frozen-context service (normal mode only) ----
-            if backup.is_none() && !retry.is_empty() {
-                let mut still = Vec::new();
-                for (port, req, node, iter, is_read) in retry.drain(..) {
-                    match mem.request(port, req, cycle) {
-                        MemResponse::MshrFull => still.push((port, req, node, iter, is_read)),
-                        MemResponse::HitSpm { data } | MemResponse::HitL1 { data } => {
-                            if is_read {
-                                effects.insert((node, iter), Some(data));
-                            } else {
-                                effects.insert((node, iter), None);
-                            }
-                        }
-                        MemResponse::ReadMiss { .. } => {
-                            let block = mem.block_addr(port, req.addr);
-                            uncovered += 1;
-                            triggers.push(Trigger { port, block, node, iter, addr: req.addr });
-                        }
-                        MemResponse::WriteQueued => {
-                            effects.insert((node, iter), None);
-                        }
-                    }
+        while st.active() {
+            self.step_cycle(mem, &mut st);
+            // ---- Epoch boundary: hand the controller the live run ----
+            // Only while work remains (a plan after the final context
+            // would charge cost past completion) and in a clean state:
+            // applying a plan while fills are outstanding would pull
+            // cache state out from under the frozen context (the check
+            // re-arms every cycle until clean).
+            if st.active() && st.cycle >= next_epoch && st.clean() {
+                let (ctl, period) = hook.as_mut().expect("epoch boundary implies a hook");
+                if let Some(r) = mem.reconfig() {
+                    let cost = ctl.on_epoch(r, &mut self.trace, st.cycle);
+                    st.cycle += cost;
+                    st.stall_cycles += cost;
                 }
-                retry = still;
-                if !retry.is_empty() {
-                    stall_cycles += 1;
-                    cycle += 1;
-                    Self::drain(mem, cycle, &mut triggers, &mut effects);
-                    continue;
-                }
-            }
-
-            if backup.is_none() && !triggers.is_empty() {
-                match self.cfg.mode {
-                    ExecMode::Normal => {
-                        // ---- Plain stall: fast-forward to the next fill ----
-                        let next = mem.next_event().unwrap_or(cycle + 1).max(cycle + 1);
-                        stall_cycles += next - cycle;
-                        cycle = next;
-                        Self::drain(mem, cycle, &mut triggers, &mut effects);
-                        continue;
-                    }
-                    ExecMode::Runahead => {
-                        // ---- Enter runahead (Fig 3b ②) ----
-                        runahead_entries += 1;
-                        mem.begin_runahead_epoch();
-                        self.backup_vals.copy_from_slice(&self.vals);
-                        backup = Some(BackupRegs { ctx });
-                        ra_deadline = cycle + self.cfg.max_runahead_cycles;
-                        for t in &triggers {
-                            self.set_val(t.node, t.iter, Value::dummy());
-                        }
-                    }
-                }
-            }
-
-            let in_runahead = backup.is_some();
-            // ---- Execute one cycle of the schedule ----
-            let slot = (ctx % ii) as usize;
-            for si in 0..self.slot_nodes[slot].len() {
-                let (node, t_n32) = self.slot_nodes[slot][si];
-                let t_n = t_n32 as u64;
-                if ctx < t_n {
-                    continue;
-                }
-                let iter = (ctx - t_n) / ii;
-                if iter >= iterations {
-                    continue;
-                }
-                match self.dfg.nodes[node].op {
-                    Op::IterIdx => self.set_val(node, iter, Value::real(iter as u32)),
-                    Op::Const(c) => self.set_val(node, iter, Value::real(c)),
-                    Op::Alu(op) => {
-                        let a = self.input(node, 0, iter);
-                        let b = self.input(node, 1, iter);
-                        self.set_val(node, iter, op.eval(a, b));
-                    }
-                    Op::Load(space) => {
-                        let addr_v = self.input(node, 0, iter);
-                        if in_runahead {
-                            let v = self.runahead_load(mem, space.port, addr_v, cycle);
-                            self.set_val(node, iter, v);
-                        } else if let Some(eff) = effects.get(&(node, iter)) {
-                            // Replay of a frozen context: use latched data.
-                            let d = eff.expect("load effect carries data");
-                            self.set_val(node, iter, Value::real(d));
-                        } else {
-                            self.demand_load(
-                                mem, node, iter, space.port, addr_v.bits, cycle,
-                                &mut triggers, &mut effects, &mut retry, &mut uncovered,
-                            );
-                        }
-                    }
-                    Op::Store(space) => {
-                        let addr_v = self.input(node, 0, iter);
-                        let data_v = self.input(node, 1, iter);
-                        if in_runahead {
-                            self.runahead_store(mem, space.port, addr_v, data_v, cycle);
-                        } else if effects.contains_key(&(node, iter)) {
-                            // Store already issued before the freeze.
-                        } else {
-                            self.demand_store(
-                                mem, node, iter, space.port, addr_v.bits, data_v.bits, cycle,
-                                &mut effects, &mut retry,
-                            );
-                        }
-                    }
-                }
-            }
-
-            cycle += 1;
-            if in_runahead {
-                stall_cycles += 1;
-                runahead_cycles += 1;
-                ctx += 1; // speculative progress (discarded on exit)
-            } else if triggers.is_empty() && retry.is_empty() {
-                // Clean completion of this context.
-                useful_ops += self.slot_nodes[slot]
-                    .iter()
-                    .filter(|&&(_, t)| {
-                        ctx >= t as u64 && (ctx - t as u64) / ii < iterations
-                    })
-                    .count() as u64;
-                effects.clear();
-                ctx += 1;
-            }
-            // else: context frozen; ctx stays, effects/triggers persist.
-
-            // ---- Fill completions ----
-            Self::drain(mem, cycle, &mut triggers, &mut effects);
-
-            if backup.is_some() {
-                let resolved = triggers.is_empty();
-                let timed_out = cycle >= ra_deadline;
-                if resolved || timed_out {
-                    // ---- Exit runahead: restore backup registers ----
-                    let b = backup.take().unwrap();
-                    ctx = b.ctx;
-                    self.vals.copy_from_slice(&self.backup_vals);
-                    if timed_out && !resolved {
-                        // Degenerate: wait out the remaining fills plainly.
-                        while !triggers.is_empty() {
-                            let next = mem.next_event().unwrap_or(cycle + 1).max(cycle + 1);
-                            stall_cycles += next - cycle;
-                            cycle = next;
-                            Self::drain(mem, cycle, &mut triggers, &mut effects);
-                        }
-                    }
-                    for port in 0..self.cfg.geom.ports {
-                        mem.temp_clear(port);
-                    }
-                    // Replay the frozen context; trigger loads consume the
-                    // effects latched by drain().
-                }
+                next_epoch = st.cycle + (*period).max(1);
             }
         }
 
         mem.finalize_prefetch_stats();
         RunResult {
-            cycles: cycle,
-            stall_cycles,
-            runahead_cycles,
-            runahead_entries,
+            cycles: st.cycle,
+            stall_cycles: st.stall_cycles,
+            runahead_cycles: st.runahead_cycles,
+            runahead_entries: st.runahead_entries,
             iterations,
-            useful_ops,
+            useful_ops: st.useful_ops,
             num_pes: self.cfg.geom.num_pes(),
             ii: self.mapping.ii as u32,
             mem: mem.stats(),
             freq_mhz: self.cfg.freq_mhz,
-            uncovered_misses: uncovered,
+            uncovered_misses: st.uncovered,
+        }
+    }
+
+    /// Advance the machine by one step: service bounced requests, stall
+    /// or enter runahead on outstanding trigger misses, execute one
+    /// schedule cycle, drain fill completions, handle runahead exit. One
+    /// call is roughly one executed cycle; stall fast-forwards may move
+    /// `st.cycle` further.
+    fn step_cycle<M: MemoryModel + ?Sized>(&mut self, mem: &mut M, st: &mut RunState) {
+        // ---- Frozen-context service (normal mode only) ----
+        if st.backup.is_none() && !st.retry.is_empty() {
+            let mut still = Vec::new();
+            for (port, req, node, iter, is_read) in st.retry.drain(..) {
+                match mem.request(port, req, st.cycle) {
+                    MemResponse::MshrFull => still.push((port, req, node, iter, is_read)),
+                    MemResponse::HitSpm { data } | MemResponse::HitL1 { data } => {
+                        if is_read {
+                            st.effects.insert((node, iter), Some(data));
+                        } else {
+                            st.effects.insert((node, iter), None);
+                        }
+                    }
+                    MemResponse::ReadMiss { .. } => {
+                        let block = mem.block_addr(port, req.addr);
+                        st.uncovered += 1;
+                        st.triggers.push(Trigger { port, block, node, iter, addr: req.addr });
+                    }
+                    MemResponse::WriteQueued => {
+                        st.effects.insert((node, iter), None);
+                    }
+                }
+            }
+            st.retry = still;
+            if !st.retry.is_empty() {
+                st.stall_cycles += 1;
+                st.cycle += 1;
+                Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects);
+                return;
+            }
+        }
+
+        if st.backup.is_none() && !st.triggers.is_empty() {
+            match self.cfg.mode {
+                ExecMode::Normal => {
+                    // ---- Plain stall: fast-forward to the next fill ----
+                    let next = mem.next_event().unwrap_or(st.cycle + 1).max(st.cycle + 1);
+                    st.stall_cycles += next - st.cycle;
+                    st.cycle = next;
+                    Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects);
+                    return;
+                }
+                ExecMode::Runahead => {
+                    // ---- Enter runahead (Fig 3b ②) ----
+                    st.runahead_entries += 1;
+                    mem.begin_runahead_epoch();
+                    self.backup_vals.copy_from_slice(&self.vals);
+                    st.backup = Some(BackupRegs { ctx: st.ctx });
+                    st.ra_deadline = st.cycle + self.cfg.max_runahead_cycles;
+                    for t in &st.triggers {
+                        self.set_val(t.node, t.iter, Value::dummy());
+                    }
+                }
+            }
+        }
+
+        let in_runahead = st.backup.is_some();
+        // ---- Execute one cycle of the schedule ----
+        let slot = (st.ctx % st.ii) as usize;
+        for si in 0..self.slot_nodes[slot].len() {
+            let (node, t_n32) = self.slot_nodes[slot][si];
+            let t_n = t_n32 as u64;
+            if st.ctx < t_n {
+                continue;
+            }
+            let iter = (st.ctx - t_n) / st.ii;
+            if iter >= st.iterations {
+                continue;
+            }
+            match self.dfg.nodes[node].op {
+                Op::IterIdx => self.set_val(node, iter, Value::real(iter as u32)),
+                Op::Const(c) => self.set_val(node, iter, Value::real(c)),
+                Op::Alu(op) => {
+                    let a = self.input(node, 0, iter);
+                    let b = self.input(node, 1, iter);
+                    self.set_val(node, iter, op.eval(a, b));
+                }
+                Op::Load(space) => {
+                    let addr_v = self.input(node, 0, iter);
+                    if in_runahead {
+                        let v = self.runahead_load(mem, space.port, addr_v, st.cycle);
+                        self.set_val(node, iter, v);
+                    } else if let Some(eff) = st.effects.get(&(node, iter)) {
+                        // Replay of a frozen context: use latched data.
+                        let d = eff.expect("load effect carries data");
+                        self.set_val(node, iter, Value::real(d));
+                    } else {
+                        self.demand_load(
+                            mem, node, iter, space.port, addr_v.bits, st.cycle,
+                            &mut st.triggers, &mut st.effects, &mut st.retry, &mut st.uncovered,
+                        );
+                    }
+                }
+                Op::Store(space) => {
+                    let addr_v = self.input(node, 0, iter);
+                    let data_v = self.input(node, 1, iter);
+                    if in_runahead {
+                        self.runahead_store(mem, space.port, addr_v, data_v, st.cycle);
+                    } else if st.effects.contains_key(&(node, iter)) {
+                        // Store already issued before the freeze.
+                    } else {
+                        self.demand_store(
+                            mem, node, iter, space.port, addr_v.bits, data_v.bits, st.cycle,
+                            &mut st.effects, &mut st.retry,
+                        );
+                    }
+                }
+            }
+        }
+
+        st.cycle += 1;
+        if in_runahead {
+            st.stall_cycles += 1;
+            st.runahead_cycles += 1;
+            st.ctx += 1; // speculative progress (discarded on exit)
+        } else if st.triggers.is_empty() && st.retry.is_empty() {
+            // Clean completion of this context.
+            let (ctx, ii, iterations) = (st.ctx, st.ii, st.iterations);
+            st.useful_ops += self.slot_nodes[slot]
+                .iter()
+                .filter(|&&(_, t)| ctx >= t as u64 && (ctx - t as u64) / ii < iterations)
+                .count() as u64;
+            st.effects.clear();
+            st.ctx += 1;
+        }
+        // else: context frozen; ctx stays, effects/triggers persist.
+
+        // ---- Fill completions ----
+        Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects);
+
+        if st.backup.is_some() {
+            let resolved = st.triggers.is_empty();
+            let timed_out = st.cycle >= st.ra_deadline;
+            if resolved || timed_out {
+                // ---- Exit runahead: restore backup registers ----
+                let b = st.backup.take().unwrap();
+                st.ctx = b.ctx;
+                self.vals.copy_from_slice(&self.backup_vals);
+                if timed_out && !resolved {
+                    // Degenerate: wait out the remaining fills plainly.
+                    while !st.triggers.is_empty() {
+                        let next = mem.next_event().unwrap_or(st.cycle + 1).max(st.cycle + 1);
+                        st.stall_cycles += next - st.cycle;
+                        st.cycle = next;
+                        Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects);
+                    }
+                }
+                for port in 0..self.cfg.geom.ports {
+                    mem.temp_clear(port);
+                }
+                // Replay the frozen context; trigger loads consume the
+                // effects latched by drain().
+            }
         }
     }
 
@@ -883,6 +1052,102 @@ mod tests {
         for k in 0..n as u32 {
             assert_eq!(mem.backing.read_u32(0x20000 + k * 16), 7 + k, "elem {k}");
         }
+    }
+
+    /// Stub controller: charges a fixed in-band cost per epoch and counts
+    /// its invocations.
+    struct FixedCost {
+        cost: u64,
+        calls: u64,
+    }
+
+    impl EpochController for FixedCost {
+        fn on_epoch(
+            &mut self,
+            _mem: &mut dyn crate::mem::Reconfigurable,
+            _trace: &mut AccessTrace,
+            _cycle: u64,
+        ) -> u64 {
+            self.calls += 1;
+            self.cost
+        }
+    }
+
+    /// SPM-resident kernel (never stalls, nothing in flight): the epoch
+    /// hook's returned cost must land **in-band** — total cycles grow by
+    /// exactly cost × invocations, all booked as stall cycles.
+    fn spm_resident_setup() -> (Dfg, MemorySubsystem) {
+        let mut b = DfgBuilder::new("spm_vecadd");
+        let i = b.iter_idx();
+        let av = b.array_load(0, 0x0000, i);
+        let bv = b.array_load(1, 0x1000, i);
+        let s = b.alu(AluOp::Add, av, bv);
+        b.array_store(0, 0x100, i, s);
+        let dfg = b.finish();
+        let mut mem = small_mem(2);
+        for i in 0..64u32 {
+            mem.backing.write_u32(i * 4, i);
+            mem.backing.write_u32(0x1000 + i * 4, 5);
+        }
+        (dfg, mem)
+    }
+
+    #[test]
+    fn epoch_hook_cost_is_charged_in_band() {
+        let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+        let run = |hook_cost: Option<u64>| {
+            let (dfg, mut mem) = spm_resident_setup();
+            let mapping = Mapper::new(geom).map(&dfg).unwrap();
+            let mut arr = CgraArray::new(CgraConfig::hycube_4x4(ExecMode::Normal), dfg, mapping);
+            match hook_cost {
+                None => (arr.run(&mut mem, 64), 0),
+                Some(c) => {
+                    let mut ctl = FixedCost { cost: c, calls: 0 };
+                    let r = arr.run_with(&mut mem, 64, Some((&mut ctl, 16)));
+                    (r, ctl.calls)
+                }
+            }
+        };
+        let (base, _) = run(None);
+        assert_eq!(base.stall_cycles, 0);
+        let (hooked, calls) = run(Some(7));
+        assert!(calls > 1, "the hook must fire repeatedly over a long run");
+        assert_eq!(hooked.cycles, base.cycles + 7 * calls, "cost lands inside the run");
+        assert_eq!(hooked.stall_cycles, 7 * calls, "cost is booked as stall cycles");
+        // A zero-cost controller changes nothing.
+        let (free, free_calls) = run(Some(0));
+        assert_eq!(free.cycles, base.cycles);
+        assert!(free_calls > 1);
+    }
+
+    #[test]
+    fn epoch_hook_is_inert_on_backends_without_the_capability() {
+        // IdealMemory has no Reconfigurable capability: the hook is never
+        // invoked and the run is identical to a plain `run`.
+        let dfg = vecadd_dfg();
+        let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+        let mapping = Mapper::new(geom).map(&dfg).unwrap();
+        let mk = || {
+            let mut ideal = IdealMemory::new(IdealConfig::with_ports(2), 1 << 20);
+            for i in 0..32u32 {
+                ideal.backing_mut().write_u32(0x10000 + i * 4, i);
+                ideal.backing_mut().write_u32(0x20000 + i * 4, 100 + i);
+            }
+            ideal
+        };
+        let mut arr = CgraArray::new(
+            CgraConfig::hycube_4x4(ExecMode::Normal),
+            dfg.clone(),
+            Mapper::new(geom).map(&dfg).unwrap(),
+        );
+        let mut mem = mk();
+        let plain = arr.run(&mut mem, 32);
+        let mut arr2 = CgraArray::new(CgraConfig::hycube_4x4(ExecMode::Normal), dfg, mapping);
+        let mut mem2 = mk();
+        let mut ctl = FixedCost { cost: 1000, calls: 0 };
+        let hooked = arr2.run_with(&mut mem2, 32, Some((&mut ctl, 8)));
+        assert_eq!(ctl.calls, 0, "no capability, no controller invocation");
+        assert_eq!(hooked.cycles, plain.cycles);
     }
 
     #[test]

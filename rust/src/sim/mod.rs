@@ -17,7 +17,10 @@ pub mod pe;
 pub mod trace;
 
 pub use alu::{AluOp, Value};
-pub use array::{CgraArray, CgraConfig, ExecMode, RunResult, RunaheadAblation};
+pub use array::{
+    CgraArray, CgraConfig, EpochController, ExecMode, ReconfigMode, ReconfigPolicy, RunResult,
+    RunaheadAblation,
+};
 pub use dfg::{Dfg, DfgBuilder, MemSpace, NodeId, Op};
 pub use mapper::Geometry;
 pub use mapper::{Mapper, Mapping};

@@ -15,10 +15,12 @@ pub mod graphs;
 pub mod join;
 pub mod media;
 pub mod mesh;
+pub mod phased;
 pub mod sort;
 
 use crate::mem::{Addr, Backing, MemoryModel, MemoryModelSpec, MemorySubsystem, SubsystemConfig};
-use crate::sim::{CgraArray, CgraConfig, Dfg, Mapper, RunResult};
+use crate::reconfig::OnlineController;
+use crate::sim::{CgraArray, CgraConfig, Dfg, Mapper, ReconfigMode, ReconfigPolicy, RunResult};
 
 pub use gcn::GcnAggregate;
 pub use grad::Grad;
@@ -26,6 +28,7 @@ pub use graphs::{Graph, GraphSpec};
 pub use join::{HashJoin, JoinPhase};
 pub use media::{Rgb, Src2Dest};
 pub use mesh::{MeshOrder, MeshSpmv};
+pub use phased::PhasedGather;
 pub use sort::{PermSort, RadixHist, RadixUpdate};
 
 /// How an array wants to be placed by the compile-time allocator.
@@ -196,6 +199,11 @@ pub struct WorkloadRun {
     pub output_ok: bool,
     pub layout: Layout,
     pub irregular_share: f64,
+    /// Online-reconfiguration plans applied during the run (0 when the
+    /// policy is off or never triggered).
+    pub reconfig_applies: u64,
+    /// Ways that changed owner across those applies.
+    pub reconfig_ways_moved: u64,
 }
 
 /// End-to-end driver over the default hierarchy backend: allocate,
@@ -208,26 +216,70 @@ pub fn run_workload(
     run_workload_model(wl, &MemoryModelSpec::Hierarchy(sys_cfg), cgra_cfg)
 }
 
-/// End-to-end driver over any memory backend described as data.
+/// End-to-end driver over any memory backend described as data. When the
+/// config carries a non-off [`ReconfigPolicy`], the run is driven with an
+/// [`OnlineController`] on the epoch hook — the §3.4 closed loop firing
+/// *inside* the simulation.
 pub fn run_workload_model(
     wl: &dyn Workload,
     mem_spec: &MemoryModelSpec,
     cgra_cfg: CgraConfig,
 ) -> WorkloadRun {
+    let mut cgra_cfg = cgra_cfg;
+    let policy = cgra_cfg.reconfig;
+    if policy.mode != ReconfigMode::Off {
+        // The controller samples the live trace window.
+        cgra_cfg.trace_window = cgra_cfg.trace_window.max(policy.window);
+    }
     // Hierarchy runs stay monomorphized: request/tick sit on the per-cycle
     // hot path, so the default backend must not pay dyn dispatch there.
-    if let MemoryModelSpec::Hierarchy(sys_cfg) = mem_spec {
-        let (mut mem, mut arr, layout) = prepare(wl, *sys_cfg, cgra_cfg);
-        let result = arr.run(&mut mem, wl.iterations());
-        let output_ok = validate(wl, &layout, &mem.backing);
-        let irregular_share = layout.irregular_share();
-        return WorkloadRun { result, output_ok, layout, irregular_share };
-    }
-    let (mut mem, mut arr, layout) = prepare_model(wl, mem_spec, cgra_cfg);
-    let result = arr.run(&mut *mem, wl.iterations());
-    let output_ok = validate(wl, &layout, mem.backing());
+    let (result, applies, moved, output_ok, layout) =
+        if let MemoryModelSpec::Hierarchy(sys_cfg) = mem_spec {
+            let (mut mem, mut arr, layout) = prepare(wl, *sys_cfg, cgra_cfg);
+            let (result, applies, moved) = drive(&mut arr, &mut mem, wl.iterations(), policy);
+            let output_ok = validate(wl, &layout, &mem.backing);
+            (result, applies, moved, output_ok, layout)
+        } else {
+            let (mut mem, mut arr, layout) = prepare_model(wl, mem_spec, cgra_cfg);
+            let (result, applies, moved) = drive(&mut arr, &mut *mem, wl.iterations(), policy);
+            let output_ok = validate(wl, &layout, mem.backing());
+            (result, applies, moved, output_ok, layout)
+        };
     let irregular_share = layout.irregular_share();
-    WorkloadRun { result, output_ok, layout, irregular_share }
+    WorkloadRun {
+        result,
+        output_ok,
+        layout,
+        irregular_share,
+        reconfig_applies: applies,
+        reconfig_ways_moved: moved,
+    }
+}
+
+/// Run the array with (or without) the reconfiguration controller the
+/// policy describes; returns the result plus the controller's ledger.
+fn drive<M: MemoryModel + ?Sized>(
+    arr: &mut CgraArray,
+    mem: &mut M,
+    iterations: u64,
+    policy: ReconfigPolicy,
+) -> (RunResult, u64, u64) {
+    if policy.mode == ReconfigMode::Off {
+        return (arr.run(mem, iterations), 0, 0);
+    }
+    // The spec layer rejects these combinations; a programmatic caller
+    // slipping past it must fail loudly — a non-off policy silently
+    // measuring the off-mode machine would be indistinguishable from
+    // "the monitor never triggered".
+    assert!(
+        mem.reconfig().is_some(),
+        "reconfig mode {:?} on a backend without a reconfigurable L1 array \
+         (ideal, shared-L1 or zero-way L1s)",
+        policy.mode
+    );
+    let mut ctl = OnlineController::from_policy(&policy);
+    let r = arr.run_with(mem, iterations, Some((&mut ctl, policy.period)));
+    (r, ctl.applies, ctl.ways_migrated)
 }
 
 /// Compile-time data allocation shared by every backend: build the layout
@@ -338,8 +390,8 @@ pub fn paper_suite() -> Vec<Box<dyn Workload>> {
 }
 
 /// A reduced-size suite for fast sweeps: the Table 1 kernels plus the
-/// irregular database/HPC families (hash join, unstructured-mesh SpMV),
-/// all at small inputs.
+/// irregular database/HPC families (hash join, unstructured-mesh SpMV)
+/// and the phase-alternating gather, all at small inputs.
 pub fn small_suite() -> Vec<Box<dyn Workload>> {
     let mut v: Vec<Box<dyn Workload>> = Vec::new();
     v.push(Box::new(GcnAggregate::new(graphs::GraphSpec::tiny())));
@@ -352,6 +404,7 @@ pub fn small_suite() -> Vec<Box<dyn Workload>> {
     v.push(Box::new(HashJoin::small_build()));
     v.push(Box::new(HashJoin::small_probe()));
     v.push(Box::new(MeshSpmv::small()));
+    v.push(Box::new(PhasedGather::small()));
     v
 }
 

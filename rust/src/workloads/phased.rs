@@ -1,0 +1,187 @@
+//! Phase-alternating gather — the scenario family behind the adaptivity
+//! figure. One kernel body,
+//!
+//! ```c
+//! for (i = 0; i < N; i++)
+//!     out[i] = data[idx[i]];
+//! ```
+//!
+//! whose *data* flips the access pattern every `period` iterations: in
+//! even phases `idx` counts sequentially through `data` (a pure stream —
+//! large virtual lines win), in odd phases `idx` is a uniform random
+//! gather over the same `span`-word working set (capacity/associativity
+//! wins, large virtual lines only waste fill bandwidth). The kernel's
+//! compute, arrays and DFG are identical in both phases — only the
+//! *phase* changes, which is exactly the situation §3.4's online
+//! reconfiguration exists for: a static plan tuned to either phase loses
+//! the other one, the closed loop re-plans at the boundary.
+
+use super::{ArraySpec, Layout, Placement, Workload};
+use crate::mem::Backing;
+use crate::sim::{Dfg, DfgBuilder};
+use crate::util::Rng;
+
+pub struct PhasedGather {
+    /// Loop trip count.
+    pub n: u32,
+    /// Phase length in iterations (streaming and gather phases
+    /// alternate every `period` iterations).
+    pub period: u32,
+    /// Working-set size of `data`, in words.
+    pub span: u32,
+    pub seed: u64,
+}
+
+impl Default for PhasedGather {
+    fn default() -> Self {
+        // 64 KB working set: far beyond one L1, inside the shared L2 —
+        // way migration and virtual-line choice both matter.
+        PhasedGather { n: 24576, period: 2048, span: 16384, seed: 11 }
+    }
+}
+
+impl PhasedGather {
+    pub fn new(n: u32, period: u32, span: u32, seed: u64) -> Self {
+        assert!(n >= 1 && period >= 1 && span >= 1);
+        PhasedGather { n, period, span, seed }
+    }
+
+    pub fn small() -> Self {
+        // 8 KB working set vs a 4 KB base L1: migrated ways can make the
+        // gather phase fully resident.
+        Self::new(2048, 256, 2048, 11)
+    }
+
+    /// The index stream: sequential in even phases, random in odd ones.
+    /// Deterministic in `seed` (the RNG advances only on gather indices,
+    /// so the sequence is reproducible regardless of slicing).
+    fn indices(&self) -> Vec<u32> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.n)
+            .map(|i| {
+                if (i / self.period) % 2 == 0 {
+                    i % self.span
+                } else {
+                    rng.gen_range(0, self.span as u64) as u32
+                }
+            })
+            .collect()
+    }
+
+    fn data_values(&self) -> Vec<u32> {
+        let mut rng = Rng::new(self.seed ^ 0xda7a);
+        (0..self.span).map(|_| rng.next_u64() as u32).collect()
+    }
+}
+
+impl Workload for PhasedGather {
+    fn name(&self) -> String {
+        format!("phased/n{}-s{}-p{}", self.n, self.span, self.period)
+    }
+
+    fn domain(&self) -> &'static str {
+        "Phase-Alternating Analytics"
+    }
+
+    fn iterations(&self) -> u64 {
+        self.n as u64
+    }
+
+    fn build(&self, l: &mut Layout) -> Dfg {
+        let four = l.num_ports() >= 4;
+        let (p_idx, p_out, p_data) = if four { (0, 1, 3) } else { (0, 0, 1) };
+        let b_idx = l.alloc(ArraySpec {
+            name: "idx".into(),
+            port: p_idx,
+            words: self.n,
+            placement: Placement::Streamed,
+            irregular: false,
+        });
+        let b_out = l.alloc(ArraySpec {
+            name: "out".into(),
+            port: p_out,
+            words: self.n,
+            placement: Placement::Streamed,
+            irregular: false,
+        });
+        let b_data = l.alloc(ArraySpec {
+            name: "data".into(),
+            port: p_data,
+            words: self.span,
+            placement: Placement::Cached,
+            irregular: true,
+        });
+
+        let mut b = DfgBuilder::new("phased_gather");
+        let i = b.iter_idx();
+        let idx = b.array_load(p_idx, b_idx, i);
+        let v = b.array_load(p_data, b_data, idx); // data[idx[i]]
+        b.array_store(p_out, b_out, i, v);
+        b.finish()
+    }
+
+    fn init(&self, l: &Layout, mem: &mut Backing) {
+        mem.load_u32_slice(l.base_of("idx"), &self.indices());
+        mem.load_u32_slice(l.base_of("data"), &self.data_values());
+    }
+
+    fn golden(&self, l: &Layout, mem: &Backing) -> Vec<u32> {
+        let data_base = l.base_of("data");
+        self.indices().iter().map(|&ix| mem.read_u32(data_base + ix * 4)).collect()
+    }
+
+    fn output(&self) -> (String, u32) {
+        ("out".into(), self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::SubsystemConfig;
+    use crate::sim::{CgraConfig, ExecMode};
+    use crate::workloads::run_workload;
+
+    #[test]
+    fn small_phased_correct_in_both_modes() {
+        let wl = PhasedGather::small();
+        for mode in [ExecMode::Normal, ExecMode::Runahead] {
+            let run =
+                run_workload(&wl, SubsystemConfig::paper_base(), CgraConfig::hycube_4x4(mode));
+            assert!(run.output_ok, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn indices_alternate_streaming_and_gather_phases() {
+        let wl = PhasedGather::new(1024, 128, 512, 3);
+        let idx = wl.indices();
+        assert_eq!(idx.len(), 1024);
+        // Even phases are exactly sequential modulo the span.
+        for i in 0..128u32 {
+            assert_eq!(idx[i as usize], i % 512);
+            assert_eq!(idx[(256 + i) as usize], (256 + i) % 512);
+        }
+        // Odd phases are scattered: many distinct strides.
+        let gather = &idx[128..256];
+        let strides: std::collections::HashSet<i64> = gather
+            .windows(2)
+            .map(|w| w[1] as i64 - w[0] as i64)
+            .collect();
+        assert!(strides.len() > 32, "gather phase must look random ({} strides)", strides.len());
+        // All indices stay inside the working set.
+        assert!(idx.iter().all(|&x| x < 512));
+        // Deterministic resynthesis.
+        assert_eq!(wl.indices(), idx);
+    }
+
+    #[test]
+    fn correct_when_run_with_online_reconfiguration() {
+        use crate::sim::ReconfigPolicy;
+        let wl = PhasedGather::small();
+        let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
+        cgra.reconfig = ReconfigPolicy::online();
+        let run = run_workload(&wl, SubsystemConfig::paper_base(), cgra);
+        assert!(run.output_ok, "reconfiguration must never change results");
+    }
+}

@@ -1,12 +1,12 @@
 //! Cross-module integration tests: full workload runs across systems and
 //! modes, output validation everywhere, and paper-shape assertions.
 
-use cgra_mem::exp::{builtin_systems, measure_spec, reconfig_experiment, SystemSpec};
+use cgra_mem::exp::{builtin_systems, measure_spec, SystemSpec};
 use cgra_mem::mem::{BankedDramConfig, DramModelKind, MemoryModelSpec, SubsystemConfig};
-use cgra_mem::sim::{CgraConfig, ExecMode};
+use cgra_mem::sim::{CgraConfig, ExecMode, ReconfigMode, ReconfigPolicy};
 use cgra_mem::workloads::{
     run_workload, run_workload_model, small_suite, GcnAggregate, GraphSpec, HashJoin, MeshOrder,
-    MeshSpmv, Workload,
+    MeshSpmv, PhasedGather, Workload,
 };
 
 /// Every kernel in the (reduced-size) suite computes correct output on
@@ -216,13 +216,85 @@ fn small_suite_correct_on_new_backends() {
     }
 }
 
-/// The reconfiguration loop preserves correctness on every small kernel.
+/// The online reconfiguration loop preserves correctness on every small
+/// kernel — the closed loop now fires *during* the run on the 8×8
+/// Reconfig system (the retired `reconfig_experiment` ran it offline).
 #[test]
-fn reconfig_loop_preserves_correctness() {
+fn online_reconfig_loop_preserves_correctness() {
+    let mut cgra = CgraConfig::hycube_8x8(ExecMode::Normal);
+    cgra.reconfig = ReconfigPolicy::online();
     for wl in small_suite().into_iter().take(4) {
-        let out = reconfig_experiment(wl.as_ref(), ExecMode::Normal, 2048);
-        assert!(out.output_ok, "{}", wl.name());
+        let run = run_workload(wl.as_ref(), SubsystemConfig::paper_reconfig(), cgra);
+        assert!(run.output_ok, "{}", wl.name());
     }
+}
+
+/// Satellite regression for the old fig17 bug: the plan must be *gated on
+/// the monitor trigger* — a run whose L1s never cross the miss-rate
+/// threshold applies zero plans and keeps its geometry — and when plans
+/// do apply, their flush/migration cost lands in-band (asserted exactly
+/// in the sim-layer `epoch_hook_cost_is_charged_in_band` test; here we
+/// assert the end-to-end ledger).
+#[test]
+fn reconfig_application_is_gated_on_the_monitor_trigger() {
+    // Near-perfectly-cacheable stream: a tiny 64-word working set plus
+    // sequential idx/out streams (~1 miss per 16 line accesses, so a
+    // windowed miss rate around 5%). At a 35% threshold the monitor
+    // never comes close, so online reconfig must do nothing at all.
+    let quiet = PhasedGather::new(4096, 4096, 64, 3); // single streaming phase
+    let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
+    cgra.reconfig = ReconfigPolicy::online();
+    cgra.reconfig.threshold = 0.35;
+    let run = run_workload(&quiet, SubsystemConfig::paper_base(), cgra);
+    assert!(run.output_ok);
+    assert_eq!(
+        run.reconfig_applies, 0,
+        "a healthy cache must never trigger a replan (ways moved: {})",
+        run.reconfig_ways_moved
+    );
+    // A sensitive policy on the genuinely phase-alternating gather (whose
+    // random phases push the windowed miss rate way up) does fire.
+    let phased = PhasedGather::small();
+    let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
+    cgra.reconfig = ReconfigPolicy::online();
+    cgra.reconfig.threshold = 0.02;
+    let run = run_workload(&phased, SubsystemConfig::paper_base(), cgra);
+    assert!(run.output_ok);
+    assert!(run.reconfig_applies > 0, "the phased gather must trigger the monitor");
+}
+
+/// Acceptance (adaptivity): on the phase-alternating gather, online
+/// reconfiguration beats the static profile-once-and-lock protocol —
+/// static keeps the first triggering phase's plan and loses every other
+/// phase; online re-plans at the boundaries (paying its flush cost
+/// in-band) and keeps both phases fast.
+#[test]
+fn online_reconfig_beats_static_on_phased_gather() {
+    let wl = PhasedGather::small();
+    let measure = |mode: ReconfigMode| {
+        let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
+        cgra.reconfig = match mode {
+            ReconfigMode::Off => ReconfigPolicy::off(),
+            ReconfigMode::Static => ReconfigPolicy::adapt_static(),
+            ReconfigMode::Online => ReconfigPolicy::online(),
+        };
+        // Sensitive trigger: both phases cross it, so static locks the
+        // plan of whichever phase its first window sampled while online
+        // keeps re-planning.
+        cgra.reconfig.threshold = 0.02;
+        run_workload(&wl, SubsystemConfig::paper_base(), cgra)
+    };
+    let stat = measure(ReconfigMode::Static);
+    let online = measure(ReconfigMode::Online);
+    assert!(stat.output_ok && online.output_ok);
+    assert!(stat.reconfig_applies <= 1, "static is one-shot");
+    assert!(online.reconfig_applies >= 2, "online must re-plan across phases");
+    assert!(
+        online.result.cycles < stat.result.cycles,
+        "online must beat static on phase-alternating access: online {} vs static {}",
+        online.result.cycles,
+        stat.result.cycles
+    );
 }
 
 /// MSHR-starved configurations still complete and validate (structural
@@ -386,6 +458,64 @@ fn same_spec_json_runs_to_byte_identical_reports() {
     let a = render();
     let b = render();
     assert_eq!(a, b, "identical specs must produce identical report bytes");
+}
+
+/// Determinism (online reconfiguration): the closed loop is part of the
+/// simulated machine — monitor, planner and in-band flush cost included —
+/// so an online-reconfig sweep run twice from the same spec JSON produces
+/// byte-identical reports.
+#[test]
+fn online_reconfig_sweep_is_byte_identical_across_runs() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, Json};
+    let text = r#"{
+        "name": "online-det",
+        "workloads": [
+            {"family": "phased", "n": 1024, "period": 128, "span": 1024}
+        ],
+        "systems": [
+            {"base": "Cache+SPM", "name": "off"},
+            {"base": "Cache+SPM", "name": "static", "reconfig": "static",
+             "reconfig_threshold": 0.02},
+            {"base": "Cache+SPM", "name": "online", "reconfig": "online",
+             "reconfig_period": 512, "reconfig_threshold": 0.02, "reconfig_window": 256}
+        ]
+    }"#;
+    let render = || {
+        let spec = ExperimentSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+        Engine::new(2).run(&spec).to_json().render_pretty()
+    };
+    let a = render();
+    let b = render();
+    assert_eq!(a, b, "online reconfiguration must be deterministic");
+}
+
+/// Acceptance (warm store): fig17 — the last formerly-uncached figure —
+/// now renders through session cells: a warm-store re-run performs zero
+/// simulations and reproduces the figure text byte for byte. The new
+/// adaptivity figure rides the same seam.
+#[test]
+fn warm_store_fig17_and_adaptivity_render_with_zero_simulations() {
+    use cgra_mem::exp::{Engine, ResultStore};
+    let path = std::env::temp_dir()
+        .join(format!("cgra-itest-cellstore-{}-fig17.jsonl", std::process::id()));
+    let _ = ResultStore::clear(&path);
+    let names = vec!["aggregate/tiny".to_string(), "small/rgb".to_string()];
+
+    let eng = Engine::new(2);
+    let cold = eng.session_with_store(ResultStore::open(&path).unwrap());
+    let cold_fig17 = cgra_mem::report::fig17_with(&cold, &names);
+    let cold_adapt = cgra_mem::report::adaptivity_with(&cold, 1024, 1024, &[128]);
+    assert!(cold.stats().executed > 0);
+    drop(cold);
+
+    let eng2 = Engine::new(3);
+    let warm = eng2.session_with_store(ResultStore::open(&path).unwrap());
+    let warm_fig17 = cgra_mem::report::fig17_with(&warm, &names);
+    let warm_adapt = cgra_mem::report::adaptivity_with(&warm, 1024, 1024, &[128]);
+    assert_eq!(warm.stats().executed, 0, "warm store must satisfy every reconfig cell");
+    assert_eq!(warm_fig17, cold_fig17, "fig17 must replay byte-identically");
+    assert_eq!(warm_adapt, cold_adapt, "adaptivity must replay byte-identically");
+    let _ = ResultStore::clear(&path);
 }
 
 /// Acceptance (session layer): overlapping campaigns submitted to one

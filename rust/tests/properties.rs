@@ -80,7 +80,8 @@ fn prop_every_family_validates_against_golden_under_ideal() {
     let reg = WorkloadRegistry::builtin();
     let ideal = MemoryModelSpec::Ideal(IdealConfig::with_ports(2));
     let families = reg.family_names();
-    assert!(families.len() >= 9, "expected the full family set, got {families:?}");
+    assert!(families.len() >= 10, "expected the full family set, got {families:?}");
+    assert!(families.iter().any(|f| f == "phased"), "phased family registered");
     for fam in families {
         let s = ScenarioSpec::family(fam.as_str(), Params::new().set_str("scale", "small"));
         let wl = reg.resolve(&s).unwrap_or_else(|e| panic!("{e}"));
