@@ -47,7 +47,11 @@ use crate::sim::CgraConfig;
 ///
 /// v2: the system identity gained the reconfiguration policy and the
 /// measurement schema gained the `reconfig_*` counters (PR 5).
-pub const STORE_FORMAT_VERSION: u64 = 2;
+///
+/// v3: cluster systems (`ExecModel::Cluster`) and mix scenarios joined
+/// the identity space and the measurement schema gained the `cluster_*`
+/// columns (PR 6).
+pub const STORE_FORMAT_VERSION: u64 = 3;
 
 /// Content address of one (scenario, system, repeat) cell.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -148,18 +152,32 @@ fn params_json(p: &Params) -> Json {
 pub fn system_identity(s: &SystemSpec) -> Json {
     match &s.exec {
         ExecModel::Cpu(model) => Json::obj(vec![("cpu", cpu_json(model))]),
-        ExecModel::Cgra { mem, cgra } => Json::obj(vec![
+        ExecModel::Cgra { mem, cgra } => {
+            Json::obj(vec![("cgra", cgra_json(cgra)), ("mem", mem_json(mem))])
+        }
+        // A cluster is N copies of the per-array config behind the shared
+        // levels, so its identity is the solo identity plus the cluster
+        // shape. A 1-array Fifo cluster still hashes differently from the
+        // bare array — the shared-L2 arbitration path is a different
+        // simulation even when it never contends.
+        ExecModel::Cluster { mem, cgra, cluster } => Json::obj(vec![
             ("cgra", cgra_json(cgra)),
             (
-                "mem",
-                match mem {
-                    MemoryModelSpec::Hierarchy(sub) => {
-                        Json::obj(vec![("hierarchy", subsystem_json(sub))])
-                    }
-                    MemoryModelSpec::Ideal(cfg) => Json::obj(vec![("ideal", ideal_json(cfg))]),
-                },
+                "cluster",
+                Json::obj(vec![
+                    ("arrays", Json::u64(cluster.arrays as u64)),
+                    ("scheduler", Json::str(cluster.scheduler.name())),
+                ]),
             ),
+            ("mem", mem_json(mem)),
         ]),
+    }
+}
+
+fn mem_json(mem: &MemoryModelSpec) -> Json {
+    match mem {
+        MemoryModelSpec::Hierarchy(sub) => Json::obj(vec![("hierarchy", subsystem_json(sub))]),
+        MemoryModelSpec::Ideal(cfg) => Json::obj(vec![("ideal", ideal_json(cfg))]),
     }
 }
 
@@ -377,6 +395,28 @@ mod tests {
             key(&scen, &tuned_off, 0),
             "dead knobs must not fork the identity"
         );
+    }
+
+    #[test]
+    fn cluster_shape_and_mix_params_are_identity() {
+        use crate::exp::SystemSpec as S;
+        let mix = ScenarioSpec::mix(16, 0.7, 42);
+        let c4 = S::cluster_runahead(4);
+        let c2 = S::cluster_runahead(2);
+        let loc = S::cluster_locality();
+        // Array count and scheduler both fork the key.
+        assert_ne!(key(&mix, &c4, 0), key(&mix, &c2, 0));
+        assert_ne!(key(&mix, &c4, 0), key(&mix, &loc, 0));
+        // Mix params are scenario identity.
+        assert_ne!(key(&mix, &c4, 0), key(&ScenarioSpec::mix(16, 0.7, 43), &c4, 0));
+        assert_ne!(key(&mix, &c4, 0), key(&ScenarioSpec::mix(16, 0.2, 42), &c4, 0));
+        // A 1-array cluster is not the bare array: the shared-L2
+        // arbitration path is part of the system identity.
+        let scen = ScenarioSpec::preset("small/rgb");
+        assert_ne!(key(&scen, &S::cluster_runahead(1), 0), key(&scen, &S::runahead(), 0));
+        // Names stay presentation-only for clusters too.
+        let renamed = S::cluster_runahead(4).named("pod-a");
+        assert_eq!(key(&mix, &c4, 0), key(&mix, &renamed, 0));
     }
 
     #[test]

@@ -16,7 +16,7 @@
 use super::registry::WorkloadRegistry;
 use super::session::Session;
 use super::store::ResultStore;
-use super::{ExperimentSpec, Report};
+use super::{ExecModel, ExperimentSpec, Report};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -187,6 +187,22 @@ impl Engine {
                     "two systems share the name {:?}; give the variant a distinct \"name\"",
                     sys.name
                 ));
+            }
+        }
+        // A mix is a request *queue*, not a kernel: it only has a meaning
+        // on a cluster system. Catch the pairing here so the error carries
+        // both names instead of panicking inside a worker.
+        for w in &spec.workloads {
+            if w.family.as_deref() == Some("mix") {
+                for sys in &spec.systems {
+                    if !matches!(sys.exec, ExecModel::Cluster { .. }) {
+                        return Err(format!(
+                            "mix workload {:?} needs a cluster system (e.g. \
+                             \"Cluster-4xRunahead\"); system {:?} runs a single array",
+                            w.name, sys.name
+                        ));
+                    }
+                }
             }
         }
         Ok(())

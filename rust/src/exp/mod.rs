@@ -49,8 +49,11 @@ use crate::mem::{
     BankedDramConfig, CacheConfig, DramModelKind, IdealConfig, MemoryModelSpec, RowPolicy,
     SubsystemConfig,
 };
-use crate::sim::{CgraConfig, ExecMode, Geometry, ReconfigMode, ReconfigPolicy};
-use crate::workloads::{run_workload_model, Workload};
+use crate::sim::{
+    CgraConfig, Cluster, ClusterJob, ClusterSpec, ExecMode, Geometry, ReconfigMode,
+    ReconfigPolicy, SchedulerKind,
+};
+use crate::workloads::{run_workload_model, MixSpec, Workload};
 
 /// Checked numeric field access: present-but-invalid (negative,
 /// fractional, non-numeric) is an error, absent is `None` — a bad value
@@ -75,6 +78,12 @@ pub enum ExecModel {
     /// DRAM channel, or the ideal perf-ceiling model) + array
     /// configuration (exec mode and geometry live inside [`CgraConfig`]).
     Cgra { mem: MemoryModelSpec, cgra: CgraConfig },
+    /// A serving cluster: `cluster.arrays` identical CGRA arrays (each
+    /// with the private front end `mem` describes) behind one shared
+    /// L2 + backing channel, fed from a job queue by `cluster.scheduler`.
+    /// Regular scenarios run as `arrays` homogeneous copies (saturation);
+    /// `"mix"` scenarios expand a [`MixSpec`] into the request queue.
+    Cluster { mem: MemoryModelSpec, cgra: CgraConfig, cluster: ClusterSpec },
 }
 
 /// A system under test, as data. Replaces the closed `System` enum.
@@ -153,6 +162,44 @@ impl SystemSpec {
         Self::cgra("Runahead+Reconfig", SubsystemConfig::paper_reconfig(), cgra)
     }
 
+    /// A serving cluster over any CGRA memory backend: `arrays` identical
+    /// arrays behind one shared L2 + channel, dispatched by `scheduler`.
+    pub fn cluster_model(
+        name: impl Into<String>,
+        mem: MemoryModelSpec,
+        cgra: CgraConfig,
+        cluster: ClusterSpec,
+    ) -> Self {
+        assert_eq!(mem.num_ports(), cgra.geom.ports, "port count mismatch in {:?}", cgra.geom);
+        assert!(
+            (1..=15).contains(&cluster.arrays),
+            "cluster size {} outside 1..=15",
+            cluster.arrays
+        );
+        SystemSpec { name: name.into(), exec: ExecModel::Cluster { mem, cgra, cluster } }
+    }
+
+    /// `n` runahead arrays (Table 3 base column each) behind a shared L2,
+    /// FIFO dispatch — the cluster workhorse system.
+    pub fn cluster_runahead(n: usize) -> Self {
+        Self::cluster_model(
+            format!("Cluster-{n}xRunahead"),
+            MemoryModelSpec::Hierarchy(SubsystemConfig::paper_base()),
+            CgraConfig::hycube_4x4(ExecMode::Runahead),
+            ClusterSpec { arrays: n, scheduler: SchedulerKind::Fifo },
+        )
+    }
+
+    /// The 4-array runahead cluster under locality-aware dispatch.
+    pub fn cluster_locality() -> Self {
+        Self::cluster_model(
+            "Cluster-4xRunahead-Locality",
+            MemoryModelSpec::Hierarchy(SubsystemConfig::paper_base()),
+            CgraConfig::hycube_4x4(ExecMode::Runahead),
+            ClusterSpec { arrays: 4, scheduler: SchedulerKind::Locality },
+        )
+    }
+
     /// Cache+SPM over the banked DRAM channel (row-buffer + bank-conflict
     /// contention instead of the flat latency constant).
     pub fn banked_dram() -> Self {
@@ -186,13 +233,17 @@ impl SystemSpec {
     /// `"reconfig"` (`"off"` | `"static"` | `"online"`) plus
     /// `reconfig_period` / `reconfig_threshold` / `reconfig_window`
     /// enables and tunes the online cache-reconfiguration loop (cache-
-    /// bearing hierarchy systems only).
+    /// bearing hierarchy systems only); `"cluster_arrays"` (1..=15) turns
+    /// a CGRA system into a serving cluster of that many arrays and
+    /// `"cluster_scheduler"` (`"fifo"` | `"sjf"` | `"locality"`) picks its
+    /// dispatch policy.
     pub fn from_json(v: &Json) -> Result<SystemSpec, String> {
-        const KNOWN: [&str; 24] = [
+        const KNOWN: [&str; 26] = [
             "base", "name", "mode", "geometry", "memory", "spm_bytes", "mshr", "freq_mhz",
             "shared_l1", "l1_bytes", "l1_ways", "l1_line", "l2_bytes", "l2_ways", "l2_line",
             "dram_model", "dram_banks", "dram_row_bytes", "dram_policy", "dram_latency",
             "reconfig", "reconfig_period", "reconfig_threshold", "reconfig_window",
+            "cluster_arrays", "cluster_scheduler",
         ];
         // Keys that configure the hierarchy backend and are meaningless
         // (and therefore hard errors) on the ideal backend.
@@ -226,7 +277,49 @@ impl SystemSpec {
         if let Some(name) = v.get("name").and_then(Json::as_str) {
             spec.name = name.to_string();
         }
-        let exec = spec.exec.clone();
+        // ---- cluster shape (strict: a scheduler without a cluster — on
+        // a non-cluster base — would silently measure the solo system) ----
+        let (exec, base_cluster) = match spec.exec.clone() {
+            ExecModel::Cluster { mem, cgra, cluster } => {
+                (ExecModel::Cgra { mem, cgra }, Some(cluster))
+            }
+            other => (other, None),
+        };
+        let cluster_arrays = match u64_field(v, "cluster_arrays")? {
+            None => None,
+            Some(n) => {
+                if !(1..=15).contains(&n) {
+                    return Err(format!("\"cluster_arrays\" must be in 1..=15, got {n}"));
+                }
+                Some(n as usize)
+            }
+        };
+        let cluster_scheduler = match v.get("cluster_scheduler") {
+            None => None,
+            Some(j) => Some(j.as_str().and_then(SchedulerKind::from_name).ok_or_else(|| {
+                format!(
+                    "\"cluster_scheduler\" must be \"fifo\", \"sjf\" or \"locality\", got {}",
+                    j.render()
+                )
+            })?),
+        };
+        if cluster_scheduler.is_some() && cluster_arrays.is_none() && base_cluster.is_none() {
+            return Err(
+                "\"cluster_scheduler\" requires \"cluster_arrays\" (or a Cluster-* base)".into()
+            );
+        }
+        let cluster = match (cluster_arrays, base_cluster) {
+            (None, None) => None,
+            (Some(n), b) => Some(ClusterSpec {
+                arrays: n,
+                scheduler: cluster_scheduler
+                    .or(b.map(|c| c.scheduler))
+                    .unwrap_or(SchedulerKind::Fifo),
+            }),
+            (None, Some(c)) => {
+                Some(ClusterSpec { scheduler: cluster_scheduler.unwrap_or(c.scheduler), ..c })
+            }
+        };
         if let ExecModel::Cgra { mem, mut cgra } = exec {
             if let Some(mode) = v.get("mode").and_then(Json::as_str) {
                 cgra.mode = match mode {
@@ -352,7 +445,11 @@ impl SystemSpec {
                         );
                     }
                     ideal.num_ports = cgra.geom.ports;
-                    spec.exec = ExecModel::Cgra { mem: MemoryModelSpec::Ideal(ideal), cgra };
+                    let mem = MemoryModelSpec::Ideal(ideal);
+                    spec.exec = match cluster {
+                        Some(c) => ExecModel::Cluster { mem, cgra, cluster: c },
+                        None => ExecModel::Cgra { mem, cgra },
+                    };
                     return Ok(spec);
                 }
                 MemoryModelSpec::Hierarchy(subsystem) => subsystem,
@@ -540,7 +637,11 @@ impl SystemSpec {
                         .into(),
                 );
             }
-            spec.exec = ExecModel::Cgra { mem: MemoryModelSpec::Hierarchy(subsystem), cgra };
+            let mem = MemoryModelSpec::Hierarchy(subsystem);
+            spec.exec = match cluster {
+                Some(c) => ExecModel::Cluster { mem, cgra, cluster: c },
+                None => ExecModel::Cgra { mem, cgra },
+            };
         } else {
             // CPU bases silently ignore the CGRA shape keys (documented),
             // but a reconfig-labelled row that measures the plain baseline
@@ -548,6 +649,12 @@ impl SystemSpec {
             // explicit "off" stays legal (spec symmetry), as on the ideal
             // backend.
             if let Some(k) = RECONFIG_KEYS.into_iter().find(|k| v.get(k).is_some()) {
+                return Err(format!("{k:?} does not apply to a CPU system"));
+            }
+            if let Some(k) = ["cluster_arrays", "cluster_scheduler"]
+                .into_iter()
+                .find(|k| v.get(k).is_some())
+            {
                 return Err(format!("{k:?} does not apply to a CPU system"));
             }
             if let Some(j) = v.get("reconfig") {
@@ -597,6 +704,21 @@ impl ScenarioSpec {
     pub fn named(mut self, name: impl Into<String>) -> Self {
         self.name = name.into();
         self
+    }
+
+    /// A serving mix over the small preset pool: the scenario half of a
+    /// cluster cell (`jobs` queued kernels, family skew in [0, 1], seeded
+    /// hotness). Pairs with a cluster system; see [`measure_cluster`].
+    /// Further knobs (`suite`, `family`) go through [`ScenarioSpec::family`]
+    /// with explicit params.
+    pub fn mix(jobs: u32, skew: f64, seed: u64) -> Self {
+        ScenarioSpec::family(
+            "mix",
+            Params::new()
+                .set_u64("jobs", jobs as u64)
+                .set("skew", Json::num(skew))
+                .set_u64("seed", seed),
+        )
     }
 
     /// Parse one `workloads` entry object:
@@ -688,6 +810,19 @@ pub struct Measurement {
     pub reconfig_applies: u64,
     /// Ways that changed owner across those applies.
     pub reconfig_ways_moved: u64,
+    /// Jobs served in a cluster serving run (0 on solo systems; for
+    /// cluster rows, `cycles` is the makespan).
+    pub cluster_jobs: u64,
+    /// p50 / p95 / p99 job latency (dispatch to completion) in cycles.
+    pub cluster_p50_cycles: u64,
+    pub cluster_p95_cycles: u64,
+    pub cluster_p99_cycles: u64,
+    /// Shared-channel row-buffer conflicts where the evicted row belonged
+    /// to a *different* array — the cross-array contention slice.
+    pub cluster_xarray_conflicts: u64,
+    /// Max − min per-array L1 miss rate across the cluster (load-imbalance
+    /// / warmth-spread indicator).
+    pub cluster_miss_spread: f64,
 }
 
 impl Measurement {
@@ -716,6 +851,12 @@ impl Measurement {
             ("runahead_entries", Json::u64(self.runahead_entries)),
             ("reconfig_applies", Json::u64(self.reconfig_applies)),
             ("reconfig_ways_moved", Json::u64(self.reconfig_ways_moved)),
+            ("cluster_jobs", Json::u64(self.cluster_jobs)),
+            ("cluster_p50_cycles", Json::u64(self.cluster_p50_cycles)),
+            ("cluster_p95_cycles", Json::u64(self.cluster_p95_cycles)),
+            ("cluster_p99_cycles", Json::u64(self.cluster_p99_cycles)),
+            ("cluster_xarray_conflicts", Json::u64(self.cluster_xarray_conflicts)),
+            ("cluster_miss_spread", Json::num(self.cluster_miss_spread)),
         ])
     }
 
@@ -749,6 +890,12 @@ impl Measurement {
             runahead_entries: u("runahead_entries"),
             reconfig_applies: u("reconfig_applies"),
             reconfig_ways_moved: u("reconfig_ways_moved"),
+            cluster_jobs: u("cluster_jobs"),
+            cluster_p50_cycles: u("cluster_p50_cycles"),
+            cluster_p95_cycles: u("cluster_p95_cycles"),
+            cluster_p99_cycles: u("cluster_p99_cycles"),
+            cluster_xarray_conflicts: u("cluster_xarray_conflicts"),
+            cluster_miss_spread: n("cluster_miss_spread"),
         })
     }
 }
@@ -782,6 +929,12 @@ pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
                 runahead_entries: 0,
                 reconfig_applies: 0,
                 reconfig_ways_moved: 0,
+                cluster_jobs: 0,
+                cluster_p50_cycles: 0,
+                cluster_p95_cycles: 0,
+                cluster_p99_cycles: 0,
+                cluster_xarray_conflicts: 0,
+                cluster_miss_spread: 0.0,
             }
         }
         ExecModel::Cgra { mem, cgra } => {
@@ -811,9 +964,175 @@ pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
                 runahead_entries: r.runahead_entries,
                 reconfig_applies: run.reconfig_applies,
                 reconfig_ways_moved: run.reconfig_ways_moved,
+                cluster_jobs: 0,
+                cluster_p50_cycles: 0,
+                cluster_p95_cycles: 0,
+                cluster_p99_cycles: 0,
+                cluster_xarray_conflicts: 0,
+                cluster_miss_spread: 0.0,
             }
         }
+        ExecModel::Cluster { .. } => {
+            // A cluster cell needs the registry to instantiate its job
+            // queue — route through `measure_cell`.
+            panic!(
+                "cluster system {:?} must be measured via measure_cell, not measure_spec",
+                spec.name
+            )
+        }
     }
+}
+
+/// Execute one cluster serving run: expand the scenario into a job queue
+/// (a `"mix"` scenario's [`MixSpec`], or `arrays` homogeneous copies of a
+/// regular workload), serve it, and fold the outcome into a [`Measurement`]
+/// (`cycles` = makespan, tail latencies and contention counters in the
+/// `cluster_*` fields).
+pub fn measure_cluster(
+    registry: &WorkloadRegistry,
+    scenario: &ScenarioSpec,
+    spec: &SystemSpec,
+) -> Result<Measurement, String> {
+    let ExecModel::Cluster { mem, cgra, cluster } = &spec.exec else {
+        panic!("measure_cluster needs a cluster system, got {:?}", spec.name)
+    };
+    let jobs: Vec<ClusterJob> = if scenario.family.as_deref() == Some("mix") {
+        let mix = mix_spec_of(&scenario.params)?;
+        mix.generate()
+            .into_iter()
+            .map(|j| {
+                let wl = registry
+                    .resolve(&ScenarioSpec::preset(&j.preset))
+                    .map_err(|e| format!("mix preset {:?}: {e}", j.preset))?;
+                Ok(ClusterJob { workload: wl, family: j.family })
+            })
+            .collect::<Result<_, String>>()?
+    } else {
+        // Homogeneous saturation: every array serves one copy of the
+        // scenario's workload.
+        (0..cluster.arrays)
+            .map(|_| {
+                let wl = registry.resolve(scenario)?;
+                let family = scenario.family.clone().unwrap_or_else(|| wl.name());
+                Ok(ClusterJob { workload: wl, family })
+            })
+            .collect::<Result<_, String>>()?
+    };
+    let mut c = Cluster::new(*cluster, mem);
+    let out = c.run(*cgra, &jobs);
+    let stats = out.stats_sum();
+    let num_pes = cgra.geom.num_pes() as u64;
+    let total_useful: u64 = out.arrays.iter().map(|a| a.useful_ops).sum();
+    let miss_rates: Vec<f64> = out
+        .arrays
+        .iter()
+        .filter(|a| a.stats.l1_accesses > 0)
+        .map(|a| a.l1_miss_rate())
+        .collect();
+    let miss_spread = match (
+        miss_rates.iter().cloned().fold(f64::INFINITY, f64::min),
+        miss_rates.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    ) {
+        (lo, hi) if lo.is_finite() && hi.is_finite() => hi - lo,
+        _ => 0.0,
+    };
+    Ok(Measurement {
+        workload: scenario.name.clone(),
+        system: spec.name.clone(),
+        repeat: 0,
+        time_us: out.makespan as f64 / cgra.freq_mhz,
+        cycles: out.makespan,
+        stall_cycles: out.arrays.iter().map(|a| a.stall_cycles).sum(),
+        utilization: if out.makespan == 0 {
+            0.0
+        } else {
+            total_useful as f64 / (out.makespan * num_pes * cluster.arrays as u64) as f64
+        },
+        output_ok: out.all_outputs_ok(),
+        spm_accesses: stats.spm_accesses,
+        l1_accesses: stats.l1_accesses,
+        l1_hits: stats.l1_hits,
+        l2_accesses: stats.l2_accesses,
+        dram_accesses: stats.dram_accesses,
+        dram_row_hits: stats.dram_row_hits,
+        dram_row_conflicts: stats.dram_row_conflicts,
+        prefetch_used: stats.prefetch_used,
+        prefetch_evicted: stats.prefetch_evicted_then_demanded,
+        prefetch_useless: stats.prefetch_useless,
+        coverage: 0.0,
+        irregular_share: 0.0,
+        runahead_entries: out.arrays.iter().map(|a| a.runahead_entries).sum(),
+        reconfig_applies: out.arrays.iter().map(|a| a.reconfig_applies).sum(),
+        reconfig_ways_moved: out.arrays.iter().map(|a| a.reconfig_ways_moved).sum(),
+        cluster_jobs: out.jobs.len() as u64,
+        cluster_p50_cycles: out.latency_percentile(50.0),
+        cluster_p95_cycles: out.latency_percentile(95.0),
+        cluster_p99_cycles: out.latency_percentile(99.0),
+        cluster_xarray_conflicts: out.channel.xarray_conflicts,
+        cluster_miss_spread: miss_spread,
+    })
+}
+
+/// Build the [`MixSpec`] a `"mix"` scenario's params describe. The keys
+/// are checked strictly by the registry's `"mix"` family entry before a
+/// cell ever executes; this converts the validated bag.
+pub fn mix_spec_of(params: &Params) -> Result<MixSpec, String> {
+    params.check_keys("mix", &["jobs", "skew", "seed", "suite", "family"])?;
+    let jobs = params.u64("jobs", 16)?;
+    if jobs == 0 || jobs > 4096 {
+        return Err(format!("mix \"jobs\" must be in 1..=4096, got {jobs}"));
+    }
+    let skew = params.fraction("skew", 0.0)?;
+    let seed = params.u64("seed", 1)?;
+    let suite = match params.choice("suite", &["small", "paper"], "small")?.as_str() {
+        "paper" => crate::workloads::MixSuite::Paper,
+        _ => crate::workloads::MixSuite::Small,
+    };
+    let family = match params.get("family") {
+        None => None,
+        Some(j) => Some(
+            j.as_str()
+                .filter(|s| !s.is_empty())
+                .ok_or_else(|| {
+                    format!("mix \"family\" must be a non-empty string, got {}", j.render())
+                })?
+                .to_string(),
+        ),
+    };
+    let spec = MixSpec { jobs: jobs as u32, skew, seed, suite, family };
+    if let Some(f) = &spec.family {
+        if !spec.suite.pool().iter().any(|(_, fam)| fam == f) {
+            return Err(format!(
+                "mix \"family\" {f:?} matches no preset in the {} suite",
+                spec.suite.name()
+            ));
+        }
+    }
+    Ok(spec)
+}
+
+/// The single execution front door for a (scenario, system) cell:
+/// cluster systems route through [`measure_cluster`], everything else
+/// resolves the scenario and runs [`measure_spec`]. A `"mix"` scenario on
+/// a non-cluster system is a hard error — it would otherwise resolve to
+/// nothing and silently measure an empty cell.
+pub fn measure_cell(
+    registry: &WorkloadRegistry,
+    scenario: &ScenarioSpec,
+    spec: &SystemSpec,
+) -> Result<Measurement, String> {
+    if matches!(spec.exec, ExecModel::Cluster { .. }) {
+        return measure_cluster(registry, scenario, spec);
+    }
+    if scenario.family.as_deref() == Some("mix") {
+        return Err(format!(
+            "mix scenario {:?} needs a cluster system (e.g. \"Cluster-4xRunahead\"); \
+             {:?} is a solo system",
+            scenario.name, spec.name
+        ));
+    }
+    let wl = registry.resolve(scenario)?;
+    Ok(measure_spec(&*wl, spec))
 }
 
 /// A declarative (workloads × systems × repeats) experiment.
@@ -1108,6 +1427,12 @@ mod tests {
             runahead_entries: 3,
             reconfig_applies: 2,
             reconfig_ways_moved: 4,
+            cluster_jobs: 6,
+            cluster_p50_cycles: 900,
+            cluster_p95_cycles: 2000,
+            cluster_p99_cycles: 2600,
+            cluster_xarray_conflicts: 7,
+            cluster_miss_spread: 0.125,
         }
     }
 
@@ -1340,6 +1665,66 @@ mod tests {
         )
         .unwrap();
         assert!(SystemSpec::from_json(&ok).is_ok());
+    }
+
+    #[test]
+    fn spec_parses_cluster_keys_strictly() {
+        use crate::sim::SchedulerKind;
+        // Turning a solo CGRA base into a cluster.
+        let sys = Json::parse(
+            r#"{"base": "Runahead", "cluster_arrays": 4, "cluster_scheduler": "sjf"}"#,
+        )
+        .unwrap();
+        let spec = SystemSpec::from_json(&sys).unwrap();
+        match &spec.exec {
+            ExecModel::Cluster { cluster, cgra, .. } => {
+                assert_eq!(cluster.arrays, 4);
+                assert_eq!(cluster.scheduler, SchedulerKind::Sjf);
+                assert_eq!(cgra.mode, ExecMode::Runahead);
+            }
+            other => panic!("expected cluster exec, got {other:?}"),
+        }
+        // A Cluster-* base composes with the ordinary CGRA keys, and its
+        // scheduler is tunable without restating the array count.
+        let sys = Json::parse(
+            r#"{"base": "Cluster-4xRunahead", "cluster_scheduler": "locality",
+                "l1_ways": 2}"#,
+        )
+        .unwrap();
+        let spec = SystemSpec::from_json(&sys).unwrap();
+        match &spec.exec {
+            ExecModel::Cluster { cluster, mem, .. } => {
+                assert_eq!(cluster.arrays, 4);
+                assert_eq!(cluster.scheduler, SchedulerKind::Locality);
+                match mem {
+                    MemoryModelSpec::Hierarchy(sub) => assert_eq!(sub.l1.ways, 2),
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // Ideal-backend clusters are legal (fully private slots).
+        let sys = Json::parse(r#"{"base": "Ideal", "cluster_arrays": 2}"#).unwrap();
+        assert!(matches!(
+            SystemSpec::from_json(&sys).unwrap().exec,
+            ExecModel::Cluster { mem: MemoryModelSpec::Ideal(_), .. }
+        ));
+        // A scheduler without a cluster would silently measure the solo
+        // system — hard error.
+        let bad = Json::parse(r#"{"base": "Runahead", "cluster_scheduler": "fifo"}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("cluster_arrays"));
+        // Unknown schedulers and out-of-range array counts are errors.
+        let bad =
+            Json::parse(r#"{"base": "Runahead", "cluster_arrays": 2, "cluster_scheduler": "lru"}"#)
+                .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("cluster_scheduler"));
+        let bad = Json::parse(r#"{"base": "Runahead", "cluster_arrays": 0}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("cluster_arrays"));
+        let bad = Json::parse(r#"{"base": "Runahead", "cluster_arrays": 16}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("cluster_arrays"));
+        // CPU systems reject the cluster shape.
+        let bad = Json::parse(r#"{"base": "A72", "cluster_arrays": 2}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("CPU"));
     }
 
     #[test]

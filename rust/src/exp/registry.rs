@@ -432,6 +432,20 @@ impl WorkloadRegistry {
             }
             Ok(Box::new(wl))
         });
+        // The serving-mix pseudo-family: the scenario-side half of a
+        // cluster cell (`exp::measure_cluster` expands the whole queue and
+        // serves it across the arrays). Params are strictly validated
+        // through `exp::mix_spec_of`; *resolving* a mix yields the first
+        // queued job's workload, so `validate` and a solo `resolve` stay
+        // well-defined without pretending a queue is one kernel — the
+        // session layer refuses mix × non-cluster pairings up front.
+        self.add_family("mix", |p| {
+            let spec = super::mix_spec_of(p)?;
+            let head = &spec.generate()[0];
+            WorkloadRegistry::builtin()
+                .resolve(&ScenarioSpec::preset(&head.preset))
+                .map_err(|e| format!("mix head preset {:?}: {e}", head.preset))
+        });
     }
 
     /// Register (or replace) a parameterized workload family.
@@ -631,10 +645,19 @@ pub fn builtin_systems() -> Vec<SystemSpec> {
 }
 
 /// Additional named systems beyond the five paper ones: the
-/// ideal-latency perf ceiling, the banked-DRAM contention channel, and
-/// the Table 3 Reconfig column with the online closed loop enabled.
+/// ideal-latency perf ceiling, the banked-DRAM contention channel, the
+/// Table 3 Reconfig column with the online closed loop enabled, and the
+/// multi-array cluster configurations (shared L2 + backing channel,
+/// serving scheduler).
 pub fn extra_systems() -> Vec<SystemSpec> {
-    vec![SystemSpec::ideal(), SystemSpec::banked_dram(), SystemSpec::runahead_reconfig()]
+    vec![
+        SystemSpec::ideal(),
+        SystemSpec::banked_dram(),
+        SystemSpec::runahead_reconfig(),
+        SystemSpec::cluster_runahead(2),
+        SystemSpec::cluster_runahead(4),
+        SystemSpec::cluster_locality(),
+    ]
 }
 
 /// Every system addressable by name (sweep-spec `base`, `repro run`).
@@ -745,12 +768,47 @@ mod tests {
 
     #[test]
     fn extra_backends_resolve_by_name() {
-        for n in ["Ideal", "ideal", "Banked-DRAM", "banked-dram", "Runahead+Reconfig"] {
+        for n in [
+            "Ideal",
+            "ideal",
+            "Banked-DRAM",
+            "banked-dram",
+            "Runahead+Reconfig",
+            "Cluster-2xRunahead",
+            "Cluster-4xRunahead",
+            "cluster-4xrunahead-locality",
+        ] {
             assert!(system_named(n).is_some(), "{n}");
         }
         // The paper's five-system list stays exactly the paper's list.
         assert!(builtin_systems().iter().all(|s| s.name != "Ideal"));
-        assert_eq!(all_systems().len(), 8);
+        assert_eq!(all_systems().len(), 11);
+    }
+
+    #[test]
+    fn mix_family_validates_strictly_and_resolves_to_the_queue_head() {
+        let reg = WorkloadRegistry::builtin();
+        let ok = ScenarioSpec::mix(16, 0.7, 42);
+        assert!(reg.validate(&ok).is_ok());
+        // Resolving a mix yields a real (head-of-queue) workload.
+        let head = reg.resolve(&ok).unwrap();
+        assert!(head.iterations() > 0);
+        // Typos, out-of-range skew and unknown suites are hard errors.
+        let bad = ScenarioSpec::family("mix", Params::new().set_u64("jbos", 16));
+        let e = reg.resolve(&bad).unwrap_err();
+        assert!(e.contains("jbos") && e.contains("jobs"), "{e}");
+        let bad = ScenarioSpec::family("mix", Params::new().set("skew", Json::num(1.5)));
+        assert!(reg.resolve(&bad).unwrap_err().contains("skew"));
+        let bad = ScenarioSpec::family("mix", Params::new().set_str("suite", "huge"));
+        assert!(reg.resolve(&bad).unwrap_err().contains("suite"));
+        let bad = ScenarioSpec::family("mix", Params::new().set_str("family", "nope"));
+        assert!(reg.resolve(&bad).unwrap_err().contains("nope"));
+        // A family restriction narrows the pool but still resolves.
+        let homo = ScenarioSpec::family(
+            "mix",
+            Params::new().set_u64("jobs", 4).set_str("family", "grad"),
+        );
+        assert_eq!(reg.resolve(&homo).unwrap().name(), "grad");
     }
 
     #[test]

@@ -26,7 +26,7 @@
 use super::cell::{scenario_identity, system_identity, CellKey};
 use super::engine::Engine;
 use super::store::{ResultStore, StoreEntry};
-use super::{measure_spec, ExperimentSpec, Measurement, Report};
+use super::{measure_cell, ExperimentSpec, Measurement, Report};
 use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
@@ -241,8 +241,11 @@ impl<'e> Session<'e> {
         let results: Vec<(CellKey, Measurement)> = self.engine.map_with(
             items,
             move |(key, scenario, sys)| {
-                let wl = registry_arc.resolve(&scenario).expect("scenario validated above");
-                let mut m = measure_spec(wl.as_ref(), &sys);
+                // Cluster systems (and the mix scenarios they serve) take
+                // the cluster path inside `measure_cell`; everything else
+                // resolves one workload and measures it solo.
+                let mut m = measure_cell(registry_arc.as_ref(), &scenario, &sys)
+                    .expect("scenario validated above");
                 // Canonical cell form: presentation fields are the job's
                 // business, not the cell's.
                 m.workload = String::new();

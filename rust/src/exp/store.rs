@@ -223,6 +223,12 @@ mod tests {
             runahead_entries: 3,
             reconfig_applies: 0,
             reconfig_ways_moved: 0,
+            cluster_jobs: 0,
+            cluster_p50_cycles: 0,
+            cluster_p95_cycles: 0,
+            cluster_p99_cycles: 0,
+            cluster_xarray_conflicts: 0,
+            cluster_miss_spread: 0.0,
         }
     }
 

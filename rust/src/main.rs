@@ -588,6 +588,33 @@ fn bench(threads: usize) {
             ("iters_per_sec", Json::num(ips)),
         ]));
     }
+    // Cluster serving throughput: a 2-array shared-L2 cluster over a
+    // short skewed mix, timed end-to-end through `measure_cell` — the
+    // cluster path's wall cost, tracked alongside the solo matrix
+    // (iterations = jobs served, so iters/sec is jobs per wall second).
+    {
+        let reg = eng.registry_arc();
+        let mix = cgra_mem::exp::ScenarioSpec::mix(12, 0.6, 7);
+        let sys = SystemSpec::cluster_runahead(2);
+        let t0 = Instant::now();
+        let m = cgra_mem::exp::measure_cell(reg.as_ref(), &mix, &sys)
+            .expect("cluster bench cell");
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let jps = m.cluster_jobs as f64 / secs;
+        println!(
+            "{:<22} {:<14} {:>12} {:>10.2} {:>14.0}",
+            "cluster_throughput", sys.name, m.cycles, secs * 1e3, jps
+        );
+        out.push(Json::obj(vec![
+            ("kernel", Json::str("cluster_throughput")),
+            ("system", Json::str(&sys.name)),
+            ("iterations", Json::u64(m.cluster_jobs)),
+            ("sim_cycles", Json::u64(m.cycles)),
+            ("output_ok", Json::Bool(m.output_ok)),
+            ("wall_s", Json::num(secs)),
+            ("iters_per_sec", Json::num(jps)),
+        ]));
+    }
     let doc = Json::obj(vec![
         ("bench", Json::str("sim")),
         ("unit", Json::str("kernel iterations per wall second")),

@@ -23,12 +23,22 @@ pub struct ChannelStats {
     pub bytes: u64,
     pub row_hits: u64,
     pub row_conflicts: u64,
+    /// Row conflicts where the previously open row belonged to a different
+    /// request stream (cluster array) — the cross-array contention slice of
+    /// `row_conflicts`. Zero unless an owner stride is set.
+    pub xarray_conflicts: u64,
 }
 
 /// One line fetch scheduled on the channel; returns the arrival cycle.
 pub trait BackingChannel: Send {
     fn schedule(&mut self, cycle: Cycle, addr: Addr, bytes: u64) -> Cycle;
     fn stats(&self) -> ChannelStats;
+
+    /// Partition the address space into `stride`-sized request streams so
+    /// row conflicts can be attributed to cross-stream interference (the
+    /// cluster tags each array's traffic with `array_id * stride`). Zero
+    /// disables attribution; channels without row state ignore it.
+    fn set_owner_stride(&mut self, _stride: Addr) {}
 }
 
 impl BackingChannel for Dram {
@@ -99,6 +109,9 @@ pub enum DramModelKind {
 struct Bank {
     busy_until: Cycle,
     open_row: Option<u32>,
+    /// Stream (cluster array) that opened the current row; only meaningful
+    /// while `owner_stride > 0` and `open_row` is `Some`.
+    owner: u32,
 }
 
 /// Banked DRAM channel: per-bank row state + busy windows, one shared data
@@ -109,6 +122,8 @@ pub struct BankedDram {
     banks: Vec<Bank>,
     /// Next cycle the shared data bus is free.
     bus_busy_until: Cycle,
+    /// Address-space stride separating request streams (0 = attribution off).
+    owner_stride: Addr,
     stats: ChannelStats,
 }
 
@@ -123,8 +138,9 @@ impl BankedDram {
         BankedDram {
             cfg,
             bytes_per_cycle,
-            banks: vec![Bank { busy_until: 0, open_row: None }; cfg.banks],
+            banks: vec![Bank { busy_until: 0, open_row: None, owner: 0 }; cfg.banks],
             bus_busy_until: 0,
+            owner_stride: 0,
             stats: ChannelStats::default(),
         }
     }
@@ -137,6 +153,7 @@ impl BankedDram {
 impl BackingChannel for BankedDram {
     fn schedule(&mut self, cycle: Cycle, addr: Addr, bytes: u64) -> Cycle {
         let row = addr / self.cfg.row_bytes;
+        let owner = if self.owner_stride > 0 { addr / self.owner_stride } else { 0 };
         let bank_idx = (row as usize) & (self.cfg.banks - 1);
         self.stats.accesses += 1;
         self.stats.bytes += bytes;
@@ -149,6 +166,9 @@ impl BackingChannel for BankedDram {
             }
             (RowPolicy::Open, Some(_)) => {
                 self.stats.row_conflicts += 1;
+                if self.owner_stride > 0 && bank.owner != owner {
+                    self.stats.xarray_conflicts += 1;
+                }
                 self.cfg.t_rp + self.cfg.t_rcd + self.cfg.t_cas
             }
             // Idle bank (open policy, nothing open yet) or closed-page
@@ -159,6 +179,7 @@ impl BackingChannel for BankedDram {
             RowPolicy::Open => Some(row),
             RowPolicy::Closed => None,
         };
+        bank.owner = owner;
         let service = bytes.div_ceil(self.bytes_per_cycle);
         // The data transfer needs the shared bus; the bank stays busy
         // through it (no back-to-back overlap within one bank).
@@ -170,6 +191,10 @@ impl BackingChannel for BankedDram {
 
     fn stats(&self) -> ChannelStats {
         self.stats
+    }
+
+    fn set_owner_stride(&mut self, stride: Addr) {
+        self.owner_stride = stride;
     }
 }
 
@@ -228,6 +253,22 @@ mod tests {
         assert_eq!(a, 78);
         // Starts when the bank frees (78), pays the conflict (100) + 8.
         assert_eq!(b, 78 + 100 + 8);
+    }
+
+    #[test]
+    fn owner_stride_splits_cross_stream_conflicts() {
+        let mut d = mk(RowPolicy::Open);
+        d.set_owner_stride(0x1000_0000);
+        // Stream 0 opens row 0 of bank 0.
+        d.schedule(0, 0, 64);
+        // Stream 0 conflicts with itself (row 8, same bank 0): counted as a
+        // row conflict but not a cross-stream one.
+        d.schedule(1000, 8 * 2048, 64);
+        // Stream 1 conflicts on the same bank: cross-stream.
+        d.schedule(2000, 0x1000_0000, 64);
+        let s = d.stats();
+        assert_eq!(s.row_conflicts, 2);
+        assert_eq!(s.xarray_conflicts, 1);
     }
 
     #[test]

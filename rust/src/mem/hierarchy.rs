@@ -123,7 +123,9 @@ impl SubsystemConfig {
             + self.l2.total_bytes() as u64
     }
 
-    fn build_channel(&self) -> Box<dyn BackingChannel> {
+    /// Build the configured backing-channel model (also used by the cluster
+    /// layer, which shares one channel across arrays).
+    pub(crate) fn build_channel(&self) -> Box<dyn BackingChannel> {
         match self.dram {
             DramModelKind::Flat => Box::new(Dram::new(self.dram_latency, self.dram_bytes_per_cycle)),
             DramModelKind::Banked(b) => Box::new(BankedDram::new(b, self.dram_bytes_per_cycle)),
@@ -146,6 +148,12 @@ pub struct MemorySubsystem {
     evicted_prefetches: HashMap<Addr, u64>,
     /// Current runahead episode id (for prefetch epoch tagging).
     pub prefetch_epoch: u64,
+    /// Offset added to every block address presented to the L2. Zero for a
+    /// solo subsystem; in a cluster each array gets a disjoint salt so a
+    /// *shared* L2 (swapped in around each step) sees per-array traffic in
+    /// disjoint regions — no false line sharing between arrays, and the
+    /// channel can attribute row conflicts to the array that caused them.
+    pub l2_tag_salt: Addr,
 }
 
 impl MemorySubsystem {
@@ -167,6 +175,7 @@ impl MemorySubsystem {
             stats: SubsystemStats::default(),
             evicted_prefetches: HashMap::new(),
             prefetch_epoch: 0,
+            l2_tag_salt: 0,
         }
     }
 
@@ -253,8 +262,12 @@ impl MemorySubsystem {
                     self.stats.mshr_full_stalls += 1;
                     return MemResponse::MshrFull;
                 }
-                let fill_at =
-                    self.l2.fetch(block, self.cfg.l1.vline_bytes(), cycle, &mut self.stats);
+                let fill_at = self.l2.fetch(
+                    block + self.l2_tag_salt,
+                    self.cfg.l1.vline_bytes(),
+                    cycle,
+                    &mut self.stats,
+                );
                 let idx =
                     self.l1x.mshrs[li].allocate(block, fill_at, false).expect("checked not full");
                 Self::attach_demand(&mut self.l1x.mshrs[li], idx, fill_at, &mut self.backing, req, block)
@@ -307,7 +320,8 @@ impl MemorySubsystem {
         if self.l1x.mshrs[li].is_full() {
             return PrefetchResponse::Dropped;
         }
-        let fill_at = self.l2.fetch(block, self.cfg.l1.vline_bytes(), cycle, &mut self.stats);
+        let fill_at =
+            self.l2.fetch(block + self.l2_tag_salt, self.cfg.l1.vline_bytes(), cycle, &mut self.stats);
         self.l1x.mshrs[li].allocate(block, fill_at, true);
         self.stats.prefetches_issued += 1;
         PrefetchResponse::Queued { fill_at }
@@ -342,7 +356,7 @@ impl MemorySubsystem {
                     }
                     if ev.dirty {
                         // Non-inclusive L2 absorbs the writeback.
-                        self.l2.absorb_writeback(ev.block_addr);
+                        self.l2.absorb_writeback(ev.block_addr + self.l2_tag_salt);
                     }
                 }
                 if entry.prefetch && demand_attached {
@@ -513,7 +527,7 @@ impl Reconfigurable for MemorySubsystem {
             if ev.dirty {
                 // The non-inclusive L2 absorbs reconfiguration writebacks
                 // exactly like demand-eviction ones.
-                self.l2.absorb_writeback(ev.block_addr);
+                self.l2.absorb_writeback(ev.block_addr + self.l2_tag_salt);
             }
         }
         flushed.len()
@@ -523,7 +537,7 @@ impl Reconfigurable for MemorySubsystem {
         let (way, flushed) = self.l1x.caches[i].take_way()?;
         for ev in &flushed {
             if ev.dirty {
-                self.l2.absorb_writeback(ev.block_addr);
+                self.l2.absorb_writeback(ev.block_addr + self.l2_tag_salt);
             }
         }
         Some((way, flushed.len()))

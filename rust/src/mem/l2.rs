@@ -29,6 +29,12 @@ impl SharedL2 {
         self.channel.stats()
     }
 
+    /// Enable cross-stream conflict attribution on the backing channel
+    /// (see [`BackingChannel::set_owner_stride`]).
+    pub fn set_owner_stride(&mut self, stride: Addr) {
+        self.channel.set_owner_stride(stride);
+    }
+
     /// L2 lookup + (on miss) channel fetch; returns the L1 fill-arrival
     /// cycle. The L2 is non-inclusive: it is filled on the channel response
     /// and on dirty L1 evictions.

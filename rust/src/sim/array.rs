@@ -285,19 +285,21 @@ impl CycleEffects {
 }
 
 /// Mutable per-run machine state, factored out of the old monolithic
-/// `run` loop so the epoch driver ([`CgraArray::run_with`]) can
-/// interleave controller hooks between steps.
-struct RunState {
+/// `run` loop so the epoch driver ([`CgraArray::run_with`]) — and the
+/// cluster interleaver ([`crate::sim::cluster`]), which steps several
+/// arrays against a shared memory fabric — can interleave work between
+/// steps.
+pub(crate) struct RunState {
     iterations: u64,
     ii: u64,
     end_ctx: u64,
-    cycle: Cycle,
+    pub(crate) cycle: Cycle,
     ctx: u64,
-    stall_cycles: Cycle,
-    runahead_cycles: Cycle,
-    runahead_entries: u64,
-    useful_ops: u64,
-    uncovered: u64,
+    pub(crate) stall_cycles: Cycle,
+    pub(crate) runahead_cycles: Cycle,
+    pub(crate) runahead_entries: u64,
+    pub(crate) useful_ops: u64,
+    pub(crate) uncovered: u64,
     backup: Option<BackupRegs>,
     triggers: Vec<Trigger>,
     ra_deadline: Cycle,
@@ -330,7 +332,7 @@ impl RunState {
 
     /// The run still has work: schedule left, or a frozen/speculative
     /// context with outstanding misses or bounced requests.
-    fn active(&self) -> bool {
+    pub(crate) fn active(&self) -> bool {
         self.ctx < self.end_ctx
             || self.backup.is_some()
             || !self.triggers.is_empty()
@@ -339,7 +341,7 @@ impl RunState {
 
     /// Safe for reconfiguration: normal mode, no frozen context, nothing
     /// bounced — no in-flight state references the cache geometry.
-    fn clean(&self) -> bool {
+    pub(crate) fn clean(&self) -> bool {
         self.backup.is_none() && self.triggers.is_empty() && self.retry.is_empty()
     }
 }
@@ -383,6 +385,17 @@ impl CgraArray {
     }
     pub fn config_mems(&self) -> &[PeConfigMem] {
         &self.config_mems
+    }
+
+    /// Start a run without driving it to completion: the cluster layer
+    /// interleaves [`CgraArray::step_cycle`] calls across arrays, so the
+    /// per-run state must be externally owned. `start_cycle` offsets the
+    /// run onto the cluster's global timeline (a solo run starts at 0).
+    pub(crate) fn begin_run(&self, iterations: u64, start_cycle: Cycle) -> RunState {
+        let mut st =
+            RunState::new(iterations, self.mapping.ii as u64, self.mapping.schedule_len as u64);
+        st.cycle = start_cycle;
+        st
     }
 
     #[inline]
@@ -471,8 +484,9 @@ impl CgraArray {
     /// or enter runahead on outstanding trigger misses, execute one
     /// schedule cycle, drain fill completions, handle runahead exit. One
     /// call is roughly one executed cycle; stall fast-forwards may move
-    /// `st.cycle` further.
-    fn step_cycle<M: MemoryModel + ?Sized>(&mut self, mem: &mut M, st: &mut RunState) {
+    /// `st.cycle` further (never past state another array depends on: a
+    /// fast-forward only jumps to a fill this array already scheduled).
+    pub(crate) fn step_cycle<M: MemoryModel + ?Sized>(&mut self, mem: &mut M, st: &mut RunState) {
         // ---- Frozen-context service (normal mode only) ----
         if st.backup.is_none() && !st.retry.is_empty() {
             let mut still = Vec::new();

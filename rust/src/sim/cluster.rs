@@ -1,0 +1,677 @@
+//! Multi-array CGRA cluster with a serving scheduler (ROADMAP: from one
+//! array + one memory subsystem to a production-shaped serving system).
+//!
+//! A [`Cluster`] owns N independent [`CgraArray`] slots. Each slot keeps
+//! its *private* front end (SPM windows, runahead temp partition, L1s and
+//! MSHRs) by owning a full [`MemorySubsystem`]; the **shared** L2 + backing
+//! channel is a single [`SharedL2`] that is swapped into whichever slot is
+//! currently stepping. Cross-array contention is therefore simulated
+//! *in-band*: every array's L2 lookups serialise on the same lookup port,
+//! ride the same DRAM bus, and disturb the same row buffers — nothing is
+//! approximated after the fact.
+//!
+//! Interleaving uses the [`RunState`]/`step_cycle` factoring: the driver
+//! always steps the array whose local cycle is smallest (ties broken by
+//! slot index), so shared-level requests arrive in globally non-decreasing
+//! cycle order and the whole simulation is deterministic. A stall
+//! fast-forward only ever jumps an array to a fill *it already scheduled*,
+//! so causality across arrays is preserved.
+//!
+//! Address-space separation: slot `i` presents its block addresses to the
+//! shared L2 salted by `i * ARRAY_L2_SALT_STRIDE`. Arrays run disjoint
+//! jobs over overlapping local address spaces, so without the salt the
+//! shared L2 would falsely share lines between arrays; with it, the
+//! channel can additionally attribute row-buffer conflicts to the array
+//! whose row was evicted (see `ChannelStats::xarray_conflicts`).
+//!
+//! On top sits a serving scheduler: a queue of kernel jobs dispatched to
+//! slots as they free up, under a pluggable [`SchedulerKind`] policy.
+//! Switching a slot to a different kernel family pays a configuration
+//! load penalty (the config memories must be rewritten), and loses the
+//! slot's L1/reconfiguration warmth — the effect locality-aware dispatch
+//! exploits.
+
+use crate::mem::{
+    ChannelStats, Cycle, MemoryModel, MemoryModelSpec, MemorySubsystem, SharedL2, SubsystemStats,
+};
+use crate::reconfig::OnlineController;
+use crate::sim::{CgraArray, CgraConfig, EpochController, ReconfigMode};
+use crate::workloads::{prepare_on, validate, Layout, Workload, PORT_STRIDE};
+use std::collections::BTreeMap;
+
+use super::array::RunState;
+use crate::sim::Mapper;
+
+/// Address-space stride separating the arrays' traffic at the shared L2
+/// and channel. Must exceed any slot-local address (ports × 2 MiB ≤ 16 MiB)
+/// and bounds the cluster at 15 arrays in the 32-bit address space.
+pub const ARRAY_L2_SALT_STRIDE: u32 = 0x1000_0000;
+
+/// Cycles to load one context word into a PE config memory on a kernel
+/// switch (`num_pes × II` words per configuration).
+pub const CONFIG_LOAD_CYCLES_PER_CTX: u64 = 4;
+
+/// Job-dispatch policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Strict arrival order.
+    Fifo,
+    /// Shortest job first, by per-family cycle estimates
+    /// (`(iterations − 1) × II + schedule length` from a dry mapping).
+    Sjf,
+    /// Prefer the job whose family the freed slot last ran (keeps config
+    /// memories, L1 tags and reconfigured way ownership warm); falls back
+    /// to FIFO when nothing matches.
+    Locality,
+}
+
+impl SchedulerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Fifo => "fifo",
+            SchedulerKind::Sjf => "sjf",
+            SchedulerKind::Locality => "locality",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "fifo" => Some(SchedulerKind::Fifo),
+            "sjf" => Some(SchedulerKind::Sjf),
+            "locality" => Some(SchedulerKind::Locality),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [SchedulerKind; 3] =
+        [SchedulerKind::Fifo, SchedulerKind::Sjf, SchedulerKind::Locality];
+}
+
+/// The cluster as data: how many arrays and how jobs reach them. The job
+/// mix itself rides on the *scenario* axis (`workloads::MixSpec`), so one
+/// cluster system can be measured against many mixes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClusterSpec {
+    pub arrays: usize,
+    pub scheduler: SchedulerKind,
+}
+
+/// One queued kernel request: a workload plus its family affinity key.
+pub struct ClusterJob {
+    pub workload: Box<dyn Workload>,
+    pub family: String,
+}
+
+/// Per-job serving record.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    /// Index in the arrival queue.
+    pub job: usize,
+    pub family: String,
+    /// Slot that served the job.
+    pub slot: usize,
+    pub dispatched_at: Cycle,
+    pub finished_at: Cycle,
+    pub output_ok: bool,
+}
+
+impl JobOutcome {
+    /// Queue-to-completion latency (includes any config-switch penalty).
+    pub fn latency(&self) -> Cycle {
+        self.finished_at - self.dispatched_at
+    }
+}
+
+/// Per-array aggregate over the whole serving run (satellite: per-array
+/// stat attribution — each slot's private stats include the L2/DRAM
+/// counters *its* requests generated against the shared levels).
+#[derive(Clone, Debug, Default)]
+pub struct ArrayOutcome {
+    pub jobs_run: u64,
+    /// Dispatches that had to rewrite the config memories (family change).
+    pub family_switches: u64,
+    /// Cycles spent on those rewrites.
+    pub switch_cycles: Cycle,
+    pub useful_ops: u64,
+    pub stall_cycles: Cycle,
+    pub runahead_entries: u64,
+    pub reconfig_applies: u64,
+    pub reconfig_ways_moved: u64,
+    /// This array's private view of the memory system, including its own
+    /// share of shared-L2/DRAM accesses.
+    pub stats: SubsystemStats,
+}
+
+impl ArrayOutcome {
+    /// This array's L1 miss rate over the serving run.
+    pub fn l1_miss_rate(&self) -> f64 {
+        if self.stats.l1_accesses == 0 {
+            0.0
+        } else {
+            self.stats.l1_misses as f64 / self.stats.l1_accesses as f64
+        }
+    }
+}
+
+/// Everything a serving run produced.
+#[derive(Clone, Debug)]
+pub struct ClusterOutcome {
+    /// One record per queued job, in arrival order.
+    pub jobs: Vec<JobOutcome>,
+    /// One record per array slot.
+    pub arrays: Vec<ArrayOutcome>,
+    /// Cycle at which the last job finished.
+    pub makespan: Cycle,
+    /// Shared backing-channel counters (row hits/conflicts and the
+    /// cross-array conflict slice).
+    pub channel: ChannelStats,
+}
+
+impl ClusterOutcome {
+    /// Job latencies sorted ascending.
+    pub fn latencies(&self) -> Vec<Cycle> {
+        let mut v: Vec<Cycle> = self.jobs.iter().map(|j| j.latency()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Nearest-rank percentile latency, `p` in `[0, 100]`.
+    pub fn latency_percentile(&self, p: f64) -> Cycle {
+        let v = self.latencies();
+        if v.is_empty() {
+            return 0;
+        }
+        let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+        v[rank.clamp(1, v.len()) - 1]
+    }
+
+    /// Aggregate serving throughput in jobs per million cycles.
+    pub fn jobs_per_mcycle(&self) -> f64 {
+        if self.makespan == 0 {
+            0.0
+        } else {
+            self.jobs.len() as f64 / (self.makespan as f64 / 1e6)
+        }
+    }
+
+    pub fn all_outputs_ok(&self) -> bool {
+        self.jobs.iter().all(|j| j.output_ok)
+    }
+
+    /// Sum of per-array stats (cluster-level Fig 11b-style counters).
+    pub fn stats_sum(&self) -> SubsystemStats {
+        let mut s = SubsystemStats::default();
+        for a in &self.arrays {
+            let t = a.stats;
+            s.spm_accesses += t.spm_accesses;
+            s.l1_accesses += t.l1_accesses;
+            s.l1_hits += t.l1_hits;
+            s.l1_misses += t.l1_misses;
+            s.l2_accesses += t.l2_accesses;
+            s.l2_hits += t.l2_hits;
+            s.dram_accesses += t.dram_accesses;
+            s.prefetches_issued += t.prefetches_issued;
+            s.prefetch_used += t.prefetch_used;
+            s.prefetch_inflight_hits += t.prefetch_inflight_hits;
+            s.prefetch_evicted_then_demanded += t.prefetch_evicted_then_demanded;
+            s.prefetch_useless += t.prefetch_useless;
+            s.demand_misses_normal_mode += t.demand_misses_normal_mode;
+            s.mshr_full_stalls += t.mshr_full_stalls;
+        }
+        // Row-level counters live on the shared channel, not per slot.
+        s.dram_row_hits = self.channel.row_hits;
+        s.dram_row_conflicts = self.channel.row_conflicts;
+        s
+    }
+}
+
+/// The slots' memory backends. Hierarchy slots share one L2 + channel
+/// (swapped in around each step); other backends (ideal) are fully
+/// private, so a cluster of them contends on nothing.
+enum Slots {
+    Hier { mems: Vec<MemorySubsystem>, shared_l2: SharedL2 },
+    Boxed { mems: Vec<Box<dyn MemoryModel>> },
+}
+
+impl Slots {
+    /// Run `f` against slot `i`'s complete memory view. For hierarchy
+    /// slots the shared L2 is loaned into the subsystem for the duration,
+    /// so all existing request/tick/reconfig paths hit the shared level
+    /// without knowing about the cluster.
+    fn with<R>(&mut self, i: usize, f: impl FnOnce(&mut dyn MemoryModel) -> R) -> R {
+        match self {
+            Slots::Hier { mems, shared_l2 } => {
+                std::mem::swap(&mut mems[i].l2, shared_l2);
+                let r = f(&mut mems[i]);
+                std::mem::swap(&mut mems[i].l2, shared_l2);
+                r
+            }
+            Slots::Boxed { mems } => f(&mut *mems[i]),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Slots::Hier { mems, .. } => mems.len(),
+            Slots::Boxed { mems } => mems.len(),
+        }
+    }
+
+    /// Slot `i`'s private counters (its own traffic only — shared-level
+    /// accesses are attributed to the slot that issued them, because each
+    /// fetch increments the *issuing* subsystem's stats).
+    fn stats(&self, i: usize) -> SubsystemStats {
+        match self {
+            Slots::Hier { mems, .. } => mems[i].stats,
+            Slots::Boxed { mems } => mems[i].stats(),
+        }
+    }
+
+    fn channel_stats(&self) -> ChannelStats {
+        match self {
+            Slots::Hier { shared_l2, .. } => shared_l2.channel_stats(),
+            Slots::Boxed { .. } => ChannelStats::default(),
+        }
+    }
+}
+
+struct Running {
+    job: usize,
+    arr: CgraArray,
+    layout: Layout,
+    st: RunState,
+    dispatched_at: Cycle,
+    next_epoch: Cycle,
+}
+
+#[derive(Default)]
+struct SlotState {
+    clock: Cycle,
+    last_family: Option<String>,
+    outcome: ArrayOutcome,
+}
+
+pub struct Cluster {
+    pub spec: ClusterSpec,
+    slots: Slots,
+    num_ports: usize,
+    spm_usable: u32,
+    spm_greedy: bool,
+}
+
+impl Cluster {
+    /// Build `spec.arrays` identical slots from the per-array backend
+    /// description. Hierarchy backends share one L2 + channel; the rest
+    /// stay private per slot.
+    pub fn new(spec: ClusterSpec, mem_spec: &MemoryModelSpec) -> Self {
+        assert!(
+            spec.arrays >= 1 && spec.arrays <= 15,
+            "cluster size {} outside 1..=15 (32-bit salt space)",
+            spec.arrays
+        );
+        let num_ports = mem_spec.num_ports();
+        let backing_bytes = (num_ports as u32 * PORT_STRIDE) as usize;
+        let slots = match mem_spec {
+            MemoryModelSpec::Hierarchy(cfg) => {
+                let mems = (0..spec.arrays)
+                    .map(|i| {
+                        let mut m = MemorySubsystem::new(*cfg, backing_bytes);
+                        m.l2_tag_salt = i as u32 * ARRAY_L2_SALT_STRIDE;
+                        m
+                    })
+                    .collect();
+                let mut shared_l2 =
+                    SharedL2::new(cfg.l2, cfg.l2_hit_latency, cfg.build_channel());
+                shared_l2.set_owner_stride(ARRAY_L2_SALT_STRIDE);
+                Slots::Hier { mems, shared_l2 }
+            }
+            other => Slots::Boxed {
+                mems: (0..spec.arrays).map(|_| other.build(backing_bytes)).collect(),
+            },
+        };
+        Cluster {
+            spec,
+            slots,
+            num_ports,
+            spm_usable: mem_spec.spm_usable_bytes(),
+            spm_greedy: mem_spec.spm_greedy(),
+        }
+    }
+
+    /// Serve the whole queue; returns per-job and per-array accounting.
+    /// Arrays run the given config; a non-off reconfiguration policy gets
+    /// one [`OnlineController`] **per slot** (never shared — cooldown and
+    /// miss-rate windows are per-array state).
+    pub fn run(&mut self, cgra: CgraConfig, jobs: &[ClusterJob]) -> ClusterOutcome {
+        let mut cgra = cgra;
+        let (num_ports, spm_usable, spm_greedy) =
+            (self.num_ports, self.spm_usable, self.spm_greedy);
+        let policy = cgra.reconfig;
+        if policy.mode != ReconfigMode::Off {
+            cgra.trace_window = cgra.trace_window.max(policy.window);
+            let capable = self.slots.with(0, |mem| mem.reconfig().is_some());
+            assert!(
+                capable,
+                "reconfig mode {:?} on a backend without a reconfigurable L1 array",
+                policy.mode
+            );
+        }
+        let mut controllers: Vec<Option<OnlineController>> = (0..self.spec.arrays)
+            .map(|_| {
+                (policy.mode != ReconfigMode::Off).then(|| OnlineController::from_policy(&policy))
+            })
+            .collect();
+
+        // SJF cycle estimates from a dry mapping, one per distinct kernel.
+        let estimates: BTreeMap<String, u64> = if self.spec.scheduler == SchedulerKind::Sjf {
+            let mut m = BTreeMap::new();
+            for j in jobs {
+                let name = j.workload.name();
+                if m.contains_key(&name) {
+                    continue;
+                }
+                let mut layout = if spm_greedy {
+                    Layout::new_spm_only(num_ports, spm_usable)
+                } else {
+                    Layout::new(num_ports, spm_usable)
+                };
+                let dfg = j.workload.build(&mut layout);
+                let mapping = Mapper::new(cgra.geom).map(&dfg).expect("kernel must map");
+                let iters = j.workload.iterations();
+                let est = if iters == 0 {
+                    0
+                } else {
+                    (iters - 1) * mapping.ii as u64 + mapping.schedule_len as u64
+                };
+                m.insert(name, est);
+            }
+            m
+        } else {
+            BTreeMap::new()
+        };
+        let estimate_of =
+            |j: &ClusterJob| estimates.get(&j.workload.name()).copied().unwrap_or(u64::MAX);
+
+        let n = self.slots.len();
+        let mut states: Vec<SlotState> = (0..n).map(|_| SlotState::default()).collect();
+        let mut running: Vec<Option<Running>> = (0..n).map(|_| None).collect();
+        let mut pending: Vec<usize> = (0..jobs.len()).collect();
+        let mut outcomes: Vec<Option<JobOutcome>> = (0..jobs.len()).map(|_| None).collect();
+
+        // Dispatch one job to a freed slot at its local time `now`.
+        // Defined as a closure-free block so the borrows stay explicit.
+        macro_rules! dispatch {
+            ($i:expr, $now:expr) => {{
+                let i: usize = $i;
+                let now: Cycle = $now;
+                let pos = match self.spec.scheduler {
+                    SchedulerKind::Fifo => 0,
+                    SchedulerKind::Sjf => {
+                        let mut best = 0;
+                        for (p, &jidx) in pending.iter().enumerate() {
+                            if estimate_of(&jobs[jidx]) < estimate_of(&jobs[pending[best]]) {
+                                best = p;
+                            }
+                        }
+                        best
+                    }
+                    SchedulerKind::Locality => pending
+                        .iter()
+                        .position(|&jidx| {
+                            states[i].last_family.as_deref() == Some(jobs[jidx].family.as_str())
+                        })
+                        .unwrap_or(0),
+                };
+                let jidx = pending.remove(pos);
+                let job = &jobs[jidx];
+                let (arr, layout) = self.slots.with(i, |mem| {
+                    prepare_on(&*job.workload, mem, spm_usable, spm_greedy, cgra)
+                });
+                let is_switch = states[i].last_family.as_deref() != Some(job.family.as_str());
+                let penalty = if is_switch {
+                    states[i].outcome.family_switches += 1;
+                    let p = arr.cfg.geom.num_pes() as u64
+                        * arr.mapping().ii as u64
+                        * CONFIG_LOAD_CYCLES_PER_CTX;
+                    states[i].outcome.switch_cycles += p;
+                    p
+                } else {
+                    0
+                };
+                states[i].last_family = Some(job.family.clone());
+                let st = arr.begin_run(job.workload.iterations(), now + penalty);
+                let next_epoch = if policy.mode != ReconfigMode::Off {
+                    now + penalty + policy.period.max(1)
+                } else {
+                    u64::MAX
+                };
+                running[i] =
+                    Some(Running { job: jidx, arr, layout, st, dispatched_at: now, next_epoch });
+            }};
+        }
+
+        for i in 0..n {
+            if !pending.is_empty() {
+                dispatch!(i, 0);
+            }
+        }
+
+        // Interleave: always advance the array with the smallest local
+        // cycle (ties to the lowest slot index), so the shared levels see
+        // a globally ordered request stream.
+        loop {
+            let mut next: Option<(Cycle, usize)> = None;
+            for (i, r) in running.iter().enumerate() {
+                if let Some(r) = r {
+                    if next.map_or(true, |(c, _)| r.st.cycle < c) {
+                        next = Some((r.st.cycle, i));
+                    }
+                }
+            }
+            let Some((_, i)) = next else { break };
+            let r = running[i].as_mut().expect("selected slot is running");
+            self.slots.with(i, |mem| r.arr.step_cycle(mem, &mut r.st));
+
+            // Per-slot epoch hook, mirroring `run_with`: only while work
+            // remains and the slot's machine state is clean.
+            if r.st.active() && r.st.cycle >= r.next_epoch && r.st.clean() {
+                let ctl = controllers[i].as_mut().expect("epoch boundary implies a controller");
+                let trace = &mut r.arr.trace;
+                let cycle = r.st.cycle;
+                let cost = self.slots.with(i, |mem| match mem.reconfig() {
+                    Some(rc) => ctl.on_epoch(rc, trace, cycle),
+                    None => 0,
+                });
+                r.st.cycle += cost;
+                r.st.stall_cycles += cost;
+                r.next_epoch = r.st.cycle + policy.period.max(1);
+            }
+
+            if !r.st.active() {
+                let done = running[i].take().expect("completing slot is running");
+                let s = &mut states[i];
+                s.clock = done.st.cycle;
+                s.outcome.jobs_run += 1;
+                s.outcome.useful_ops += done.st.useful_ops;
+                s.outcome.stall_cycles += done.st.stall_cycles;
+                s.outcome.runahead_entries += done.st.runahead_entries;
+                let wl = &*jobs[done.job].workload;
+                let ok = self.slots.with(i, |mem| validate(wl, &done.layout, mem.backing()));
+                outcomes[done.job] = Some(JobOutcome {
+                    job: done.job,
+                    family: jobs[done.job].family.clone(),
+                    slot: i,
+                    dispatched_at: done.dispatched_at,
+                    finished_at: done.st.cycle,
+                    output_ok: ok,
+                });
+                if !pending.is_empty() {
+                    let now = states[i].clock;
+                    dispatch!(i, now);
+                }
+            }
+        }
+
+        let mut arrays = Vec::with_capacity(n);
+        for (i, mut s) in states.into_iter().enumerate() {
+            self.slots.with(i, |mem| mem.finalize_prefetch_stats());
+            s.outcome.stats = self.slots.stats(i);
+            if let Some(ctl) = &controllers[i] {
+                s.outcome.reconfig_applies = ctl.applies;
+                s.outcome.reconfig_ways_moved = ctl.ways_migrated;
+            }
+            arrays.push(s.outcome);
+        }
+        let jobs_out: Vec<JobOutcome> =
+            outcomes.into_iter().map(|o| o.expect("every job was served")).collect();
+        let makespan = jobs_out.iter().map(|j| j.finished_at).max().unwrap_or(0);
+        ClusterOutcome { jobs: jobs_out, arrays, makespan, channel: self.slots.channel_stats() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{CacheConfig, DramModelKind, IdealConfig, SubsystemConfig};
+    use crate::sim::ExecMode;
+    use crate::workloads::{Grad, Rgb};
+
+    fn small_cfg() -> SubsystemConfig {
+        SubsystemConfig {
+            num_ports: 2,
+            spm_bytes: 512,
+            l1: CacheConfig { sets: 8, ways: 2, line_bytes: 16, vline_shift: 0 },
+            l2: CacheConfig { sets: 64, ways: 4, line_bytes: 16, vline_shift: 0 },
+            mshr_entries: 8,
+            store_buffer_entries: 8,
+            l1_hit_latency: 1,
+            l2_hit_latency: 8,
+            dram_latency: 80,
+            dram_bytes_per_cycle: 8,
+            dram: DramModelKind::Flat,
+            temp_store_bytes: 128,
+            shared_l1: false,
+        }
+    }
+
+    fn cgra() -> CgraConfig {
+        crate::sim::CgraConfig::hycube_4x4(ExecMode::Runahead)
+    }
+
+    fn job(wl: Box<dyn Workload>, family: &str) -> ClusterJob {
+        ClusterJob { workload: wl, family: family.to_string() }
+    }
+
+    fn two_family_queue() -> Vec<ClusterJob> {
+        vec![
+            job(Box::new(Grad::small()), "grad"),
+            job(Box::new(Rgb::small()), "rgb"),
+            job(Box::new(Grad::small()), "grad"),
+            job(Box::new(Rgb::small()), "rgb"),
+        ]
+    }
+
+    fn run_cluster(arrays: usize, scheduler: SchedulerKind, jobs: &[ClusterJob]) -> ClusterOutcome {
+        let spec = ClusterSpec { arrays, scheduler };
+        let mut c = Cluster::new(spec, &MemoryModelSpec::Hierarchy(small_cfg()));
+        c.run(cgra(), jobs)
+    }
+
+    #[test]
+    fn single_slot_serves_queue_in_order_and_validates() {
+        let q = two_family_queue();
+        let out = run_cluster(1, SchedulerKind::Fifo, &q);
+        assert_eq!(out.jobs.len(), 4);
+        assert!(out.all_outputs_ok(), "every job output must validate");
+        assert!(out.jobs.windows(2).all(|w| w[0].finished_at <= w[1].dispatched_at));
+        assert_eq!(out.arrays[0].jobs_run, 4);
+        // Alternating families on one slot: every dispatch is a switch.
+        assert_eq!(out.arrays[0].family_switches, 4);
+        assert_eq!(out.makespan, out.jobs.iter().map(|j| j.finished_at).max().unwrap());
+    }
+
+    #[test]
+    fn serving_run_is_deterministic() {
+        let a = run_cluster(2, SchedulerKind::Fifo, &two_family_queue());
+        let b = run_cluster(2, SchedulerKind::Fifo, &two_family_queue());
+        let key = |o: &ClusterOutcome| {
+            o.jobs
+                .iter()
+                .map(|j| (j.slot, j.dispatched_at, j.finished_at, j.output_ok))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&a), key(&b));
+        assert_eq!(a.channel.row_conflicts, b.channel.row_conflicts);
+    }
+
+    #[test]
+    fn locality_dispatch_switches_less_than_fifo() {
+        // One slot, alternating families: FIFO switches on every job,
+        // locality groups the grads together then the rgbs.
+        let fifo = run_cluster(1, SchedulerKind::Fifo, &two_family_queue());
+        let loc = run_cluster(1, SchedulerKind::Locality, &two_family_queue());
+        let f_sw = fifo.arrays[0].family_switches;
+        let l_sw = loc.arrays[0].family_switches;
+        assert!(l_sw < f_sw, "locality must reduce switches ({l_sw} vs {f_sw})");
+        assert!(loc.all_outputs_ok());
+        assert!(
+            loc.makespan < fifo.makespan,
+            "fewer config rewrites + warmer L1 must shorten the serving run \
+             ({} vs {})",
+            loc.makespan,
+            fifo.makespan
+        );
+    }
+
+    #[test]
+    fn sjf_runs_the_short_job_first() {
+        // rgb/small is much shorter than grad/small; under SJF the rgb
+        // jobs must be dispatched before the grads on a single slot.
+        let q = vec![
+            job(Box::new(Grad::small()), "grad"),
+            job(Box::new(Rgb::small()), "rgb"),
+            job(Box::new(Grad::small()), "grad"),
+            job(Box::new(Rgb::small()), "rgb"),
+        ];
+        let out = run_cluster(1, SchedulerKind::Sjf, &q);
+        let rgb_max = out
+            .jobs
+            .iter()
+            .filter(|j| j.family == "rgb")
+            .map(|j| j.dispatched_at)
+            .max()
+            .unwrap();
+        let grad_min = out
+            .jobs
+            .iter()
+            .filter(|j| j.family == "grad")
+            .map(|j| j.dispatched_at)
+            .min()
+            .unwrap();
+        assert!(
+            rgb_max <= grad_min,
+            "SJF must serve both rgb jobs before any grad (rgb last at {rgb_max}, \
+             grad first at {grad_min})"
+        );
+    }
+
+    #[test]
+    fn two_arrays_overlap_in_time() {
+        let out = run_cluster(2, SchedulerKind::Fifo, &two_family_queue());
+        // Both slots start at 0; jobs 0 and 1 run concurrently.
+        assert_eq!(out.jobs[0].dispatched_at, 0);
+        assert_eq!(out.jobs[1].dispatched_at, 0);
+        assert_ne!(out.jobs[0].slot, out.jobs[1].slot);
+        assert!(out.all_outputs_ok());
+        assert!(out.makespan < run_cluster(1, SchedulerKind::Fifo, &two_family_queue()).makespan);
+    }
+
+    #[test]
+    fn ideal_slots_are_fully_private() {
+        let spec = ClusterSpec { arrays: 2, scheduler: SchedulerKind::Fifo };
+        let mut c = Cluster::new(spec, &MemoryModelSpec::Ideal(IdealConfig::with_ports(2)));
+        let out = c.run(crate::sim::CgraConfig::hycube_4x4(ExecMode::Normal), &two_family_queue());
+        assert!(out.all_outputs_ok());
+        assert_eq!(out.channel, ChannelStats::default(), "no shared channel to contend on");
+    }
+}

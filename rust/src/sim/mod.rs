@@ -11,6 +11,7 @@
 
 pub mod alu;
 pub mod array;
+pub mod cluster;
 pub mod dfg;
 pub mod mapper;
 pub mod pe;
@@ -20,6 +21,9 @@ pub use alu::{AluOp, Value};
 pub use array::{
     CgraArray, CgraConfig, EpochController, ExecMode, ReconfigMode, ReconfigPolicy, RunResult,
     RunaheadAblation,
+};
+pub use cluster::{
+    ArrayOutcome, Cluster, ClusterJob, ClusterOutcome, ClusterSpec, JobOutcome, SchedulerKind,
 };
 pub use dfg::{Dfg, DfgBuilder, MemSpace, NodeId, Op};
 pub use mapper::Geometry;

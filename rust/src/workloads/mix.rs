@@ -1,0 +1,181 @@
+//! Synthetic serving mixes: the job streams a CGRA cluster is fed with.
+//!
+//! A [`MixSpec`] deterministically expands into an ordered queue of
+//! [`MixJob`]s (registry preset names + their kernel family). `skew`
+//! controls how concentrated the stream is on a few hot families — the
+//! realistic serving shape (a handful of kernels dominate), and the regime
+//! where locality-aware dispatch pays off. Everything is seeded through
+//! [`crate::util::Rng`], so the same spec always produces the same queue
+//! byte for byte, on any worker-thread count.
+
+use crate::util::Rng;
+
+/// Which preset pool the mix draws from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MixSuite {
+    /// Small-input presets (fast sweeps, CI smoke).
+    Small,
+    /// Paper-scale presets (no graph datasets — those dominate runtime).
+    Paper,
+}
+
+impl MixSuite {
+    /// `(preset name, kernel family)` pool in a fixed canonical order.
+    /// Hotness ranks are assigned over a seeded permutation of this pool,
+    /// so different seeds make different families hot.
+    pub fn pool(&self) -> &'static [(&'static str, &'static str)] {
+        match self {
+            MixSuite::Small => &[
+                ("small/grad", "grad"),
+                ("small/rgb", "rgb"),
+                ("small/src2dest", "src2dest"),
+                ("small/perm_sort", "perm_sort"),
+                ("small/radix_hist", "radix_hist"),
+                ("small/radix_update", "radix_update"),
+                ("small/join_build", "join"),
+                ("small/join_probe", "join"),
+                ("small/mesh", "mesh"),
+                ("small/phased", "phased"),
+                ("aggregate/tiny", "aggregate"),
+            ],
+            MixSuite::Paper => &[
+                ("grad", "grad"),
+                ("rgb", "rgb"),
+                ("src2dest", "src2dest"),
+                ("perm_sort", "perm_sort"),
+                ("radix_hist", "radix_hist"),
+                ("radix_update", "radix_update"),
+                ("join_build", "join"),
+                ("join_probe", "join"),
+                ("mesh", "mesh"),
+                ("phased", "phased"),
+            ],
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MixSuite::Small => "small",
+            MixSuite::Paper => "paper",
+        }
+    }
+}
+
+/// One queued kernel request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MixJob {
+    /// Registry preset name (`exp::WorkloadRegistry` resolves it).
+    pub preset: String,
+    /// Kernel family — the locality/SJF schedulers' affinity key.
+    pub family: String,
+}
+
+/// A synthetic request mix as plain data (the scenario-side half of a
+/// cluster cell; the system side carries array count and scheduler).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixSpec {
+    /// Queue length.
+    pub jobs: u32,
+    /// Family concentration in `[0, 1]`: 0 draws uniformly, 1 hammers the
+    /// seed-chosen hot family almost exclusively (Zipf-like weights).
+    pub skew: f64,
+    pub seed: u64,
+    pub suite: MixSuite,
+    /// Restrict the pool to one family (homogeneous mixes for contention
+    /// experiments); `None` uses the whole suite pool.
+    pub family: Option<String>,
+}
+
+impl MixSpec {
+    /// Expand into the ordered job queue. Deterministic in the spec alone.
+    pub fn generate(&self) -> Vec<MixJob> {
+        let mut pool: Vec<(&str, &str)> = self
+            .suite
+            .pool()
+            .iter()
+            .filter(|(_, fam)| self.family.as_deref().map_or(true, |f| f == *fam))
+            .copied()
+            .collect();
+        assert!(
+            !pool.is_empty(),
+            "mix family {:?} matches no preset in the {} suite",
+            self.family,
+            self.suite.name()
+        );
+        let mut rng = Rng::new(self.seed);
+        // Seeded hotness ranking: Fisher-Yates over the pool.
+        for i in (1..pool.len()).rev() {
+            let j = rng.gen_range(0, i as u64 + 1) as usize;
+            pool.swap(i, j);
+        }
+        // Zipf-like weights over ranks; alpha 0 (uniform) .. 4 (extreme).
+        // The moderate range (skew 0.5-0.7) keeps 2-3 families hot, which
+        // is the regime where locality-aware dispatch has switches to save.
+        let alpha = 4.0 * self.skew.clamp(0.0, 1.0);
+        let weights: Vec<f64> =
+            (0..pool.len()).map(|r| 1.0 / ((r + 1) as f64).powf(alpha)).collect();
+        let total: f64 = weights.iter().sum();
+        (0..self.jobs)
+            .map(|_| {
+                let mut u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64 * total;
+                let mut pick = pool.len() - 1;
+                for (i, w) in weights.iter().enumerate() {
+                    if u < *w {
+                        pick = i;
+                        break;
+                    }
+                    u -= *w;
+                }
+                MixJob { preset: pool[pick].0.to_string(), family: pool[pick].1.to_string() }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(jobs: u32, skew: f64, seed: u64) -> MixSpec {
+        MixSpec { jobs, skew, seed, suite: MixSuite::Small, family: None }
+    }
+
+    #[test]
+    fn same_spec_generates_identical_queues() {
+        let a = mk(64, 0.7, 42).generate();
+        let b = mk(64, 0.7, 42).generate();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 64);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = mk(64, 0.7, 1).generate();
+        let b = mk(64, 0.7, 2).generate();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn full_skew_concentrates_on_one_family() {
+        let jobs = mk(64, 1.0, 7).generate();
+        let hot = &jobs[0].family;
+        let hot_count = jobs.iter().filter(|j| &j.family == hot).count();
+        assert!(hot_count > 48, "skew 1.0 should hammer the hot family, got {hot_count}/64");
+    }
+
+    #[test]
+    fn zero_skew_spreads_across_families() {
+        let jobs = mk(128, 0.0, 7).generate();
+        let mut families: Vec<&str> = jobs.iter().map(|j| j.family.as_str()).collect();
+        families.sort_unstable();
+        families.dedup();
+        assert!(families.len() >= 6, "uniform draw should touch most families");
+    }
+
+    #[test]
+    fn family_filter_is_homogeneous() {
+        let spec = MixSpec { family: Some("grad".into()), ..mk(16, 0.5, 3) };
+        let jobs = spec.generate();
+        assert!(jobs.iter().all(|j| j.family == "grad" && j.preset == "small/grad"));
+    }
+}

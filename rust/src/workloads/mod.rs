@@ -15,6 +15,7 @@ pub mod graphs;
 pub mod join;
 pub mod media;
 pub mod mesh;
+pub mod mix;
 pub mod phased;
 pub mod sort;
 
@@ -28,6 +29,7 @@ pub use graphs::{Graph, GraphSpec};
 pub use join::{HashJoin, JoinPhase};
 pub use media::{Rgb, Src2Dest};
 pub use mesh::{MeshOrder, MeshSpmv};
+pub use mix::{MixSpec, MixSuite};
 pub use phased::PhasedGather;
 pub use sort::{PermSort, RadixHist, RadixUpdate};
 
@@ -334,6 +336,25 @@ pub fn prepare_model(
     let mapping = Mapper::new(cgra_cfg.geom).map(&dfg).expect("kernel must map");
     let arr = CgraArray::new(cgra_cfg, dfg, mapping);
     (mem, arr, layout)
+}
+
+/// Build the array + layout for a workload and (re)bind it onto an
+/// *existing* backend. Unlike [`prepare_model`] the backend is not
+/// rebuilt, so cache tags, DRAM row state and reconfigured way ownership
+/// persist — the cluster serving layer uses this so an array keeps its
+/// warmth across consecutive jobs of the same family.
+pub fn prepare_on<M: MemoryModel + ?Sized>(
+    wl: &dyn Workload,
+    mem: &mut M,
+    spm_usable: u32,
+    spm_greedy: bool,
+    cgra_cfg: CgraConfig,
+) -> (CgraArray, Layout) {
+    assert_eq!(mem.num_ports(), cgra_cfg.geom.ports, "port count mismatch");
+    let (layout, dfg) = build_layout(wl, mem.num_ports(), spm_usable, spm_greedy);
+    bind_and_init(wl, &layout, mem, spm_greedy);
+    let mapping = Mapper::new(cgra_cfg.geom).map(&dfg).expect("kernel must map");
+    (CgraArray::new(cgra_cfg, dfg, mapping), layout)
 }
 
 /// Build the concrete hierarchy subsystem + array for a workload without

@@ -82,14 +82,17 @@ fn baselines_measure_and_validate() {
     assert!(simd.time_us < a72.time_us, "SIMD must beat scalar");
 }
 
-/// Every named system (paper five + the extra memory backends) measures
-/// the tiny GCN kernel with a validated output (the old coordinator enum
-/// walk, now over the data-driven registry).
+/// Every named system (paper five + the extra memory backends + the
+/// cluster configurations) measures the tiny GCN kernel with a validated
+/// output (the old coordinator enum walk, now over the data-driven
+/// registry; cluster systems serve one copy per array).
 #[test]
 fn all_named_systems_measure_tiny_gcn() {
-    let wl = GcnAggregate::new(GraphSpec::tiny());
+    use cgra_mem::exp::{measure_cell, ScenarioSpec, WorkloadRegistry};
+    let reg = WorkloadRegistry::builtin();
+    let scen = ScenarioSpec::preset("aggregate/tiny");
     for sys in builtin_systems().iter().chain(cgra_mem::exp::extra_systems().iter()) {
-        let m = measure_spec(&wl, sys);
+        let m = measure_cell(&reg, &scen, sys).unwrap_or_else(|e| panic!("{}: {e}", sys.name));
         assert!(m.time_us > 0.0, "{}", sys.name);
         assert!(m.output_ok, "{}", sys.name);
         assert_eq!(m.system, sys.name);
@@ -593,6 +596,189 @@ fn warm_store_rerun_is_byte_identical_with_zero_simulations() {
     assert_eq!(warm.stats().executed, 0, "the figure must also be served from the store");
     assert_eq!(warm_fig, cold_fig, "figure text must be byte-identical on a warm store");
     let _ = ResultStore::clear(&path);
+}
+
+/// Satellite (contention): two arrays hammering the shared banked-DRAM
+/// channel pay measurably more total cycles than twice the solo run —
+/// the shared L2 halves each array's effective capacity and the
+/// interleaved gather streams close each other's DRAM rows. The shared
+/// levels attribute the interference per array (cross-array row-buffer
+/// conflicts, per-array L1 traffic). Ideal-backend clusters, whose
+/// slots are fully private, scale linearly instead: N arrays serve N
+/// copies in exactly the makespan one array needs for one copy.
+#[test]
+fn shared_channel_contention_slows_cluster_but_ideal_scales_linearly() {
+    use cgra_mem::sim::{Cluster, ClusterJob, ClusterSpec, SchedulerKind};
+    let mut banked = SubsystemConfig::paper_base();
+    banked.dram = DramModelKind::Banked(BankedDramConfig::paper_default());
+    let serve = |mem: &MemoryModelSpec, arrays: usize| {
+        let jobs: Vec<ClusterJob> = (0..arrays)
+            .map(|_| ClusterJob {
+                workload: Box::new(PhasedGather::small()),
+                family: "phased".to_string(),
+            })
+            .collect();
+        let mut c = Cluster::new(ClusterSpec { arrays, scheduler: SchedulerKind::Fifo }, mem);
+        c.run(CgraConfig::hycube_4x4(ExecMode::Runahead), &jobs)
+    };
+
+    let hier = MemoryModelSpec::Hierarchy(banked);
+    let solo = serve(&hier, 1);
+    let duo = serve(&hier, 2);
+    assert!(solo.all_outputs_ok() && duo.all_outputs_ok());
+    let solo_lat = solo.jobs[0].latency();
+    let duo_total: u64 = duo.jobs.iter().map(|j| j.latency()).sum();
+    assert!(
+        duo_total > 2 * solo_lat,
+        "two arrays on the shared channel must pay contention: {duo_total} total vs 2x{solo_lat}"
+    );
+    assert!(duo.makespan > solo.makespan);
+    // Attribution: the slowdown shows up as cross-array row-buffer
+    // interference, a counter a single-array run cannot accumulate.
+    assert!(duo.channel.xarray_conflicts > 0, "shared rows must record cross-array closes");
+    assert_eq!(solo.channel.xarray_conflicts, 0);
+    assert!(duo.arrays.iter().all(|a| a.stats.l1_accesses > 0 && a.l1_miss_rate() > 0.0));
+
+    let ideal = MemoryModelSpec::Ideal(cgra_mem::mem::IdealConfig::with_ports(2));
+    let solo_i = serve(&ideal, 1);
+    let quad_i = serve(&ideal, 4);
+    assert!(solo_i.all_outputs_ok() && quad_i.all_outputs_ok());
+    assert_eq!(
+        quad_i.makespan, solo_i.makespan,
+        "private ideal slots must scale linearly (no shared level to contend on)"
+    );
+}
+
+/// Acceptance (scheduling): on a skewed serving mix, locality-aware
+/// dispatch beats FIFO end to end through the cell front door — the
+/// config loads it skips and the L1 state it keeps warm shorten the
+/// serving makespan.
+#[test]
+fn locality_beats_fifo_on_a_skewed_mix() {
+    use cgra_mem::exp::{measure_cell, ScenarioSpec, SystemSpec, WorkloadRegistry};
+    use cgra_mem::sim::{ClusterSpec, SchedulerKind};
+    let reg = WorkloadRegistry::builtin();
+    let mix = ScenarioSpec::mix(24, 0.6, 7).named("mix-skewed");
+    let sys = |k: SchedulerKind| {
+        SystemSpec::cluster_model(
+            format!("Cluster-2x-{}", k.name()),
+            MemoryModelSpec::Hierarchy(SubsystemConfig::paper_base()),
+            CgraConfig::hycube_4x4(ExecMode::Runahead),
+            ClusterSpec { arrays: 2, scheduler: k },
+        )
+    };
+    let fifo = measure_cell(&reg, &mix, &sys(SchedulerKind::Fifo)).unwrap();
+    let loc = measure_cell(&reg, &mix, &sys(SchedulerKind::Locality)).unwrap();
+    assert!(fifo.output_ok && loc.output_ok);
+    assert_eq!(fifo.cluster_jobs, 24);
+    assert_eq!(loc.cluster_jobs, 24);
+    assert!(
+        loc.cycles < fifo.cycles,
+        "locality dispatch must shorten the serving run (locality {} vs fifo {})",
+        loc.cycles,
+        fifo.cycles
+    );
+}
+
+/// Satellite (reconfig × cluster): each clustered array carries its own
+/// online-reconfiguration controller — cooldown and miss-rate windows
+/// are per-array state. Two arrays serving the phase-alternating gather
+/// must each re-plan across phases exactly like the solo run does; a
+/// shared controller's cooldown would swallow one array's phase
+/// boundaries whenever the other fires first.
+#[test]
+fn online_reconfig_state_is_per_array_in_a_cluster() {
+    use cgra_mem::sim::{Cluster, ClusterJob, ClusterSpec, SchedulerKind};
+    let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
+    cgra.reconfig = ReconfigPolicy::online();
+    cgra.reconfig.threshold = 0.02;
+    let serve = |arrays: usize| {
+        let jobs: Vec<ClusterJob> = (0..arrays)
+            .map(|_| ClusterJob {
+                workload: Box::new(PhasedGather::small()),
+                family: "phased".to_string(),
+            })
+            .collect();
+        let mut c = Cluster::new(
+            ClusterSpec { arrays, scheduler: SchedulerKind::Fifo },
+            &MemoryModelSpec::Hierarchy(SubsystemConfig::paper_base()),
+        );
+        c.run(cgra, &jobs)
+    };
+    let solo = serve(1);
+    assert!(solo.all_outputs_ok());
+    assert!(
+        solo.arrays[0].reconfig_applies >= 2,
+        "the cluster path must preserve the solo online-reconfig behavior"
+    );
+    let duo = serve(2);
+    assert!(duo.all_outputs_ok());
+    for (i, a) in duo.arrays.iter().enumerate() {
+        assert!(
+            a.reconfig_applies >= 2,
+            "array {i} must re-plan across both phases independently (applies = {})",
+            a.reconfig_applies
+        );
+        assert!(a.reconfig_ways_moved > 0, "array {i} moved no ways");
+    }
+    // Identical jobs on symmetric slots: private controllers behave
+    // alike (the shared L2/channel skews timing, not the per-array
+    // miss-rate windows that drive the monitor).
+    let (a0, a1) = (duo.arrays[0].reconfig_applies, duo.arrays[1].reconfig_applies);
+    assert!(
+        a0.abs_diff(a1) <= 1,
+        "per-array controllers on identical jobs must behave alike ({a0} vs {a1})"
+    );
+}
+
+/// Satellite (store): cluster cells are content-addressed like solo
+/// cells — a second session over a warm store serves the identical
+/// cluster sweep (mix scenario × cluster systems) with zero simulations
+/// and byte-identical report JSON.
+#[test]
+fn cluster_cells_warm_replay_with_zero_simulations() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, ResultStore, ScenarioSpec, SystemSpec};
+    let path = std::env::temp_dir()
+        .join(format!("cgra-itest-cellstore-{}-cluster.jsonl", std::process::id()));
+    let _ = ResultStore::clear(&path);
+    let spec = ExperimentSpec::new("cluster-warm")
+        .workload(ScenarioSpec::mix(6, 0.6, 7).named("mix"))
+        .systems([SystemSpec::cluster_runahead(2), SystemSpec::cluster_locality()]);
+
+    let eng = Engine::new(2);
+    let cold = eng.session_with_store(ResultStore::open(&path).unwrap());
+    let cold_report = cold.run(&spec);
+    assert_eq!(cold.stats().executed, 2, "one serving run per cluster system");
+    assert!(cold_report.measurements.iter().all(|m| m.output_ok && m.cluster_jobs == 6));
+    drop(cold);
+
+    let eng2 = Engine::new(3);
+    let warm = eng2.session_with_store(ResultStore::open(&path).unwrap());
+    let warm_report = warm.run(&spec);
+    assert_eq!(warm.stats().executed, 0, "a warm store must simulate zero cluster cells");
+    assert_eq!(warm.stats().store_hits, 2);
+    assert_eq!(
+        warm_report.to_json().render_pretty(),
+        cold_report.to_json().render_pretty(),
+        "cluster cells must replay byte-identically"
+    );
+    let _ = ResultStore::clear(&path);
+}
+
+/// The cluster figures render through the session seam (smoke-sized
+/// sweep) with every (arrays × scheduler) cell present.
+#[test]
+fn cluster_figures_render_at_smoke_sizes() {
+    use cgra_mem::exp::Engine;
+    let eng = Engine::new(2);
+    let session = eng.session();
+    let thr = cgra_mem::report::cluster_throughput_with(&session, &[1, 2], 6, 0.6, 7);
+    assert!(
+        thr.contains("fifo") && thr.contains("sjf") && thr.contains("locality"),
+        "{thr}"
+    );
+    let lat = cgra_mem::report::cluster_latency_with(&session, &[1, 2], &[0.2, 0.8], 6, 7);
+    assert!(lat.contains("p50") && lat.contains("p99"), "{lat}");
 }
 
 /// A JSON sweep spec (the `repro sweep` path) round-trips end to end:

@@ -176,6 +176,27 @@ fn prop_cell_key_invariant_under_key_order_and_preset_spelling() {
     );
 }
 
+/// Cluster serving is deterministic: the same (mix, cluster) cells
+/// measured through fresh engines — and through engines with different
+/// worker counts — produce byte-identical reports. The interleaver steps
+/// arrays by minimum cycle (ties by slot index) and the mix is seeded, so
+/// no wall-clock or thread-schedule state can leak into a measurement.
+#[test]
+fn prop_cluster_serving_is_deterministic_across_runs_and_worker_counts() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, ScenarioSpec, SystemSpec};
+    let spec = || {
+        ExperimentSpec::new("determinism")
+            .workload(ScenarioSpec::mix(8, 0.7, 42))
+            .systems([SystemSpec::cluster_runahead(2), SystemSpec::cluster_locality()])
+    };
+    let render = |threads: usize| Engine::new(threads).run(&spec()).to_json().render_pretty();
+    let a = render(1);
+    let b = render(1);
+    let c = render(4);
+    assert_eq!(a, b, "same run twice must reproduce byte-identically");
+    assert_eq!(a, c, "worker count must not leak into cluster measurements");
+}
+
 #[test]
 fn prop_mapper_produces_valid_schedules() {
     let mut rng = Rng::new(2024);
