@@ -7,13 +7,20 @@ mod common;
 use cgra_mem::mem::{
     BankedDramConfig, DramModelKind, IdealConfig, MemoryModelSpec, SubsystemConfig,
 };
-use cgra_mem::sim::{CgraConfig, ExecMode};
+use cgra_mem::sim::{CgraConfig, ExecMode, SimCore};
 use cgra_mem::workloads::{
     prepare, prepare_model, GcnAggregate, GraphSpec, HashJoin, MeshOrder, MeshSpmv, Rgb, Workload,
 };
 
 fn run_once(wl: &dyn Workload, sys: SubsystemConfig, mode: ExecMode) -> u64 {
     let (mut mem, mut arr, _l) = prepare(wl, sys, CgraConfig::hycube_4x4(mode));
+    arr.run(&mut mem, wl.iterations()).cycles
+}
+
+fn run_once_core(wl: &dyn Workload, sys: SubsystemConfig, mode: ExecMode, core: SimCore) -> u64 {
+    let mut cfg = CgraConfig::hycube_4x4(mode);
+    cfg.core = core;
+    let (mut mem, mut arr, _l) = prepare(wl, sys, cfg);
     arr.run(&mut mem, wl.iterations()).cycles
 }
 
@@ -57,5 +64,21 @@ fn main() {
     let probe = HashJoin::default_probe();
     common::bench("join_probe runahead", 5, || {
         run_once(&probe, SubsystemConfig::paper_base(), ExecMode::Runahead)
+    });
+    // Event vs reference core, head to head on the most stall-heavy rows:
+    // the gap between each pair IS the timewheel/stall-skipping payoff
+    // (the runs are byte-identical in results, so wall time is the only
+    // axis that moves).
+    common::bench("gcn/cora cache+spm event-core", 5, || {
+        run_once_core(&cora, SubsystemConfig::paper_base(), ExecMode::Normal, SimCore::Event)
+    });
+    common::bench("gcn/cora cache+spm reference-core", 5, || {
+        run_once_core(&cora, SubsystemConfig::paper_base(), ExecMode::Normal, SimCore::Reference)
+    });
+    common::bench("join_probe runahead event-core", 5, || {
+        run_once_core(&probe, SubsystemConfig::paper_base(), ExecMode::Runahead, SimCore::Event)
+    });
+    common::bench("join_probe runahead reference-core", 5, || {
+        run_once_core(&probe, SubsystemConfig::paper_base(), ExecMode::Runahead, SimCore::Reference)
     });
 }

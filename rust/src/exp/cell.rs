@@ -51,7 +51,14 @@ use crate::sim::CgraConfig;
 /// v3: cluster systems (`ExecModel::Cluster`) and mix scenarios joined
 /// the identity space and the measurement schema gained the `cluster_*`
 /// columns (PR 6).
-pub const STORE_FORMAT_VERSION: u64 = 3;
+///
+/// v4: the event-driven sim core (PR 7). Results are byte-identical
+/// between the event and reference cores, but not to v3 stores: gating
+/// frozen-retry attempts on `next_event` changes how many bounced
+/// requests are counted, and the timewheel's global (cycle, port, entry)
+/// pop order replaces the old per-port MSHR scan order at the shared
+/// L2 (different writeback/LRU interleavings).
+pub const STORE_FORMAT_VERSION: u64 = 4;
 
 /// Content address of one (scenario, system, repeat) cell.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -254,6 +261,10 @@ fn ideal_json(c: &IdealConfig) -> Json {
     ])
 }
 
+// `CgraConfig::core` is deliberately *not* part of the identity: the
+// event and reference cores produce byte-identical measurements (that is
+// the `SimCore` contract, enforced by the equivalence property tests), so
+// hashing the knob would only split the cache for runs that cannot differ.
 fn cgra_json(c: &CgraConfig) -> Json {
     Json::obj(vec![
         (

@@ -30,6 +30,14 @@ pub struct ChannelStats {
 }
 
 /// One line fetch scheduled on the channel; returns the arrival cycle.
+///
+/// Like the L2 port in front of it, a channel is **synchronous**:
+/// `schedule` resolves bank/bus busy windows and row-buffer state at
+/// issue time and folds them into the returned arrival cycle. Channels
+/// never enqueue events — the subsystem's timewheel of L1 fill
+/// completions (fed by this return value, via the L2) is the single
+/// event queue, which keeps `next_event()` complete without the channel
+/// participating in it.
 pub trait BackingChannel: Send {
     fn schedule(&mut self, cycle: Cycle, addr: Addr, bytes: u64) -> Cycle;
     fn stats(&self) -> ChannelStats;

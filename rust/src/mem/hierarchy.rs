@@ -26,7 +26,8 @@ use super::model::{
 };
 use super::mshr::{LstDest, Mshr};
 use super::{Addr, Backing, Cycle};
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 /// Configuration of the whole subsystem.
 #[derive(Clone, Copy, Debug)]
@@ -154,6 +155,15 @@ pub struct MemorySubsystem {
     /// disjoint regions — no false line sharing between arrays, and the
     /// channel can attribute row conflicts to the array that caused them.
     pub l2_tag_salt: Addr,
+    /// The subsystem's timewheel: every scheduled fill, as
+    /// `(fill_at, l1_index, mshr_index)` in a min-heap. `tick` pops due
+    /// completions off the head instead of scanning every MSHR entry
+    /// every cycle, and `next_event` is the (validated) head — the O(1)
+    /// contract the event-driven sim core jumps on. L2 and DRAM busy
+    /// windows are *synchronous* arrival computations folded into
+    /// `fill_at` at schedule time (see [`SharedL2`] and
+    /// [`super::channel`]), so L1 fills are the only event kind.
+    wheel: BinaryHeap<Reverse<(Cycle, usize, usize)>>,
 }
 
 impl MemorySubsystem {
@@ -176,6 +186,7 @@ impl MemorySubsystem {
             evicted_prefetches: HashMap::new(),
             prefetch_epoch: 0,
             l2_tag_salt: 0,
+            wheel: BinaryHeap::new(),
         }
     }
 
@@ -262,14 +273,21 @@ impl MemorySubsystem {
                     self.stats.mshr_full_stalls += 1;
                     return MemResponse::MshrFull;
                 }
-                let fill_at = self.l2.fetch(
-                    block + self.l2_tag_salt,
-                    self.cfg.l1.vline_bytes(),
-                    cycle,
-                    &mut self.stats,
-                );
+                // Fills take ≥ 1 cycle: floor the arrival so the
+                // `next_event() > issue cycle` contract holds even for
+                // degenerate latencies (e.g. a zero-latency L2).
+                let fill_at = self
+                    .l2
+                    .fetch(
+                        block + self.l2_tag_salt,
+                        self.cfg.l1.vline_bytes(),
+                        cycle,
+                        &mut self.stats,
+                    )
+                    .max(cycle + 1);
                 let idx =
                     self.l1x.mshrs[li].allocate(block, fill_at, false).expect("checked not full");
+                self.wheel.push(Reverse((fill_at, li, idx)));
                 Self::attach_demand(&mut self.l1x.mshrs[li], idx, fill_at, &mut self.backing, req, block)
             }
         }
@@ -320,75 +338,104 @@ impl MemorySubsystem {
         if self.l1x.mshrs[li].is_full() {
             return PrefetchResponse::Dropped;
         }
-        let fill_at =
-            self.l2.fetch(block + self.l2_tag_salt, self.cfg.l1.vline_bytes(), cycle, &mut self.stats);
-        self.l1x.mshrs[li].allocate(block, fill_at, true);
+        // Same arrival floor as the demand path (next_event contract).
+        let fill_at = self
+            .l2
+            .fetch(block + self.l2_tag_salt, self.cfg.l1.vline_bytes(), cycle, &mut self.stats)
+            .max(cycle + 1);
+        let idx = self.l1x.mshrs[li].allocate(block, fill_at, true).expect("checked not full");
+        self.wheel.push(Reverse((fill_at, li, idx)));
         self.stats.prefetches_issued += 1;
         PrefetchResponse::Queued { fill_at }
     }
 
     /// Advance fills whose data has arrived by `cycle`. Returns completed
     /// demand reads so the array can leave its stall / runahead state.
+    /// Allocating convenience wrapper over [`MemorySubsystem::tick_into`].
     pub fn tick(&mut self, cycle: Cycle) -> Vec<MemResponseComplete> {
         let mut completions = Vec::new();
-        for li in 0..self.l1x.len() {
-            // Fast path (§Perf): most cycles have no arriving fill; the
-            // cached min avoids the ready-list allocation entirely.
-            if self.l1x.mshrs[li].next_fill_at().map_or(true, |t| t > cycle) {
-                continue;
+        self.tick_into(cycle, &mut completions);
+        completions
+    }
+
+    /// Pop due completions off the timewheel in `(time, cache, entry)`
+    /// order into `out` — no per-cycle MSHR scan, no allocation. A popped
+    /// node whose MSHR entry no longer matches is stale (the entry was
+    /// flushed out-of-band) and is skipped; entry *reuse* cannot collide,
+    /// because a reused entry's fill is always scheduled strictly after
+    /// the old node popped.
+    pub fn tick_into(&mut self, cycle: Cycle, out: &mut Vec<MemResponseComplete>) {
+        out.clear();
+        while let Some(&Reverse((at, li, idx))) = self.wheel.peek() {
+            if at > cycle {
+                break;
             }
-            for idx in self.l1x.mshrs[li].ready(cycle) {
-                let entry = self.l1x.mshrs[li].entry(idx).clone();
-                let lst = self.l1x.mshrs[li].complete(idx);
-                let demand_attached = lst
-                    .iter()
-                    .any(|e| matches!(e.dest, LstDest::Read { .. } | LstDest::Write { .. }));
-                // Install into L1. A pure-prefetch fill keeps its flag so a
-                // later demand touch counts as "Used" (Fig 15).
-                let keep_prefetch_flag = entry.prefetch && !demand_attached;
-                if let Some(ev) = self.l1x.caches[li].fill(
-                    entry.block_addr,
-                    keep_prefetch_flag,
-                    self.prefetch_epoch,
-                ) {
-                    if ev.unused_prefetch {
-                        *self.evicted_prefetches.entry(ev.block_addr).or_insert(0) += 1;
-                    }
-                    if ev.dirty {
-                        // Non-inclusive L2 absorbs the writeback.
-                        self.l2.absorb_writeback(ev.block_addr + self.l2_tag_salt);
-                    }
-                }
-                if entry.prefetch && demand_attached {
-                    // Demand arrived while prefetch was in flight: the
-                    // prefetch was useful.
-                    self.stats.prefetch_used += 1;
-                }
-                for e in lst {
-                    match e.dest {
-                        LstDest::Read { pe } => completions.push(MemResponseComplete {
-                            port: li,
-                            pe,
-                            addr_block: entry.block_addr,
-                        }),
-                        LstDest::Write { sb_idx } => {
-                            // Data was applied functionally at issue; merge
-                            // now marks the line dirty and frees the slot.
-                            if let Some((addr, _)) = self.l1x.mshrs[li].store_at(sb_idx) {
-                                self.l1x.caches[li].mark_dirty(addr);
-                                self.l1x.mshrs[li].release_store(sb_idx);
-                            }
-                        }
+            self.wheel.pop();
+            let e = self.l1x.mshrs[li].entry(idx);
+            if !e.valid || e.fill_at != at {
+                continue; // stale node
+            }
+            self.complete_fill(li, idx, out);
+        }
+    }
+
+    /// Complete one arrived fill: install the line, classify the
+    /// prefetch, deliver reads, merge buffered stores.
+    fn complete_fill(&mut self, li: usize, idx: usize, out: &mut Vec<MemResponseComplete>) {
+        let entry = self.l1x.mshrs[li].entry(idx).clone();
+        let lst = self.l1x.mshrs[li].complete(idx);
+        let demand_attached =
+            lst.iter().any(|e| matches!(e.dest, LstDest::Read { .. } | LstDest::Write { .. }));
+        // Install into L1. A pure-prefetch fill keeps its flag so a
+        // later demand touch counts as "Used" (Fig 15).
+        let keep_prefetch_flag = entry.prefetch && !demand_attached;
+        if let Some(ev) =
+            self.l1x.caches[li].fill(entry.block_addr, keep_prefetch_flag, self.prefetch_epoch)
+        {
+            if ev.unused_prefetch {
+                *self.evicted_prefetches.entry(ev.block_addr).or_insert(0) += 1;
+            }
+            if ev.dirty {
+                // Non-inclusive L2 absorbs the writeback.
+                self.l2.absorb_writeback(ev.block_addr + self.l2_tag_salt);
+            }
+        }
+        if entry.prefetch && demand_attached {
+            // Demand arrived while prefetch was in flight: the
+            // prefetch was useful.
+            self.stats.prefetch_used += 1;
+        }
+        for e in lst {
+            match e.dest {
+                LstDest::Read { pe } => out.push(MemResponseComplete {
+                    port: li,
+                    pe,
+                    addr_block: entry.block_addr,
+                }),
+                LstDest::Write { sb_idx } => {
+                    // Data was applied functionally at issue; merge
+                    // now marks the line dirty and frees the slot.
+                    if let Some((addr, _)) = self.l1x.mshrs[li].store_at(sb_idx) {
+                        self.l1x.caches[li].mark_dirty(addr);
+                        self.l1x.mshrs[li].release_store(sb_idx);
                     }
                 }
             }
         }
-        completions
     }
 
-    /// Earliest pending fill across all ports (stall fast-forwarding).
+    /// Earliest pending fill — the timewheel head, in O(1). A stale head
+    /// (flushed entry) falls back to the exact MSHR scan; `None` iff no
+    /// fill is outstanding. See [`MemoryModel::next_event`] for the full
+    /// contract the event-driven core relies on.
     pub fn next_event(&self) -> Option<Cycle> {
-        self.l1x.next_fill_at()
+        let &Reverse((at, li, idx)) = self.wheel.peek()?;
+        let e = self.l1x.mshrs[li].entry(idx);
+        if e.valid && e.fill_at == at {
+            Some(at)
+        } else {
+            self.l1x.next_fill_at()
+        }
     }
 
     /// Finalise Fig 15 accounting: remaining evicted-unused prefetches and
@@ -444,6 +491,10 @@ impl MemoryModel for MemorySubsystem {
 
     fn tick(&mut self, cycle: Cycle) -> Vec<MemResponseComplete> {
         MemorySubsystem::tick(self, cycle)
+    }
+
+    fn tick_into(&mut self, cycle: Cycle, out: &mut Vec<MemResponseComplete>) {
+        MemorySubsystem::tick_into(self, cycle, out);
     }
 
     fn next_event(&self) -> Option<Cycle> {
@@ -793,6 +844,64 @@ mod tests {
         let r = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, t);
         assert!(matches!(r, MemResponse::ReadMiss { .. }));
         assert_eq!(m.prefetch_evicted_useful(), 1);
+    }
+
+    #[test]
+    fn next_event_is_strictly_future_and_none_iff_wheel_empty() {
+        // The event-core contract: Some(t > issue cycle) whenever a fill
+        // is outstanding, None exactly when the timewheel is empty.
+        let mut m = mk();
+        assert_eq!(m.next_event(), None, "fresh subsystem: empty timewheel");
+        let t0 = 5;
+        let r = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, t0);
+        assert!(matches!(r, MemResponse::ReadMiss { .. }));
+        let ev = m.next_event().expect("outstanding fill must surface an event");
+        assert!(ev > t0, "next_event {ev} must be strictly past the issue cycle {t0}");
+        // A second request never moves the head into the past.
+        assert!(matches!(m.prefetch(1, 0xC000, t0 + 1), PrefetchResponse::Queued { .. }));
+        let ev2 = m.next_event().unwrap();
+        assert!(ev2 > t0 + 1);
+        // Ticking before the head completes nothing and leaves it in place.
+        assert!(m.tick(ev.min(ev2) - 1).is_empty());
+        assert_eq!(m.next_event(), Some(ev.min(ev2)));
+        // Draining everything empties the wheel: None again.
+        let done = m.tick(ev.max(ev2));
+        assert_eq!(done.len(), 1, "one demand read completes (prefetch has no LST reader)");
+        assert_eq!(m.next_event(), None);
+    }
+
+    #[test]
+    fn next_event_strictly_future_even_with_zero_latency_l2() {
+        // spm_only carries l2_hit_latency = 0; the explicit arrival floor
+        // in request()/prefetch() keeps the contract regardless.
+        let cfg = SubsystemConfig::spm_only(2, 512);
+        let mut m = MemorySubsystem::new(cfg, 1 << 16);
+        m.place_spm(0, 0);
+        m.place_spm(1, 256);
+        let r = m.request(0, MemRequest { addr: 0x8000, kind: AccessKind::Read, data: 0, pe: 0 }, 9);
+        assert!(matches!(r, MemResponse::ReadMiss { .. }));
+        assert!(m.next_event().unwrap() > 9);
+        let f = m.next_event().unwrap();
+        m.tick(f);
+        assert_eq!(m.next_event(), None);
+    }
+
+    #[test]
+    fn tick_into_reuses_the_buffer_and_matches_tick() {
+        let mut ma = mk();
+        let mut mb = mk();
+        let mut out = vec![MemResponseComplete { port: 9, pe: 9, addr_block: 9 }];
+        let req = |addr| MemRequest { addr, kind: AccessKind::Read, data: 0, pe: 1 };
+        assert!(matches!(ma.request(0, req(0x8000), 0), MemResponse::ReadMiss { .. }));
+        assert!(matches!(mb.request(0, req(0x8000), 0), MemResponse::ReadMiss { .. }));
+        let f = ma.next_event().unwrap();
+        ma.tick_into(f, &mut out);
+        let done = mb.tick(f);
+        assert_eq!(out.len(), done.len());
+        assert_eq!(out[0].pe, done[0].pe);
+        assert_eq!(out[0].addr_block, done[0].addr_block);
+        // The stale seed entry was cleared, not appended to.
+        assert_eq!(out.len(), 1);
     }
 
     #[test]

@@ -72,6 +72,15 @@ impl MemoryModel for IdealMemory {
         Vec::new()
     }
 
+    fn tick_into(&mut self, _cycle: Cycle, out: &mut Vec<MemResponseComplete>) {
+        out.clear();
+    }
+
+    /// Always `None`: nothing is ever outstanding (every request completes
+    /// synchronously), so the timewheel is empty by construction — the
+    /// `next_event` contract's "None iff empty" leg, degenerately. The
+    /// event and reference cores are trivially identical on this backend:
+    /// the array never waits, so there is never a jump to take.
     fn next_event(&self) -> Option<Cycle> {
         None
     }
@@ -130,5 +139,28 @@ mod tests {
         assert_eq!(m.next_event(), None);
         assert!(m.tick(100).is_empty());
         assert_eq!(m.block_addr(0, 0x8033), 0x8000);
+    }
+
+    /// The `next_event` contract's "None iff timewheel empty" leg: the
+    /// ideal backend never has anything outstanding, so `next_event` is
+    /// permanently `None` — before, between, and after requests — and
+    /// `tick_into` always leaves the scratch buffer empty (clearing
+    /// whatever a previous drain left in it).
+    #[test]
+    fn next_event_is_permanently_none_and_tick_into_clears() {
+        let mut m = IdealMemory::new(IdealConfig::with_ports(1), 1 << 12);
+        assert_eq!(m.next_event(), None);
+        for c in 0..4 {
+            m.request(
+                0,
+                MemRequest { addr: 0x100 + 4 * c as u32, kind: AccessKind::Read, data: 0, pe: 0 },
+                c,
+            );
+            assert_eq!(m.next_event(), None);
+        }
+        let mut out = vec![MemResponseComplete { port: 9, pe: 9, addr_block: 0xdead }];
+        m.tick_into(7, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(m.next_event(), None);
     }
 }

@@ -49,7 +49,10 @@ impl L1Array {
         self.caches.is_empty()
     }
 
-    /// Earliest pending fill across all MSHRs.
+    /// Earliest pending fill across all MSHRs — an O(ports × entries)
+    /// scan. [`MemorySubsystem::next_event`](super::MemorySubsystem) only
+    /// falls back to this when its timewheel head is stale; it is also
+    /// what the wheel's answer is validated against.
     pub fn next_fill_at(&self) -> Option<Cycle> {
         self.mshrs.iter().filter_map(|m| m.next_fill_at()).min()
     }

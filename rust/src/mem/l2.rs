@@ -2,6 +2,18 @@
 //! its request port) in front of a pluggable backing channel. The SPM-only
 //! configuration is the degenerate zero-way L2: every fetch goes straight
 //! to the channel.
+//!
+//! # Timing contract (event-driven core)
+//!
+//! The L2 is **synchronous**: [`SharedL2::fetch`] resolves the entire
+//! L2 + channel timing at issue time and returns the L1 fill-arrival
+//! cycle. The `busy_until` request port (and the channel's bank/bus busy
+//! windows behind it) are *arrival computations*, not events — they fold
+//! into the returned cycle and never enqueue anything. The only event
+//! queue in the subsystem is [`MemorySubsystem`](super::MemorySubsystem)'s
+//! timewheel of L1 fill completions, which is fed exactly by this return
+//! value. That is what makes `next_event()` complete: every future state
+//! change is an L1 fill already on the wheel.
 
 use super::cache::{AccessKind, AccessOutcome, Cache, CacheConfig};
 use super::channel::{BackingChannel, ChannelStats};

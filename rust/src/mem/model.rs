@@ -69,7 +69,7 @@ pub struct MemResponseComplete {
 
 /// Aggregated access counters (Fig 11b). Every backend reports this shape;
 /// backends without a given level leave its counters at zero.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SubsystemStats {
     pub spm_accesses: u64,
     pub l1_accesses: u64,
@@ -165,7 +165,31 @@ pub trait MemoryModel: Send {
     /// demand reads so the array can leave its stall / runahead state.
     fn tick(&mut self, cycle: Cycle) -> Vec<MemResponseComplete>;
 
-    /// Earliest pending fill, if any (stall fast-forwarding).
+    /// Allocation-free variant of [`MemoryModel::tick`]: clears `out`
+    /// and fills it with the cycle's completions. The array's `drain`
+    /// hot path calls this with a scratch buffer owned by its run state.
+    /// Backends with an event queue should override it natively (and
+    /// express `tick` in terms of it); the default keeps the pair
+    /// coherent for simple backends.
+    fn tick_into(&mut self, cycle: Cycle, out: &mut Vec<MemResponseComplete>) {
+        out.clear();
+        out.extend(self.tick(cycle));
+    }
+
+    /// Earliest pending completion — the head of the backend's timewheel.
+    ///
+    /// This is a **contract**, not advice; the event-driven core jumps
+    /// stalled runs straight to it:
+    ///
+    /// * returns `None` **iff** no fill is outstanding (the timewheel is
+    ///   empty) — never `None` while a request is in flight;
+    /// * whenever it returns `Some(t)`, no call before `t` (with no
+    ///   intervening `request`/`prefetch`) completes anything, changes
+    ///   any observable state, or changes the outcome of a bounced
+    ///   request — which is exactly why skipping cycles `< t` is
+    ///   byte-identical to stepping through them;
+    /// * `t` is strictly greater than the cycle at which the oldest
+    ///   outstanding request was issued (fills take ≥ 1 cycle).
     fn next_event(&self) -> Option<Cycle>;
 
     /// Block (line) address of `addr` as seen by `port`'s cache — the

@@ -34,8 +34,8 @@ use super::mapper::{Geometry, Mapping};
 use super::pe::{program, PeConfigMem};
 use super::trace::{AccessTrace, TraceEvent};
 use crate::mem::{
-    AccessKind, Cycle, MemRequest, MemResponse, MemoryModel, PrefetchResponse, Reconfigurable,
-    SubsystemStats,
+    AccessKind, Cycle, MemRequest, MemResponse, MemResponseComplete, MemoryModel,
+    PrefetchResponse, Reconfigurable, SubsystemStats,
 };
 /// Execution-mode knob for a run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,6 +44,41 @@ pub enum ExecMode {
     Normal,
     /// Enter runahead on stall-triggering read misses.
     Runahead,
+}
+
+/// Which stepping core drives the run. Both cores are **byte-identical**
+/// in every observable output (`RunResult`, memory stats, backing store,
+/// cluster interleaving): waits have no side effects, so jumping across
+/// them is exact, not approximate. The property suite and the CI smoke
+/// job diff full report JSON across the two.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimCore {
+    /// Event-driven (default): every wait — stall, bounced-request
+    /// retry, runahead dead cycles, post-timeout drain — jumps straight
+    /// to the memory timewheel's next completion (clamped by
+    /// `RunState::ff_clamp` under a cluster or an epoch hook).
+    Event,
+    /// Cycle-stepped golden reference: every wait advances one cycle at
+    /// a time. Selected with `SIM_CORE=reference` in the environment.
+    Reference,
+}
+
+impl SimCore {
+    /// Read the `SIM_CORE` environment knob (`"reference"`, any case,
+    /// selects the reference core; anything else the event core).
+    pub fn from_env() -> Self {
+        match std::env::var("SIM_CORE") {
+            Ok(v) if v.eq_ignore_ascii_case("reference") => SimCore::Reference,
+            _ => SimCore::Event,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimCore::Event => "event",
+            SimCore::Reference => "reference",
+        }
+    }
 }
 
 /// When (if ever) the cache-reconfiguration controller may act during a
@@ -159,6 +194,10 @@ pub struct CgraConfig {
     /// Online cache-reconfiguration policy (§3.4; [`ReconfigMode::Off`]
     /// runs without a controller).
     pub reconfig: ReconfigPolicy,
+    /// Stepping core. Excluded from the content-addressed cell identity
+    /// (`exp::cell`): the two cores are byte-identical, so a cell
+    /// simulated under either replays for both.
+    pub core: SimCore,
 }
 
 impl CgraConfig {
@@ -171,6 +210,7 @@ impl CgraConfig {
             trace_window: 0,
             ablation: RunaheadAblation::default(),
             reconfig: ReconfigPolicy::off(),
+            core: SimCore::from_env(),
         }
     }
     pub fn hycube_8x8(mode: ExecMode) -> Self {
@@ -182,12 +222,13 @@ impl CgraConfig {
             trace_window: 0,
             ablation: RunaheadAblation::default(),
             reconfig: ReconfigPolicy::off(),
+            core: SimCore::from_env(),
         }
     }
 }
 
 /// Aggregate result of one kernel execution.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunResult {
     pub cycles: Cycle,
     /// Cycles in which `ctx` did not advance (stall or runahead).
@@ -248,6 +289,10 @@ struct Trigger {
     addr: u32,
 }
 
+/// A request bounced by a full MSHR / store buffer, waiting for retry:
+/// `(port, request, node, iter, is_read)`.
+type RetryEntry = (usize, MemRequest, NodeId, u64, bool);
+
 /// Latched effects of memory nodes in the currently-frozen context:
 /// `Some(word)` for loads (data), `None` for issued stores. A frozen
 /// context holds at most a handful of memory nodes, so a linear-scan
@@ -305,7 +350,29 @@ pub(crate) struct RunState {
     ra_deadline: Cycle,
     effects: CycleEffects,
     /// Requests bounced by a full MSHR, retried while the array is frozen.
-    retry: Vec<(usize, MemRequest, NodeId, u64, bool)>,
+    retry: Vec<RetryEntry>,
+    /// Earliest cycle a bounced request may be re-attempted. Structural
+    /// resources (MSHR entries, store-buffer slots) only free at
+    /// timewheel events, so attempts between events would fail
+    /// identically while inflating access stats — both cores gate on
+    /// this boundary, which keeps their stats byte-identical.
+    retry_at: Cycle,
+    /// Upper bound on any fast-forward jump this step. The cluster
+    /// interleaver sets it to the minimum cycle of all other live slots
+    /// before each step (preserving contention ordering exactly);
+    /// `run_with` sets it to the next epoch boundary. `u64::MAX` for a
+    /// solo run without a hook. Jumps always still make ≥ 1 cycle of
+    /// progress.
+    pub(crate) ff_clamp: Cycle,
+    /// Runahead timed out with fills still in flight: wait them out one
+    /// jump per step (so the cluster observes every boundary) before
+    /// clearing temp storage and replaying the frozen context.
+    post_timeout_wait: bool,
+    /// Reusable completion buffer for `drain` (§Perf: the old per-step
+    /// `tick()` return allocated a fresh Vec every cycle).
+    completions: Vec<MemResponseComplete>,
+    /// Reusable scratch for the frozen-retry loop (§Perf).
+    scratch_retry: Vec<RetryEntry>,
 }
 
 impl RunState {
@@ -327,6 +394,11 @@ impl RunState {
             ra_deadline: 0,
             effects: CycleEffects::default(),
             retry: Vec::new(),
+            retry_at: 0,
+            ff_clamp: u64::MAX,
+            post_timeout_wait: false,
+            completions: Vec::new(),
+            scratch_retry: Vec::new(),
         }
     }
 
@@ -446,6 +518,11 @@ impl CgraArray {
         // runahead at the end of the schedule (speculative ctx may pass
         // end_ctx; real progress resumes only after restore).
         while st.active() {
+            // Fast-forwards stop at the epoch boundary so the controller
+            // observes it even when a whole stall would jump across it
+            // (once past the boundary — waiting for a clean state — the
+            // clamp lifts).
+            st.ff_clamp = if st.cycle < next_epoch { next_epoch } else { u64::MAX };
             self.step_cycle(mem, &mut st);
             // ---- Epoch boundary: hand the controller the live run ----
             // Only while work remains (a plan after the final context
@@ -487,34 +564,66 @@ impl CgraArray {
     /// `st.cycle` further (never past state another array depends on: a
     /// fast-forward only jumps to a fill this array already scheduled).
     pub(crate) fn step_cycle<M: MemoryModel + ?Sized>(&mut self, mem: &mut M, st: &mut RunState) {
+        // ---- Post-timeout wait: runahead timed out with fills still in
+        // flight; wait them out one (clamped) jump per step, then clear
+        // the SPM temp partitions and resume with the replay. ----
+        if st.post_timeout_wait {
+            let next = self.wait_target(mem, st);
+            st.stall_cycles += next - st.cycle;
+            st.cycle = next;
+            Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects, &mut st.completions);
+            if st.triggers.is_empty() {
+                st.post_timeout_wait = false;
+                for port in 0..self.cfg.geom.ports {
+                    mem.temp_clear(port);
+                }
+            }
+            return;
+        }
+
         // ---- Frozen-context service (normal mode only) ----
         if st.backup.is_none() && !st.retry.is_empty() {
-            let mut still = Vec::new();
-            for (port, req, node, iter, is_read) in st.retry.drain(..) {
-                match mem.request(port, req, st.cycle) {
-                    MemResponse::MshrFull => still.push((port, req, node, iter, is_read)),
-                    MemResponse::HitSpm { data } | MemResponse::HitL1 { data } => {
-                        if is_read {
-                            st.effects.insert((node, iter), Some(data));
-                        } else {
+            if st.cycle >= st.retry_at {
+                debug_assert!(st.scratch_retry.is_empty());
+                for (port, req, node, iter, is_read) in st.retry.drain(..) {
+                    match mem.request(port, req, st.cycle) {
+                        MemResponse::MshrFull => {
+                            st.scratch_retry.push((port, req, node, iter, is_read))
+                        }
+                        MemResponse::HitSpm { data } | MemResponse::HitL1 { data } => {
+                            if is_read {
+                                st.effects.insert((node, iter), Some(data));
+                            } else {
+                                st.effects.insert((node, iter), None);
+                            }
+                        }
+                        MemResponse::ReadMiss { .. } => {
+                            let block = mem.block_addr(port, req.addr);
+                            st.uncovered += 1;
+                            st.triggers.push(Trigger { port, block, node, iter, addr: req.addr });
+                        }
+                        MemResponse::WriteQueued => {
                             st.effects.insert((node, iter), None);
                         }
                     }
-                    MemResponse::ReadMiss { .. } => {
-                        let block = mem.block_addr(port, req.addr);
-                        st.uncovered += 1;
-                        st.triggers.push(Trigger { port, block, node, iter, addr: req.addr });
-                    }
-                    MemResponse::WriteQueued => {
-                        st.effects.insert((node, iter), None);
-                    }
+                }
+                std::mem::swap(&mut st.retry, &mut st.scratch_retry);
+                if !st.retry.is_empty() {
+                    // A bounced request's outcome can only change when a
+                    // fill frees a structural resource — at the next
+                    // timewheel event. Both cores re-attempt exactly
+                    // there (see `RunState::retry_at`).
+                    st.retry_at = mem.next_event().unwrap_or(st.cycle + 1).max(st.cycle + 1);
                 }
             }
-            st.retry = still;
             if !st.retry.is_empty() {
-                st.stall_cycles += 1;
-                st.cycle += 1;
-                Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects);
+                let next = match self.cfg.core {
+                    SimCore::Reference => st.cycle + 1,
+                    SimCore::Event => st.retry_at.min(st.ff_clamp).max(st.cycle + 1),
+                };
+                st.stall_cycles += next - st.cycle;
+                st.cycle = next;
+                Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects, &mut st.completions);
                 return;
             }
         }
@@ -523,10 +632,16 @@ impl CgraArray {
             match self.cfg.mode {
                 ExecMode::Normal => {
                     // ---- Plain stall: fast-forward to the next fill ----
-                    let next = mem.next_event().unwrap_or(st.cycle + 1).max(st.cycle + 1);
+                    let next = self.wait_target(mem, st);
                     st.stall_cycles += next - st.cycle;
                     st.cycle = next;
-                    Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects);
+                    Self::drain(
+                        mem,
+                        st.cycle,
+                        &mut st.triggers,
+                        &mut st.effects,
+                        &mut st.completions,
+                    );
                     return;
                 }
                 ExecMode::Runahead => {
@@ -544,6 +659,30 @@ impl CgraArray {
         }
 
         let in_runahead = st.backup.is_some();
+        if in_runahead && st.ctx >= st.end_ctx {
+            // ---- Runahead dead cycles: the speculative schedule is
+            // exhausted (no node has an iteration left to fire), so
+            // nothing can execute until a fill resolves the triggers or
+            // the deadline hits — jump straight to whichever comes
+            // first. ----
+            let next = match self.cfg.core {
+                SimCore::Reference => st.cycle + 1,
+                SimCore::Event => mem
+                    .next_event()
+                    .unwrap_or(st.ra_deadline)
+                    .min(st.ra_deadline)
+                    .min(st.ff_clamp)
+                    .max(st.cycle + 1),
+            };
+            let d = next - st.cycle;
+            st.cycle = next;
+            st.stall_cycles += d;
+            st.runahead_cycles += d;
+            st.ctx += d; // speculative progress (discarded on exit)
+            Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects, &mut st.completions);
+            self.check_runahead_exit(mem, st);
+            return;
+        }
         // ---- Execute one cycle of the schedule ----
         let slot = (st.ctx % st.ii) as usize;
         for si in 0..self.slot_nodes[slot].len() {
@@ -615,8 +754,29 @@ impl CgraArray {
         // else: context frozen; ctx stays, effects/triggers persist.
 
         // ---- Fill completions ----
-        Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects);
+        Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects, &mut st.completions);
 
+        self.check_runahead_exit(mem, st);
+    }
+
+    /// Jump target for a plain wait step: the event core jumps to the
+    /// memory timewheel's next completion (clamped, but always ≥ 1 cycle
+    /// of progress), the reference core to the next cycle.
+    #[inline]
+    fn wait_target<M: MemoryModel + ?Sized>(&self, mem: &M, st: &RunState) -> Cycle {
+        match self.cfg.core {
+            SimCore::Reference => st.cycle + 1,
+            SimCore::Event => {
+                mem.next_event().unwrap_or(st.cycle + 1).min(st.ff_clamp).max(st.cycle + 1)
+            }
+        }
+    }
+
+    /// Runahead exit check: when every trigger resolved (or the episode
+    /// timed out), restore the backup registers; a timeout with fills
+    /// still in flight parks the run in `post_timeout_wait` instead of
+    /// waiting inline, so the cluster interleaver observes every jump.
+    fn check_runahead_exit<M: MemoryModel + ?Sized>(&mut self, mem: &mut M, st: &mut RunState) {
         if st.backup.is_some() {
             let resolved = st.triggers.is_empty();
             let timed_out = st.cycle >= st.ra_deadline;
@@ -626,16 +786,13 @@ impl CgraArray {
                 st.ctx = b.ctx;
                 self.vals.copy_from_slice(&self.backup_vals);
                 if timed_out && !resolved {
-                    // Degenerate: wait out the remaining fills plainly.
-                    while !st.triggers.is_empty() {
-                        let next = mem.next_event().unwrap_or(st.cycle + 1).max(st.cycle + 1);
-                        st.stall_cycles += next - st.cycle;
-                        st.cycle = next;
-                        Self::drain(mem, st.cycle, &mut st.triggers, &mut st.effects);
+                    // Degenerate: wait out the remaining fills plainly,
+                    // one step at a time (see the top of `step_cycle`).
+                    st.post_timeout_wait = true;
+                } else {
+                    for port in 0..self.cfg.geom.ports {
+                        mem.temp_clear(port);
                     }
-                }
-                for port in 0..self.cfg.geom.ports {
-                    mem.temp_clear(port);
                 }
                 // Replay the frozen context; trigger loads consume the
                 // effects latched by drain().
@@ -654,7 +811,7 @@ impl CgraArray {
         cycle: Cycle,
         triggers: &mut Vec<Trigger>,
         effects: &mut CycleEffects,
-        retry: &mut Vec<(usize, MemRequest, NodeId, u64, bool)>,
+        retry: &mut Vec<RetryEntry>,
         uncovered: &mut u64,
     ) {
         let pe = self.mapping.place[node].0;
@@ -686,7 +843,7 @@ impl CgraArray {
         data: u32,
         cycle: Cycle,
         effects: &mut CycleEffects,
-        retry: &mut Vec<(usize, MemRequest, NodeId, u64, bool)>,
+        retry: &mut Vec<RetryEntry>,
     ) {
         let pe = self.mapping.place[node].0;
         self.trace.record(TraceEvent { cycle, pe, port, addr, is_write: true });
@@ -700,14 +857,18 @@ impl CgraArray {
     }
 
     /// Apply fill completions; resolved triggers latch their data into the
-    /// frozen context's effects for replay.
+    /// frozen context's effects for replay. `scratch` is the RunState's
+    /// reusable completion buffer — the hot path performs no allocation.
     fn drain<M: MemoryModel + ?Sized>(
         mem: &mut M,
         cycle: Cycle,
         triggers: &mut Vec<Trigger>,
         effects: &mut CycleEffects,
+        scratch: &mut Vec<MemResponseComplete>,
     ) {
-        for done in mem.tick(cycle) {
+        mem.tick_into(cycle, scratch);
+        for di in 0..scratch.len() {
+            let done = scratch[di];
             let mut i = 0;
             while i < triggers.len() {
                 let t = triggers[i];
@@ -1162,6 +1323,116 @@ mod tests {
         let hooked = arr2.run_with(&mut mem2, 32, Some((&mut ctl, 8)));
         assert_eq!(ctl.calls, 0, "no capability, no controller invocation");
         assert_eq!(hooked.cycles, plain.cycles);
+    }
+
+    /// Run the same kernel under both stepping cores and demand exact
+    /// equality of the full `RunResult` (cycles, stalls, every memory
+    /// stat) and of the backing store.
+    fn assert_cores_agree(
+        mk_dfg: &dyn Fn() -> Dfg,
+        mk_mem: &dyn Fn() -> MemorySubsystem,
+        tweak: &dyn Fn(&mut CgraConfig),
+        mode: ExecMode,
+        n: u64,
+    ) -> RunResult {
+        let run = |core: SimCore| {
+            let dfg = mk_dfg();
+            let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
+            let mapping = Mapper::new(geom).map(&dfg).unwrap();
+            let mut cfg = CgraConfig::hycube_4x4(mode);
+            cfg.core = core;
+            tweak(&mut cfg);
+            let mut mem = mk_mem();
+            let mut arr = CgraArray::new(cfg, dfg, mapping);
+            let res = arr.run(&mut mem, n);
+            // Covers the SPM windows and every array this suite touches.
+            (res, mem.backing.dump_u32(0, 0x14000))
+        };
+        let (ev, ev_out) = run(SimCore::Event);
+        let (rf, rf_out) = run(SimCore::Reference);
+        assert_eq!(ev, rf, "event and reference cores must be byte-identical");
+        assert_eq!(ev_out, rf_out, "backing stores diverged");
+        ev
+    }
+
+    #[test]
+    fn event_core_matches_reference_on_stall_and_runahead_paths() {
+        let mk_mem = || {
+            let mut mem = small_mem(2);
+            for i in 0..256u32 {
+                mem.backing.write_u32(0x10000 + i * 4, i);
+                mem.backing.write_u32(0x20000 + i * 4, 100 + i);
+            }
+            mem
+        };
+        let n = 256;
+        let normal = assert_cores_agree(&vecadd_dfg, &mk_mem, &|_| {}, ExecMode::Normal, n);
+        assert!(normal.stall_cycles > 0, "must exercise the stall fast-forward");
+        let ra = assert_cores_agree(&vecadd_dfg, &mk_mem, &|_| {}, ExecMode::Runahead, n);
+        assert!(ra.runahead_entries > 0, "must exercise runahead");
+    }
+
+    #[test]
+    fn event_core_matches_reference_through_frozen_retry_loop() {
+        // The single-entry-MSHR kernel: every iteration bounces on the
+        // structural hazard, driving the gated retry path in both cores.
+        let mk_dfg = || {
+            let mut b = DfgBuilder::new("mshr1");
+            let i = b.iter_idx();
+            let av = b.array_load(0, 0x10000, i);
+            let two = b.konst(2);
+            let i4 = b.alu(AluOp::Shl, i, two);
+            b.array_store(0, 0x20000, i4, av);
+            b.finish()
+        };
+        let mk_mem = || {
+            let mut cfg = small_cfg(2);
+            cfg.mshr_entries = 1;
+            cfg.store_buffer_entries = 1;
+            let mut mem = MemorySubsystem::new(cfg, 1 << 20);
+            mem.place_spm(0, 0x0000);
+            mem.place_spm(1, 0x1000);
+            for k in 0..16u32 {
+                mem.backing.write_u32(0x10000 + k * 4, 7 + k);
+            }
+            mem
+        };
+        let res = assert_cores_agree(&mk_dfg, &mk_mem, &|_| {}, ExecMode::Normal, 16);
+        assert!(res.mem.mshr_full_stalls > 0, "the structural hazard must fire");
+    }
+
+    #[test]
+    fn event_core_matches_reference_through_runahead_timeout() {
+        // Irregular gather with a tiny runahead budget: episodes time out
+        // with fills in flight, driving the dead-cycle jump and the
+        // post-timeout wait in both cores.
+        let mk_dfg = || {
+            let mut b = DfgBuilder::new("gather");
+            let i = b.iter_idx();
+            let idx = b.array_load(0, 0x0000, i);
+            let v = b.array_load(1, 0x40000, idx);
+            b.array_store(1, 0x1000, i, v);
+            b.finish()
+        };
+        let mk_mem = || {
+            let mut mem = small_mem(2);
+            let mut x = 99u32;
+            for k in 0..64u32 {
+                x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                let idx = x % 4096;
+                mem.backing.write_u32(k * 4, idx);
+                mem.backing.write_u32(0x40000 + idx * 4, k);
+            }
+            mem
+        };
+        let res = assert_cores_agree(
+            &mk_dfg,
+            &mk_mem,
+            &|cfg| cfg.max_runahead_cycles = 4,
+            ExecMode::Runahead,
+            64,
+        );
+        assert!(res.runahead_entries > 0, "must enter (and time out of) runahead");
     }
 
     #[test]

@@ -103,7 +103,7 @@ pub struct ClusterJob {
 }
 
 /// Per-job serving record.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct JobOutcome {
     /// Index in the arrival queue.
     pub job: usize,
@@ -125,7 +125,7 @@ impl JobOutcome {
 /// Per-array aggregate over the whole serving run (satellite: per-array
 /// stat attribution — each slot's private stats include the L2/DRAM
 /// counters *its* requests generated against the shared levels).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ArrayOutcome {
     pub jobs_run: u64,
     /// Dispatches that had to rewrite the config memories (family change).
@@ -154,7 +154,7 @@ impl ArrayOutcome {
 }
 
 /// Everything a serving run produced.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ClusterOutcome {
     /// One record per queued job, in arrival order.
     pub jobs: Vec<JobOutcome>,
@@ -469,7 +469,28 @@ impl Cluster {
                 }
             }
             let Some((_, i)) = next else { break };
+            // Event-core fast-forward clamp: a stall jump may not overtake
+            // any other live slot, so shared-L2/DRAM requests keep arriving
+            // in globally non-decreasing cycle order — the contention state
+            // (L2 lookup port, bank/bus busy windows, row buffers) is
+            // touched in exactly the order reference stepping would touch
+            // it. Epoch-hook boundaries clamp too, so the hook fires at the
+            // same cycle as under +1 stepping. The clamp may equal the
+            // slot's own cycle on ties; the jump's `max(cycle + 1)` floor
+            // still guarantees progress.
+            let mut clamp = u64::MAX;
+            for (j, o) in running.iter().enumerate() {
+                if let Some(o) = o {
+                    if j != i {
+                        clamp = clamp.min(o.st.cycle);
+                    }
+                }
+            }
             let r = running[i].as_mut().expect("selected slot is running");
+            if r.st.cycle < r.next_epoch {
+                clamp = clamp.min(r.next_epoch);
+            }
+            r.st.ff_clamp = clamp;
             self.slots.with(i, |mem| r.arr.step_cycle(mem, &mut r.st));
 
             // Per-slot epoch hook, mirroring `run_with`: only while work
@@ -664,6 +685,25 @@ mod tests {
         assert_ne!(out.jobs[0].slot, out.jobs[1].slot);
         assert!(out.all_outputs_ok());
         assert!(out.makespan < run_cluster(1, SchedulerKind::Fifo, &two_family_queue()).makespan);
+    }
+
+    #[test]
+    fn event_core_matches_reference_on_cluster_serving() {
+        // The clamp proof at cluster level: with two runahead slots
+        // contending on one shared L2 + channel, the event core's clamped
+        // jumps must leave every job record, per-array stat block, and
+        // shared-channel counter identical to reference +1 stepping.
+        let run = |core| {
+            let mut cfg = cgra();
+            cfg.core = core;
+            let spec = ClusterSpec { arrays: 2, scheduler: SchedulerKind::Fifo };
+            let mut c = Cluster::new(spec, &MemoryModelSpec::Hierarchy(small_cfg()));
+            c.run(cfg, &two_family_queue())
+        };
+        let ev = run(crate::sim::SimCore::Event);
+        let rf = run(crate::sim::SimCore::Reference);
+        assert!(ev.all_outputs_ok());
+        assert_eq!(ev, rf, "event and reference cores must agree byte-for-byte");
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod trace;
 pub use alu::{AluOp, Value};
 pub use array::{
     CgraArray, CgraConfig, EpochController, ExecMode, ReconfigMode, ReconfigPolicy, RunResult,
-    RunaheadAblation,
+    RunaheadAblation, SimCore,
 };
 pub use cluster::{
     ArrayOutcome, Cluster, ClusterJob, ClusterOutcome, ClusterSpec, JobOutcome, SchedulerKind,

@@ -197,6 +197,72 @@ fn prop_cluster_serving_is_deterministic_across_runs_and_worker_counts() {
     assert_eq!(a, c, "worker count must not leak into cluster measurements");
 }
 
+/// Force a system's CGRA (solo or cluster) onto one simulation core.
+/// Cpu models have no core knob — they are untouched by design.
+fn with_core(mut sys: cgra_mem::exp::SystemSpec, core: cgra_mem::sim::SimCore) -> cgra_mem::exp::SystemSpec {
+    use cgra_mem::exp::ExecModel;
+    match &mut sys.exec {
+        ExecModel::Cgra { cgra, .. } | ExecModel::Cluster { cgra, .. } => cgra.core = core,
+        ExecModel::Cpu(_) => {}
+    }
+    sys
+}
+
+/// The tentpole proof: the event-driven core (timewheel completions +
+/// stall fast-forwarding) is *byte-identical* to the reference +1-stepping
+/// core — same Measurements, same rendered report — across the memory
+/// backends with different stall shapes: SPM-only (structural MSHR=1
+/// stalls), Cache+SPM (plain miss stalls), Runahead (dead cycles, timeout
+/// waits), and the banked-DRAM channel (bank/row-dependent latencies).
+#[test]
+fn prop_event_core_report_is_byte_identical_to_reference_core() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, ScenarioSpec, SystemSpec};
+    use cgra_mem::sim::SimCore;
+    let render = |core: SimCore| {
+        let systems = [
+            SystemSpec::spm_only(),
+            SystemSpec::cache_spm(),
+            SystemSpec::runahead(),
+            SystemSpec::banked_dram(),
+        ]
+        .map(|s| with_core(s, core));
+        let spec = ExperimentSpec::new("core-equivalence")
+            .workload(ScenarioSpec::preset("aggregate/tiny"))
+            .workload(ScenarioSpec::preset("small/phased"))
+            .workload(ScenarioSpec::preset("small/join_probe"))
+            .systems(systems);
+        Engine::new(1).run(&spec).to_json().render_pretty()
+    };
+    assert_eq!(
+        render(SimCore::Event),
+        render(SimCore::Reference),
+        "event core must reproduce the reference core byte-for-byte"
+    );
+}
+
+/// Cluster clamp proof: on a skewed 24-job mix, serving results
+/// (makespan, per-job records, per-array stats, channel row/xarray
+/// counters — everything in the rendered report) are byte-identical
+/// across worker counts AND across simulation cores. The fast-forward
+/// clamp pins every jump below the minimum cycle of the other live
+/// slots, so shared-L2/DRAM contention ordering cannot drift.
+#[test]
+fn prop_cluster_results_identical_across_cores_and_workers() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, ScenarioSpec, SystemSpec};
+    use cgra_mem::sim::SimCore;
+    let render = |threads: usize, core: SimCore| {
+        let systems =
+            [SystemSpec::cluster_runahead(2), SystemSpec::cluster_locality()].map(|s| with_core(s, core));
+        let spec = ExperimentSpec::new("cluster-core-equivalence")
+            .workload(ScenarioSpec::mix(24, 0.8, 11))
+            .systems(systems);
+        Engine::new(threads).run(&spec).to_json().render_pretty()
+    };
+    let reference = render(1, SimCore::Reference);
+    assert_eq!(render(1, SimCore::Event), reference, "event core drifted on the cluster mix");
+    assert_eq!(render(4, SimCore::Event), reference, "worker count leaked into cluster results");
+}
+
 #[test]
 fn prop_mapper_produces_valid_schedules() {
     let mut rng = Rng::new(2024);
