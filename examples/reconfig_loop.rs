@@ -30,7 +30,7 @@ fn main() {
         let base = arr0.run(&mut mem0, wl.iterations());
         // Online: the controller rides the epoch hook, sampling the live
         // trace window and rewriting way permissions mid-run.
-        cgra.trace_window = policy.window;
+        cgra.monitor_window = policy.window;
         let (mut mem, mut arr, layout) =
             prepare(wl.as_ref(), SubsystemConfig::paper_reconfig(), cgra);
         let mut ctl = OnlineController::from_policy(&policy);

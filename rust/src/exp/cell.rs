@@ -58,7 +58,12 @@ use crate::sim::CgraConfig;
 /// requests are counted, and the timewheel's global (cycle, port, entry)
 /// pop order replaces the old per-port MSHR scan order at the shared
 /// L2 (different writeback/LRU interleavings).
-pub const STORE_FORMAT_VERSION: u64 = 4;
+///
+/// v5: replay systems (`ExecModel::Replay`) joined the identity space and
+/// the cgra identity renamed `trace_window` to `monitor_window` (PR 8).
+/// The same salt keys the trace store, so v4 trace files are orphaned
+/// alongside v4 cells.
+pub const STORE_FORMAT_VERSION: u64 = 5;
 
 /// Content address of one (scenario, system, repeat) cell.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -178,6 +183,19 @@ pub fn system_identity(s: &SystemSpec) -> Json {
             ),
             ("mem", mem_json(mem)),
         ]),
+        // A replay cell's identity is the memory system it re-times, the
+        // cgra knobs replay still honors (monitor window, reconfig policy,
+        // frequency), and the *full identity of the producing system* —
+        // two replays of captures from different sources are different
+        // experiments even when their own mem/cgra agree.
+        ExecModel::Replay { mem, cgra, source } => Json::obj(vec![(
+            "replay",
+            Json::obj(vec![
+                ("cgra", cgra_json(cgra)),
+                ("mem", mem_json(mem)),
+                ("source", system_identity(source)),
+            ]),
+        )]),
     }
 }
 
@@ -265,6 +283,10 @@ fn ideal_json(c: &IdealConfig) -> Json {
 // event and reference cores produce byte-identical measurements (that is
 // the `SimCore` contract, enforced by the equivalence property tests), so
 // hashing the knob would only split the cache for runs that cannot differ.
+// `CgraConfig::capture` is excluded for the same reason: the recorder is
+// purely observational (it never touches timing or data), so a capture
+// run measures the identical cell — which is what lets the capture
+// pre-pass double as the sweep's one live measurement.
 fn cgra_json(c: &CgraConfig) -> Json {
     Json::obj(vec![
         (
@@ -285,7 +307,7 @@ fn cgra_json(c: &CgraConfig) -> Json {
         ),
         ("max_runahead_cycles", Json::u64(c.max_runahead_cycles)),
         ("freq_mhz", Json::num(c.freq_mhz)),
-        ("trace_window", Json::u64(c.trace_window as u64)),
+        ("monitor_window", Json::u64(c.monitor_window as u64)),
         (
             "ablation",
             Json::obj(vec![

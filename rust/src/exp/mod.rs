@@ -34,6 +34,7 @@ pub mod json;
 pub mod registry;
 pub mod session;
 pub mod store;
+pub mod tracestore;
 
 pub use cell::{CellKey, STORE_FORMAT_VERSION};
 pub use engine::{default_parallelism, Engine};
@@ -43,15 +44,17 @@ pub use registry::{
 };
 pub use session::{CellEvent, JobId, Provenance, Session, SessionStats};
 pub use store::ResultStore;
+pub use tracestore::TraceStore;
 
 use crate::baseline::{run_cpu, CpuModel};
 use crate::mem::{
     BankedDramConfig, CacheConfig, DramModelKind, IdealConfig, MemoryModelSpec, RowPolicy,
     SubsystemConfig,
 };
+use crate::reconfig::OnlineController;
 use crate::sim::{
-    CgraConfig, Cluster, ClusterJob, ClusterSpec, ExecMode, Geometry, ReconfigMode,
-    ReconfigPolicy, SchedulerKind,
+    replay, CapturedTrace, CgraConfig, Cluster, ClusterJob, ClusterSpec, EpochController,
+    ExecMode, Geometry, ReconfigMode, ReconfigPolicy, ReplayOutcome, SchedulerKind,
 };
 use crate::workloads::{run_workload_model, MixSpec, Workload};
 
@@ -84,6 +87,13 @@ pub enum ExecModel {
     /// Regular scenarios run as `arrays` homogeneous copies (saturation);
     /// `"mix"` scenarios expand a [`MixSpec`] into the request queue.
     Cluster { mem: MemoryModelSpec, cgra: CgraConfig, cluster: ClusterSpec },
+    /// Trace replay: re-time `source`'s captured access stream through
+    /// `mem` — no DFG execution. `cgra` carries the knobs replay still
+    /// honors (monitor window, reconfiguration policy, clock). The
+    /// session resolves `source` to a capture (running it once, with
+    /// recording on, if the trace store misses) and feeds the recording
+    /// through [`measure_replay`].
+    Replay { mem: MemoryModelSpec, cgra: CgraConfig, source: Box<SystemSpec> },
 }
 
 /// A system under test, as data. Replaces the closed `System` enum.
@@ -223,6 +233,41 @@ impl SystemSpec {
         self
     }
 
+    /// A replay system: `source`'s recorded access stream re-timed
+    /// through `mem` (geometry sweeps without re-running the DFG). The
+    /// source must be a solo CGRA system, and the replay backend must
+    /// present the same port count the capture was recorded against.
+    pub fn replay_of(
+        name: impl Into<String>,
+        source: SystemSpec,
+        mem: MemoryModelSpec,
+        cgra: CgraConfig,
+    ) -> Self {
+        let ExecModel::Cgra { cgra: src_cgra, .. } = &source.exec else {
+            panic!("replay source {:?} must be a solo CGRA system", source.name)
+        };
+        assert_eq!(
+            mem.num_ports(),
+            src_cgra.geom.ports,
+            "replay backend port count must match the capture's ({:?})",
+            source.name
+        );
+        SystemSpec {
+            name: name.into(),
+            exec: ExecModel::Replay { mem, cgra, source: Box::new(source) },
+        }
+    }
+
+    /// This spec with the full-stream capture recorder switched on (solo
+    /// CGRA systems only) — what the session runs for a capture pre-pass.
+    pub fn with_capture(mut self) -> Self {
+        match &mut self.exec {
+            ExecModel::Cgra { cgra, .. } => cgra.capture = true,
+            other => panic!("capture applies to solo CGRA systems, not {other:?}"),
+        }
+        self
+    }
+
     /// Parse a system from a JSON object:
     /// `{"base": "Runahead", "name": "Runahead-8x8", "geometry": "8x8",
     ///   "l1_ways": 2, ...}` — `base` picks a built-in system, the other
@@ -236,14 +281,78 @@ impl SystemSpec {
     /// bearing hierarchy systems only); `"cluster_arrays"` (1..=15) turns
     /// a CGRA system into a serving cluster of that many arrays and
     /// `"cluster_scheduler"` (`"fifo"` | `"sjf"` | `"locality"`) picks its
-    /// dispatch policy.
+    /// dispatch policy. `"monitor_window"` bounds the phase detector's
+    /// observation window, `"capture": true` records the run's full access
+    /// stream, and `"replay_of"` (a system name or object) turns the entry
+    /// into a replay system: the named source's capture re-timed through
+    /// this entry's memory backend — no DFG execution per sweep point.
     pub fn from_json(v: &Json) -> Result<SystemSpec, String> {
-        const KNOWN: [&str; 26] = [
+        let spec = SystemSpec::parse_solo(v)?;
+        let Some(src) = v.get("replay_of") else { return Ok(spec) };
+        // The replay side never executes a DFG, so a recorder flag on it
+        // would be the silent no-op trap.
+        if v.get("capture").is_some() {
+            return Err(
+                "\"capture\" does not apply to a replay system (the source run records)".into()
+            );
+        }
+        let source = match src {
+            Json::Str(name) => system_named(name)
+                .ok_or_else(|| format!("unknown \"replay_of\" base system {name:?}"))?,
+            Json::Obj(_) => SystemSpec::from_json(src)?,
+            other => {
+                return Err(format!(
+                    "\"replay_of\" must be a system name or object, got {}",
+                    other.render()
+                ))
+            }
+        };
+        let ExecModel::Cgra { cgra: src_cgra, .. } = &source.exec else {
+            return Err(format!(
+                "\"replay_of\" source {:?} must be a solo CGRA system \
+                 (not a CPU, cluster or nested replay)",
+                source.name
+            ));
+        };
+        let (mem, cgra) = match spec.exec {
+            ExecModel::Cgra { mem, cgra } => (mem, cgra),
+            ExecModel::Cpu(_) => {
+                return Err("\"replay_of\" does not apply to a CPU system".into())
+            }
+            ExecModel::Cluster { .. } => {
+                return Err(
+                    "\"replay_of\" does not apply to a cluster system \
+                     (captures are per-array)"
+                        .into(),
+                )
+            }
+            ExecModel::Replay { .. } => unreachable!("parse_solo never builds a replay"),
+        };
+        if mem.num_ports() != src_cgra.geom.ports {
+            return Err(format!(
+                "\"replay_of\": the replay backend has {} ports but source {:?} \
+                 records {} — match the geometries",
+                mem.num_ports(),
+                source.name,
+                src_cgra.geom.ports
+            ));
+        }
+        Ok(SystemSpec {
+            name: spec.name,
+            exec: ExecModel::Replay { mem, cgra, source: Box::new(source) },
+        })
+    }
+
+    /// The non-replay half of [`SystemSpec::from_json`]: parses every key
+    /// except the `"replay_of"` wrapper (which re-enters via the public
+    /// entry point so nested sources get full validation).
+    fn parse_solo(v: &Json) -> Result<SystemSpec, String> {
+        const KNOWN: [&str; 29] = [
             "base", "name", "mode", "geometry", "memory", "spm_bytes", "mshr", "freq_mhz",
             "shared_l1", "l1_bytes", "l1_ways", "l1_line", "l2_bytes", "l2_ways", "l2_line",
             "dram_model", "dram_banks", "dram_row_bytes", "dram_policy", "dram_latency",
             "reconfig", "reconfig_period", "reconfig_threshold", "reconfig_window",
-            "cluster_arrays", "cluster_scheduler",
+            "cluster_arrays", "cluster_scheduler", "monitor_window", "capture", "replay_of",
         ];
         // Keys that configure the hierarchy backend and are meaningless
         // (and therefore hard errors) on the ideal backend.
@@ -398,6 +507,32 @@ impl SystemSpec {
                     ));
                 }
                 cgra.reconfig.window = w as usize;
+            }
+            // ---- observation window + capture recorder (distinct knobs:
+            // the monitor window bounds the phase detector's view, the
+            // capture flag records the full stream for replay) ----
+            if let Some(w) = u64_field(v, "monitor_window")? {
+                if w == 0 || w > (1 << 20) {
+                    return Err(format!(
+                        "\"monitor_window\" must be in 1..=1048576, got {w}"
+                    ));
+                }
+                cgra.monitor_window = w as usize;
+            }
+            if let Some(j) = v.get("capture") {
+                let b = j.as_bool().ok_or_else(|| {
+                    format!("\"capture\" must be a boolean, got {}", j.render())
+                })?;
+                if b && cluster.is_some() {
+                    // Cluster jobs interleave on shared arrays; a single
+                    // per-array stream is not the scenario's stream.
+                    return Err(
+                        "\"capture\" does not apply to a cluster system \
+                         (recordings are per solo array)"
+                            .into(),
+                    );
+                }
+                cgra.capture = b;
             }
             // ---- memory-backend selection (strict: a bad value must
             // never silently run the base's backend) ----
@@ -651,7 +786,7 @@ impl SystemSpec {
             if let Some(k) = RECONFIG_KEYS.into_iter().find(|k| v.get(k).is_some()) {
                 return Err(format!("{k:?} does not apply to a CPU system"));
             }
-            if let Some(k) = ["cluster_arrays", "cluster_scheduler"]
+            if let Some(k) = ["cluster_arrays", "cluster_scheduler", "monitor_window", "capture"]
                 .into_iter()
                 .find(|k| v.get(k).is_some())
             {
@@ -902,10 +1037,21 @@ impl Measurement {
 
 /// Execute one workload on one system described as data.
 pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
+    measure_spec_captured(wl, spec).0
+}
+
+/// [`measure_spec`] plus the run's recording, when the spec's capture flag
+/// is on ([`CgraConfig::capture`]). The session's capture pre-pass uses
+/// this so the sweep's one live measurement and the trace that replay
+/// re-times both come from the same execution.
+pub fn measure_spec_captured(
+    wl: &dyn Workload,
+    spec: &SystemSpec,
+) -> (Measurement, Option<CapturedTrace>) {
     match &spec.exec {
         ExecModel::Cpu(model) => {
             let r = run_cpu(wl, *model);
-            Measurement {
+            let m = Measurement {
                 workload: wl.name(),
                 system: spec.name.clone(),
                 repeat: 0,
@@ -935,12 +1081,14 @@ pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
                 cluster_p99_cycles: 0,
                 cluster_xarray_conflicts: 0,
                 cluster_miss_spread: 0.0,
-            }
+            };
+            (m, None)
         }
         ExecModel::Cgra { mem, cgra } => {
-            let run = run_workload_model(wl, mem, *cgra);
+            let mut run = run_workload_model(wl, mem, *cgra);
+            let capture = run.capture.take();
             let r = &run.result;
-            Measurement {
+            let m = Measurement {
                 workload: wl.name(),
                 system: spec.name.clone(),
                 repeat: 0,
@@ -970,7 +1118,8 @@ pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
                 cluster_p99_cycles: 0,
                 cluster_xarray_conflicts: 0,
                 cluster_miss_spread: 0.0,
-            }
+            };
+            (m, capture)
         }
         ExecModel::Cluster { .. } => {
             // A cluster cell needs the registry to instantiate its job
@@ -980,7 +1129,104 @@ pub fn measure_spec(wl: &dyn Workload, spec: &SystemSpec) -> Measurement {
                 spec.name
             )
         }
+        ExecModel::Replay { .. } => {
+            // A replay cell needs the trace store to resolve its source
+            // capture — route through a session ([`measure_replay`]).
+            panic!(
+                "replay system {:?} must be measured via a session, not measure_spec",
+                spec.name
+            )
+        }
     }
+}
+
+/// Re-time a captured access stream through a replay spec's memory
+/// backend — the whole point of the trace engine: every sweep point after
+/// the capture pre-pass costs a [`sim::replay`](crate::sim::replay) pass
+/// instead of a DFG simulation.
+///
+/// The memory columns of the returned [`Measurement`] are produced by the
+/// same formulas as a live run's; for a backend configured identically to
+/// the capture's they are bit-identical. Two columns are out of replay's
+/// reach and documented as such: `output_ok` is inherited as `true` (the
+/// producing run validated outputs; replay never touches data) and
+/// `irregular_share` is 0 (the access-pattern classification lives in the
+/// workload layout, which the trace does not record).
+pub fn measure_replay(
+    scenario_name: &str,
+    spec: &SystemSpec,
+    trace: &CapturedTrace,
+) -> Result<(Measurement, ReplayOutcome), String> {
+    let ExecModel::Replay { mem, cgra, .. } = &spec.exec else {
+        return Err(format!("measure_replay needs a replay system, got {:?}", spec.name));
+    };
+    let mut model = mem.build(trace.header.backing_bytes as usize);
+    let mut hook = if cgra.reconfig.mode != ReconfigMode::Off {
+        if model.reconfig().is_none() {
+            return Err(format!(
+                "replay system {:?} has a reconfig policy but its backend \
+                 has no reconfigurable cache",
+                spec.name
+            ));
+        }
+        Some(OnlineController::from_policy(&cgra.reconfig))
+    } else {
+        None
+    };
+    let monitor_window = if cgra.reconfig.mode != ReconfigMode::Off {
+        cgra.monitor_window.max(cgra.reconfig.window)
+    } else {
+        cgra.monitor_window
+    };
+    let period = cgra.reconfig.period;
+    let out = replay(
+        trace,
+        model.as_mut(),
+        hook.as_mut().map(|c| (c as &mut dyn EpochController, period)),
+        monitor_window,
+    )?;
+    let num_pes = u64::from(out.num_pes);
+    let uncovered_total = out.mem.prefetch_used + out.uncovered_misses;
+    let m = Measurement {
+        workload: scenario_name.to_string(),
+        system: spec.name.clone(),
+        repeat: 0,
+        time_us: out.cycles as f64 / cgra.freq_mhz,
+        cycles: out.cycles,
+        stall_cycles: out.stall_cycles,
+        utilization: if out.cycles == 0 {
+            0.0
+        } else {
+            out.useful_ops as f64 / (num_pes * out.cycles) as f64
+        },
+        output_ok: true,
+        spm_accesses: out.mem.spm_accesses,
+        l1_accesses: out.mem.l1_accesses,
+        l1_hits: out.mem.l1_hits,
+        l2_accesses: out.mem.l2_accesses,
+        dram_accesses: out.mem.dram_accesses,
+        dram_row_hits: out.mem.dram_row_hits,
+        dram_row_conflicts: out.mem.dram_row_conflicts,
+        prefetch_used: out.mem.prefetch_used,
+        prefetch_evicted: out.mem.prefetch_evicted_then_demanded,
+        prefetch_useless: out.mem.prefetch_useless,
+        coverage: if uncovered_total == 0 {
+            0.0
+        } else {
+            out.mem.prefetch_used as f64 / uncovered_total as f64
+        },
+        irregular_share: 0.0,
+        runahead_entries: out.runahead_entries,
+        reconfig_applies: hook.as_ref().map_or(0, |c| c.applies),
+        reconfig_ways_moved: hook.as_ref().map_or(0, |c| c.ways_migrated),
+        cluster_jobs: 0,
+        cluster_p50_cycles: 0,
+        cluster_p95_cycles: 0,
+        cluster_p99_cycles: 0,
+        cluster_xarray_conflicts: 0,
+        cluster_miss_spread: 0.0,
+    };
+    Ok((m, out))
 }
 
 /// Execute one cluster serving run: expand the scenario into a job queue
@@ -1123,6 +1369,15 @@ pub fn measure_cell(
 ) -> Result<Measurement, String> {
     if matches!(spec.exec, ExecModel::Cluster { .. }) {
         return measure_cluster(registry, scenario, spec);
+    }
+    if matches!(spec.exec, ExecModel::Replay { .. }) {
+        // Resolving the source capture (and running the capture pre-pass
+        // on a miss) needs the trace store, which the session owns.
+        return Err(format!(
+            "replay system {:?} must be measured via a session (repro run), \
+             which owns the trace store",
+            spec.name
+        ));
     }
     if scenario.family.as_deref() == Some("mix") {
         return Err(format!(
@@ -1725,6 +1980,94 @@ mod tests {
         // CPU systems reject the cluster shape.
         let bad = Json::parse(r#"{"base": "A72", "cluster_arrays": 2}"#).unwrap();
         assert!(SystemSpec::from_json(&bad).unwrap_err().contains("CPU"));
+    }
+
+    #[test]
+    fn spec_parses_replay_and_capture_keys_strictly() {
+        // The observation window and the recorder are distinct knobs.
+        let sys =
+            Json::parse(r#"{"base": "Cache+SPM", "monitor_window": 4096, "capture": true}"#)
+                .unwrap();
+        let spec = SystemSpec::from_json(&sys).unwrap();
+        match &spec.exec {
+            ExecModel::Cgra { cgra, .. } => {
+                assert_eq!(cgra.monitor_window, 4096);
+                assert!(cgra.capture);
+            }
+            other => panic!("expected CGRA exec, got {other:?}"),
+        }
+        // A replay system: the outer keys shape the backend under sweep,
+        // "replay_of" names the capture's producer.
+        let sys = Json::parse(
+            r#"{"base": "Cache+SPM", "name": "replay 4-way", "l1_ways": 4,
+                "replay_of": "Cache+SPM"}"#,
+        )
+        .unwrap();
+        let spec = SystemSpec::from_json(&sys).unwrap();
+        assert_eq!(spec.name, "replay 4-way");
+        match &spec.exec {
+            ExecModel::Replay { mem, source, .. } => {
+                match mem {
+                    MemoryModelSpec::Hierarchy(sub) => assert_eq!(sub.l1.ways, 4),
+                    other => panic!("{other:?}"),
+                }
+                assert_eq!(source.name, "Cache+SPM");
+                assert!(matches!(source.exec, ExecModel::Cgra { .. }));
+            }
+            other => panic!("expected replay exec, got {other:?}"),
+        }
+        // An object source gets the same strict parse as a systems entry.
+        let ok = Json::parse(
+            r#"{"base": "Cache+SPM", "geometry": "8x8",
+                "replay_of": {"base": "Runahead", "geometry": "8x8"}}"#,
+        )
+        .unwrap();
+        assert!(SystemSpec::from_json(&ok).is_ok());
+        // Port-count mismatch between backend and capture is a hard error
+        // (the recorded streams would not line up with the replay ports).
+        let bad = Json::parse(
+            r#"{"base": "Cache+SPM",
+                "replay_of": {"base": "Runahead", "geometry": "8x8"}}"#,
+        )
+        .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("ports"));
+        // Sources must be solo CGRA systems: no CPUs, no nested replay.
+        let bad = Json::parse(r#"{"base": "Cache+SPM", "replay_of": "A72"}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("solo CGRA"));
+        let bad = Json::parse(
+            r#"{"base": "Cache+SPM",
+                "replay_of": {"base": "Cache+SPM", "replay_of": "Cache+SPM"}}"#,
+        )
+        .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("solo CGRA"));
+        let bad = Json::parse(r#"{"base": "Cache+SPM", "replay_of": "Warp"}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("replay_of"));
+        // ...and so must the outer system.
+        let bad = Json::parse(r#"{"base": "A72", "replay_of": "Cache+SPM"}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("CPU"));
+        let bad = Json::parse(
+            r#"{"base": "Runahead", "cluster_arrays": 2, "replay_of": "Cache+SPM"}"#,
+        )
+        .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("cluster"));
+        // A recorder flag on the replay side would be the silent no-op trap.
+        let bad =
+            Json::parse(r#"{"base": "Cache+SPM", "capture": true, "replay_of": "Cache+SPM"}"#)
+                .unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("capture"));
+        // Capture is per solo array; CPU systems have no recorder at all.
+        let bad =
+            Json::parse(r#"{"base": "Runahead", "cluster_arrays": 2, "capture": true}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("cluster"));
+        let bad = Json::parse(r#"{"base": "A72", "capture": true}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("CPU"));
+        let bad = Json::parse(r#"{"base": "A72", "monitor_window": 64}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("CPU"));
+        // Out-of-range / mistyped values are hard errors.
+        let bad = Json::parse(r#"{"base": "Cache+SPM", "monitor_window": 0}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("monitor_window"));
+        let bad = Json::parse(r#"{"base": "Cache+SPM", "capture": "yes"}"#).unwrap();
+        assert!(SystemSpec::from_json(&bad).unwrap_err().contains("boolean"));
     }
 
     #[test]

@@ -26,10 +26,16 @@
 use super::cell::{scenario_identity, system_identity, CellKey};
 use super::engine::Engine;
 use super::store::{ResultStore, StoreEntry};
-use super::{measure_cell, ExperimentSpec, Measurement, Report};
+use super::tracestore::TraceStore;
+use super::{
+    measure_cell, measure_replay, measure_spec_captured, ExecModel, ExperimentSpec, Measurement,
+    Report, ScenarioSpec, SystemSpec,
+};
+use crate::sim::CapturedTrace;
 use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Handle to one submitted experiment; redeem with [`Session::collect`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -78,6 +84,11 @@ pub struct SessionStats {
     pub session_hits: u64,
     /// Cells served from the persistent store.
     pub store_hits: u64,
+    /// Cells resolved by re-timing a captured trace (`replay_of`
+    /// systems) — memory-model passes only, no DFG simulation. Disjoint
+    /// from `executed`, which counts real simulations (including the
+    /// capture pre-passes that record traces).
+    pub replays: u64,
 }
 
 struct JobRecord {
@@ -95,6 +106,11 @@ struct Inner {
     origin: HashMap<CellKey, Provenance>,
     jobs: Vec<JobRecord>,
     store: Option<ResultStore>,
+    /// On-disk captures keyed by producing cell; rides beside the result
+    /// store (or under `target/tracestore` for storeless sessions).
+    traces: TraceStore,
+    /// Decoded captures already resolved this session.
+    trace_cache: HashMap<CellKey, Arc<CapturedTrace>>,
     stats: SessionStats,
 }
 
@@ -107,6 +123,10 @@ pub struct Session<'e> {
 
 impl<'e> Session<'e> {
     pub(super) fn new(engine: &'e Engine, store: Option<ResultStore>) -> Session<'e> {
+        let trace_dir = store
+            .as_ref()
+            .map(|s| TraceStore::beside(s.path()))
+            .unwrap_or_else(TraceStore::default_dir);
         Session {
             engine,
             inner: RefCell::new(Inner {
@@ -114,6 +134,8 @@ impl<'e> Session<'e> {
                 origin: HashMap::new(),
                 jobs: Vec::new(),
                 store,
+                traces: TraceStore::open(trace_dir),
+                trace_cache: HashMap::new(),
                 stats: SessionStats::default(),
             }),
             progress: None,
@@ -141,6 +163,77 @@ impl<'e> Session<'e> {
     pub fn store_summary(&self) -> Option<(PathBuf, usize)> {
         let inner = self.inner.borrow();
         inner.store.as_ref().map(|s| (s.path().to_path_buf(), s.len()))
+    }
+
+    /// (directory, entries, bytes) of this session's trace store.
+    pub fn trace_summary(&self) -> (PathBuf, usize, u64) {
+        let inner = self.inner.borrow();
+        let (n, bytes) = inner.traces.stats();
+        (inner.traces.dir().to_path_buf(), n, bytes)
+    }
+
+    /// Resolve the capture of `(scenario, source)` — session cache, then
+    /// trace store, then one recording run on the calling thread. The
+    /// recording doubles as the source's ordinary cell (the recorder is
+    /// outside the cell identity), so figures built on captures stay
+    /// cell-shaped: a warm re-run loads both the measurement and the
+    /// trace from disk and simulates nothing.
+    pub fn capture(
+        &self,
+        scenario: &ScenarioSpec,
+        source: &SystemSpec,
+    ) -> Result<Arc<CapturedTrace>, String> {
+        let ExecModel::Cgra { .. } = &source.exec else {
+            return Err(format!(
+                "capture needs a solo CGRA source system, got {:?}",
+                source.name
+            ));
+        };
+        let registry = self.engine.registry();
+        let scen_id = scenario_identity(registry, scenario)?;
+        let src_id = system_identity(source);
+        let key = CellKey::from_identities(&scen_id, &src_id, 0);
+        {
+            let mut inner = self.inner.borrow_mut();
+            if let Some(t) = inner.trace_cache.get(&key) {
+                return Ok(Arc::clone(t));
+            }
+            if let Some(t) = inner.traces.load(key) {
+                let t = Arc::new(t);
+                inner.trace_cache.insert(key, Arc::clone(&t));
+                return Ok(t);
+            }
+        }
+        let wl = registry.resolve(scenario)?;
+        let (mut m, cap) = measure_spec_captured(&*wl, &source.clone().with_capture());
+        let trace =
+            cap.ok_or_else(|| format!("capture of {:?} recorded no trace", source.name))?;
+        m.workload = String::new();
+        m.system = String::new();
+        m.repeat = 0;
+        let mut inner = self.inner.borrow_mut();
+        inner.stats.executed += 1;
+        if let Err(e) = inner.traces.save(key, &trace) {
+            eprintln!("(tracestore: could not write under {}: {e})", inner.traces.dir().display());
+        }
+        let trace = Arc::new(trace);
+        inner.trace_cache.insert(key, Arc::clone(&trace));
+        if !inner.cells.contains_key(&key) {
+            if let Some(store) = inner.store.as_mut() {
+                if let Err(e) = store.append_batch(vec![StoreEntry {
+                    key,
+                    scenario: scen_id,
+                    system: src_id,
+                    repeat: 0,
+                    measurement: m.clone(),
+                }]) {
+                    eprintln!("(cellstore: could not append to {}: {e})", store.path().display());
+                }
+            }
+            inner.cells.insert(key, m);
+            inner.origin.insert(key, Provenance::Computed);
+        }
+        Ok(trace)
     }
 
     /// Submit a spec: validate, decompose into cells, dedup against the
@@ -231,9 +324,130 @@ impl<'e> Session<'e> {
             }
         }
 
+        // ---- replay cells leave the normal path: their source captures
+        // resolve first, so a source row in the same spec rides the
+        // capture pre-pass instead of simulating twice ----
+        let (replay_pending, mut to_run): (Vec<Pending>, Vec<Pending>) = to_run
+            .into_iter()
+            .partition(|p| matches!(spec.systems[p.s_idx].exec, ExecModel::Replay { .. }));
+        // Trace key per replay cell: the producing (scenario, source
+        // system, repeat 0) cell. The recorder is observational — outside
+        // the cell identity — so this is also the source's ordinary key.
+        let replay_pending: Vec<(Pending, CellKey)> = replay_pending
+            .into_iter()
+            .map(|p| {
+                let ExecModel::Replay { source, .. } = &spec.systems[p.s_idx].exec else {
+                    unreachable!("partitioned above")
+                };
+                let src_id = system_identity(source);
+                (CellKey::from_identities(&scen_ids[p.w_idx], &src_id, 0), p)
+            })
+            .map(|(tk, p)| (p, tk))
+            .collect();
+
+        // Which captures are missing? (Session cache, then disk; a corrupt
+        // or version-orphaned trace file reads as a miss and re-records.)
+        let mut capture_jobs: Vec<(CellKey, usize, usize)> = Vec::new();
+        {
+            let mut inner = self.inner.borrow_mut();
+            let mut seen: HashSet<CellKey> = HashSet::new();
+            for (p, tk) in &replay_pending {
+                if inner.trace_cache.contains_key(tk) || !seen.insert(*tk) {
+                    continue;
+                }
+                if let Some(t) = inner.traces.load(*tk) {
+                    inner.trace_cache.insert(*tk, Arc::new(t));
+                } else {
+                    capture_jobs.push((*tk, p.w_idx, p.s_idx));
+                }
+            }
+        }
+        // A source row of this very spec that was about to simulate
+        // plainly: the capture pre-pass doubles as its measurement.
+        let mut adopted: Vec<Pending> = Vec::new();
+        for (tk, _, _) in &capture_jobs {
+            if let Some(pos) = to_run.iter().position(|p| p.key == *tk) {
+                adopted.push(to_run.remove(pos));
+            }
+        }
+
+        // ---- capture pre-passes: full simulations with the recorder on ----
+        let registry_arc = self.engine.registry_arc();
+        let cap_items: Vec<(CellKey, super::ScenarioSpec, super::SystemSpec)> = capture_jobs
+            .iter()
+            .map(|(tk, w_idx, s_idx)| {
+                let ExecModel::Replay { source, .. } = &spec.systems[*s_idx].exec else {
+                    unreachable!("replay rows only")
+                };
+                (*tk, spec.workloads[*w_idx].clone(), (**source).clone().with_capture())
+            })
+            .collect();
+        let reg = Arc::clone(&registry_arc);
+        let cap_results: Vec<(CellKey, Result<(Measurement, CapturedTrace), String>)> =
+            self.engine.map(cap_items, move |(tk, scenario, src)| {
+                let r = (|| {
+                    let wl = reg.resolve(&scenario)?;
+                    let (mut m, capture) = measure_spec_captured(&*wl, &src);
+                    let trace = capture.ok_or_else(|| {
+                        format!("capture pre-pass for {:?} recorded no trace", src.name)
+                    })?;
+                    // Canonical cell form: presentation fields are the
+                    // job's business, not the cell's.
+                    m.workload = String::new();
+                    m.system = String::new();
+                    m.repeat = 0;
+                    Ok((m, trace))
+                })();
+                (tk, r)
+            });
+        let mut store_lines: Vec<StoreEntry> = Vec::new();
+        {
+            let mut inner = self.inner.borrow_mut();
+            inner.stats.executed += cap_results.len() as u64;
+            for ((tk, w_idx, s_idx), (tk2, res)) in capture_jobs.iter().zip(cap_results) {
+                debug_assert_eq!(*tk, tk2);
+                let (m, trace) = res?;
+                if let Err(e) = inner.traces.save(*tk, &trace) {
+                    // Best-effort persistence, like the cell store below.
+                    eprintln!(
+                        "(tracestore: could not write under {}: {e})",
+                        inner.traces.dir().display()
+                    );
+                }
+                inner.trace_cache.insert(*tk, Arc::new(trace));
+                if !inner.cells.contains_key(tk) {
+                    let ExecModel::Replay { source, .. } = &spec.systems[*s_idx].exec else {
+                        unreachable!("replay rows only")
+                    };
+                    store_lines.push(StoreEntry {
+                        key: *tk,
+                        scenario: scen_ids[*w_idx].clone(),
+                        system: system_identity(source),
+                        repeat: 0,
+                        measurement: m.clone(),
+                    });
+                    inner.cells.insert(*tk, m);
+                    inner.origin.insert(*tk, Provenance::Computed);
+                }
+            }
+        }
+        for p in &adopted {
+            done += 1;
+            if let Some(cb) = &self.progress {
+                cb(&CellEvent {
+                    key: p.key,
+                    workload: spec.workloads[p.w_idx].name.clone(),
+                    system: spec.systems[p.s_idx].name.clone(),
+                    repeat: p.repeat,
+                    provenance: Provenance::Computed,
+                    done,
+                    total,
+                });
+            }
+        }
+
         // Execute the unique remainder; stream completions.
         let executed = to_run.len() as u64;
-        let registry_arc = self.engine.registry_arc();
         let items: Vec<(CellKey, super::ScenarioSpec, super::SystemSpec)> = to_run
             .iter()
             .map(|p| (p.key, spec.workloads[p.w_idx].clone(), spec.systems[p.s_idx].clone()))
@@ -270,15 +484,12 @@ impl<'e> Session<'e> {
                 }
             },
         );
-
-        // Merge results, persist, record the job.
-        let mut inner = self.inner.borrow_mut();
-        inner.stats.executed += executed;
-        if inner.store.is_some() {
-            let mut lines = Vec::with_capacity(results.len());
+        {
+            let mut inner = self.inner.borrow_mut();
+            inner.stats.executed += executed;
             for (p, (key, m)) in to_run.iter().zip(results.iter()) {
                 debug_assert_eq!(*key, p.key);
-                lines.push(StoreEntry {
+                store_lines.push(StoreEntry {
                     key: *key,
                     scenario: scen_ids[p.w_idx].clone(),
                     system: sys_ids[p.s_idx].clone(),
@@ -286,16 +497,82 @@ impl<'e> Session<'e> {
                     measurement: m.clone(),
                 });
             }
+            for (key, m) in results {
+                inner.cells.insert(key, m);
+                inner.origin.insert(key, Provenance::Computed);
+            }
+        }
+
+        // ---- re-time the replay cells: memory-model passes only, no DFG
+        // simulation (this is the whole point of the trace engine) ----
+        let replay_items: Vec<(CellKey, String, super::SystemSpec, Arc<CapturedTrace>)> = {
+            let inner = self.inner.borrow();
+            replay_pending
+                .iter()
+                .map(|(p, tk)| {
+                    let trace =
+                        Arc::clone(inner.trace_cache.get(tk).expect("captures resolved above"));
+                    (
+                        p.key,
+                        spec.workloads[p.w_idx].name.clone(),
+                        spec.systems[p.s_idx].clone(),
+                        trace,
+                    )
+                })
+                .collect()
+        };
+        let replayed = replay_items.len() as u64;
+        let replay_results: Vec<(CellKey, Result<Measurement, String>)> = self.engine.map_with(
+            replay_items,
+            move |(key, scen_name, sys, trace)| {
+                let m = measure_replay(&scen_name, &sys, &trace).map(|(mut m, _)| {
+                    m.workload = String::new();
+                    m.system = String::new();
+                    m.repeat = 0;
+                    m
+                });
+                (key, m)
+            },
+            |i, (key, _)| {
+                done += 1;
+                if let Some(cb) = &self.progress {
+                    let (p, _) = &replay_pending[i];
+                    cb(&CellEvent {
+                        key: *key,
+                        workload: spec.workloads[p.w_idx].name.clone(),
+                        system: spec.systems[p.s_idx].name.clone(),
+                        repeat: p.repeat,
+                        provenance: Provenance::Computed,
+                        done,
+                        total,
+                    });
+                }
+            },
+        );
+
+        // Merge, persist, record the job.
+        let mut inner = self.inner.borrow_mut();
+        inner.stats.replays += replayed;
+        for ((p, _), (key, res)) in replay_pending.iter().zip(replay_results) {
+            debug_assert_eq!(key, p.key);
+            let m = res?;
+            store_lines.push(StoreEntry {
+                key,
+                scenario: scen_ids[p.w_idx].clone(),
+                system: sys_ids[p.s_idx].clone(),
+                repeat: p.repeat,
+                measurement: m.clone(),
+            });
+            inner.cells.insert(key, m);
+            inner.origin.insert(key, Provenance::Computed);
+        }
+        if inner.store.is_some() && !store_lines.is_empty() {
             let store = inner.store.as_mut().expect("checked above");
-            if let Err(e) = store.append_batch(lines) {
+            if let Err(e) = store.append_batch(store_lines) {
                 // Best-effort persistence: a read-only disk must not fail
                 // the experiment itself.
                 eprintln!("(cellstore: could not append to {}: {e})", store.path().display());
             }
-        }
-        for (key, m) in results {
-            inner.cells.insert(key, m);
-            inner.origin.insert(key, Provenance::Computed);
         }
         inner.jobs.push(JobRecord {
             name: spec.name.clone(),
@@ -435,6 +712,70 @@ mod tests {
         // Second submit: the cached cell fires first, then the computed one.
         assert_eq!(events[1], (Provenance::SessionCache, 1, 2));
         assert_eq!(events[2], (Provenance::Computed, 2, 2));
+    }
+
+    #[test]
+    fn replay_cells_ride_one_capture_and_match_live_memory_counters() {
+        use crate::exp::Json;
+        let dir = std::env::temp_dir()
+            .join(format!("cgra-session-replay-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let replay_sys = |name: &str, extra: &str| {
+            SystemSpec::from_json(
+                &Json::parse(&format!(
+                    r#"{{"base": "Cache+SPM", "name": "{name}"{extra},
+                        "replay_of": "Cache+SPM"}}"#
+                ))
+                .unwrap(),
+            )
+            .unwrap()
+        };
+        let spec = tiny_spec(
+            "replay",
+            vec![
+                SystemSpec::cache_spm(),
+                replay_sys("r-id", ""),
+                replay_sys("r-2way", r#", "l1_ways": 2"#),
+            ],
+        );
+        let eng = Engine::new(2);
+        {
+            let store = ResultStore::open(dir.join("cells.jsonl")).unwrap();
+            let session = eng.session_with_store(store);
+            let report = session.run(&spec);
+            let st = session.stats();
+            // The source row rides the capture pre-pass: one DFG run total.
+            assert_eq!(st.executed, 1, "{st:?}");
+            assert_eq!(st.replays, 2, "{st:?}");
+            let live = report.get("aggregate/tiny", "Cache+SPM").unwrap();
+            let id = report.get("aggregate/tiny", "r-id").unwrap();
+            // Replay through the identical backend reproduces the live
+            // run's memory counters and timing exactly.
+            assert_eq!(id.cycles, live.cycles);
+            assert_eq!(id.stall_cycles, live.stall_cycles);
+            assert_eq!(id.spm_accesses, live.spm_accesses);
+            assert_eq!(id.l1_accesses, live.l1_accesses);
+            assert_eq!(id.l1_hits, live.l1_hits);
+            assert_eq!(id.l2_accesses, live.l2_accesses);
+            assert_eq!(id.dram_accesses, live.dram_accesses);
+            let two = report.get("aggregate/tiny", "r-2way").unwrap();
+            assert!(two.l1_accesses > 0, "swept geometry actually replayed");
+        }
+        // Warm process: cells and trace both load from disk; nothing runs.
+        {
+            let store = ResultStore::open(dir.join("cells.jsonl")).unwrap();
+            let session = eng.session_with_store(store);
+            session.run(&spec);
+            let st = session.stats();
+            assert_eq!(st.executed, 0, "{st:?}");
+            assert_eq!(st.replays, 0, "{st:?}");
+            assert_eq!(st.store_hits, 3, "{st:?}");
+            let (tdir, n, bytes) = session.trace_summary();
+            assert_eq!(n, 1, "one capture on disk at {}", tdir.display());
+            assert!(bytes > 0);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Content-addressed trace store: the on-disk half of the capture/replay
+//! machinery.
+//!
+//! One binary file per captured run (default `target/tracestore/`),
+//! named by the [`CellKey`] hex of the *producing* cell — the (scenario,
+//! source system, repeat 0) measurement that recorded the stream. The
+//! key's preimage is salted with [`STORE_FORMAT_VERSION`] exactly like
+//! cell-store lines, so bumping the version orphans every old trace
+//! (lookups miss, files linger until `repro cache clear`) without any
+//! migration code. The file payload carries its own magic + schema
+//! version ([`crate::sim::CAPTURE_SCHEMA_VERSION`]); a corrupt or
+//! foreign-schema file is a load miss, never fatal.
+
+use super::cell::CellKey;
+use crate::sim::CapturedTrace;
+use std::path::{Path, PathBuf};
+
+/// Directory of encoded [`CapturedTrace`]s keyed by producing cell.
+pub struct TraceStore {
+    dir: PathBuf,
+}
+
+impl TraceStore {
+    /// The conventional location, beside the cell store (under cargo's
+    /// target dir, so `cargo clean` resets both caches together).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("target/tracestore")
+    }
+
+    /// The trace directory that rides with a given cell-store path:
+    /// `<cellstore parent>/tracestore`. Keeps `--store /tmp/x.jsonl`
+    /// runs self-contained.
+    pub fn beside(cellstore: &Path) -> PathBuf {
+        match cellstore.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.join("tracestore"),
+            _ => PathBuf::from("tracestore"),
+        }
+    }
+
+    pub fn open(dir: impl Into<PathBuf>) -> TraceStore {
+        TraceStore { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file_of(&self, key: CellKey) -> PathBuf {
+        self.dir.join(format!("{}.cgtr", key.hex()))
+    }
+
+    /// Is a trace for this producing cell already on disk? (Existence
+    /// only — decode happens at load.)
+    pub fn contains(&self, key: CellKey) -> bool {
+        self.file_of(key).is_file()
+    }
+
+    /// Persist a capture under its producing cell's key, stamping the
+    /// key into the header so a loaded trace knows its provenance.
+    pub fn save(&self, key: CellKey, trace: &CapturedTrace) -> std::io::Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let mut stamped = trace.clone();
+        stamped.header.producer = key.0;
+        std::fs::write(self.file_of(key), stamped.encode())
+    }
+
+    /// Load + decode a trace. `Ok(None)` when absent; decode failures
+    /// (corrupt file, foreign capture schema) are also misses, reported
+    /// in the error string variant only by [`TraceStore::load_strict`].
+    pub fn load(&self, key: CellKey) -> Option<CapturedTrace> {
+        self.load_strict(key).ok().flatten()
+    }
+
+    /// Like [`TraceStore::load`] but surfaces decode errors, for callers
+    /// that must distinguish "never captured" from "capture unreadable".
+    pub fn load_strict(&self, key: CellKey) -> Result<Option<CapturedTrace>, String> {
+        let bytes = match std::fs::read(self.file_of(key)) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(format!("trace {}: {e}", key.hex())),
+        };
+        CapturedTrace::decode(&bytes)
+            .map(Some)
+            .map_err(|e| format!("trace {}: {e}", key.hex()))
+    }
+
+    /// `(entries, total bytes)` across every `.cgtr` file in the store,
+    /// for `repro cache stats`.
+    pub fn stats(&self) -> (usize, u64) {
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return (0, 0) };
+        let mut n = 0usize;
+        let mut bytes = 0u64;
+        for ent in rd.flatten() {
+            let p = ent.path();
+            if p.extension().and_then(|e| e.to_str()) == Some("cgtr") {
+                n += 1;
+                bytes += ent.metadata().map(|m| m.len()).unwrap_or(0);
+            }
+        }
+        (n, bytes)
+    }
+
+    /// Remove every trace file (and the directory if it empties).
+    /// `Ok(removed_count)`.
+    pub fn clear(dir: &Path) -> std::io::Result<usize> {
+        let rd = match std::fs::read_dir(dir) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(e),
+        };
+        let mut n = 0usize;
+        for ent in rd {
+            let p = ent?.path();
+            if p.extension().and_then(|e| e.to_str()) == Some("cgtr") {
+                std::fs::remove_file(&p)?;
+                n += 1;
+            }
+        }
+        let _ = std::fs::remove_dir(dir); // best-effort: may be non-empty
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::trace::{CaptureHeader, CaptureKind, CaptureTrace};
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        static N: AtomicU32 = AtomicU32::new(0);
+        std::env::temp_dir().join(format!(
+            "cgra-tracestore-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    fn tiny_trace() -> CapturedTrace {
+        let mut cap = CaptureTrace::new(true);
+        for k in 0..10u64 {
+            cap.record(CaptureKind::DemandRead, k, k, 4, 0, 0x8_0000 + k as u32 * 4);
+        }
+        CapturedTrace {
+            header: CaptureHeader {
+                producer: 0,
+                ports: 1,
+                backing_bytes: 0x20_0000,
+                spm_bases: vec![0],
+                streamed: vec![],
+                spm_greedy: false,
+                spm_usable_bytes: 1024,
+                end_sched: 10,
+                total_cycles: 10,
+                iterations: 10,
+                useful_ops: 10,
+                num_pes: 16,
+                ii: 1,
+                start_shift: 0,
+            },
+            events: cap.events,
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips_and_stamps_producer() {
+        let dir = temp_dir("roundtrip");
+        let store = TraceStore::open(&dir);
+        let key = CellKey(0xabcd_ef01_2345_6789);
+        assert!(!store.contains(key));
+        assert!(store.load(key).is_none());
+        store.save(key, &tiny_trace()).unwrap();
+        assert!(store.contains(key));
+        let back = store.load(key).expect("trace present");
+        assert_eq!(back.header.producer, key.0, "store stamps provenance");
+        assert_eq!(back.events, tiny_trace().events);
+        let (n, bytes) = store.stats();
+        assert_eq!(n, 1);
+        assert!(bytes > 0);
+        assert_eq!(TraceStore::clear(&dir).unwrap(), 1);
+        assert_eq!(TraceStore::clear(&dir).unwrap(), 0);
+    }
+
+    #[test]
+    fn corrupt_trace_is_a_miss_not_a_panic() {
+        let dir = temp_dir("corrupt");
+        let store = TraceStore::open(&dir);
+        let key = CellKey(7);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(format!("{}.cgtr", key.hex())), b"garbage").unwrap();
+        assert!(store.load(key).is_none());
+        assert!(store.load_strict(key).is_err());
+        TraceStore::clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn beside_keeps_custom_stores_self_contained() {
+        assert_eq!(
+            TraceStore::beside(Path::new("/tmp/x/cells.jsonl")),
+            PathBuf::from("/tmp/x/tracestore")
+        );
+        assert_eq!(
+            TraceStore::beside(Path::new("cells.jsonl")),
+            PathBuf::from("tracestore")
+        );
+    }
+}

@@ -8,7 +8,7 @@
 
 use cgra_mem::exp::{
     system_named, CellEvent, Engine, ExperimentSpec, Json, Provenance, ResultStore, Session,
-    SessionStats, SystemSpec,
+    SessionStats, SystemSpec, TraceStore,
 };
 use cgra_mem::report;
 use std::path::{Path, PathBuf};
@@ -52,9 +52,10 @@ USAGE:
   repro figure <id|all> [-j N]      regenerate a figure:
                                     {figures}
   repro table <1|2|3|all>           regenerate a table
-  repro cache stats                 cell count + size of the result store and
-                                    the last session's hit/miss ledger
-  repro cache clear                 delete the result store
+  repro cache stats                 cell count + size of the result store,
+                                    the trace store beside it, and the last
+                                    session's hit/miss ledger
+  repro cache clear                 delete the result store and trace store
   repro bench [-j N]                run the fixed kernel x system perf
                                     matrix and write BENCH_sim.json
                                     (iterations/sec; the perf trajectory;
@@ -220,13 +221,17 @@ fn write_stats_sidecar(opts: &CacheOpts, session: &Session) {
     }
     let st = session.stats();
     let store_cells = session.store_summary().map(|(_, n)| n).unwrap_or(0);
+    let (_, trace_entries, trace_bytes) = session.trace_summary();
     let doc = Json::obj(vec![
         ("jobs", Json::u64(st.jobs)),
         ("cells_requested", Json::u64(st.cells_requested)),
         ("executed", Json::u64(st.executed)),
         ("session_hits", Json::u64(st.session_hits)),
         ("store_hits", Json::u64(st.store_hits)),
+        ("replays", Json::u64(st.replays)),
         ("store_cells", Json::u64(store_cells as u64)),
+        ("trace_entries", Json::u64(trace_entries as u64)),
+        ("trace_bytes", Json::u64(trace_bytes)),
     ]);
     let path = opts.sidecar_path();
     if let Err(e) = std::fs::write(&path, doc.render_pretty()) {
@@ -236,8 +241,9 @@ fn write_stats_sidecar(opts: &CacheOpts, session: &Session) {
 
 fn summary_line(st: SessionStats) -> String {
     format!(
-        "session: {} cell(s) requested, {} simulated, {} session-cached, {} store-cached",
-        st.cells_requested, st.executed, st.session_hits, st.store_hits
+        "session: {} cell(s) requested, {} simulated, {} replayed, {} session-cached, \
+         {} store-cached",
+        st.cells_requested, st.executed, st.replays, st.session_hits, st.store_hits
     )
 }
 
@@ -491,6 +497,11 @@ fn cache_cmd(sub: Option<&str>, cache: &CacheOpts) {
                     std::process::exit(1);
                 }
             }
+            let tdir = TraceStore::beside(path);
+            let (traces, tbytes) = TraceStore::open(&tdir).stats();
+            println!("trace store:  {}", tdir.display());
+            println!("traces:       {traces}");
+            println!("trace size:   {tbytes} bytes");
             let sidecar = stats_sidecar_path(path);
             match std::fs::read_to_string(&sidecar) {
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
@@ -502,10 +513,11 @@ fn cache_cmd(sub: Option<&str>, cache: &CacheOpts) {
                         let g = |k: &str| v.get(k).and_then(Json::as_u64).unwrap_or(0);
                         println!(
                             "last session: {} job(s), {} cell(s) requested, {} simulated, \
-                             {} session hit(s), {} store hit(s)",
+                             {} replayed, {} session hit(s), {} store hit(s)",
                             g("jobs"),
                             g("cells_requested"),
                             g("executed"),
+                            g("replays"),
                             g("session_hits"),
                             g("store_hits")
                         );
@@ -522,6 +534,15 @@ fn cache_cmd(sub: Option<&str>, cache: &CacheOpts) {
                 Ok(false) => println!("nothing to remove at {}", cache.path.display()),
                 Err(e) => {
                     eprintln!("cannot remove {}: {e}", cache.path.display());
+                    std::process::exit(1);
+                }
+            }
+            let tdir = TraceStore::beside(&cache.path);
+            match TraceStore::clear(&tdir) {
+                Ok(0) => println!("no traces at {}", tdir.display()),
+                Ok(n) => println!("removed {n} trace(s) from {}", tdir.display()),
+                Err(e) => {
+                    eprintln!("cannot clear traces at {}: {e}", tdir.display());
                     std::process::exit(1);
                 }
             }
@@ -654,6 +675,57 @@ fn bench(threads: usize) {
             ("output_ok", Json::Bool(m.output_ok)),
             ("wall_s", Json::num(secs)),
             ("iters_per_sec", Json::num(jps)),
+            ("sim_throughput", Json::num(cps)),
+            ("memory_bound", Json::Bool(true)),
+        ]));
+    }
+    // Replay throughput: capture the gather-class anchor once, then
+    // re-time the recorded stream through the same backend. iterations =
+    // capture events fed per pass, iters/sec = events per wall second;
+    // sim_throughput (simulated cycles per wall second) is directly
+    // comparable to the live memory-bound rows above — the trace engine's
+    // target is >= 10x those.
+    {
+        let reg = eng.registry_arc();
+        let wl = reg.build("aggregate/tiny").expect("bench kernel is registered");
+        let src = SystemSpec::cache_spm().with_capture();
+        let (_, cap) = cgra_mem::exp::measure_spec_captured(wl.as_ref(), &src);
+        let trace = cap.expect("capture-enabled run records a trace");
+        let spec = SystemSpec::from_json(
+            &Json::parse(r#"{"base": "Cache+SPM", "replay_of": "Cache+SPM"}"#).unwrap(),
+        )
+        .expect("replay bench spec");
+        let reps = 10u32;
+        let t0 = Instant::now();
+        let mut last = None;
+        for _ in 0..reps {
+            last = Some(
+                cgra_mem::exp::measure_replay("aggregate/tiny", &spec, &trace)
+                    .expect("replay bench pass"),
+            );
+        }
+        let per = (t0.elapsed().as_secs_f64() / reps as f64).max(1e-9);
+        let (m, outcome) = last.expect("reps >= 1");
+        let eps = outcome.events_replayed as f64 / per;
+        let cps = m.cycles as f64 / per;
+        println!(
+            "{:<22} {:<14} {:>12} {:>10.2} {:>14.0} {:>12.2} {:>3}",
+            "replay_throughput",
+            "Cache+SPM",
+            m.cycles,
+            per * 1e3,
+            eps,
+            cps / 1e6,
+            "*"
+        );
+        out.push(Json::obj(vec![
+            ("kernel", Json::str("replay_throughput")),
+            ("system", Json::str("Cache+SPM")),
+            ("iterations", Json::u64(outcome.events_replayed)),
+            ("sim_cycles", Json::u64(m.cycles)),
+            ("output_ok", Json::Bool(m.output_ok)),
+            ("wall_s", Json::num(per)),
+            ("iters_per_sec", Json::num(eps)),
             ("sim_throughput", Json::num(cps)),
             ("memory_bound", Json::Bool(true)),
         ]));

@@ -5,16 +5,16 @@
 //! `repro figure all` simulate each unique (scenario, system, repeat)
 //! cell exactly once no matter how many figures re-plot it (Fig 5, 11a/b,
 //! 12, 13, 14, 15, 16, 17 and the scaling/adaptivity figures all slice
-//! overlapping cells — since the reconfiguration loop went online, every
-//! simulating figure except the fig7 trace dump is cell-shaped and
-//! warm-replayable; fig18 is a static area model and runs nothing).
+//! overlapping cells — since the fig7 dump moved onto the capture engine,
+//! every simulating figure is cell-shaped and warm-replayable; fig18 is
+//! a static area model and runs nothing).
 //! EXPERIMENTS.md records these outputs against the published values.
 
 use crate::exp::{ExperimentSpec, Params, Report, ScenarioSpec, Session, SystemSpec};
 use crate::mem::{CacheConfig, SubsystemConfig};
 use crate::sim::{CgraConfig, ExecMode, ReconfigPolicy};
 use crate::stats;
-use crate::workloads::{prepare, GcnAggregate, GraphSpec, MeshOrder, MeshSpmv, Workload};
+use crate::workloads::{MeshOrder, MeshSpmv, Workload};
 
 const CORA: &str = "aggregate/cora";
 
@@ -99,21 +99,25 @@ pub fn fig5(s: &Session) -> String {
 }
 
 /// Fig 7: per-PE (per-port) address/time series showing the access-pattern
-/// taxonomy. Rendered as classified stride statistics plus CSV samples.
-/// (A trace dump, not a campaign — runs outside the engine.)
-pub fn fig7() -> String {
-    let (wl, iters) = if smoke() {
-        (GcnAggregate::new(GraphSpec::tiny()), 2_000u64)
-    } else {
-        (GcnAggregate::new(GraphSpec::cora()), 20_000u64)
+/// taxonomy. Rendered from the capture engine's recording: the session
+/// resolves a full-stream capture of the anchor kernel on the Cache+SPM
+/// system — one ordinary content-addressed cell, recorded once and loaded
+/// from the trace store on warm runs — then classifies each port's stream
+/// through the same monitor view the phase tracker sees.
+pub fn fig7(s: &Session) -> String {
+    let kernel = anchor();
+    let trace = match s.capture(&ScenarioSpec::preset(kernel), &SystemSpec::cache_spm()) {
+        Ok(t) => t,
+        Err(e) => return format!("Fig 7 — capture failed: {e}\n"),
     };
-    let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
-    cgra.trace_window = 4096;
-    let (mut mem, mut arr, _layout) = prepare(&wl, SubsystemConfig::paper_base(), cgra);
-    arr.run(&mut mem, iters);
-    let mut s = format!("Fig 7 — per-port access patterns ({})\n", wl.name());
-    for p in 0..2 {
-        let irr = arr.trace.irregularity(p);
+    let monitor = trace.monitor_view(4096);
+    let mut out = format!(
+        "Fig 7 — per-port access patterns ({kernel}; {} captured events, {} demand)\n",
+        trace.events.len(),
+        trace.demand_len(),
+    );
+    for p in 0..trace.header.ports as usize {
+        let irr = monitor.irregularity(p);
         let class = if irr < 0.05 {
             "regular (constant/linear/step)"
         } else if irr > 0.6 {
@@ -121,19 +125,19 @@ pub fn fig7() -> String {
         } else {
             "mixed regular+irregular"
         };
-        s.push_str(&format!(
+        out.push_str(&format!(
             "port {p}: {} sampled accesses, stride-irregularity {:.2} → {}\n",
-            arr.trace.events[p].len(),
+            monitor.events[p].len(),
             irr,
             class
         ));
-        s.push_str("  first samples (cycle,addr): ");
-        for ev in arr.trace.events[p].iter().take(8) {
-            s.push_str(&format!("({},{:#x}) ", ev.cycle, ev.addr));
+        out.push_str("  first samples (cycle,addr): ");
+        for ev in monitor.events[p].iter().take(8) {
+            out.push_str(&format!("({},{:#x}) ", ev.cycle, ev.addr));
         }
-        s.push('\n');
+        out.push('\n');
     }
-    s
+    out
 }
 
 /// Fig 11a: normalized execution time of the five systems across the
@@ -807,6 +811,118 @@ pub fn adaptivity_with(s: &Session, n: u64, span: u64, periods: &[u64]) -> Strin
         "(online re-plans at phase boundaries with its flush cost charged in-band;\n\
          static locks the first triggering phase's plan; off is the uniform baseline)\n",
     );
+
+    // Replay-backed dense controller-period sweep: capture the no-reconfig
+    // stream of the middle phase period once, then re-time it through the
+    // online policy at every candidate period. The dense axis costs memory-
+    // model passes only — at most one extra DFG run (the capture), however
+    // fine the sweep.
+    let dense: &[u64] = if periods.len() <= 2 {
+        &[128, 256, 512, 1024]
+    } else {
+        &[256, 512, 1024, 2048, 4096, 8192, 16384]
+    };
+    let anchor_scen = scenarios[periods.len() / 2].clone();
+    let dense_systems: Vec<SystemSpec> = dense
+        .iter()
+        .map(|&rp| {
+            let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
+            let mut policy = ReconfigPolicy::online();
+            policy.period = rp;
+            cgra.reconfig = policy;
+            SystemSpec::replay_of(
+                format!("Online-rp{rp}"),
+                mode_sys("Reconfig-off", ReconfigPolicy::off()),
+                crate::mem::MemoryModelSpec::Hierarchy(SubsystemConfig::paper_base()),
+                cgra,
+            )
+        })
+        .collect();
+    let dense_report = s.run(
+        &ExperimentSpec::new("adaptivity-dense")
+            .workload(anchor_scen.clone())
+            .systems(dense_systems),
+    );
+    out.push_str(&format!(
+        "\nDense controller-period sweep on {} (replay-backed):\n",
+        anchor_scen.name
+    ));
+    let rows: Vec<(u64, u64, u64)> = dense
+        .iter()
+        .map(|&rp| {
+            let m = dense_report.get(&anchor_scen.name, &format!("Online-rp{rp}")).unwrap();
+            (rp, m.cycles, m.reconfig_applies)
+        })
+        .collect();
+    let worst = rows.iter().map(|r| r.1).max().unwrap_or(1).max(1);
+    for (rp, cycles, plans) in rows {
+        out.push_str(&format!(
+            "  period {rp:>6}: {cycles:>10} cycles, {plans:>3} plans  {}\n",
+            stats::bar(cycles as f64, worst as f64, 28)
+        ));
+    }
+    out.push_str(
+        "(every dense point re-times the one captured stream — no extra DFG runs)\n",
+    );
+    out
+}
+
+/// Reconfig time-series — the online closed loop watched epoch by epoch:
+/// replay the captured phased-gather stream through the online-reconfig
+/// backend and print each epoch's observed miss rate, row-hit trend and
+/// the in-band cost charged when a plan lands. A pure replay figure: the
+/// session resolves the capture (one cell, warm from the trace store),
+/// then no DFG runs at all.
+pub fn reconfig_timeseries(s: &Session) -> String {
+    let (n, span, period) = if smoke() { (2048u64, 2048u64, 256u64) } else { (24576, 16384, 4096) };
+    let scenario = ScenarioSpec::family(
+        "phased",
+        Params::new().set_u64("n", n).set_u64("span", span).set_u64("period", period),
+    )
+    .named(format!("phased/p{period}"));
+    let source = cgra_4x4("Cache+SPM", SubsystemConfig::paper_base(), ExecMode::Normal);
+    let trace = match s.capture(&scenario, &source) {
+        Ok(t) => t,
+        Err(e) => return format!("Reconfig time-series — capture failed: {e}\n"),
+    };
+    let mut cgra = CgraConfig::hycube_4x4(ExecMode::Normal);
+    cgra.reconfig = ReconfigPolicy::online();
+    let spec = SystemSpec::replay_of(
+        "Online-replay",
+        source,
+        crate::mem::MemoryModelSpec::Hierarchy(SubsystemConfig::paper_base()),
+        cgra,
+    );
+    let (m, outcome) = match crate::exp::measure_replay(&scenario.name, &spec, &trace) {
+        Ok(r) => r,
+        Err(e) => return format!("Reconfig time-series — replay failed: {e}\n"),
+    };
+    let mut out = format!(
+        "Reconfig time-series — online closed loop over the replayed phased stream\n\
+         (phased n={n} span={span} period={period}; {} events re-timed,\n\
+         {} epochs observed, {} plans applied, {} ways moved)\n",
+        outcome.events_replayed,
+        outcome.epochs.len(),
+        m.reconfig_applies,
+        m.reconfig_ways_moved,
+    );
+    out.push_str(&format!(
+        "{:>12} {:>9} {:>9} {:>7} {:>9} {:>6}\n",
+        "cycle", "l1 acc", "l1 miss", "miss%", "row hits", "cost"
+    ));
+    let stride = (outcome.epochs.len() / 24).max(1);
+    for e in outcome.epochs.iter().step_by(stride) {
+        out.push_str(&format!(
+            "{:>12} {:>9} {:>9} {:>6.1}% {:>9} {:>6}\n",
+            e.cycle,
+            e.l1_accesses,
+            e.l1_misses,
+            100.0 * e.miss_rate,
+            e.dram_row_hits,
+            e.cost,
+        ));
+    }
+    out.push_str("(every row is a replay epoch: no DFG simulation ran to draw this figure)\n");
     out
 }
 

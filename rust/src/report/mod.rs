@@ -16,10 +16,11 @@ use crate::exp::Session;
 /// Every figure id, in `repro figure all` order. The CLI derives its
 /// help text and `repro list` output from this array — adding an entry
 /// here (plus a [`render_figure`] arm) is the whole registration.
-pub const FIGURE_IDS: [&str; 23] = [
+pub const FIGURE_IDS: [&str; 24] = [
     "fig2", "fig5", "fig7", "fig11a", "fig11b", "fig12a", "fig12b", "fig12c", "fig12d",
     "fig12e", "fig12f", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "motivation",
-    "ablation", "scaling", "adaptivity", "cluster_throughput", "cluster_latency",
+    "ablation", "scaling", "adaptivity", "reconfig_timeseries", "cluster_throughput",
+    "cluster_latency",
 ];
 
 /// Render one figure by id on the shared session, `None` for unknown ids.
@@ -27,7 +28,7 @@ pub fn render_figure(id: &str, session: &Session) -> Option<String> {
     Some(match id {
         "fig2" => fig2(session),
         "fig5" => fig5(session),
-        "fig7" => fig7(),
+        "fig7" => fig7(session),
         "fig11a" => fig11a(session),
         "fig11b" => fig11b(session),
         "fig12a" => fig12('a', session),
@@ -46,6 +47,7 @@ pub fn render_figure(id: &str, session: &Session) -> Option<String> {
         "ablation" => ablation(session),
         "scaling" => scaling(session),
         "adaptivity" => adaptivity(session),
+        "reconfig_timeseries" => reconfig_timeseries(session),
         "cluster_throughput" => cluster_throughput(session),
         "cluster_latency" => cluster_latency(session),
         _ => return None,

@@ -32,7 +32,7 @@ use super::alu::Value;
 use super::dfg::{Dfg, NodeId, Op};
 use super::mapper::{Geometry, Mapping};
 use super::pe::{program, PeConfigMem};
-use super::trace::{AccessTrace, TraceEvent};
+use super::trace::{AccessTrace, CaptureKind, CaptureTrace, TraceEvent};
 use crate::mem::{
     AccessKind, Cycle, MemRequest, MemResponse, MemResponseComplete, MemoryModel,
     PrefetchResponse, Reconfigurable, SubsystemStats,
@@ -187,8 +187,17 @@ pub struct CgraConfig {
     pub max_runahead_cycles: u64,
     /// Clock frequency in MHz (Table 3: 704).
     pub freq_mhz: f64,
-    /// Per-port trace-window capacity (0 = tracing off).
-    pub trace_window: usize,
+    /// Per-port capacity of the *monitor* observation window (0 = off):
+    /// what the §3.4 tracker hardware samples for the reconfiguration
+    /// planner. Distinct from `capture` — the two used to share one
+    /// `trace_window` knob, which let enabling full capture silently
+    /// change `MissRateMonitor` behavior.
+    pub monitor_window: usize,
+    /// Record the *complete* demand + runahead access stream into
+    /// [`CgraArray::capture`] for the replay engine (`sim::replay`).
+    /// Orthogonal to `monitor_window`; costs memory proportional to the
+    /// run's access count.
+    pub capture: bool,
     /// §3.2.1 design-choice switches (all on = the paper's design).
     pub ablation: RunaheadAblation,
     /// Online cache-reconfiguration policy (§3.4; [`ReconfigMode::Off`]
@@ -207,7 +216,8 @@ impl CgraConfig {
             mode,
             max_runahead_cycles: 2048,
             freq_mhz: 704.0,
-            trace_window: 0,
+            monitor_window: 0,
+            capture: false,
             ablation: RunaheadAblation::default(),
             reconfig: ReconfigPolicy::off(),
             core: SimCore::from_env(),
@@ -219,7 +229,8 @@ impl CgraConfig {
             mode,
             max_runahead_cycles: 2048,
             freq_mhz: 704.0,
-            trace_window: 0,
+            monitor_window: 0,
+            capture: false,
             ablation: RunaheadAblation::default(),
             reconfig: ReconfigPolicy::off(),
             core: SimCore::from_env(),
@@ -431,6 +442,10 @@ pub struct CgraArray {
     /// Fig 6 backup registers: shadow of `vals` during runahead.
     backup_vals: Vec<Value>,
     pub trace: AccessTrace,
+    /// Full-stream recorder for the replay engine (`cfg.capture`); demand
+    /// accesses, runahead prefetches and episode-entry markers, each with
+    /// its schedule time. Empty unless capture is enabled.
+    pub capture: CaptureTrace,
 }
 
 impl CgraArray {
@@ -448,8 +463,20 @@ impl CgraArray {
         }
         let vals = vec![Value::real(0); dfg.num_nodes() * depth];
         let backup_vals = vals.clone();
-        let trace = AccessTrace::new(cfg.geom.ports, cfg.trace_window);
-        CgraArray { cfg, dfg, mapping, config_mems, vals, depth, slot_nodes, backup_vals, trace }
+        let trace = AccessTrace::new(cfg.geom.ports, cfg.monitor_window);
+        let capture = CaptureTrace::new(cfg.capture);
+        CgraArray {
+            cfg,
+            dfg,
+            mapping,
+            config_mems,
+            vals,
+            depth,
+            slot_nodes,
+            backup_vals,
+            trace,
+            capture,
+        }
     }
 
     pub fn mapping(&self) -> &Mapping {
@@ -648,6 +675,7 @@ impl CgraArray {
                     // ---- Enter runahead (Fig 3b ②) ----
                     st.runahead_entries += 1;
                     mem.begin_runahead_epoch();
+                    self.capture.record(CaptureKind::RaEnter, st.ctx, st.cycle, 0, 0, 0);
                     self.backup_vals.copy_from_slice(&self.vals);
                     st.backup = Some(BackupRegs { ctx: st.ctx });
                     st.ra_deadline = st.cycle + self.cfg.max_runahead_cycles;
@@ -706,7 +734,7 @@ impl CgraArray {
                 Op::Load(space) => {
                     let addr_v = self.input(node, 0, iter);
                     if in_runahead {
-                        let v = self.runahead_load(mem, space.port, addr_v, st.cycle);
+                        let v = self.runahead_load(mem, space.port, addr_v, st.ctx, st.cycle);
                         self.set_val(node, iter, v);
                     } else if let Some(eff) = st.effects.get(&(node, iter)) {
                         // Replay of a frozen context: use latched data.
@@ -714,7 +742,7 @@ impl CgraArray {
                         self.set_val(node, iter, Value::real(d));
                     } else {
                         self.demand_load(
-                            mem, node, iter, space.port, addr_v.bits, st.cycle,
+                            mem, node, iter, space.port, addr_v.bits, st.ctx, st.cycle,
                             &mut st.triggers, &mut st.effects, &mut st.retry, &mut st.uncovered,
                         );
                     }
@@ -723,13 +751,13 @@ impl CgraArray {
                     let addr_v = self.input(node, 0, iter);
                     let data_v = self.input(node, 1, iter);
                     if in_runahead {
-                        self.runahead_store(mem, space.port, addr_v, data_v, st.cycle);
+                        self.runahead_store(mem, space.port, addr_v, data_v, st.ctx, st.cycle);
                     } else if st.effects.contains_key(&(node, iter)) {
                         // Store already issued before the freeze.
                     } else {
                         self.demand_store(
-                            mem, node, iter, space.port, addr_v.bits, data_v.bits, st.cycle,
-                            &mut st.effects, &mut st.retry,
+                            mem, node, iter, space.port, addr_v.bits, data_v.bits, st.ctx,
+                            st.cycle, &mut st.effects, &mut st.retry,
                         );
                     }
                 }
@@ -808,6 +836,7 @@ impl CgraArray {
         iter: u64,
         port: usize,
         addr: u32,
+        sched: u64,
         cycle: Cycle,
         triggers: &mut Vec<Trigger>,
         effects: &mut CycleEffects,
@@ -816,6 +845,7 @@ impl CgraArray {
     ) {
         let pe = self.mapping.place[node].0;
         self.trace.record(TraceEvent { cycle, pe, port, addr, is_write: false });
+        self.capture.record(CaptureKind::DemandRead, sched, cycle, pe, port, addr);
         let req = MemRequest { addr, kind: AccessKind::Read, data: 0, pe: node };
         match mem.request(port, req, cycle) {
             MemResponse::HitSpm { data } | MemResponse::HitL1 { data } => {
@@ -841,12 +871,14 @@ impl CgraArray {
         port: usize,
         addr: u32,
         data: u32,
+        sched: u64,
         cycle: Cycle,
         effects: &mut CycleEffects,
         retry: &mut Vec<RetryEntry>,
     ) {
         let pe = self.mapping.place[node].0;
         self.trace.record(TraceEvent { cycle, pe, port, addr, is_write: true });
+        self.capture.record(CaptureKind::DemandWrite, sched, cycle, pe, port, addr);
         let req = MemRequest { addr, kind: AccessKind::Write, data, pe: node };
         match mem.request(port, req, cycle) {
             MemResponse::MshrFull => retry.push((port, req, node, iter, false)),
@@ -892,12 +924,14 @@ impl CgraArray {
         mem: &mut M,
         port: usize,
         addr: Value,
+        sched: u64,
         cycle: Cycle,
     ) -> Value {
         if addr.dummy {
             if !self.cfg.ablation.dummy_tracking {
                 // Ablated selective prefetching: the garbage address goes
                 // to the memory subsystem and pollutes the cache.
+                self.capture.record(CaptureKind::Prefetch, sched, cycle, port, port, addr.bits);
                 let _ = mem.prefetch(port, addr.bits, cycle);
             }
             return Value::dummy();
@@ -907,6 +941,7 @@ impl CgraArray {
                 return Value::real(d);
             }
         }
+        self.capture.record(CaptureKind::Prefetch, sched, cycle, port, port, addr.bits);
         match mem.prefetch(port, addr.bits, cycle) {
             PrefetchResponse::AlreadyPresent { data } => Value::real(data),
             _ => Value::dummy(),
@@ -922,15 +957,18 @@ impl CgraArray {
         port: usize,
         addr: Value,
         data: Value,
+        sched: u64,
         cycle: Cycle,
     ) {
         if addr.dummy {
             if !self.cfg.ablation.dummy_tracking {
+                self.capture.record(CaptureKind::Prefetch, sched, cycle, port, port, addr.bits);
                 let _ = mem.prefetch(port, addr.bits, cycle);
             }
             return; // discarded invalid operation
         }
         if self.cfg.ablation.convert_writes {
+            self.capture.record(CaptureKind::Prefetch, sched, cycle, port, port, addr.bits);
             let _ = mem.prefetch(port, addr.bits, cycle);
         }
         if self.cfg.ablation.temp_store && !data.dummy {
@@ -991,7 +1029,7 @@ mod tests {
         let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
         let mapping = Mapper::new(geom).map(&dfg).unwrap();
         let mut cfg = CgraConfig::hycube_4x4(mode);
-        cfg.trace_window = 128;
+        cfg.monitor_window = 128;
         let mut mem = small_mem(2);
         for i in 0..n as u32 {
             mem.backing.write_u32(0x10000 + i * 4, i);
@@ -1055,7 +1093,7 @@ mod tests {
         let geom = Geometry { rows: 4, cols: 4, ports: 2, hop_budget: 3 };
         let mapping = Mapper::new(geom).map(&dfg).unwrap();
         let mut cfg = CgraConfig::hycube_4x4(ExecMode::Normal);
-        cfg.trace_window = 64;
+        cfg.monitor_window = 64;
         let mut mem = small_mem(2);
         let mut arr = CgraArray::new(cfg, dfg, mapping);
         arr.run(&mut mem, 32);

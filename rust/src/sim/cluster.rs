@@ -348,7 +348,7 @@ impl Cluster {
             (self.num_ports, self.spm_usable, self.spm_greedy);
         let policy = cgra.reconfig;
         if policy.mode != ReconfigMode::Off {
-            cgra.trace_window = cgra.trace_window.max(policy.window);
+            cgra.monitor_window = cgra.monitor_window.max(policy.window);
             let capable = self.slots.with(0, |mem| mem.reconfig().is_some());
             assert!(
                 capable,

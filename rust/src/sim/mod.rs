@@ -15,6 +15,7 @@ pub mod cluster;
 pub mod dfg;
 pub mod mapper;
 pub mod pe;
+pub mod replay;
 pub mod trace;
 
 pub use alu::{AluOp, Value};
@@ -28,4 +29,7 @@ pub use cluster::{
 pub use dfg::{Dfg, DfgBuilder, MemSpace, NodeId, Op};
 pub use mapper::Geometry;
 pub use mapper::{Mapper, Mapping};
-pub use trace::AccessTrace;
+pub use replay::{replay, EpochSample, ReplayOutcome};
+pub use trace::{
+    AccessTrace, CaptureHeader, CaptureKind, CaptureTrace, CapturedTrace, CAPTURE_SCHEMA_VERSION,
+};

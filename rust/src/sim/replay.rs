@@ -1,0 +1,489 @@
+//! Trace replay: re-drive a recorded access stream through any
+//! [`MemoryModel`] without re-executing the DFG (ROADMAP item 4; the
+//! perf lever behind dense cache/reconfig sweeps).
+//!
+//! ## Re-timing model
+//!
+//! The lock-step array advances `ctx` (schedule time) only on clean
+//! context completions, so for Normal-mode demand accesses the *schedule
+//! time at issue is geometry-invariant*: a context stalls longer or
+//! shorter under a different cache, but it is still the same context.
+//! Replay exploits this by tracking `shift = issue_cycle − sched`
+//! directly: a context scheduled at `s` issues at `s + shift`, and when
+//! its misses resolve at cycle `T`, the machine's next context issues at
+//! `T + 1` — i.e. `shift` becomes `T − s`. This mirrors `step_cycle`'s
+//! stall loop (including the bounced-request retry gating on
+//! `next_event` — every re-attempt re-calls `request`, reproducing the
+//! live run's access-counter inflation exactly), so replaying a capture
+//! through the *same* memory configuration reproduces every
+//! [`SubsystemStats`] counter byte-for-byte, and replaying through a
+//! different cache geometry reproduces what a live run of that geometry
+//! would report on the (identical) demand stream.
+//!
+//! Runahead episodes are replayed as recorded: `begin_runahead_epoch` at
+//! each entry marker, each prefetch at its recorded cycle offset from
+//! the episode anchor. For the same configuration this is exact; for a
+//! different one the episode boundary is an approximation (an episode
+//! that resolves earlier drops the tail prefetches the live run would
+//! not have had time to issue either — but a *slower* resolution cannot
+//! invent prefetches the capture never saw). See DESIGN.md for the
+//! validity envelope.
+//!
+//! Replay cannot answer questions that feed timing back into the DFG:
+//! the demand *address stream* is fixed at capture time, so systems that
+//! change which addresses are issued (different workload, different
+//! SPM placement, runahead on/off) need a fresh capture.
+
+use super::array::EpochController;
+use super::trace::{AccessTrace, CaptureKind, CapturedTrace, TraceEvent};
+use crate::mem::{
+    AccessKind, Cycle, MemRequest, MemResponse, MemResponseComplete, MemoryModel, SubsystemStats,
+};
+
+/// Per-epoch observation recorded at each controller hook firing — the
+/// raw material of the `reconfig_timeseries` figure.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochSample {
+    /// Cycle at which the hook fired (replay timeline).
+    pub cycle: Cycle,
+    /// L1 accesses within this epoch (delta since the previous sample).
+    pub l1_accesses: u64,
+    /// L1 misses within this epoch.
+    pub l1_misses: u64,
+    /// Windowed L1 miss rate (`l1_misses / l1_accesses`, 0 when idle).
+    pub miss_rate: f64,
+    /// DRAM row-buffer hits within this epoch.
+    pub dram_row_hits: u64,
+    /// In-band reconfiguration cost the controller charged (cycles);
+    /// non-zero means a plan was applied at this boundary.
+    pub cost: u64,
+}
+
+/// What a replay run reports: the same memory-side columns a live
+/// [`crate::sim::RunResult`] carries, plus the epoch time-series. Cycle
+/// counts are *reconstructed* (exact for the capture configuration,
+/// model-faithful re-timings otherwise); functional output is not
+/// re-validated — replay never touches data values.
+#[derive(Clone, Debug)]
+pub struct ReplayOutcome {
+    pub cycles: Cycle,
+    pub stall_cycles: Cycle,
+    pub mem: SubsystemStats,
+    pub uncovered_misses: u64,
+    pub runahead_entries: u64,
+    /// Capture events fed to the memory model (bench `replay_throughput`
+    /// denominator).
+    pub events_replayed: u64,
+    pub epochs: Vec<EpochSample>,
+    /// Carried over from the capture header (the DFG-side facts replay
+    /// cannot change).
+    pub iterations: u64,
+    pub useful_ops: u64,
+    pub num_pes: u32,
+    pub ii: u32,
+    /// The observation window as the live monitor would have seen it —
+    /// for irregularity reporting.
+    pub monitor: AccessTrace,
+}
+
+/// Outstanding read miss: `(synthetic request id, block address)`.
+type ReplayTrigger = (usize, u32);
+
+/// Hard bound on a single stall wait — a replay that exceeds it hit a
+/// backend whose `next_event` contract is broken.
+const WAIT_BOUND: Cycle = 100_000_000;
+
+fn fire_epoch(
+    mem: &mut dyn MemoryModel,
+    hook: &mut Option<(&mut dyn EpochController, u64)>,
+    monitor: &mut AccessTrace,
+    cycle: Cycle,
+    last: &mut SubsystemStats,
+    epochs: &mut Vec<EpochSample>,
+) -> u64 {
+    let Some((ctl, _)) = hook.as_mut() else { return 0 };
+    let now = mem.stats();
+    let mut cost = 0;
+    if let Some(r) = mem.reconfig() {
+        cost = ctl.on_epoch(r, monitor, cycle);
+    }
+    let da = now.l1_accesses - last.l1_accesses;
+    let dm = now.l1_misses - last.l1_misses;
+    epochs.push(EpochSample {
+        cycle,
+        l1_accesses: da,
+        l1_misses: dm,
+        miss_rate: if da == 0 { 0.0 } else { dm as f64 / da as f64 },
+        dram_row_hits: now.dram_row_hits - last.dram_row_hits,
+        cost,
+    });
+    *last = now;
+    cost
+}
+
+fn resolve(triggers: &mut Vec<ReplayTrigger>, done: &[MemResponseComplete]) {
+    for d in done {
+        let mut i = 0;
+        while i < triggers.len() {
+            if triggers[i].0 == d.pe && triggers[i].1 == d.addr_block {
+                triggers.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Feed a recorded trace through `mem`, mirroring the live machine's
+/// stall/retry/runahead protocol cycle-for-cycle. The hook fires at the
+/// first clean cycle at or past each epoch boundary, exactly as
+/// [`crate::sim::CgraArray::run_with`] fires it, with its cost charged
+/// in-band (shifting everything downstream). `monitor_window` sizes the
+/// rebuilt observation window (callers running a reconfig policy should
+/// open it to at least the policy's window, as the live runner does).
+pub fn replay(
+    trace: &CapturedTrace,
+    mem: &mut dyn MemoryModel,
+    mut hook: Option<(&mut dyn EpochController, u64)>,
+    monitor_window: usize,
+) -> Result<ReplayOutcome, String> {
+    let h = &trace.header;
+    let ports = h.ports as usize;
+    if mem.num_ports() != ports {
+        return Err(format!(
+            "replay: memory model has {} ports, capture has {ports}",
+            mem.num_ports()
+        ));
+    }
+    for (p, base) in h.spm_bases.iter().enumerate() {
+        mem.place_spm(p, *base);
+    }
+    for (p, base, bytes) in &h.streamed {
+        mem.add_streamed(*p as usize, *base, *bytes);
+    }
+
+    let period = hook.as_ref().map(|(_, p)| (*p).max(1));
+    let mut next_epoch = period.unwrap_or(u64::MAX);
+    let mut monitor = AccessTrace::new(ports, monitor_window);
+    let mut last_sample = SubsystemStats::default();
+    let mut epochs = Vec::new();
+    let mut shift = h.start_shift;
+    let mut stall: Cycle = 0;
+    let mut uncovered = 0u64;
+    let mut ra_entries = 0u64;
+    let mut events_replayed = 0u64;
+    let mut completions: Vec<MemResponseComplete> = Vec::new();
+
+    let evs = &trace.events;
+    let n = evs.len();
+    let mut i = 0usize;
+    while i < n {
+        let e0 = evs[i];
+        if !matches!(e0.kind, CaptureKind::DemandRead | CaptureKind::DemandWrite) {
+            return Err(format!(
+                "replay: {:?} event outside a stall episode (seq {})",
+                e0.kind, e0.seq
+            ));
+        }
+        let s = e0.sched;
+        // ---- Epoch boundaries crossed during the clean span before this
+        // context: the live loop fires at step-end `next_epoch` exactly.
+        loop {
+            let t = s + shift;
+            if next_epoch > t {
+                break;
+            }
+            let fire_at = next_epoch;
+            let cost = fire_epoch(mem, &mut hook, &mut monitor, fire_at, &mut last_sample, &mut epochs);
+            stall += cost;
+            shift += cost;
+            next_epoch = fire_at + cost + period.unwrap_or(u64::MAX);
+        }
+        let t = s + shift;
+        // Episode events map through the recorded-to-replayed offset of
+        // their anchoring demand group (exact when the configuration
+        // matches the capture).
+        let delta = t as i64 - e0.cycle as i64;
+        let map = |c: Cycle| -> Cycle { (c as i64 + delta) as Cycle };
+
+        // ---- Issue the demand group (one frozen context's accesses, in
+        // recorded slot order). ----
+        let mut triggers: Vec<ReplayTrigger> = Vec::new();
+        let mut retries: Vec<(usize, MemRequest)> = Vec::new();
+        while i < n {
+            let e = evs[i];
+            let is_write = match e.kind {
+                CaptureKind::DemandRead => false,
+                CaptureKind::DemandWrite => true,
+                _ => break,
+            };
+            if e.sched != s {
+                break;
+            }
+            let port = e.port as usize;
+            monitor.record(TraceEvent { cycle: t, pe: e.pe as usize, port, addr: e.addr, is_write });
+            let req = MemRequest {
+                addr: e.addr,
+                kind: if is_write { AccessKind::Write } else { AccessKind::Read },
+                data: 0,
+                pe: e.seq as usize,
+            };
+            events_replayed += 1;
+            match mem.request(port, req, t) {
+                MemResponse::HitSpm { .. } | MemResponse::HitL1 { .. } => {}
+                MemResponse::ReadMiss { .. } => {
+                    uncovered += 1;
+                    triggers.push((req.pe, mem.block_addr(port, req.addr)));
+                }
+                MemResponse::WriteQueued => {}
+                MemResponse::MshrFull => retries.push((port, req)),
+            }
+            i += 1;
+        }
+        // The runahead episode (if any) recorded during this context's
+        // stall: entry markers + prefetches, consumed below at their
+        // mapped cycles.
+        let ep_start = i;
+        while i < n && matches!(evs[i].kind, CaptureKind::RaEnter | CaptureKind::Prefetch) {
+            i += 1;
+        }
+        let episode = &evs[ep_start..i];
+
+        // ---- Wait out the stall, mirroring step_cycle: drains land on
+        // timewheel events, bounced requests re-attempt at `retry_at`
+        // (each attempt re-calls `request`), runahead prefetches issue at
+        // their mapped cycles. ----
+        // A group that resolved entirely at issue has no stall window; any
+        // recorded episode is dropped unreplayed (it can only exist when
+        // the replay configuration hits where the capture one missed).
+        let t_done: Cycle;
+        if triggers.is_empty() && retries.is_empty() {
+            t_done = t;
+        } else {
+            let mut cycle = t;
+            let mut retry_at: Cycle = 0;
+            let mut ep_idx = 0usize;
+            let mut in_episode = false;
+            loop {
+                let mut next = Cycle::MAX;
+                if ep_idx < episode.len() {
+                    next = next.min(map(episode[ep_idx].cycle));
+                }
+                if !retries.is_empty() && !in_episode {
+                    next = next.min(retry_at.max(cycle + 1));
+                }
+                if !triggers.is_empty() {
+                    next = next.min(mem.next_event().unwrap_or(cycle + 1));
+                }
+                if next == Cycle::MAX {
+                    next = cycle + 1;
+                }
+                cycle = next.max(cycle + 1);
+                if cycle > t + WAIT_BOUND {
+                    return Err(format!(
+                        "replay: context at sched {s} unresolved after {WAIT_BOUND} cycles"
+                    ));
+                }
+                mem.tick_into(cycle, &mut completions);
+                resolve(&mut triggers, &completions);
+                // Runahead exit: triggers resolved ends the episode (the
+                // live exit check gates on triggers only); leftover
+                // prefetches of this episode — possible when replaying a
+                // faster configuration — are dropped, as the live run
+                // would never have issued them.
+                if in_episode && triggers.is_empty() {
+                    in_episode = false;
+                    while ep_idx < episode.len()
+                        && episode[ep_idx].kind != CaptureKind::RaEnter
+                    {
+                        ep_idx += 1;
+                    }
+                    for p in 0..ports {
+                        mem.temp_clear(p);
+                    }
+                }
+                if triggers.is_empty() && retries.is_empty() {
+                    t_done = cycle;
+                    break;
+                }
+                // Bounced-request service (frozen contexts only — parked
+                // during an episode, exactly like the live machine).
+                if !in_episode && !retries.is_empty() && cycle >= retry_at {
+                    let pending = std::mem::take(&mut retries);
+                    for (port, req) in pending {
+                        match mem.request(port, req, cycle) {
+                            MemResponse::MshrFull => retries.push((port, req)),
+                            MemResponse::HitSpm { .. }
+                            | MemResponse::HitL1 { .. }
+                            | MemResponse::WriteQueued => {}
+                            MemResponse::ReadMiss { .. } => {
+                                uncovered += 1;
+                                triggers.push((req.pe, mem.block_addr(port, req.addr)));
+                            }
+                        }
+                    }
+                    if !retries.is_empty() {
+                        retry_at = mem.next_event().unwrap_or(cycle + 1).max(cycle + 1);
+                    }
+                    if triggers.is_empty() && retries.is_empty() {
+                        t_done = cycle;
+                        break;
+                    }
+                }
+                // Episode actions due this cycle.
+                while ep_idx < episode.len() && map(episode[ep_idx].cycle) <= cycle {
+                    let ee = episode[ep_idx];
+                    match ee.kind {
+                        CaptureKind::RaEnter => {
+                            ra_entries += 1;
+                            mem.begin_runahead_epoch();
+                            in_episode = true;
+                        }
+                        CaptureKind::Prefetch => {
+                            let _ = mem.prefetch(ee.port as usize, ee.addr, cycle);
+                        }
+                    }
+                    events_replayed += 1;
+                    ep_idx += 1;
+                }
+            }
+        }
+        stall += t_done - t;
+        shift = t_done - s;
+        // Boundary crossed during the stall: the live loop fires at the
+        // first clean step-end, which is the resolution cycle itself.
+        if next_epoch <= t_done {
+            let cost =
+                fire_epoch(mem, &mut hook, &mut monitor, t_done, &mut last_sample, &mut epochs);
+            stall += cost;
+            shift += cost;
+            next_epoch = t_done + cost + period.unwrap_or(u64::MAX);
+        }
+    }
+
+    // ---- Trailing clean span: boundaries keep firing while schedule
+    // contexts remain (the live loop stops at the last step-end before
+    // `end_ctx`). ----
+    if let Some(p) = period {
+        loop {
+            let end = h.end_sched + shift;
+            if next_epoch >= end {
+                break;
+            }
+            let fire_at = next_epoch;
+            let cost =
+                fire_epoch(mem, &mut hook, &mut monitor, fire_at, &mut last_sample, &mut epochs);
+            stall += cost;
+            shift += cost;
+            next_epoch = fire_at + cost + p;
+        }
+    }
+
+    mem.finalize_prefetch_stats();
+    Ok(ReplayOutcome {
+        cycles: h.end_sched + shift,
+        stall_cycles: stall,
+        mem: mem.stats(),
+        uncovered_misses: uncovered,
+        runahead_entries: ra_entries,
+        events_replayed,
+        epochs,
+        iterations: h.iterations,
+        useful_ops: h.useful_ops,
+        num_pes: h.num_pes,
+        ii: h.ii,
+        monitor,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{IdealConfig, MemoryModelSpec};
+    use crate::sim::trace::{CaptureHeader, CaptureTrace};
+
+    fn demand_stream(ports: u32, n: u64, stride: u32) -> CapturedTrace {
+        let mut cap = CaptureTrace::new(true);
+        for k in 0..n {
+            let port = (k % u64::from(ports)) as usize;
+            cap.record(CaptureKind::DemandRead, k, k, port, port, 0x10_0000 + k as u32 * stride);
+        }
+        CapturedTrace {
+            header: CaptureHeader {
+                producer: 0,
+                ports,
+                backing_bytes: u64::from(ports) * 0x20_0000,
+                spm_bases: (0..ports).map(|p| p * 0x20_0000).collect(),
+                streamed: vec![],
+                spm_greedy: false,
+                spm_usable_bytes: 1024,
+                end_sched: n,
+                total_cycles: n,
+                iterations: n,
+                useful_ops: n,
+                num_pes: 16,
+                ii: 1,
+                start_shift: 0,
+            },
+            events: cap.events,
+        }
+    }
+
+    #[test]
+    fn ideal_memory_replay_is_stall_free() {
+        let t = demand_stream(2, 100, 4);
+        let spec = MemoryModelSpec::Ideal(IdealConfig {
+            num_ports: 2,
+            spm_bytes: 64 * 1024,
+            line_bytes: 64,
+        });
+        let mut mem = spec.build(t.header.backing_bytes as usize);
+        let out = replay(&t, mem.as_mut(), None, 0).expect("replay");
+        assert_eq!(out.mem.spm_accesses, 100);
+        assert_eq!(out.cycles, t.header.end_sched);
+        assert_eq!(out.stall_cycles, 0);
+        assert_eq!(out.events_replayed, 100);
+    }
+
+    #[test]
+    fn hierarchy_replay_counts_misses_per_block() {
+        use crate::mem::{CacheConfig, DramModelKind, SubsystemConfig};
+        let t = demand_stream(1, 64, 4); // 64 reads, 16-byte lines -> 16 blocks
+        let cfg = SubsystemConfig {
+            num_ports: 1,
+            spm_bytes: 512,
+            l1: CacheConfig { sets: 16, ways: 2, line_bytes: 16, vline_shift: 0 },
+            l2: CacheConfig { sets: 64, ways: 4, line_bytes: 16, vline_shift: 0 },
+            mshr_entries: 8,
+            store_buffer_entries: 8,
+            l1_hit_latency: 1,
+            l2_hit_latency: 8,
+            dram_latency: 80,
+            dram_bytes_per_cycle: 8,
+            dram: DramModelKind::Flat,
+            temp_store_bytes: 64,
+            shared_l1: false,
+        };
+        let spec = MemoryModelSpec::Hierarchy(cfg);
+        let mut mem = spec.build(t.header.backing_bytes as usize);
+        let out = replay(&t, mem.as_mut(), None, 0).expect("replay");
+        assert_eq!(out.mem.l1_accesses, 64);
+        assert_eq!(out.mem.l1_misses, 16, "one miss per 16-byte line");
+        assert_eq!(out.mem.l1_hits, 48);
+        assert_eq!(out.uncovered_misses, 16);
+        assert!(out.stall_cycles > 0, "cold misses must stall the replay");
+        assert!(out.cycles > t.header.end_sched);
+    }
+
+    #[test]
+    fn replay_rejects_port_mismatch() {
+        let t = demand_stream(2, 10, 4);
+        let spec = MemoryModelSpec::Ideal(IdealConfig {
+            num_ports: 4,
+            spm_bytes: 64 * 1024,
+            line_bytes: 64,
+        });
+        let mut mem = spec.build(1 << 22);
+        assert!(replay(&t, mem.as_mut(), None, 0).is_err());
+    }
+}

@@ -1,9 +1,14 @@
-//! Demand-access trace capture. Two consumers:
+//! Demand-access trace capture. Three consumers:
 //!
 //! * Fig 7 — per-PE address/time scatter series showing the regular /
 //!   irregular / mixed taxonomy;
 //! * the reconfiguration hardware tracker (§3.4) — samples each PE's
-//!   accesses over an observation window for the software model.
+//!   accesses over an observation window for the software model
+//!   (`AccessTrace`, a bounded window);
+//! * the replay engine (`sim::replay`) — consumes a *complete* recording
+//!   (`CapturedTrace`) of every demand access and runahead prefetch, so
+//!   cache/reconfig sweeps can re-drive any `MemoryModel` without
+//!   re-executing the DFG.
 
 use crate::mem::{Addr, Cycle};
 
@@ -81,6 +86,355 @@ impl AccessTrace {
     }
 }
 
+/// What a captured event was, from the memory system's point of view.
+///
+/// `DemandRead`/`DemandWrite` are Normal-mode accesses that the lock-step
+/// machine waits on; `Prefetch` is a runahead-issued prefetch (including
+/// the garbage prefetches of the dummy-tracking ablation — the live run
+/// issued them, so replay must too); `RaEnter` marks a runahead-episode
+/// entry (replay calls `begin_runahead_epoch` there so Fig 15's prefetch
+/// classification counters stay faithful).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CaptureKind {
+    DemandRead,
+    DemandWrite,
+    Prefetch,
+    RaEnter,
+}
+
+/// One fully-recorded access.
+///
+/// `sched` is the schedule time (`ctx`) at issue — geometry-invariant for
+/// Normal-mode demand accesses, which is what lets replay re-time the
+/// stream under a different cache geometry. `cycle` is the absolute cycle
+/// of the producing run. `seq` is a global issue-order counter preserving
+/// within-cycle cross-port order (slot schedule order), which matters for
+/// tie-breaking in shared L2/DRAM models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CaptureEvent {
+    pub seq: u64,
+    pub sched: u64,
+    pub cycle: Cycle,
+    pub pe: u32,
+    pub port: u32,
+    pub addr: Addr,
+    pub kind: CaptureKind,
+}
+
+/// Unbounded full-stream recorder, live only when `CgraConfig::capture`
+/// is set. Distinct from `AccessTrace` (the tracker's bounded observation
+/// window) — the two must not share a capacity knob.
+#[derive(Clone, Debug, Default)]
+pub struct CaptureTrace {
+    enabled: bool,
+    seq: u64,
+    pub events: Vec<CaptureEvent>,
+}
+
+impl CaptureTrace {
+    pub fn new(enabled: bool) -> Self {
+        CaptureTrace { enabled, seq: 0, events: Vec::new() }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn record(
+        &mut self,
+        kind: CaptureKind,
+        sched: u64,
+        cycle: Cycle,
+        pe: usize,
+        port: usize,
+        addr: Addr,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.events.push(CaptureEvent {
+            seq: self.seq,
+            sched,
+            cycle,
+            pe: pe as u32,
+            port: port as u32,
+            addr,
+            kind,
+        });
+        self.seq += 1;
+    }
+}
+
+/// Everything replay needs to rebuild the memory-side environment of the
+/// producing run without the DFG: the SPM placement (so `spm.contains`
+/// resolves identically), the streamed ranges (SPM-greedy layouts), and
+/// the run's fixed-point facts (schedule end, iteration count, ...).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CaptureHeader {
+    /// `CellKey` bits of the producing cell (0 when captured outside the
+    /// session machinery, e.g. in-memory bench captures).
+    pub producer: u64,
+    pub ports: u32,
+    /// Backing-store size the producing run allocated.
+    pub backing_bytes: u64,
+    /// Per-port SPM base handed to `place_spm`.
+    pub spm_bases: Vec<Addr>,
+    /// `(port, base, bytes)` ranges handed to `add_streamed`.
+    pub streamed: Vec<(u32, Addr, u32)>,
+    pub spm_greedy: bool,
+    pub spm_usable_bytes: u64,
+    /// `end_ctx` of the producing run: last schedule time + 1.
+    pub end_sched: u64,
+    pub total_cycles: u64,
+    pub iterations: u64,
+    pub useful_ops: u64,
+    pub num_pes: u32,
+    pub ii: u32,
+    /// `cycle - sched` at the start of the run (non-zero for runs that
+    /// began at `start_cycle > 0`).
+    pub start_shift: u64,
+}
+
+/// A finished recording: header + the merged event stream in issue order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CapturedTrace {
+    pub header: CaptureHeader,
+    pub events: Vec<CaptureEvent>,
+}
+
+const CAPTURE_MAGIC: &[u8; 4] = b"CGTR";
+pub const CAPTURE_SCHEMA_VERSION: u32 = 1;
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, String> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos).ok_or("trace truncated in varint")?;
+        *pos += 1;
+        if shift >= 64 {
+            return Err("varint overflow".into());
+        }
+        v |= u64::from(b & 0x7f) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+fn zigzag(v: i64) -> u64 {
+    (v.wrapping_shl(1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+impl CapturedTrace {
+    /// Number of demand (Normal-mode) events — the replay engine's unit
+    /// of work, and the denominator of the bench `replay_throughput` row.
+    pub fn demand_len(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, CaptureKind::DemandRead | CaptureKind::DemandWrite))
+            .count()
+    }
+
+    /// Rebuild a bounded observation window from the full stream, as the
+    /// live monitor would have seen it (demand accesses only). Used by
+    /// fig7 and anyone wanting `irregularity()` over a capture.
+    pub fn monitor_view(&self, cap_per_port: usize) -> AccessTrace {
+        let mut t = AccessTrace::new(self.header.ports as usize, cap_per_port.max(1));
+        for e in &self.events {
+            let is_write = match e.kind {
+                CaptureKind::DemandRead => false,
+                CaptureKind::DemandWrite => true,
+                _ => continue,
+            };
+            t.record(TraceEvent {
+                cycle: e.cycle,
+                pe: e.pe as usize,
+                port: e.port as usize,
+                addr: e.addr,
+                is_write,
+            });
+        }
+        t
+    }
+
+    /// Compact binary encoding: magic, schema version, varint header,
+    /// then one delta-encoded stream per port (runahead-entry markers ride
+    /// in port 0's stream). Within a stream: kind byte, then varint deltas
+    /// for seq/sched/cycle, a zigzag-varint address delta, and the PE id.
+    /// Decode merges streams back into global `seq` order.
+    pub fn encode(&self) -> Vec<u8> {
+        let h = &self.header;
+        let mut out = Vec::with_capacity(64 + self.events.len() * 6);
+        out.extend_from_slice(CAPTURE_MAGIC);
+        out.extend_from_slice(&CAPTURE_SCHEMA_VERSION.to_le_bytes());
+        put_varint(&mut out, h.producer);
+        put_varint(&mut out, u64::from(h.ports));
+        put_varint(&mut out, h.backing_bytes);
+        for b in &h.spm_bases {
+            put_varint(&mut out, u64::from(*b));
+        }
+        put_varint(&mut out, h.streamed.len() as u64);
+        for (p, base, bytes) in &h.streamed {
+            put_varint(&mut out, u64::from(*p));
+            put_varint(&mut out, u64::from(*base));
+            put_varint(&mut out, u64::from(*bytes));
+        }
+        out.push(u8::from(h.spm_greedy));
+        put_varint(&mut out, h.spm_usable_bytes);
+        put_varint(&mut out, h.end_sched);
+        put_varint(&mut out, h.total_cycles);
+        put_varint(&mut out, h.iterations);
+        put_varint(&mut out, h.useful_ops);
+        put_varint(&mut out, u64::from(h.num_pes));
+        put_varint(&mut out, u64::from(h.ii));
+        put_varint(&mut out, h.start_shift);
+
+        let ports = h.ports.max(1) as usize;
+        let mut streams: Vec<Vec<&CaptureEvent>> = vec![Vec::new(); ports];
+        for e in &self.events {
+            let p = if e.kind == CaptureKind::RaEnter { 0 } else { e.port as usize };
+            streams[p].push(e);
+        }
+        for stream in &streams {
+            put_varint(&mut out, stream.len() as u64);
+            let (mut seq, mut sched, mut cycle, mut addr) = (0u64, 0u64, 0u64, 0i64);
+            for e in stream {
+                out.push(match e.kind {
+                    CaptureKind::DemandRead => 0,
+                    CaptureKind::DemandWrite => 1,
+                    CaptureKind::Prefetch => 2,
+                    CaptureKind::RaEnter => 3,
+                });
+                put_varint(&mut out, e.seq - seq);
+                put_varint(&mut out, e.sched - sched);
+                put_varint(&mut out, e.cycle - cycle);
+                put_varint(&mut out, zigzag(i64::from(e.addr) - addr));
+                put_varint(&mut out, u64::from(e.pe));
+                seq = e.seq;
+                sched = e.sched;
+                cycle = e.cycle;
+                addr = i64::from(e.addr);
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<CapturedTrace, String> {
+        if buf.len() < 8 || &buf[0..4] != CAPTURE_MAGIC {
+            return Err("not a CGTR trace".into());
+        }
+        let version = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+        if version != CAPTURE_SCHEMA_VERSION {
+            return Err(format!(
+                "trace schema v{version} != supported v{CAPTURE_SCHEMA_VERSION}"
+            ));
+        }
+        let mut pos = 8usize;
+        let producer = get_varint(buf, &mut pos)?;
+        let ports = get_varint(buf, &mut pos)? as u32;
+        if ports == 0 || ports > 64 {
+            return Err(format!("implausible port count {ports}"));
+        }
+        let backing_bytes = get_varint(buf, &mut pos)?;
+        let mut spm_bases = Vec::with_capacity(ports as usize);
+        for _ in 0..ports {
+            spm_bases.push(get_varint(buf, &mut pos)? as Addr);
+        }
+        let n_streamed = get_varint(buf, &mut pos)? as usize;
+        let mut streamed = Vec::with_capacity(n_streamed);
+        for _ in 0..n_streamed {
+            let p = get_varint(buf, &mut pos)? as u32;
+            let base = get_varint(buf, &mut pos)? as Addr;
+            let bytes = get_varint(buf, &mut pos)? as u32;
+            streamed.push((p, base, bytes));
+        }
+        let spm_greedy = *buf.get(pos).ok_or("trace truncated at spm_greedy")? != 0;
+        pos += 1;
+        let spm_usable_bytes = get_varint(buf, &mut pos)?;
+        let end_sched = get_varint(buf, &mut pos)?;
+        let total_cycles = get_varint(buf, &mut pos)?;
+        let iterations = get_varint(buf, &mut pos)?;
+        let useful_ops = get_varint(buf, &mut pos)?;
+        let num_pes = get_varint(buf, &mut pos)? as u32;
+        let ii = get_varint(buf, &mut pos)? as u32;
+        let start_shift = get_varint(buf, &mut pos)?;
+        let header = CaptureHeader {
+            producer,
+            ports,
+            backing_bytes,
+            spm_bases,
+            streamed,
+            spm_greedy,
+            spm_usable_bytes,
+            end_sched,
+            total_cycles,
+            iterations,
+            useful_ops,
+            num_pes,
+            ii,
+            start_shift,
+        };
+
+        let mut events = Vec::new();
+        for port in 0..ports.max(1) {
+            let n = get_varint(buf, &mut pos)? as usize;
+            let (mut seq, mut sched, mut cycle, mut addr) = (0u64, 0u64, 0u64, 0i64);
+            for _ in 0..n {
+                let kb = *buf.get(pos).ok_or("trace truncated at event kind")?;
+                pos += 1;
+                let kind = match kb {
+                    0 => CaptureKind::DemandRead,
+                    1 => CaptureKind::DemandWrite,
+                    2 => CaptureKind::Prefetch,
+                    3 => CaptureKind::RaEnter,
+                    other => return Err(format!("bad event kind {other}")),
+                };
+                seq += get_varint(buf, &mut pos)?;
+                sched += get_varint(buf, &mut pos)?;
+                cycle += get_varint(buf, &mut pos)?;
+                addr += unzigzag(get_varint(buf, &mut pos)?);
+                let pe = get_varint(buf, &mut pos)? as u32;
+                if addr < 0 || addr > i64::from(u32::MAX) {
+                    return Err("address delta out of range".into());
+                }
+                events.push(CaptureEvent {
+                    seq,
+                    sched,
+                    cycle,
+                    pe,
+                    port: if kind == CaptureKind::RaEnter { 0 } else { port },
+                    addr: addr as Addr,
+                    kind,
+                });
+            }
+        }
+        if pos != buf.len() {
+            return Err(format!("{} trailing bytes after trace", buf.len() - pos));
+        }
+        events.sort_by_key(|e| e.seq);
+        Ok(CapturedTrace { header, events })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +487,79 @@ mod tests {
         t.record(ev(0, 0, 0));
         t.rearm();
         assert!(t.events[0].is_empty());
+    }
+
+    fn sample_capture() -> CapturedTrace {
+        let mut cap = CaptureTrace::new(true);
+        let mut x = 99u32;
+        let mut cycle = 0u64;
+        for sched in 0..200u64 {
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+            cycle += 1 + u64::from(x % 7);
+            let port = (sched % 3) as usize;
+            match x % 5 {
+                0 => cap.record(CaptureKind::DemandWrite, sched, cycle, port + 4, port, x % 0x10_0000),
+                1 => {
+                    cap.record(CaptureKind::RaEnter, sched, cycle, 0, 0, 0);
+                    cap.record(CaptureKind::Prefetch, sched, cycle + 1, port, port, x % 0x10_0000);
+                }
+                _ => cap.record(CaptureKind::DemandRead, sched, cycle, port + 4, port, x % 0x10_0000),
+            }
+        }
+        CapturedTrace {
+            header: CaptureHeader {
+                producer: 0xdead_beef_cafe_f00d,
+                ports: 3,
+                backing_bytes: 3 * 0x20_0000,
+                spm_bases: vec![0, 0x20_0000, 0x40_0000],
+                streamed: vec![(0, 0, 4096), (2, 0x40_0000, 512)],
+                spm_greedy: true,
+                spm_usable_bytes: 63 * 1024,
+                end_sched: 200,
+                total_cycles: cycle + 10,
+                iterations: 50,
+                useful_ops: 1234,
+                num_pes: 16,
+                ii: 4,
+                start_shift: 0,
+            },
+            events: cap.events,
+        }
+    }
+
+    #[test]
+    fn capture_codec_round_trips() {
+        let t = sample_capture();
+        let bytes = t.encode();
+        let back = CapturedTrace::decode(&bytes).expect("decode");
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn capture_decode_rejects_garbage() {
+        assert!(CapturedTrace::decode(b"nope").is_err());
+        let mut bytes = sample_capture().encode();
+        bytes.truncate(bytes.len() - 3);
+        assert!(CapturedTrace::decode(&bytes).is_err());
+        let mut vers = sample_capture().encode();
+        vers[4] = 0xff;
+        assert!(CapturedTrace::decode(&vers).is_err());
+    }
+
+    #[test]
+    fn capture_disabled_records_nothing() {
+        let mut cap = CaptureTrace::new(false);
+        cap.record(CaptureKind::DemandRead, 0, 0, 0, 0, 0);
+        assert!(cap.events.is_empty());
+        assert!(!cap.is_enabled());
+    }
+
+    #[test]
+    fn monitor_view_keeps_demands_only() {
+        let t = sample_capture();
+        let view = t.monitor_view(usize::MAX >> 1);
+        let demands: usize = view.events.iter().map(|v| v.len()).sum();
+        assert_eq!(demands, t.demand_len());
+        assert!(t.events.len() > t.demand_len());
     }
 }

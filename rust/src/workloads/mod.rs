@@ -21,7 +21,10 @@ pub mod sort;
 
 use crate::mem::{Addr, Backing, MemoryModel, MemoryModelSpec, MemorySubsystem, SubsystemConfig};
 use crate::reconfig::OnlineController;
-use crate::sim::{CgraArray, CgraConfig, Dfg, Mapper, ReconfigMode, ReconfigPolicy, RunResult};
+use crate::sim::{
+    CaptureHeader, CapturedTrace, CgraArray, CgraConfig, Dfg, Mapper, ReconfigMode, ReconfigPolicy,
+    RunResult,
+};
 
 pub use gcn::GcnAggregate;
 pub use grad::Grad;
@@ -206,6 +209,9 @@ pub struct WorkloadRun {
     pub reconfig_applies: u64,
     /// Ways that changed owner across those applies.
     pub reconfig_ways_moved: u64,
+    /// Complete access recording, present iff `CgraConfig::capture` was
+    /// set — the input to `sim::replay`.
+    pub capture: Option<CapturedTrace>,
 }
 
 /// End-to-end driver over the default hierarchy backend: allocate,
@@ -231,21 +237,23 @@ pub fn run_workload_model(
     let policy = cgra_cfg.reconfig;
     if policy.mode != ReconfigMode::Off {
         // The controller samples the live trace window.
-        cgra_cfg.trace_window = cgra_cfg.trace_window.max(policy.window);
+        cgra_cfg.monitor_window = cgra_cfg.monitor_window.max(policy.window);
     }
     // Hierarchy runs stay monomorphized: request/tick sit on the per-cycle
     // hot path, so the default backend must not pay dyn dispatch there.
-    let (result, applies, moved, output_ok, layout) =
+    let (result, applies, moved, output_ok, layout, capture) =
         if let MemoryModelSpec::Hierarchy(sys_cfg) = mem_spec {
             let (mut mem, mut arr, layout) = prepare(wl, *sys_cfg, cgra_cfg);
             let (result, applies, moved) = drive(&mut arr, &mut mem, wl.iterations(), policy);
             let output_ok = validate(wl, &layout, &mem.backing);
-            (result, applies, moved, output_ok, layout)
+            let capture = take_capture(&mut arr, &layout, mem_spec, &result);
+            (result, applies, moved, output_ok, layout, capture)
         } else {
             let (mut mem, mut arr, layout) = prepare_model(wl, mem_spec, cgra_cfg);
             let (result, applies, moved) = drive(&mut arr, &mut *mem, wl.iterations(), policy);
             let output_ok = validate(wl, &layout, mem.backing());
-            (result, applies, moved, output_ok, layout)
+            let capture = take_capture(&mut arr, &layout, mem_spec, &result);
+            (result, applies, moved, output_ok, layout, capture)
         };
     let irregular_share = layout.irregular_share();
     WorkloadRun {
@@ -255,7 +263,59 @@ pub fn run_workload_model(
         irregular_share,
         reconfig_applies: applies,
         reconfig_ways_moved: moved,
+        capture,
     }
+}
+
+/// Assemble the portable recording from a finished captured run: the
+/// array's event stream plus the header replay needs to rebuild the
+/// memory-side environment (SPM placement, streamed ranges, schedule
+/// facts). `producer` stays 0 here; the trace store stamps it with the
+/// producing cell's key when the trace is persisted.
+fn take_capture(
+    arr: &mut CgraArray,
+    layout: &Layout,
+    mem_spec: &MemoryModelSpec,
+    result: &RunResult,
+) -> Option<CapturedTrace> {
+    if !arr.cfg.capture {
+        return None;
+    }
+    let ports = mem_spec.num_ports();
+    let spm_greedy = mem_spec.spm_greedy();
+    let mut streamed = Vec::new();
+    if spm_greedy {
+        for (i, s) in layout.specs.iter().enumerate() {
+            if s.placement == Placement::Streamed {
+                streamed.push((s.port as u32, layout.bases[i], s.words * 4));
+            }
+        }
+    }
+    let m = arr.mapping();
+    let end_sched = if result.iterations == 0 {
+        0
+    } else {
+        (result.iterations - 1) * u64::from(m.ii) + u64::from(m.schedule_len)
+    };
+    Some(CapturedTrace {
+        header: CaptureHeader {
+            producer: 0,
+            ports: ports as u32,
+            backing_bytes: layout.backing_bytes(ports) as u64,
+            spm_bases: (0..ports as u32).map(|p| p * PORT_STRIDE).collect(),
+            streamed,
+            spm_greedy,
+            spm_usable_bytes: u64::from(mem_spec.spm_usable_bytes()),
+            end_sched,
+            total_cycles: result.cycles,
+            iterations: result.iterations,
+            useful_ops: result.useful_ops,
+            num_pes: result.num_pes as u32,
+            ii: result.ii,
+            start_shift: 0,
+        },
+        events: std::mem::take(&mut arr.capture.events),
+    })
 }
 
 /// Run the array with (or without) the reconfiguration controller the

@@ -521,6 +521,73 @@ fn warm_store_fig17_and_adaptivity_render_with_zero_simulations() {
     let _ = ResultStore::clear(&path);
 }
 
+/// Acceptance (trace engine): the committed 22-point cache-geometry
+/// sweep over one captured scenario performs exactly one DFG simulation
+/// (the capture pre-pass, which doubles as the source row's cell), and
+/// every replayed point's memory columns are byte-identical to a live
+/// simulation of the same geometry.
+#[test]
+fn replay_geometry_sweep_runs_one_simulation_and_matches_live() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, Json, ResultStore};
+    let text = std::fs::read_to_string("specs/replay_geometry.json")
+        .expect("specs/replay_geometry.json is committed");
+    let spec = ExperimentSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert!(spec.systems.len() >= 21, "spec must carry >= 20 replay points");
+
+    // Fresh store + trace dir: the cold-run count below must not be
+    // satisfied by leftovers from an earlier test run.
+    let dir = std::env::temp_dir().join(format!("cgra-itest-replaygeo-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let eng = Engine::new(4);
+    let session = eng.session_with_store(ResultStore::open(dir.join("cells.jsonl")).unwrap());
+    let report = session.run(&spec);
+    let st = session.stats();
+    assert_eq!(st.executed, 1, "exactly one DFG simulation: {st:?}");
+    assert_eq!(st.replays as usize, spec.systems.len() - 1, "{st:?}");
+
+    // The identical-geometry replay point reproduces the live source row.
+    let live_src = report.get("aggregate/tiny", "Cache+SPM").unwrap();
+    let same = report.get("aggregate/tiny", "r-l1.4k-w4-l2.128k").unwrap();
+    assert_eq!(same.cycles, live_src.cycles);
+    assert_eq!(same.stall_cycles, live_src.stall_cycles);
+    assert_eq!(same.l1_accesses, live_src.l1_accesses);
+    assert_eq!(same.l1_hits, live_src.l1_hits);
+
+    // Spot-check swept geometries against genuinely live simulations.
+    let live_text = r#"{
+        "name": "replay-geometry-live",
+        "workloads": ["aggregate/tiny"],
+        "systems": [
+            {"base": "Cache+SPM", "name": "live-a", "l1_bytes": 2048,  "l1_ways": 2, "l2_bytes": 65536},
+            {"base": "Cache+SPM", "name": "live-b", "l1_bytes": 8192,  "l1_ways": 8, "l2_bytes": 131072},
+            {"base": "Cache+SPM", "name": "live-c", "l1_bytes": 16384, "l1_ways": 4, "l2_bytes": 65536}
+        ]
+    }"#;
+    let live_spec = ExperimentSpec::from_json(&Json::parse(live_text).unwrap()).unwrap();
+    let live = Engine::new(2).run(&live_spec);
+    for (replayed, lived) in [
+        ("r-l1.2k-w2-l2.64k", "live-a"),
+        ("r-l1.8k-w8-l2.128k", "live-b"),
+        ("r-l1.16k-w4-l2.64k", "live-c"),
+    ] {
+        let r = report.get("aggregate/tiny", replayed).unwrap();
+        let l = live.get("aggregate/tiny", lived).unwrap();
+        for (col, a, b) in [
+            ("cycles", r.cycles, l.cycles),
+            ("stall_cycles", r.stall_cycles, l.stall_cycles),
+            ("spm_accesses", r.spm_accesses, l.spm_accesses),
+            ("l1_accesses", r.l1_accesses, l.l1_accesses),
+            ("l1_hits", r.l1_hits, l.l1_hits),
+            ("l2_accesses", r.l2_accesses, l.l2_accesses),
+            ("dram_accesses", r.dram_accesses, l.dram_accesses),
+        ] {
+            assert_eq!(a, b, "{col} diverged on {replayed} vs {lived}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Acceptance (session layer): overlapping campaigns submitted to one
 /// session — the `repro all` shape, where Fig 13/15/16 all re-plot
 /// Runahead cells — execute each unique (scenario, system, repeat) cell

@@ -240,6 +240,67 @@ fn prop_event_core_report_is_byte_identical_to_reference_core() {
     );
 }
 
+/// Replay fidelity (the trace engine's core contract): feeding a recorded
+/// stream back through the *same* memory configuration reproduces the
+/// live run's memory counters and timing exactly — across backend shapes
+/// (plain hierarchy, banked DRAM, runahead + online reconfig) and kernel
+/// classes (gather, hash-join probe, phase-alternating gather).
+#[test]
+fn prop_replay_through_same_config_reproduces_live_counters_exactly() {
+    use cgra_mem::exp::{
+        measure_replay, measure_spec_captured, ExecModel, ScenarioSpec, SystemSpec,
+        WorkloadRegistry,
+    };
+    use cgra_mem::sim::ReconfigPolicy;
+    let reg = WorkloadRegistry::builtin();
+    let mut ra_reconfig = SystemSpec::runahead().named("Runahead+Reconfig");
+    match &mut ra_reconfig.exec {
+        ExecModel::Cgra { cgra, .. } => cgra.reconfig = ReconfigPolicy::online(),
+        _ => unreachable!("runahead is a solo CGRA system"),
+    }
+    let systems = [SystemSpec::cache_spm(), SystemSpec::banked_dram(), ra_reconfig];
+    for kernel in ["aggregate/tiny", "small/join_probe", "small/phased"] {
+        let wl = reg.resolve(&ScenarioSpec::preset(kernel)).unwrap();
+        for sys in &systems {
+            let ctx = format!("{kernel} on {}", sys.name);
+            let (live, cap) = measure_spec_captured(wl.as_ref(), &sys.clone().with_capture());
+            let trace = cap.expect("capture-enabled run records a trace");
+            let (mem, cgra) = match &sys.exec {
+                ExecModel::Cgra { mem, cgra } => (mem.clone(), *cgra),
+                _ => unreachable!("all three sources are solo CGRA systems"),
+            };
+            let rspec = SystemSpec::replay_of("replayed", sys.clone(), mem, cgra);
+            let (rm, out) =
+                measure_replay(kernel, &rspec, &trace).unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            assert!(out.events_replayed > 0, "{ctx}: empty replay");
+            for (col, replayed, lived) in [
+                ("cycles", rm.cycles, live.cycles),
+                ("stall_cycles", rm.stall_cycles, live.stall_cycles),
+                ("spm_accesses", rm.spm_accesses, live.spm_accesses),
+                ("l1_accesses", rm.l1_accesses, live.l1_accesses),
+                ("l1_hits", rm.l1_hits, live.l1_hits),
+                ("l2_accesses", rm.l2_accesses, live.l2_accesses),
+                ("dram_accesses", rm.dram_accesses, live.dram_accesses),
+                ("dram_row_hits", rm.dram_row_hits, live.dram_row_hits),
+                ("dram_row_conflicts", rm.dram_row_conflicts, live.dram_row_conflicts),
+                ("prefetch_used", rm.prefetch_used, live.prefetch_used),
+                ("prefetch_evicted", rm.prefetch_evicted, live.prefetch_evicted),
+                ("prefetch_useless", rm.prefetch_useless, live.prefetch_useless),
+                ("runahead_entries", rm.runahead_entries, live.runahead_entries),
+                ("reconfig_applies", rm.reconfig_applies, live.reconfig_applies),
+                ("reconfig_ways_moved", rm.reconfig_ways_moved, live.reconfig_ways_moved),
+            ] {
+                assert_eq!(replayed, lived, "{col} diverged: {ctx}");
+            }
+            // Derived floats come from identical integers via identical
+            // formulas, so bitwise equality is the right bar.
+            assert_eq!(rm.time_us, live.time_us, "time_us diverged: {ctx}");
+            assert_eq!(rm.utilization, live.utilization, "utilization diverged: {ctx}");
+            assert_eq!(rm.coverage, live.coverage, "coverage diverged: {ctx}");
+        }
+    }
+}
+
 /// Cluster clamp proof: on a skewed 24-job mix, serving results
 /// (makespan, per-job records, per-array stats, channel row/xarray
 /// counters — everything in the rendered report) are byte-identical
