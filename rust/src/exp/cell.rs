@@ -63,7 +63,12 @@ use crate::sim::CgraConfig;
 /// the cgra identity renamed `trace_window` to `monitor_window` (PR 8).
 /// The same salt keys the trace store, so v4 trace files are orphaned
 /// alongside v4 cells.
-pub const STORE_FORMAT_VERSION: u64 = 5;
+///
+/// v6: traffic scenarios (the `sim::traffic` synthetic generator)
+/// joined the identity space — a traffic cell measures the replay
+/// protocol over a synthesized stream, with no DFG behind it, so its
+/// measurement semantics are new rather than changed (PR 9).
+pub const STORE_FORMAT_VERSION: u64 = 6;
 
 /// Content address of one (scenario, system, repeat) cell.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -1,0 +1,435 @@
+//! Property-based fuzz harness over the synthetic-traffic generator
+//! (`repro fuzz`, `tests/fuzz_mem.rs`).
+//!
+//! Each iteration draws a random (but seeded — every run is exactly
+//! reproducible from `--seed`) [`TrafficSpec`] and one of four memory
+//! systems, synthesizes the stream once, and drives it through the
+//! replay protocol twice — once per [`SimCore`] — with the backend
+//! wrapped in [`CheckedModel`]. A point passes when:
+//!
+//! * no wrapper invariant fires on either run (fill latency, lost /
+//!   phantom / duplicated fills, MSHR budget conservation, `next_event`
+//!   liveness — see [`crate::mem::invariant`]);
+//! * the reconfigurable way budget is conserved across the run (ways
+//!   move, they never appear or vanish);
+//! * the event-driven core and the reference core agree on every
+//!   observable outcome field — cycles, stalls, the full
+//!   [`SubsystemStats`](crate::mem::SubsystemStats) block, uncovered
+//!   misses, runahead entries, events replayed.
+//!
+//! On a violation the failing spec is greedily minimized (halve ops,
+//! zero the gap and write fraction, flatten the pattern) while the
+//! failure reproduces, and the caller gets a re-runnable workload JSON
+//! plus the exact `repro fuzz --seed N` line.
+
+use super::{ExecModel, SystemSpec};
+use crate::mem::{CheckedModel, MemoryModelSpec};
+use crate::reconfig::OnlineController;
+use crate::sim::traffic::synthesize;
+use crate::sim::{
+    replay_with_core, EpochController, ExecMode, ReconfigMode, ReplayOutcome, SimCore,
+    TrafficPattern, TrafficSpec,
+};
+use crate::util::Rng;
+
+/// The four backends the fuzzer exercises, by draw index. Built
+/// directly (not via the registry) so the fuzzer keeps working even if
+/// the named-system table changes shape.
+fn system(idx: usize) -> SystemSpec {
+    match idx {
+        0 => SystemSpec::cache_spm(),
+        1 => SystemSpec::banked_dram(),
+        2 => SystemSpec::runahead(),
+        _ => SystemSpec::runahead_reconfig(),
+    }
+}
+const NUM_SYSTEMS: u64 = 4;
+
+/// One fuzzing campaign's result.
+#[derive(Clone, Debug)]
+pub struct FuzzOutcome {
+    /// Iterations requested.
+    pub iters: u32,
+    /// Points actually drawn and checked (== `iters` on a clean run;
+    /// the campaign stops at the first failure).
+    pub points_checked: u32,
+    pub failure: Option<FuzzFailure>,
+}
+
+/// A minimized, reproducible invariant violation.
+#[derive(Clone, Debug)]
+pub struct FuzzFailure {
+    /// Campaign seed — `repro fuzz --seed N` replays the exact draw.
+    pub seed: u64,
+    /// Zero-based iteration the failure surfaced at.
+    pub iter: u32,
+    /// Name of the system the point ran on.
+    pub system: String,
+    /// Minimized workload object, pasteable into a spec's `workloads`
+    /// array: `{"family":"traffic", ...}`.
+    pub workload_json: String,
+    /// The recorded violations (re-checked on the minimized spec).
+    pub violations: Vec<String>,
+}
+
+impl FuzzFailure {
+    /// Human-readable failure block for the CLI.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "FUZZ FAILURE at iteration {} on {:?}:\n",
+            self.iter, self.system
+        ));
+        for v in &self.violations {
+            s.push_str(&format!("  - {v}\n"));
+        }
+        s.push_str(&format!("minimized workload: {}\n", self.workload_json));
+        s.push_str(&format!("reproduce with: repro fuzz --seed {}\n", self.seed));
+        s
+    }
+}
+
+/// Draw one bounded random traffic point. Bounds keep the reference
+/// core (which walks every stall cycle) fast enough for thousands of
+/// points: ≤256 ops, ≤3 idle cycles between groups.
+fn draw_spec(rng: &mut Rng) -> TrafficSpec {
+    let pattern = match rng.gen_range(0, 4) {
+        0 => TrafficPattern::Strided {
+            stride: 4 * rng.gen_range(1, 65) as u32,
+            width: rng.gen_range(1, 9) as u32,
+            align: 4 * rng.gen_range(0, 4) as u32,
+        },
+        1 => TrafficPattern::PointerChase {
+            nodes: rng.gen_range(2, 513) as u32,
+            fanout: rng.gen_range(1, 9) as u32,
+        },
+        2 => TrafficPattern::ZipfGather {
+            locality: f64::from(rng.gen_f32()),
+            span: 4096 + 64 * rng.gen_range(0, 1024) as u32,
+        },
+        _ => TrafficPattern::PhaseMix {
+            period: rng.gen_range(1, 65) as u32,
+            stride: 4 * rng.gen_range(1, 33) as u32,
+            locality: f64::from(rng.gen_f32()),
+            span: 4096 + 64 * rng.gen_range(0, 1024) as u32,
+        },
+    };
+    TrafficSpec {
+        pattern,
+        ops: rng.gen_range(8, 257) as u32,
+        gap: rng.gen_range(0, 4) as u32,
+        seed: rng.next_u64(),
+        write_frac: f64::from(rng.gen_f32()) * 0.5,
+    }
+}
+
+/// Render a spec as a flat workload object (`ScenarioSpec::from_json`
+/// shape) so a failure is directly pasteable into a sweep spec.
+pub fn workload_json(spec: &TrafficSpec) -> String {
+    let mut parts = vec![
+        "\"family\":\"traffic\"".to_string(),
+        format!("\"pattern\":{:?}", spec.pattern.name()),
+    ];
+    match spec.pattern {
+        TrafficPattern::Strided { stride, width, align } => {
+            parts.push(format!("\"stride\":{stride}"));
+            parts.push(format!("\"width\":{width}"));
+            parts.push(format!("\"align\":{align}"));
+        }
+        TrafficPattern::PointerChase { nodes, fanout } => {
+            parts.push(format!("\"nodes\":{nodes}"));
+            parts.push(format!("\"fanout\":{fanout}"));
+        }
+        TrafficPattern::ZipfGather { locality, span } => {
+            parts.push(format!("\"locality\":{locality}"));
+            parts.push(format!("\"span\":{span}"));
+        }
+        TrafficPattern::PhaseMix { period, stride, locality, span } => {
+            parts.push(format!("\"period\":{period}"));
+            parts.push(format!("\"stride\":{stride}"));
+            parts.push(format!("\"locality\":{locality}"));
+            parts.push(format!("\"span\":{span}"));
+        }
+    }
+    parts.push(format!("\"ops\":{}", spec.ops));
+    parts.push(format!("\"gap\":{}", spec.gap));
+    parts.push(format!("\"seed\":{}", spec.seed));
+    parts.push(format!("\"write_frac\":{}", spec.write_frac));
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Run one traffic point on one system under one core, backend wrapped
+/// in [`CheckedModel`]. Returns the outcome plus any recorded
+/// violations (tagged with the core name).
+fn run_one(
+    tspec: &TrafficSpec,
+    sys: &SystemSpec,
+    core: SimCore,
+    violations: &mut Vec<String>,
+) -> Option<ReplayOutcome> {
+    let ExecModel::Cgra { mem, cgra } = &sys.exec else {
+        violations.push(format!("fuzz system {:?} is not a solo CGRA system", sys.name));
+        return None;
+    };
+    let budget = match mem {
+        MemoryModelSpec::Hierarchy(cfg) => Some(cfg.mshr_entries),
+        _ => None,
+    };
+    let runahead = cgra.mode == ExecMode::Runahead;
+    let trace = synthesize(tspec, mem.num_ports(), runahead);
+    let mut checked = CheckedModel::new(mem.build(trace.header.backing_bytes as usize), budget);
+    let ways_before = checked.reconfig().map(|r| r.way_budget());
+    let reconfig_on = cgra.reconfig.mode != ReconfigMode::Off;
+    if reconfig_on && ways_before.is_none() {
+        violations.push(format!(
+            "[{}] system {:?} has a reconfig policy but no reconfigurable cache",
+            core.name(),
+            sys.name
+        ));
+        return None;
+    }
+    let mut hook = reconfig_on.then(|| OnlineController::from_policy(&cgra.reconfig));
+    let monitor_window = if reconfig_on {
+        cgra.monitor_window.max(cgra.reconfig.window)
+    } else {
+        cgra.monitor_window
+    };
+    let period = cgra.reconfig.period;
+    let out = match replay_with_core(
+        &trace,
+        &mut checked,
+        core,
+        hook.as_mut().map(|c| (c as &mut dyn EpochController, period)),
+        monitor_window,
+    ) {
+        Ok(out) => out,
+        Err(e) => {
+            violations.push(format!("[{}] replay failed: {e}", core.name()));
+            return None;
+        }
+    };
+    checked.final_check();
+    if let Some(before) = ways_before {
+        let after = checked.reconfig().map_or(0, |r| r.way_budget());
+        if after != before {
+            violations.push(format!(
+                "[{}] way budget not conserved: {before} ways before the run, {after} after",
+                core.name()
+            ));
+        }
+    }
+    for v in checked.violations() {
+        violations.push(format!("[{}] {v}", core.name()));
+    }
+    Some(out)
+}
+
+/// Check every invariant for one (spec, system) point. `Ok(())` on a
+/// clean point, `Err(violations)` otherwise.
+fn check_point(tspec: &TrafficSpec, sys_idx: usize) -> Result<(), Vec<String>> {
+    let sys = system(sys_idx);
+    let mut violations = Vec::new();
+    let ev = run_one(tspec, &sys, SimCore::Event, &mut violations);
+    let rf = run_one(tspec, &sys, SimCore::Reference, &mut violations);
+    if let (Some(a), Some(b)) = (ev, rf) {
+        let mut diff = |field: &str, x: u64, y: u64| {
+            if x != y {
+                violations.push(format!(
+                    "core divergence in {field}: event core says {x}, reference core says {y}"
+                ));
+            }
+        };
+        diff("cycles", a.cycles, b.cycles);
+        diff("stall_cycles", a.stall_cycles, b.stall_cycles);
+        diff("uncovered_misses", a.uncovered_misses, b.uncovered_misses);
+        diff("runahead_entries", a.runahead_entries, b.runahead_entries);
+        diff("events_replayed", a.events_replayed, b.events_replayed);
+        if a.mem != b.mem {
+            violations.push(format!(
+                "core divergence in memory stats:\n  event:     {:?}\n  reference: {:?}",
+                a.mem, b.mem
+            ));
+        }
+    }
+    if violations.is_empty() {
+        Ok(())
+    } else {
+        Err(violations)
+    }
+}
+
+/// Greedy shrink: try each simplification, keep any that still fails,
+/// repeat to a fixed point. Every candidate re-runs the full check, so
+/// the minimized spec is guaranteed to still reproduce.
+fn shrink(mut spec: TrafficSpec, sys_idx: usize) -> TrafficSpec {
+    loop {
+        let mut candidates: Vec<TrafficSpec> = Vec::new();
+        if spec.ops > 1 {
+            let mut c = spec;
+            c.ops = (spec.ops / 2).max(1);
+            candidates.push(c);
+        }
+        if spec.gap > 0 {
+            let mut c = spec;
+            c.gap = 0;
+            candidates.push(c);
+        }
+        if spec.write_frac > 0.0 {
+            let mut c = spec;
+            c.write_frac = 0.0;
+            candidates.push(c);
+        }
+        match spec.pattern {
+            TrafficPattern::Strided { stride, width, align } => {
+                if width > 1 || align > 0 {
+                    let mut c = spec;
+                    c.pattern = TrafficPattern::Strided { stride, width: 1, align: 0 };
+                    candidates.push(c);
+                }
+                if stride > 4 {
+                    let mut c = spec;
+                    c.pattern = TrafficPattern::Strided { stride: 4, width, align };
+                    candidates.push(c);
+                }
+            }
+            TrafficPattern::PointerChase { nodes, fanout } => {
+                if nodes > 2 {
+                    let mut c = spec;
+                    c.pattern =
+                        TrafficPattern::PointerChase { nodes: (nodes / 2).max(2), fanout };
+                    candidates.push(c);
+                }
+                if fanout > 1 {
+                    let mut c = spec;
+                    c.pattern = TrafficPattern::PointerChase { nodes, fanout: 1 };
+                    candidates.push(c);
+                }
+            }
+            TrafficPattern::ZipfGather { locality, span } => {
+                if span > 4096 {
+                    let mut c = spec;
+                    c.pattern = TrafficPattern::ZipfGather { locality, span: 4096 };
+                    candidates.push(c);
+                }
+                // A degenerate zipf is a stride-4 walk of the hot set.
+                let mut c = spec;
+                c.pattern = TrafficPattern::Strided { stride: 4, width: 1, align: 0 };
+                candidates.push(c);
+            }
+            TrafficPattern::PhaseMix { stride, locality, span, .. } => {
+                let mut c = spec;
+                c.pattern = TrafficPattern::Strided { stride, width: 1, align: 0 };
+                candidates.push(c);
+                let mut c = spec;
+                c.pattern = TrafficPattern::ZipfGather { locality, span };
+                candidates.push(c);
+            }
+        }
+        let mut progressed = false;
+        for c in candidates {
+            if c != spec && check_point(&c, sys_idx).is_err() {
+                spec = c;
+                progressed = true;
+                break;
+            }
+        }
+        if !progressed {
+            return spec;
+        }
+    }
+}
+
+/// Run a fuzzing campaign: `iters` random (spec, system) points from
+/// `seed`, stopping (with a minimized reproduction) at the first
+/// violation.
+pub fn run_fuzz(seed: u64, iters: u32) -> FuzzOutcome {
+    let mut rng = Rng::new(seed);
+    for iter in 0..iters {
+        let spec = draw_spec(&mut rng);
+        let sys_idx = rng.gen_range(0, NUM_SYSTEMS) as usize;
+        if let Err(first) = check_point(&spec, sys_idx) {
+            let min = shrink(spec, sys_idx);
+            let violations = check_point(&min, sys_idx).err().unwrap_or(first);
+            return FuzzOutcome {
+                iters,
+                points_checked: iter + 1,
+                failure: Some(FuzzFailure {
+                    seed,
+                    iter,
+                    system: system(sys_idx).name,
+                    workload_json: workload_json(&min),
+                    violations,
+                }),
+            };
+        }
+    }
+    FuzzOutcome { iters, points_checked: iters, failure: None }
+}
+
+/// Seeded byte-level corruption for the CGTR decode-hardening tests:
+/// a handful of bit flips / byte smashes per call. Deterministic given
+/// the `Rng` state, like everything else in the harness.
+pub fn mutate_bytes(buf: &mut [u8], rng: &mut Rng) {
+    if buf.is_empty() {
+        return;
+    }
+    let hits = 1 + rng.gen_range(0, 4) as usize;
+    for _ in 0..hits {
+        let i = rng.gen_range(0, buf.len() as u64) as usize;
+        match rng.gen_range(0, 3) {
+            0 => buf[i] ^= 1 << rng.gen_range(0, 8),
+            1 => buf[i] = rng.next_u64() as u8,
+            _ => buf[i] = 0xFF,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_are_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..16 {
+            assert_eq!(draw_spec(&mut a), draw_spec(&mut b));
+        }
+    }
+
+    #[test]
+    fn small_campaign_is_clean() {
+        let out = run_fuzz(0xC6_12A5, 4);
+        if let Some(f) = &out.failure {
+            panic!("{}", f.report());
+        }
+        assert_eq!(out.points_checked, 4);
+    }
+
+    #[test]
+    fn workload_json_parses_back_through_the_family_validator() {
+        let spec = TrafficSpec {
+            pattern: TrafficPattern::ZipfGather { locality: 0.25, span: 65536 },
+            ops: 64,
+            gap: 1,
+            seed: 9,
+            write_frac: 0.125,
+        };
+        let json = workload_json(&spec);
+        let v = super::super::Json::parse(&json).expect("workload json parses");
+        let scenario = super::super::ScenarioSpec::from_json(&v).expect("scenario parses");
+        let back = super::super::traffic_spec_of(&scenario.params).expect("params validate");
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn mutate_bytes_changes_something_eventually() {
+        let mut rng = Rng::new(3);
+        let orig = vec![0u8; 64];
+        let mut buf = orig.clone();
+        for _ in 0..8 {
+            mutate_bytes(&mut buf, &mut rng);
+        }
+        assert_ne!(buf, orig);
+    }
+}

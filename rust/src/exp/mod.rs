@@ -30,6 +30,7 @@
 
 pub mod cell;
 pub mod engine;
+pub mod fuzz;
 pub mod json;
 pub mod registry;
 pub mod session;
@@ -38,6 +39,7 @@ pub mod tracestore;
 
 pub use cell::{CellKey, STORE_FORMAT_VERSION};
 pub use engine::{default_parallelism, Engine};
+pub use fuzz::{run_fuzz, FuzzOutcome};
 pub use json::Json;
 pub use registry::{
     all_systems, builtin_systems, extra_systems, system_named, Params, WorkloadRegistry,
@@ -53,8 +55,9 @@ use crate::mem::{
 };
 use crate::reconfig::OnlineController;
 use crate::sim::{
-    replay, CapturedTrace, CgraConfig, Cluster, ClusterJob, ClusterSpec, EpochController,
-    ExecMode, Geometry, ReconfigMode, ReconfigPolicy, ReplayOutcome, SchedulerKind,
+    replay, replay_with_core, CapturedTrace, CgraConfig, Cluster, ClusterJob, ClusterSpec,
+    EpochController, ExecMode, Geometry, ReconfigMode, ReconfigPolicy, ReplayOutcome,
+    SchedulerKind, TrafficPattern, TrafficSpec,
 };
 use crate::workloads::{run_workload_model, MixSpec, Workload};
 
@@ -1357,6 +1360,200 @@ pub fn mix_spec_of(params: &Params) -> Result<MixSpec, String> {
     Ok(spec)
 }
 
+/// Build the [`TrafficSpec`] a `"traffic"` scenario's params describe.
+/// Key checking is strict *per pattern*: the common knobs plus exactly
+/// the chosen pattern's knobs are legal, so a `"stride"` on a
+/// `zipf_gather` point is a spec error, not a silently-ignored default —
+/// the flat-sweep trap the other families also guard against.
+pub fn traffic_spec_of(params: &Params) -> Result<TrafficSpec, String> {
+    const PATTERNS: [&str; 4] = ["strided", "pointer_chase", "zipf_gather", "phase_mix"];
+    let pattern_name = params.choice("pattern", &PATTERNS, "strided")?;
+    let common = ["pattern", "ops", "gap", "seed", "write_frac"];
+    let per_pattern: &[&str] = match pattern_name.as_str() {
+        "strided" => &["stride", "width", "align"],
+        "pointer_chase" => &["nodes", "fanout"],
+        "zipf_gather" => &["locality", "span"],
+        _ => &["period", "stride", "locality", "span"],
+    };
+    let known: Vec<&str> = common.iter().chain(per_pattern).copied().collect();
+    params.check_keys("traffic", &known)?;
+
+    let ops = params.u64("ops", 512)?;
+    if ops == 0 || ops > 65536 {
+        return Err(format!("traffic \"ops\" must be in 1..=65536, got {ops}"));
+    }
+    let gap = params.u64("gap", 0)?;
+    if gap > 64 {
+        return Err(format!("traffic \"gap\" must be in 0..=64, got {gap}"));
+    }
+    let write_frac = params.fraction("write_frac", 0.0)?;
+    let seed = params.u64("seed", 1)?;
+
+    let bounded = |key: &str, v: u64, lo: u64, hi: u64| -> Result<u64, String> {
+        if v < lo || v > hi {
+            return Err(format!("traffic {key:?} must be in {lo}..={hi}, got {v}"));
+        }
+        Ok(v)
+    };
+    let pattern = match pattern_name.as_str() {
+        "strided" => {
+            let stride = bounded("stride", params.u64("stride", 4)?, 4, 4096)?;
+            if stride % 4 != 0 {
+                return Err(format!("traffic \"stride\" must be a multiple of 4, got {stride}"));
+            }
+            let width = bounded("width", params.u64("width", 1)?, 1, 64)?;
+            let align = bounded("align", params.u64("align", 0)?, 0, 60)?;
+            if align % 4 != 0 {
+                return Err(format!("traffic \"align\" must be a multiple of 4, got {align}"));
+            }
+            TrafficPattern::Strided {
+                stride: stride as u32,
+                width: width as u32,
+                align: align as u32,
+            }
+        }
+        "pointer_chase" => {
+            let nodes = bounded("nodes", params.u64("nodes", 1024)?, 2, 16384)?;
+            let fanout = bounded("fanout", params.u64("fanout", 1)?, 1, 16)?;
+            TrafficPattern::PointerChase { nodes: nodes as u32, fanout: fanout as u32 }
+        }
+        "zipf_gather" => {
+            let locality = params.fraction("locality", 0.5)?;
+            let span = bounded(
+                "span",
+                params.u64("span", 262144)?,
+                4096,
+                u64::from(crate::sim::traffic::TRAFFIC_REGION_BYTES),
+            )?;
+            if span % 64 != 0 {
+                return Err(format!("traffic \"span\" must be a multiple of 64, got {span}"));
+            }
+            TrafficPattern::ZipfGather { locality, span: span as u32 }
+        }
+        _ => {
+            let period = bounded("period", params.u64("period", 64)?, 1, 4096)?;
+            let stride = bounded("stride", params.u64("stride", 4)?, 4, 4096)?;
+            if stride % 4 != 0 {
+                return Err(format!("traffic \"stride\" must be a multiple of 4, got {stride}"));
+            }
+            let locality = params.fraction("locality", 0.5)?;
+            let span = bounded(
+                "span",
+                params.u64("span", 262144)?,
+                4096,
+                u64::from(crate::sim::traffic::TRAFFIC_REGION_BYTES),
+            )?;
+            if span % 64 != 0 {
+                return Err(format!("traffic \"span\" must be a multiple of 64, got {span}"));
+            }
+            TrafficPattern::PhaseMix {
+                period: period as u32,
+                stride: stride as u32,
+                locality,
+                span: span as u32,
+            }
+        }
+    };
+    Ok(TrafficSpec { pattern, ops: ops as u32, gap: gap as u32, seed, write_frac })
+}
+
+/// Execute one synthetic-traffic cell: synthesize the deterministic
+/// address stream for the scenario's [`TrafficSpec`] and drive the
+/// system's memory backend through the replay protocol under the
+/// system's sim core — no DFG is built or executed. Runahead systems get
+/// the pattern's statically-visible prefetch episodes (see
+/// [`crate::sim::traffic`]).
+///
+/// The returned capture is `Some` iff the system's capture flag is on
+/// (the session's capture pre-pass route), making a traffic point a
+/// valid `replay_of` source like any live cell. As with
+/// [`measure_replay`], `output_ok` is `true` by construction (traffic
+/// has no functional output to validate) and `irregular_share` is 0.
+pub fn measure_traffic(
+    scenario: &ScenarioSpec,
+    spec: &SystemSpec,
+) -> Result<(Measurement, Option<CapturedTrace>), String> {
+    let ExecModel::Cgra { mem, cgra } = &spec.exec else {
+        return Err(format!(
+            "traffic scenario {:?} needs a solo CGRA system (the generator drives the \
+             memory model directly); {:?} is not one",
+            scenario.name, spec.name
+        ));
+    };
+    let tspec = traffic_spec_of(&scenario.params)?;
+    let runahead = cgra.mode == ExecMode::Runahead;
+    let trace = crate::sim::traffic::synthesize(&tspec, mem.num_ports(), runahead);
+    let mut model = mem.build(trace.header.backing_bytes as usize);
+    let mut hook = if cgra.reconfig.mode != ReconfigMode::Off {
+        if model.reconfig().is_none() {
+            return Err(format!(
+                "traffic system {:?} has a reconfig policy but its backend has no \
+                 reconfigurable cache",
+                spec.name
+            ));
+        }
+        Some(OnlineController::from_policy(&cgra.reconfig))
+    } else {
+        None
+    };
+    let monitor_window = if cgra.reconfig.mode != ReconfigMode::Off {
+        cgra.monitor_window.max(cgra.reconfig.window)
+    } else {
+        cgra.monitor_window
+    };
+    let period = cgra.reconfig.period;
+    let out = replay_with_core(
+        &trace,
+        model.as_mut(),
+        cgra.core,
+        hook.as_mut().map(|c| (c as &mut dyn EpochController, period)),
+        monitor_window,
+    )?;
+    let num_pes = u64::from(out.num_pes);
+    let uncovered_total = out.mem.prefetch_used + out.uncovered_misses;
+    let m = Measurement {
+        workload: scenario.name.clone(),
+        system: spec.name.clone(),
+        repeat: 0,
+        time_us: out.cycles as f64 / cgra.freq_mhz,
+        cycles: out.cycles,
+        stall_cycles: out.stall_cycles,
+        utilization: if out.cycles == 0 {
+            0.0
+        } else {
+            out.useful_ops as f64 / (num_pes * out.cycles) as f64
+        },
+        output_ok: true,
+        spm_accesses: out.mem.spm_accesses,
+        l1_accesses: out.mem.l1_accesses,
+        l1_hits: out.mem.l1_hits,
+        l2_accesses: out.mem.l2_accesses,
+        dram_accesses: out.mem.dram_accesses,
+        dram_row_hits: out.mem.dram_row_hits,
+        dram_row_conflicts: out.mem.dram_row_conflicts,
+        prefetch_used: out.mem.prefetch_used,
+        prefetch_evicted: out.mem.prefetch_evicted_then_demanded,
+        prefetch_useless: out.mem.prefetch_useless,
+        coverage: if uncovered_total == 0 {
+            0.0
+        } else {
+            out.mem.prefetch_used as f64 / uncovered_total as f64
+        },
+        irregular_share: 0.0,
+        runahead_entries: out.runahead_entries,
+        reconfig_applies: hook.as_ref().map_or(0, |c| c.applies),
+        reconfig_ways_moved: hook.as_ref().map_or(0, |c| c.ways_migrated),
+        cluster_jobs: 0,
+        cluster_p50_cycles: 0,
+        cluster_p95_cycles: 0,
+        cluster_p99_cycles: 0,
+        cluster_xarray_conflicts: 0,
+        cluster_miss_spread: 0.0,
+    };
+    let capture = if cgra.capture { Some(trace) } else { None };
+    Ok((m, capture))
+}
+
 /// The single execution front door for a (scenario, system) cell:
 /// cluster systems route through [`measure_cluster`], everything else
 /// resolves the scenario and runs [`measure_spec`]. A `"mix"` scenario on
@@ -1367,6 +1564,24 @@ pub fn measure_cell(
     scenario: &ScenarioSpec,
     spec: &SystemSpec,
 ) -> Result<Measurement, String> {
+    // Traffic is checked before the cluster route: a traffic scenario on
+    // a cluster system would otherwise "resolve" to the family's shadow
+    // workload and silently measure the wrong thing.
+    if scenario.family.as_deref() == Some("traffic") {
+        return match &spec.exec {
+            ExecModel::Cgra { .. } => measure_traffic(scenario, spec).map(|(m, _)| m),
+            ExecModel::Replay { .. } => Err(format!(
+                "replay system {:?} must be measured via a session (repro run), \
+                 which owns the trace store",
+                spec.name
+            )),
+            _ => Err(format!(
+                "traffic scenario {:?} needs a solo CGRA system (the generator drives \
+                 the memory model directly); {:?} is not one",
+                scenario.name, spec.name
+            )),
+        };
+    }
     if matches!(spec.exec, ExecModel::Cluster { .. }) {
         return measure_cluster(registry, scenario, spec);
     }
@@ -1388,6 +1603,22 @@ pub fn measure_cell(
     }
     let wl = registry.resolve(scenario)?;
     Ok(measure_spec(&*wl, spec))
+}
+
+/// [`measure_cell`]'s capture-aware sibling, for the session's capture
+/// pre-pass: traffic scenarios synthesize their stream (and hand it back
+/// as the capture when the spec's capture flag is on), everything else
+/// resolves the scenario and runs [`measure_spec_captured`].
+pub fn measure_cell_captured(
+    registry: &WorkloadRegistry,
+    scenario: &ScenarioSpec,
+    spec: &SystemSpec,
+) -> Result<(Measurement, Option<CapturedTrace>), String> {
+    if scenario.family.as_deref() == Some("traffic") {
+        return measure_traffic(scenario, spec);
+    }
+    let wl = registry.resolve(scenario)?;
+    Ok(measure_spec_captured(&*wl, spec))
 }
 
 /// A declarative (workloads × systems × repeats) experiment.

@@ -446,6 +446,19 @@ impl WorkloadRegistry {
                 .resolve(&ScenarioSpec::preset(&head.preset))
                 .map_err(|e| format!("mix head preset {:?}: {e}", head.preset))
         });
+        // The synthetic-traffic pseudo-family (`sim::traffic`): like
+        // "mix", execution never goes through `resolve` — the cell
+        // front door (`exp::measure_cell`) routes traffic scenarios to
+        // `exp::measure_traffic`, which drives the memory model
+        // directly. Registering it here buys strict param validation
+        // (with nearest-name hints) and a shadow workload so `repro
+        // list`/`validate` treat traffic like any other family.
+        self.add_family("traffic", |p| {
+            super::traffic_spec_of(p)?;
+            WorkloadRegistry::builtin()
+                .resolve(&ScenarioSpec::preset("aggregate/tiny"))
+                .map_err(|e| format!("traffic shadow preset: {e}"))
+        });
     }
 
     /// Register (or replace) a parameterized workload family.
@@ -809,6 +822,57 @@ mod tests {
             Params::new().set_u64("jobs", 4).set_str("family", "grad"),
         );
         assert_eq!(reg.resolve(&homo).unwrap().name(), "grad");
+    }
+
+    #[test]
+    fn mix_edge_cases_validate_and_run() {
+        let reg = WorkloadRegistry::builtin();
+        // Degenerate queue: one job, zero skew is still a valid mix.
+        let one = ScenarioSpec::mix(1, 0.0, 7);
+        assert!(reg.validate(&one).is_ok());
+        assert!(reg.resolve(&one).unwrap().iterations() > 0);
+        // A suite-of-one (family-restricted, single-job) queue runs end
+        // to end on a real cluster system.
+        let solo = ScenarioSpec::family(
+            "mix",
+            Params::new()
+                .set_u64("jobs", 1)
+                .set("skew", Json::num(0.0))
+                .set_str("family", "grad"),
+        );
+        assert!(reg.validate(&solo).is_ok());
+        let sys = system_named("Cluster-2xRunahead").unwrap();
+        let m = crate::exp::measure_cell(&reg, &solo, &sys).unwrap();
+        assert_eq!(m.cluster_jobs, 1);
+        assert!(m.cycles > 0);
+    }
+
+    #[test]
+    fn traffic_family_validates_and_suggests_on_typos() {
+        let reg = WorkloadRegistry::builtin();
+        // Bare family name validates at defaults, like any family.
+        assert!(reg.validate(&ScenarioSpec::family("traffic", Params::new())).is_ok());
+        let ok = ScenarioSpec::family(
+            "traffic",
+            Params::new()
+                .set_str("pattern", "zipf_gather")
+                .set("locality", Json::num(0.8))
+                .set_u64("span", 65536),
+        );
+        assert!(reg.validate(&ok).is_ok());
+        // Misspelled param: the nearest-name hint fires.
+        let bad = ScenarioSpec::family("traffic", Params::new().set_u64("strde", 64));
+        let e = reg.validate(&bad).unwrap_err();
+        assert!(e.contains("strde") && e.contains("stride"), "{e}");
+        // Keys from the wrong pattern are errors, not silent defaults.
+        let bad = ScenarioSpec::family(
+            "traffic",
+            Params::new().set_str("pattern", "zipf_gather").set_u64("stride", 64),
+        );
+        assert!(reg.validate(&bad).unwrap_err().contains("stride"));
+        // Out-of-range values are hard errors.
+        let bad = ScenarioSpec::family("traffic", Params::new().set_u64("ops", 0));
+        assert!(reg.validate(&bad).unwrap_err().contains("ops"));
     }
 
     #[test]

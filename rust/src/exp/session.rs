@@ -28,7 +28,7 @@ use super::engine::Engine;
 use super::store::{ResultStore, StoreEntry};
 use super::tracestore::TraceStore;
 use super::{
-    measure_cell, measure_replay, measure_spec_captured, ExecModel, ExperimentSpec, Measurement,
+    measure_cell, measure_cell_captured, measure_replay, ExecModel, ExperimentSpec, Measurement,
     Report, ScenarioSpec, SystemSpec,
 };
 use crate::sim::CapturedTrace;
@@ -204,8 +204,7 @@ impl<'e> Session<'e> {
                 return Ok(t);
             }
         }
-        let wl = registry.resolve(scenario)?;
-        let (mut m, cap) = measure_spec_captured(&*wl, &source.clone().with_capture());
+        let (mut m, cap) = measure_cell_captured(registry, scenario, &source.clone().with_capture())?;
         let trace =
             cap.ok_or_else(|| format!("capture of {:?} recorded no trace", source.name))?;
         m.workload = String::new();
@@ -386,8 +385,7 @@ impl<'e> Session<'e> {
         let cap_results: Vec<(CellKey, Result<(Measurement, CapturedTrace), String>)> =
             self.engine.map(cap_items, move |(tk, scenario, src)| {
                 let r = (|| {
-                    let wl = reg.resolve(&scenario)?;
-                    let (mut m, capture) = measure_spec_captured(&*wl, &src);
+                    let (mut m, capture) = measure_cell_captured(&reg, &scenario, &src)?;
                     let trace = capture.ok_or_else(|| {
                         format!("capture pre-pass for {:?} recorded no trace", src.name)
                     })?;

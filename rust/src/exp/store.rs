@@ -133,6 +133,47 @@ impl ResultStore {
             Err(e) => Err(e),
         }
     }
+
+    /// Rewrite the store keeping exactly the lines a load would let win:
+    /// the *last* occurrence of each key, in original file order. Earlier
+    /// duplicates (append-only updates) and lines a load skips anyway
+    /// (corrupt, truncated, foreign-version) are dropped. Raw line text
+    /// is preserved byte-for-byte — compaction never re-renders a
+    /// measurement. The rewrite goes through a sibling temp file and a
+    /// rename, so a crash mid-compact leaves either the old or the new
+    /// file, never a half-written one.
+    ///
+    /// Returns `(reclaimed_lines, reclaimed_bytes)`; a missing file is
+    /// an empty store, `(0, 0)`.
+    pub fn compact(path: &Path) -> std::io::Result<(u64, u64)> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((0, 0)),
+            Err(e) => return Err(e),
+        };
+        let expected = schema_keys();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        let mut last: HashMap<CellKey, usize> = HashMap::new();
+        for (i, line) in lines.iter().enumerate() {
+            if let Some((key, _)) = parse_line(line, &expected) {
+                last.insert(key, i);
+            }
+        }
+        let keep: std::collections::HashSet<usize> = last.values().copied().collect();
+        let mut out = String::with_capacity(text.len());
+        for (i, line) in lines.iter().enumerate() {
+            if keep.contains(&i) {
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+        let tmp = path.with_extension("jsonl.compact-tmp");
+        std::fs::write(&tmp, &out)?;
+        std::fs::rename(&tmp, path)?;
+        let reclaimed_lines = (lines.len() - keep.len()) as u64;
+        let reclaimed_bytes = (text.len() as u64).saturating_sub(out.len() as u64);
+        Ok((reclaimed_lines, reclaimed_bytes))
+    }
 }
 
 fn render_line(e: &StoreEntry) -> String {
@@ -295,5 +336,36 @@ mod tests {
         assert!(back.get(CellKey(7)).is_some());
         assert!(back.get(CellKey(9)).is_none(), "drifted schema must not be a cache hit");
         ResultStore::clear(&path).unwrap();
+    }
+
+    #[test]
+    fn compact_keeps_last_duplicates_and_drops_dead_lines() {
+        let path = temp_path("compact");
+        let mut s = ResultStore::open(&path).unwrap();
+        s.append_batch(vec![entry(1, 100), entry(2, 200)]).unwrap();
+        s.append_batch(vec![entry(1, 111)]).unwrap();
+        drop(s);
+        // A corrupt tail the loader skips; compaction reclaims it too.
+        {
+            use std::io::Write as _;
+            let mut f =
+                std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "{{\"key\":\"truncat").unwrap();
+        }
+        let before = std::fs::metadata(&path).unwrap().len();
+        let (lines, bytes) = ResultStore::compact(&path).unwrap();
+        assert_eq!(lines, 2, "one stale duplicate + one corrupt line");
+        assert!(bytes > 0);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), before - bytes);
+        let back = ResultStore::open(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.skipped_lines(), 0);
+        assert_eq!(back.get(CellKey(1)).unwrap().cycles, 111, "last duplicate won");
+        assert_eq!(back.get(CellKey(2)).unwrap().cycles, 200);
+        // Idempotent: a second compact reclaims nothing.
+        assert_eq!(ResultStore::compact(&path).unwrap(), (0, 0));
+        // A missing store is an empty compact, not an error.
+        ResultStore::clear(&path).unwrap();
+        assert_eq!(ResultStore::compact(&path).unwrap(), (0, 0));
     }
 }

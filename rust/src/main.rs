@@ -55,11 +55,19 @@ USAGE:
   repro cache stats                 cell count + size of the result store,
                                     the trace store beside it, and the last
                                     session's hit/miss ledger
+  repro cache compact               rewrite the result store keeping only
+                                    the winning line per cell (append-only
+                                    updates leave stale duplicates behind)
   repro cache clear                 delete the result store and trace store
   repro bench [-j N]                run the fixed kernel x system perf
                                     matrix and write BENCH_sim.json
                                     (iterations/sec; the perf trajectory;
                                     default -j 1 for stable wall times)
+  repro fuzz [--seed N] [--iters N] property-fuzz the memory subsystem over
+                                    random synthetic-traffic points (both
+                                    sim cores, invariant-checked); exits
+                                    non-zero with a minimized repro spec
+                                    on any violation (default: 256 iters)
   repro golden <artifact>           load + execute an AOT artifact via PJRT
                                     (requires building with --features pjrt)
 
@@ -133,6 +141,7 @@ fn main() {
         Some("table") => table(args.get(1).map(String::as_str).unwrap_or("all")),
         Some("cache") => cache_cmd(args.get(1).map(String::as_str), &cache),
         Some("bench") => bench(jobs.unwrap_or(1)),
+        Some("fuzz") => fuzz(&args[1..]),
         Some("golden") => golden(args.get(1).map(String::as_str).unwrap_or("aggregate")),
         _ => print!("{}", usage()),
     }
@@ -548,8 +557,19 @@ fn cache_cmd(sub: Option<&str>, cache: &CacheOpts) {
             }
             let _ = std::fs::remove_file(stats_sidecar_path(&cache.path));
         }
+        Some("compact") => match ResultStore::compact(&cache.path) {
+            Ok((0, 0)) => println!("nothing to reclaim in {}", cache.path.display()),
+            Ok((lines, bytes)) => println!(
+                "compacted {}: reclaimed {lines} line(s), {bytes} bytes",
+                cache.path.display()
+            ),
+            Err(e) => {
+                eprintln!("cannot compact {}: {e}", cache.path.display());
+                std::process::exit(1);
+            }
+        },
         _ => {
-            eprintln!("usage: repro cache <stats|clear> [--store PATH]");
+            eprintln!("usage: repro cache <stats|compact|clear> [--store PATH]");
             std::process::exit(2);
         }
     }
@@ -730,6 +750,63 @@ fn bench(threads: usize) {
             ("memory_bound", Json::Bool(true)),
         ]));
     }
+    // Session throughput: a 200-cell synthetic-traffic sweep (100
+    // zipf_gather points x 2 systems) submitted and collected through a
+    // fresh in-memory session. iterations = cells measured, iters/sec =
+    // cells per wall second — the session layer's dispatch + dedup
+    // overhead on top of the generator's tiny simulations.
+    {
+        use cgra_mem::exp::{Params, ScenarioSpec};
+        let mut workloads = Vec::new();
+        for g in 0..10u64 {
+            for li in 0..10u64 {
+                workloads.push(
+                    ScenarioSpec::family(
+                        "traffic",
+                        Params::new()
+                            .set_str("pattern", "zipf_gather")
+                            .set("locality", Json::num(li as f64 / 10.0))
+                            .set_u64("ops", 64)
+                            .set_u64("gap", g),
+                    )
+                    .named(format!("traffic/zipf-l{li}-g{g}")),
+                );
+            }
+        }
+        let spec = ExperimentSpec::new("bench-cells")
+            .workloads(workloads)
+            .systems(vec![SystemSpec::cache_spm(), SystemSpec::runahead()]);
+        let session = eng.session();
+        let t0 = Instant::now();
+        let job = session.submit(&spec);
+        let report = session.collect(job).expect("bench session collects");
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let cells = report.measurements.len() as u64;
+        let cells_per_sec = cells as f64 / secs;
+        let sim_cycles: u64 = report.measurements.iter().map(|m| m.cycles).sum();
+        let cps = sim_cycles as f64 / secs;
+        println!(
+            "{:<22} {:<14} {:>12} {:>10.2} {:>14.0} {:>12.2} {:>3}",
+            "cells_per_sec",
+            "session",
+            sim_cycles,
+            secs * 1e3,
+            cells_per_sec,
+            cps / 1e6,
+            ""
+        );
+        out.push(Json::obj(vec![
+            ("kernel", Json::str("cells_per_sec")),
+            ("system", Json::str("session")),
+            ("iterations", Json::u64(cells)),
+            ("sim_cycles", Json::u64(sim_cycles)),
+            ("output_ok", Json::Bool(true)),
+            ("wall_s", Json::num(secs)),
+            ("iters_per_sec", Json::num(cells_per_sec)),
+            ("sim_throughput", Json::num(cps)),
+            ("memory_bound", Json::Bool(false)),
+        ]));
+    }
     let doc = Json::obj(vec![
         ("bench", Json::str("sim")),
         ("unit", Json::str("kernel iterations per wall second")),
@@ -741,6 +818,59 @@ fn bench(threads: usize) {
         Ok(()) => eprintln!("(written to BENCH_sim.json)"),
         Err(e) => {
             eprintln!("cannot write BENCH_sim.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// `repro fuzz`: a seeded property-fuzz campaign over the synthetic
+/// traffic generator (`exp::fuzz`) — random traffic points x four
+/// memory systems, each point run under both sim cores behind the
+/// invariant-checking wrapper. Exit 0 on a clean campaign, 1 with a
+/// minimized re-runnable spec on any violation.
+fn fuzz(rest: &[String]) {
+    let mut args: Vec<String> = rest.to_vec();
+    let seed: u64 = match take_value_flag(&mut args, "--seed") {
+        Ok(None) => 1,
+        Ok(Some(v)) => match v.parse() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("bad --seed value {v:?}");
+                std::process::exit(2);
+            }
+        },
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let iters: u32 = match take_value_flag(&mut args, "--iters") {
+        Ok(None) => 256,
+        Ok(Some(v)) => match v.parse() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("bad --iters value {v:?}");
+                std::process::exit(2);
+            }
+        },
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(extra) = args.first() {
+        eprintln!("unknown fuzz argument {extra:?}");
+        std::process::exit(2);
+    }
+    println!("fuzzing {iters} traffic point(s) from seed {seed} (4 systems x 2 sim cores)");
+    let out = cgra_mem::exp::run_fuzz(seed, iters);
+    match out.failure {
+        None => println!(
+            "fuzz: {} point(s) clean — every invariant held under both sim cores",
+            out.points_checked
+        ),
+        Some(f) => {
+            eprint!("{}", f.report());
             std::process::exit(1);
         }
     }

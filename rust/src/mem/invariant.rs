@@ -1,0 +1,318 @@
+//! Invariant-checking [`MemoryModel`] wrapper — the assertion half of
+//! the traffic fuzz harness (`exp::fuzz`).
+//!
+//! [`CheckedModel`] forwards every call to the wrapped backend and
+//! cross-checks the observable protocol against the `MemoryModel`
+//! contract, recording violations instead of panicking (the fuzzer
+//! wants the seed and the minimized spec, not a backtrace):
+//!
+//! * **fill latency** — `ReadMiss`/`Queued` must promise a strictly
+//!   future `fill_at`;
+//! * **no lost fills** — every demand read miss must eventually deliver
+//!   a completion for its `(port, pe, block)` (checked by
+//!   [`CheckedModel::final_check`]);
+//! * **no phantom/duplicated fills** — every delivered completion must
+//!   match exactly one outstanding demand miss, and never before its
+//!   promised `fill_at`;
+//! * **MSHR budget** — the distinct in-flight blocks per port (demand +
+//!   prefetch, entries whose `fill_at` is still in the future) can
+//!   never exceed the configured MSHR entry count: accepting a request
+//!   the hardware has no entry for breaks conservation;
+//! * **`next_event` liveness** — `None` while a demand fill is
+//!   outstanding would strand the event-driven core mid-stall.
+//!
+//! The checks are deliberately one-sided where the trait leaves slack
+//! (e.g. `Some` from `next_event` with nothing we track outstanding is
+//! legal — store-buffer drains own timewheel slots too), so a clean
+//! backend never false-positives; the event-core ≡ reference-core diff
+//! in the fuzz driver covers the timing half of the contract.
+
+use super::model::{
+    MemRequest, MemResponse, MemResponseComplete, MemoryModel, PrefetchResponse, Reconfigurable,
+    SubsystemStats,
+};
+use super::{Addr, Backing, Cycle};
+use std::cell::RefCell;
+
+/// Cap on recorded violations: the first is the bug, the rest are echo.
+const MAX_VIOLATIONS: usize = 8;
+
+pub struct CheckedModel {
+    inner: Box<dyn MemoryModel>,
+    /// Per-port MSHR entry count, when known (hierarchy backends).
+    mshr_budget: Option<usize>,
+    /// Interior mutability: `next_event` takes `&self`.
+    violations: RefCell<Vec<String>>,
+    /// Outstanding demand read misses: `(port, pe, block, fill_at)`.
+    outstanding: Vec<(usize, usize, Addr, Cycle)>,
+    /// In-flight prefetch fills: `(port, block, fill_at)`.
+    prefetches: Vec<(usize, Addr, Cycle)>,
+}
+
+impl CheckedModel {
+    pub fn new(inner: Box<dyn MemoryModel>, mshr_budget: Option<usize>) -> CheckedModel {
+        CheckedModel {
+            inner,
+            mshr_budget,
+            violations: RefCell::new(Vec::new()),
+            outstanding: Vec::new(),
+            prefetches: Vec::new(),
+        }
+    }
+
+    fn note(&self, msg: String) {
+        let mut v = self.violations.borrow_mut();
+        if v.len() < MAX_VIOLATIONS {
+            v.push(msg);
+        }
+    }
+
+    pub fn violations(&self) -> Vec<String> {
+        self.violations.borrow().clone()
+    }
+
+    /// Distinct blocks this port is (still) fetching at `cycle` —
+    /// entries past their promised `fill_at` have landed in the
+    /// backend's timewheel even if the driver has not ticked them out
+    /// yet, so they no longer pin an MSHR entry.
+    fn inflight_blocks(&self, port: usize, cycle: Cycle) -> usize {
+        let mut blocks: Vec<Addr> = self
+            .outstanding
+            .iter()
+            .filter(|e| e.0 == port && e.3 > cycle)
+            .map(|e| e.2)
+            .chain(self.prefetches.iter().filter(|e| e.0 == port && e.2 > cycle).map(|e| e.1))
+            .collect();
+        blocks.sort_unstable();
+        blocks.dedup();
+        blocks.len()
+    }
+
+    fn check_budget(&self, port: usize, cycle: Cycle) {
+        if let Some(cap) = self.mshr_budget {
+            let used = self.inflight_blocks(port, cycle);
+            if used > cap {
+                self.note(format!(
+                    "MSHR budget broken: port {port} holds {used} in-flight blocks \
+                     with {cap} entries at cycle {cycle}"
+                ));
+            }
+        }
+    }
+
+    fn check_completions(&mut self, cycle: Cycle, done: &[MemResponseComplete]) {
+        for d in done {
+            match self
+                .outstanding
+                .iter()
+                .position(|e| e.0 == d.port && e.1 == d.pe && e.2 == d.addr_block)
+            {
+                Some(i) => {
+                    let (_, _, _, fill_at) = self.outstanding.swap_remove(i);
+                    if fill_at > cycle {
+                        self.note(format!(
+                            "fill for port {} pe {} block {:#x} delivered at {cycle}, \
+                             before its promised fill_at {fill_at}",
+                            d.port, d.pe, d.addr_block
+                        ));
+                    }
+                }
+                None => self.note(format!(
+                    "phantom or duplicated fill: port {} pe {} block {:#x} at cycle {cycle} \
+                     matches no outstanding demand miss",
+                    d.port, d.pe, d.addr_block
+                )),
+            }
+        }
+        self.prefetches.retain(|e| e.2 > cycle);
+    }
+
+    /// End-of-run audit: every demand miss must have delivered.
+    pub fn final_check(&mut self) {
+        if !self.outstanding.is_empty() {
+            let (port, pe, block, fill_at) = self.outstanding[0];
+            self.note(format!(
+                "{} lost fill(s): first is port {port} pe {pe} block {block:#x} \
+                 promised at {fill_at}, never delivered",
+                self.outstanding.len()
+            ));
+        }
+    }
+}
+
+impl MemoryModel for CheckedModel {
+    fn num_ports(&self) -> usize {
+        self.inner.num_ports()
+    }
+
+    fn place_spm(&mut self, port: usize, base: Addr) {
+        self.inner.place_spm(port, base);
+    }
+
+    fn add_streamed(&mut self, port: usize, base: Addr, bytes: u32) {
+        self.inner.add_streamed(port, base, bytes);
+    }
+
+    fn request(&mut self, port: usize, req: MemRequest, cycle: Cycle) -> MemResponse {
+        let resp = self.inner.request(port, req, cycle);
+        if let MemResponse::ReadMiss { fill_at, .. } = resp {
+            if fill_at <= cycle {
+                self.note(format!(
+                    "ReadMiss at cycle {cycle} promises non-future fill_at {fill_at} \
+                     (port {port}, addr {:#x})",
+                    req.addr
+                ));
+            }
+            let block = self.inner.block_addr(port, req.addr);
+            self.outstanding.push((port, req.pe, block, fill_at));
+            self.check_budget(port, cycle);
+            if self.inner.next_event().is_none() {
+                self.note(format!(
+                    "next_event is None immediately after a ReadMiss at cycle {cycle}"
+                ));
+            }
+        }
+        resp
+    }
+
+    fn prefetch(&mut self, port: usize, addr: Addr, cycle: Cycle) -> PrefetchResponse {
+        let resp = self.inner.prefetch(port, addr, cycle);
+        if let PrefetchResponse::Queued { fill_at } = resp {
+            if fill_at <= cycle {
+                self.note(format!(
+                    "prefetch Queued at cycle {cycle} promises non-future fill_at {fill_at} \
+                     (port {port}, addr {addr:#x})"
+                ));
+            }
+            self.prefetches.push((port, self.inner.block_addr(port, addr), fill_at));
+            self.check_budget(port, cycle);
+        }
+        resp
+    }
+
+    fn tick(&mut self, cycle: Cycle) -> Vec<MemResponseComplete> {
+        let mut out = Vec::new();
+        MemoryModel::tick_into(self, cycle, &mut out);
+        out
+    }
+
+    fn tick_into(&mut self, cycle: Cycle, out: &mut Vec<MemResponseComplete>) {
+        self.inner.tick_into(cycle, out);
+        let done: Vec<MemResponseComplete> = out.clone();
+        self.check_completions(cycle, &done);
+    }
+
+    fn next_event(&self) -> Option<Cycle> {
+        let ev = self.inner.next_event();
+        if ev.is_none() && !self.outstanding.is_empty() {
+            self.note(format!(
+                "next_event is None with {} demand fill(s) outstanding",
+                self.outstanding.len()
+            ));
+        }
+        ev
+    }
+
+    fn block_addr(&self, port: usize, addr: Addr) -> Addr {
+        self.inner.block_addr(port, addr)
+    }
+
+    fn backing(&self) -> &Backing {
+        self.inner.backing()
+    }
+
+    fn backing_mut(&mut self) -> &mut Backing {
+        self.inner.backing_mut()
+    }
+
+    fn temp_read(&self, port: usize, addr: Addr) -> Option<u32> {
+        self.inner.temp_read(port, addr)
+    }
+
+    fn temp_write(&mut self, port: usize, addr: Addr, data: u32) {
+        self.inner.temp_write(port, addr, data);
+    }
+
+    fn temp_clear(&mut self, port: usize) {
+        self.inner.temp_clear(port);
+    }
+
+    fn begin_runahead_epoch(&mut self) {
+        self.inner.begin_runahead_epoch();
+    }
+
+    fn finalize_prefetch_stats(&mut self) {
+        self.inner.finalize_prefetch_stats();
+    }
+
+    fn stats(&self) -> SubsystemStats {
+        self.inner.stats()
+    }
+
+    fn reconfig(&mut self) -> Option<&mut dyn Reconfigurable> {
+        self.inner.reconfig()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{
+        AccessKind, CacheConfig, DramModelKind, MemoryModelSpec, SubsystemConfig,
+    };
+
+    fn hierarchy() -> Box<dyn MemoryModel> {
+        MemoryModelSpec::Hierarchy(SubsystemConfig {
+            num_ports: 1,
+            spm_bytes: 512,
+            l1: CacheConfig { sets: 8, ways: 2, line_bytes: 16, vline_shift: 0 },
+            l2: CacheConfig { sets: 32, ways: 4, line_bytes: 16, vline_shift: 0 },
+            mshr_entries: 4,
+            store_buffer_entries: 4,
+            l1_hit_latency: 1,
+            l2_hit_latency: 8,
+            dram_latency: 80,
+            dram_bytes_per_cycle: 8,
+            dram: DramModelKind::Flat,
+            temp_store_bytes: 64,
+            shared_l1: false,
+        })
+        .build(1 << 21)
+    }
+
+    #[test]
+    fn clean_backend_reports_no_violations() {
+        let mut m = CheckedModel::new(hierarchy(), Some(4));
+        let mut cycle: Cycle = 0;
+        let mut scratch = Vec::new();
+        for k in 0..32u32 {
+            let req = MemRequest {
+                addr: 0x10_0000 + k * 64,
+                kind: AccessKind::Read,
+                data: 0,
+                pe: k as usize,
+            };
+            match m.request(0, req, cycle) {
+                MemResponse::ReadMiss { fill_at, .. } => {
+                    cycle = fill_at;
+                    m.tick_into(cycle, &mut scratch);
+                }
+                _ => cycle += 1,
+            }
+        }
+        m.final_check();
+        assert_eq!(m.violations(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn lost_fill_is_reported_by_final_check() {
+        let mut m = CheckedModel::new(hierarchy(), Some(4));
+        let req = MemRequest { addr: 0x10_0000, kind: AccessKind::Read, data: 0, pe: 0 };
+        assert!(matches!(m.request(0, req, 0), MemResponse::ReadMiss { .. }));
+        // Never tick: the fill is never delivered.
+        m.final_check();
+        let v = m.violations();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("lost fill"), "{v:?}");
+    }
+}

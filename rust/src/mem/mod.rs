@@ -22,6 +22,7 @@ pub mod dram;
 pub mod frontend;
 pub mod hierarchy;
 pub mod ideal;
+pub mod invariant;
 pub mod l1;
 pub mod l2;
 pub mod model;
@@ -36,6 +37,7 @@ pub use dram::Dram;
 pub use frontend::PortFrontEnd;
 pub use hierarchy::{MemorySubsystem, SubsystemConfig};
 pub use ideal::{IdealConfig, IdealMemory};
+pub use invariant::CheckedModel;
 pub use l1::L1Array;
 pub use l2::SharedL2;
 pub use model::{

@@ -16,11 +16,11 @@ use crate::exp::Session;
 /// Every figure id, in `repro figure all` order. The CLI derives its
 /// help text and `repro list` output from this array — adding an entry
 /// here (plus a [`render_figure`] arm) is the whole registration.
-pub const FIGURE_IDS: [&str; 24] = [
+pub const FIGURE_IDS: [&str; 25] = [
     "fig2", "fig5", "fig7", "fig11a", "fig11b", "fig12a", "fig12b", "fig12c", "fig12d",
     "fig12e", "fig12f", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "motivation",
     "ablation", "scaling", "adaptivity", "reconfig_timeseries", "cluster_throughput",
-    "cluster_latency",
+    "cluster_latency", "runahead_region",
 ];
 
 /// Render one figure by id on the shared session, `None` for unknown ids.
@@ -50,6 +50,7 @@ pub fn render_figure(id: &str, session: &Session) -> Option<String> {
         "reconfig_timeseries" => reconfig_timeseries(session),
         "cluster_throughput" => cluster_throughput(session),
         "cluster_latency" => cluster_latency(session),
+        "runahead_region" => runahead_region(session),
         _ => return None,
     })
 }

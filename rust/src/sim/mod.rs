@@ -17,6 +17,7 @@ pub mod mapper;
 pub mod pe;
 pub mod replay;
 pub mod trace;
+pub mod traffic;
 
 pub use alu::{AluOp, Value};
 pub use array::{
@@ -29,7 +30,8 @@ pub use cluster::{
 pub use dfg::{Dfg, DfgBuilder, MemSpace, NodeId, Op};
 pub use mapper::Geometry;
 pub use mapper::{Mapper, Mapping};
-pub use replay::{replay, EpochSample, ReplayOutcome};
+pub use replay::{replay, replay_with_core, EpochSample, ReplayOutcome};
 pub use trace::{
     AccessTrace, CaptureHeader, CaptureKind, CaptureTrace, CapturedTrace, CAPTURE_SCHEMA_VERSION,
 };
+pub use traffic::{synthesize, TrafficPattern, TrafficSpec};

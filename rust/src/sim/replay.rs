@@ -34,7 +34,7 @@
 //! change which addresses are issued (different workload, different
 //! SPM placement, runahead on/off) need a fresh capture.
 
-use super::array::EpochController;
+use super::array::{EpochController, SimCore};
 use super::trace::{AccessTrace, CaptureKind, CapturedTrace, TraceEvent};
 use crate::mem::{
     AccessKind, Cycle, MemRequest, MemResponse, MemResponseComplete, MemoryModel, SubsystemStats,
@@ -144,6 +144,26 @@ fn resolve(triggers: &mut Vec<ReplayTrigger>, done: &[MemResponseComplete]) {
 pub fn replay(
     trace: &CapturedTrace,
     mem: &mut dyn MemoryModel,
+    hook: Option<(&mut dyn EpochController, u64)>,
+    monitor_window: usize,
+) -> Result<ReplayOutcome, String> {
+    replay_with_core(trace, mem, SimCore::Event, hook, monitor_window)
+}
+
+/// [`replay`] with an explicit stepping core. The protocol — issue a
+/// demand group, wait out its stall, service bounced requests at the
+/// `next_event` gate, consume the recorded runahead episode — is
+/// identical under both cores; the *only* difference is how the wait
+/// loop advances `cycle`: the event core jumps to the earliest pending
+/// wake-up (episode action, retry gate, timewheel completion), the
+/// reference core steps one cycle at a time. The `next_event` contract
+/// guarantees the two are byte-identical — the traffic fuzz harness
+/// (`exp::fuzz`) drives every drawn point through both and diffs the
+/// outcomes, which is why this seam exists.
+pub fn replay_with_core(
+    trace: &CapturedTrace,
+    mem: &mut dyn MemoryModel,
+    core: SimCore,
     mut hook: Option<(&mut dyn EpochController, u64)>,
     monitor_window: usize,
 ) -> Result<ReplayOutcome, String> {
@@ -265,15 +285,20 @@ pub fn replay(
             let mut ep_idx = 0usize;
             let mut in_episode = false;
             loop {
+                // The single core-dependent line of the protocol: where
+                // the wait loop advances to. The reference core leaves
+                // `next` at MAX so the fallback steps +1.
                 let mut next = Cycle::MAX;
-                if ep_idx < episode.len() {
-                    next = next.min(map(episode[ep_idx].cycle));
-                }
-                if !retries.is_empty() && !in_episode {
-                    next = next.min(retry_at.max(cycle + 1));
-                }
-                if !triggers.is_empty() {
-                    next = next.min(mem.next_event().unwrap_or(cycle + 1));
+                if core == SimCore::Event {
+                    if ep_idx < episode.len() {
+                        next = next.min(map(episode[ep_idx].cycle));
+                    }
+                    if !retries.is_empty() && !in_episode {
+                        next = next.min(retry_at.max(cycle + 1));
+                    }
+                    if !triggers.is_empty() {
+                        next = next.min(mem.next_event().unwrap_or(cycle + 1));
+                    }
                 }
                 if next == Cycle::MAX {
                     next = cycle + 1;
@@ -473,6 +498,38 @@ mod tests {
         assert_eq!(out.uncovered_misses, 16);
         assert!(out.stall_cycles > 0, "cold misses must stall the replay");
         assert!(out.cycles > t.header.end_sched);
+    }
+
+    #[test]
+    fn reference_core_matches_event_core_on_hierarchy() {
+        use crate::mem::{CacheConfig, DramModelKind, SubsystemConfig};
+        let t = demand_stream(2, 128, 48);
+        let cfg = SubsystemConfig {
+            num_ports: 2,
+            spm_bytes: 512,
+            l1: CacheConfig { sets: 8, ways: 2, line_bytes: 16, vline_shift: 0 },
+            l2: CacheConfig { sets: 32, ways: 4, line_bytes: 16, vline_shift: 0 },
+            mshr_entries: 4,
+            store_buffer_entries: 4,
+            l1_hit_latency: 1,
+            l2_hit_latency: 8,
+            dram_latency: 80,
+            dram_bytes_per_cycle: 8,
+            dram: DramModelKind::Flat,
+            temp_store_bytes: 64,
+            shared_l1: false,
+        };
+        let spec = MemoryModelSpec::Hierarchy(cfg);
+        let mut ev_mem = spec.build(t.header.backing_bytes as usize);
+        let ev = replay_with_core(&t, ev_mem.as_mut(), SimCore::Event, None, 0).expect("event");
+        let mut ref_mem = spec.build(t.header.backing_bytes as usize);
+        let rf =
+            replay_with_core(&t, ref_mem.as_mut(), SimCore::Reference, None, 0).expect("reference");
+        assert_eq!(ev.cycles, rf.cycles);
+        assert_eq!(ev.stall_cycles, rf.stall_cycles);
+        assert_eq!(ev.mem, rf.mem);
+        assert_eq!(ev.uncovered_misses, rf.uncovered_misses);
+        assert_eq!(ev.events_replayed, rf.events_replayed);
     }
 
     #[test]

@@ -360,6 +360,12 @@ impl CapturedTrace {
             spm_bases.push(get_varint(buf, &mut pos)? as Addr);
         }
         let n_streamed = get_varint(buf, &mut pos)? as usize;
+        // Each streamed triple is at least three varint bytes; a count
+        // the remaining buffer cannot possibly hold is corruption, and
+        // must be rejected *before* it sizes an allocation.
+        if n_streamed > buf.len().saturating_sub(pos) / 3 {
+            return Err(format!("implausible streamed-region count {n_streamed}"));
+        }
         let mut streamed = Vec::with_capacity(n_streamed);
         for _ in 0..n_streamed {
             let p = get_varint(buf, &mut pos)? as u32;
@@ -397,6 +403,10 @@ impl CapturedTrace {
         let mut events = Vec::new();
         for port in 0..ports.max(1) {
             let n = get_varint(buf, &mut pos)? as usize;
+            // Kind byte + five varints: six bytes minimum per event.
+            if n > buf.len().saturating_sub(pos) / 6 {
+                return Err(format!("implausible event count {n} for port {port}"));
+            }
             let (mut seq, mut sched, mut cycle, mut addr) = (0u64, 0u64, 0u64, 0i64);
             for _ in 0..n {
                 let kb = *buf.get(pos).ok_or("trace truncated at event kind")?;
@@ -408,10 +418,18 @@ impl CapturedTrace {
                     3 => CaptureKind::RaEnter,
                     other => return Err(format!("bad event kind {other}")),
                 };
-                seq += get_varint(buf, &mut pos)?;
-                sched += get_varint(buf, &mut pos)?;
-                cycle += get_varint(buf, &mut pos)?;
-                addr += unzigzag(get_varint(buf, &mut pos)?);
+                // Corrupt deltas can push any accumulator past its type
+                // range; checked adds turn that into a clean decode
+                // error instead of a debug-build overflow panic.
+                let bump = |acc: u64, d: u64| -> Result<u64, String> {
+                    acc.checked_add(d).ok_or_else(|| "event delta overflows".to_string())
+                };
+                seq = bump(seq, get_varint(buf, &mut pos)?)?;
+                sched = bump(sched, get_varint(buf, &mut pos)?)?;
+                cycle = bump(cycle, get_varint(buf, &mut pos)?)?;
+                addr = addr
+                    .checked_add(unzigzag(get_varint(buf, &mut pos)?))
+                    .ok_or("address delta overflows")?;
                 let pe = get_varint(buf, &mut pos)? as u32;
                 if addr < 0 || addr > i64::from(u32::MAX) {
                     return Err("address delta out of range".into());

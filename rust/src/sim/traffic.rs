@@ -1,0 +1,403 @@
+//! Synthetic traffic generator: parameterized, seeded address-stream
+//! synthesis that drives any [`crate::mem::MemoryModel`] through the
+//! replay protocol without a DFG (ROADMAP: "explore thousands of
+//! access-pattern points cheaply; map the runahead-win region").
+//!
+//! A [`TrafficSpec`] deterministically synthesizes a
+//! [`CapturedTrace`] — the same artifact the live capture machinery
+//! records — so traffic cells ride the existing machinery end to end:
+//! [`super::replay::replay_with_core`] re-times the stream under either
+//! sim core, the session layer dedupes/persists traffic cells like any
+//! other scenario, and the tracestore can hold the synthesized stream.
+//!
+//! ## Timing model
+//!
+//! One *demand group* per op: every port issues its `k`-th access at
+//! schedule time `k · (gap + 1)` (the lock-step machine's "all border
+//! PEs fire in the same context" shape). `gap` inserts idle schedule
+//! slots between groups — the memory-intensity knob (`gap = 0` is one
+//! access per port per cycle). When synthesized for a Runahead system,
+//! each group is followed by a recorded runahead episode: an `RaEnter`
+//! marker plus the next `lookahead` accesses of every port as staggered
+//! `Prefetch` events — replay drops the episode wherever the group does
+//! not actually stall, exactly as a live capture would never have
+//! recorded one there. The lookahead is the pattern's *statically
+//! visible* depth: 8 for address streams a runahead frontend can
+//! compute past a blocking miss, but only `fanout − 1` for
+//! `pointer_chase` (the next node of the *blocked* chain depends on the
+//! missing load — only the other chains are visible), which is how the
+//! dependent-chain patterns defeat runahead in the resulting figures.
+//!
+//! ## Address space
+//!
+//! Port `p` draws from `[p·PORT_STRIDE + TRAFFIC_OFFSET, … +
+//! REGION_BYTES)`. The offset clears every SPM window the builtin
+//! systems place at `p·PORT_STRIDE`, so traffic exercises the cache
+//! hierarchy (L1/L2/DRAM), never the SPM fast path.
+
+use super::trace::{CaptureHeader, CaptureKind, CaptureTrace, CapturedTrace};
+use crate::mem::Addr;
+use crate::util::Rng;
+
+/// Per-port backing-region stride (matches the builtin systems' SPM
+/// placement convention; defined locally because `sim` must not depend
+/// on the workload layer).
+pub const TRAFFIC_PORT_STRIDE: Addr = 0x20_0000;
+/// First traffic byte within a port's region — past any SPM window.
+pub const TRAFFIC_OFFSET: Addr = 0x8_0000;
+/// Bytes of the per-port traffic window (`OFFSET + REGION ==
+/// PORT_STRIDE`, so ports never alias).
+pub const TRAFFIC_REGION_BYTES: Addr = 0x18_0000;
+
+/// Pointer-chase node slot size: one cache line in every builtin
+/// geometry, so each hop is a fresh block.
+const CHASE_SLOT_BYTES: Addr = 64;
+
+/// The four synthetic access shapes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TrafficPattern {
+    /// Regular bursts: `width` consecutive words, bursts `stride` bytes
+    /// apart, the whole walk rotated by `align`.
+    Strided { stride: u32, width: u32, align: u32 },
+    /// Dependent-load chains over a random permutation of `nodes`
+    /// line-sized slots; `fanout` independent chains interleave (memory-
+    /// level parallelism a runahead frontend can exploit).
+    PointerChase { nodes: u32, fanout: u32 },
+    /// Skewed gather: probability `locality` of hitting a 16-line hot
+    /// set, else uniform over `span` bytes.
+    ZipfGather { locality: f64, span: u32 },
+    /// Time-multiplexed composition: alternate `period`-access phases
+    /// of strided streaming and zipf gathering (the reconfiguration
+    /// loop's adversary).
+    PhaseMix { period: u32, stride: u32, locality: f64, span: u32 },
+}
+
+impl TrafficPattern {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficPattern::Strided { .. } => "strided",
+            TrafficPattern::PointerChase { .. } => "pointer_chase",
+            TrafficPattern::ZipfGather { .. } => "zipf_gather",
+            TrafficPattern::PhaseMix { .. } => "phase_mix",
+        }
+    }
+
+    /// Statically visible prefetch depth (see module docs).
+    fn lookahead(&self) -> u32 {
+        match self {
+            TrafficPattern::PointerChase { fanout, .. } => fanout.saturating_sub(1),
+            _ => 8,
+        }
+    }
+}
+
+/// A complete traffic point: pattern + intensity + seed. Everything the
+/// synthesis needs; two equal specs synthesize byte-identical traces.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrafficSpec {
+    pub pattern: TrafficPattern,
+    /// Demand groups to issue (one access per port per group).
+    pub ops: u32,
+    /// Idle schedule slots between groups (0 = back-to-back).
+    pub gap: u32,
+    pub seed: u64,
+    /// Per-access probability of a store instead of a load.
+    pub write_frac: f64,
+}
+
+/// Per-port address/op stream generator state.
+struct PortGen {
+    rng: Rng,
+    base: Addr,
+    pattern: TrafficPattern,
+    /// Pointer-chase: successor permutation + one cursor per chain.
+    perm: Vec<u32>,
+    cursors: Vec<u32>,
+    /// Zipf: the hot line set.
+    hot: Vec<u32>,
+    /// Rolling op index (phase_mix phase position, strided walk).
+    k: u64,
+}
+
+impl PortGen {
+    fn new(spec: &TrafficSpec, port: usize) -> PortGen {
+        let mut rng = Rng::new(spec.seed ^ ((port as u64) << 32) ^ 0x7261_6666_6963_u64);
+        let base = port as Addr * TRAFFIC_PORT_STRIDE + TRAFFIC_OFFSET;
+        let (mut perm, mut cursors, mut hot) = (Vec::new(), Vec::new(), Vec::new());
+        match spec.pattern {
+            TrafficPattern::PointerChase { nodes, fanout } => {
+                let n = nodes.max(2);
+                // Fisher-Yates successor permutation: node i points at
+                // perm[i]; chains start spread across the slots.
+                perm = (0..n).collect();
+                for i in (1..n as u64).rev() {
+                    let j = rng.gen_range(0, i + 1) as usize;
+                    perm.swap(i as usize, j);
+                }
+                cursors = (0..fanout.max(1)).map(|c| c * (n / fanout.max(1)).max(1) % n).collect();
+            }
+            TrafficPattern::ZipfGather { span, .. } | TrafficPattern::PhaseMix { span, .. } => {
+                let lines = (span.max(64) / 64).max(1);
+                hot = (0..16).map(|_| rng.gen_range(0, u64::from(lines)) as u32).collect();
+            }
+            TrafficPattern::Strided { .. } => {}
+        }
+        PortGen { rng, base, pattern: spec.pattern, perm, cursors, hot, k: 0 }
+    }
+
+    fn strided_addr(&self, k: u64, stride: u32, width: u32, align: u32) -> Addr {
+        let w = u64::from(width.max(1));
+        let off = (k / w) * u64::from(stride.max(4)) + (k % w) * 4 + u64::from(align);
+        self.base + (((off % u64::from(TRAFFIC_REGION_BYTES)) as Addr) & !3)
+    }
+
+    fn zipf_addr(&mut self, locality: f64, span: u32) -> Addr {
+        let lines = u64::from((span.max(64) / 64).max(1));
+        let line = if f64::from(self.rng.gen_f32()) < locality {
+            u64::from(self.hot[self.rng.gen_range(0, self.hot.len() as u64) as usize])
+        } else {
+            self.rng.gen_range(0, lines)
+        };
+        let word = self.rng.gen_range(0, 16);
+        self.base + ((line * 64 + word * 4) % u64::from(TRAFFIC_REGION_BYTES)) as Addr
+    }
+
+    /// The port's `k`-th address (must be called with k strictly
+    /// increasing; stateful patterns advance on each call).
+    fn next_addr(&mut self) -> Addr {
+        let k = self.k;
+        self.k += 1;
+        match self.pattern {
+            TrafficPattern::Strided { stride, width, align } => {
+                self.strided_addr(k, stride, width, align)
+            }
+            TrafficPattern::PointerChase { fanout, .. } => {
+                let chain = (k % u64::from(fanout.max(1))) as usize;
+                let cur = self.cursors[chain];
+                self.cursors[chain] = self.perm[cur as usize];
+                self.base + cur * CHASE_SLOT_BYTES
+            }
+            TrafficPattern::ZipfGather { locality, span } => self.zipf_addr(locality, span),
+            TrafficPattern::PhaseMix { period, stride, locality, span } => {
+                let phase = (k / u64::from(period.max(1))) % 2;
+                if phase == 0 {
+                    self.strided_addr(k, stride, 1, 0)
+                } else {
+                    self.zipf_addr(locality, span)
+                }
+            }
+        }
+    }
+}
+
+/// Synthesize the deterministic capture for `spec` on a `ports`-port
+/// memory system. `runahead` adds the recorded runahead episodes (see
+/// module docs); pass it iff the target system runs in runahead mode.
+pub fn synthesize(spec: &TrafficSpec, ports: usize, runahead: bool) -> CapturedTrace {
+    let ports = ports.max(1);
+    let ops = u64::from(spec.ops);
+    let step = u64::from(spec.gap) + 1;
+    let lookahead = u64::from(spec.pattern.lookahead());
+
+    // Materialize every port's stream up front: the episode emitter
+    // needs lookahead into future ops.
+    let mut wrng = Rng::new(spec.seed ^ 0x5752_4954_45u64);
+    let mut streams: Vec<Vec<(Addr, bool)>> = Vec::with_capacity(ports);
+    for port in 0..ports {
+        let mut g = PortGen::new(spec, port);
+        streams.push(
+            (0..ops)
+                .map(|_| (g.next_addr(), f64::from(wrng.gen_f32()) < spec.write_frac))
+                .collect(),
+        );
+    }
+
+    let mut cap = CaptureTrace::new(true);
+    for k in 0..ops {
+        let s = k * step;
+        for (port, stream) in streams.iter().enumerate() {
+            let (addr, is_write) = stream[k as usize];
+            let kind = if is_write { CaptureKind::DemandWrite } else { CaptureKind::DemandRead };
+            // cycle == sched: the synthetic producing run is the
+            // zero-stall one, and episode offsets anchor on it.
+            cap.record(kind, s, s, port, port, addr);
+        }
+        if runahead && lookahead > 0 {
+            cap.record(CaptureKind::RaEnter, s, s, 0, 0, 0);
+            for j in 1..=lookahead {
+                if k + j >= ops {
+                    break;
+                }
+                for (port, stream) in streams.iter().enumerate() {
+                    let (addr, _) = stream[(k + j) as usize];
+                    cap.record(CaptureKind::Prefetch, s, s + j, port, port, addr);
+                }
+            }
+        }
+    }
+
+    let end_sched = if ops == 0 { 0 } else { (ops - 1) * step + 1 };
+    CapturedTrace {
+        header: CaptureHeader {
+            producer: 0,
+            ports: ports as u32,
+            backing_bytes: ports as u64 * u64::from(TRAFFIC_PORT_STRIDE),
+            spm_bases: (0..ports).map(|p| p as Addr * TRAFFIC_PORT_STRIDE).collect(),
+            streamed: vec![],
+            spm_greedy: false,
+            // Traffic places nothing in SPM (the window is below
+            // TRAFFIC_OFFSET by construction).
+            spm_usable_bytes: 0,
+            end_sched,
+            total_cycles: end_sched,
+            iterations: ops,
+            useful_ops: ops * ports as u64,
+            num_pes: ports as u32,
+            ii: step as u32,
+            start_shift: 0,
+        },
+        events: cap.events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{CacheConfig, DramModelKind, IdealConfig, MemoryModelSpec, SubsystemConfig};
+    use crate::sim::array::SimCore;
+    use crate::sim::replay::replay_with_core;
+
+    fn small_hierarchy(ports: usize) -> MemoryModelSpec {
+        MemoryModelSpec::Hierarchy(SubsystemConfig {
+            num_ports: ports,
+            spm_bytes: 512,
+            l1: CacheConfig { sets: 8, ways: 2, line_bytes: 16, vline_shift: 0 },
+            l2: CacheConfig { sets: 32, ways: 4, line_bytes: 16, vline_shift: 0 },
+            mshr_entries: 4,
+            store_buffer_entries: 4,
+            l1_hit_latency: 1,
+            l2_hit_latency: 8,
+            dram_latency: 80,
+            dram_bytes_per_cycle: 8,
+            dram: DramModelKind::Flat,
+            temp_store_bytes: 64,
+            shared_l1: false,
+        })
+    }
+
+    fn zipf(seed: u64) -> TrafficSpec {
+        TrafficSpec {
+            pattern: TrafficPattern::ZipfGather { locality: 0.5, span: 64 * 1024 },
+            ops: 96,
+            gap: 1,
+            seed,
+            write_frac: 0.25,
+        }
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let a = synthesize(&zipf(7), 2, true);
+        let b = synthesize(&zipf(7), 2, true);
+        assert_eq!(a, b);
+        let c = synthesize(&zipf(8), 2, true);
+        assert_ne!(a.events, c.events, "seed must matter");
+    }
+
+    #[test]
+    fn addresses_stay_in_port_regions_and_are_word_aligned() {
+        for pattern in [
+            TrafficPattern::Strided { stride: 192, width: 4, align: 8 },
+            TrafficPattern::PointerChase { nodes: 512, fanout: 3 },
+            TrafficPattern::ZipfGather { locality: 0.8, span: 0x18_0000 },
+            TrafficPattern::PhaseMix { period: 16, stride: 64, locality: 0.5, span: 32768 },
+        ] {
+            let spec = TrafficSpec { pattern, ops: 200, gap: 0, seed: 3, write_frac: 0.1 };
+            let t = synthesize(&spec, 2, true);
+            for e in &t.events {
+                if e.kind == CaptureKind::RaEnter {
+                    continue;
+                }
+                let base = e.port * TRAFFIC_PORT_STRIDE + TRAFFIC_OFFSET;
+                assert!(
+                    e.addr >= base && e.addr < base + TRAFFIC_REGION_BYTES,
+                    "{pattern:?}: {:#x} outside port {} region",
+                    e.addr,
+                    e.port
+                );
+                assert_eq!(e.addr % 4, 0, "{pattern:?}: unaligned {:#x}", e.addr);
+            }
+        }
+    }
+
+    #[test]
+    fn pointer_chase_lookahead_is_fanout_minus_one() {
+        let single = TrafficSpec {
+            pattern: TrafficPattern::PointerChase { nodes: 256, fanout: 1 },
+            ops: 64,
+            gap: 0,
+            seed: 1,
+            write_frac: 0.0,
+        };
+        let t = synthesize(&single, 1, true);
+        assert!(
+            !t.events.iter().any(|e| e.kind == CaptureKind::Prefetch),
+            "a single dependent chain leaves runahead nothing to prefetch"
+        );
+        let four = TrafficSpec {
+            pattern: TrafficPattern::PointerChase { nodes: 256, fanout: 4 },
+            ..single
+        };
+        let t4 = synthesize(&four, 1, true);
+        assert!(t4.events.iter().any(|e| e.kind == CaptureKind::Prefetch));
+    }
+
+    #[test]
+    fn ideal_memory_traffic_is_stall_free() {
+        let spec = TrafficSpec {
+            pattern: TrafficPattern::Strided { stride: 4, width: 1, align: 0 },
+            ops: 50,
+            gap: 0,
+            seed: 2,
+            write_frac: 0.0,
+        };
+        let t = synthesize(&spec, 2, false);
+        let mspec = MemoryModelSpec::Ideal(IdealConfig {
+            num_ports: 2,
+            spm_bytes: 64 * 1024,
+            line_bytes: 64,
+        });
+        let mut mem = mspec.build(t.header.backing_bytes as usize);
+        let out = replay_with_core(&t, mem.as_mut(), SimCore::Event, None, 0).expect("replay");
+        assert_eq!(out.cycles, t.header.end_sched);
+        assert_eq!(out.stall_cycles, 0);
+        assert_eq!(out.events_replayed, 100);
+    }
+
+    #[test]
+    fn traffic_is_core_invariant_with_runahead_episodes() {
+        let t = synthesize(&zipf(11), 2, true);
+        let spec = small_hierarchy(2);
+        let mut ev_mem = spec.build(t.header.backing_bytes as usize);
+        let ev = replay_with_core(&t, ev_mem.as_mut(), SimCore::Event, None, 0).expect("event");
+        let mut rf_mem = spec.build(t.header.backing_bytes as usize);
+        let rf =
+            replay_with_core(&t, rf_mem.as_mut(), SimCore::Reference, None, 0).expect("reference");
+        assert_eq!(ev.cycles, rf.cycles);
+        assert_eq!(ev.stall_cycles, rf.stall_cycles);
+        assert_eq!(ev.mem, rf.mem);
+        assert_eq!(ev.uncovered_misses, rf.uncovered_misses);
+        assert_eq!(ev.runahead_entries, rf.runahead_entries);
+        assert!(ev.runahead_entries > 0, "zipf over a cold hierarchy must stall");
+        assert!(ev.mem.prefetches_issued > 0, "episodes must replay prefetches");
+    }
+
+    #[test]
+    fn gap_raises_cycles_but_not_accesses() {
+        let tight = TrafficSpec { gap: 0, ..zipf(5) };
+        let loose = TrafficSpec { gap: 8, ..zipf(5) };
+        let (a, b) = (synthesize(&tight, 1, false), synthesize(&loose, 1, false));
+        assert!(b.header.end_sched > a.header.end_sched);
+        assert_eq!(a.demand_len(), b.demand_len());
+    }
+}
