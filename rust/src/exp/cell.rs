@@ -68,7 +68,15 @@ use crate::sim::CgraConfig;
 /// joined the identity space — a traffic cell measures the replay
 /// protocol over a synthesized stream, with no DFG behind it, so its
 /// measurement semantics are new rather than changed (PR 9).
-pub const STORE_FORMAT_VERSION: u64 = 6;
+///
+/// v7: the store went sharded (`target/cellstore/shard-XX.jsonl` +
+/// sharded `.cgtr` subdirs) and the traffic identity space gained the
+/// bursty arrival knob (`burst_len`/`burst_gap`) (PR 10). Line schema
+/// and non-traffic measurements are unchanged, but the layout change
+/// ships with a one-shot legacy-file migration, and stamping a new
+/// version keeps the invalidation story single-knobbed: v6 lines (and
+/// traces) are orphaned rather than half-adopted.
+pub const STORE_FORMAT_VERSION: u64 = 7;
 
 /// Content address of one (scenario, system, repeat) cell.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -22,15 +22,16 @@
 //! failure reproduces, and the caller gets a re-runnable workload JSON
 //! plus the exact `repro fuzz --seed N` line.
 
-use super::{ExecModel, SystemSpec};
+use super::{ExecModel, ScenarioSpec, SystemSpec, WorkloadRegistry};
 use crate::mem::{CheckedModel, MemoryModelSpec};
 use crate::reconfig::OnlineController;
 use crate::sim::traffic::synthesize;
 use crate::sim::{
-    replay_with_core, EpochController, ExecMode, ReconfigMode, ReplayOutcome, SimCore,
-    TrafficPattern, TrafficSpec,
+    replay_with_core, Cluster, ClusterJob, ClusterOutcome, EpochController, ExecMode,
+    ReconfigMode, ReplayOutcome, SimCore, TrafficPattern, TrafficSpec,
 };
 use crate::util::Rng;
+use crate::workloads::{MixSpec, MixSuite};
 
 /// The four backends the fuzzer exercises, by draw index. Built
 /// directly (not via the registry) so the fuzzer keeps working even if
@@ -66,10 +67,13 @@ pub struct FuzzFailure {
     /// Name of the system the point ran on.
     pub system: String,
     /// Minimized workload object, pasteable into a spec's `workloads`
-    /// array: `{"family":"traffic", ...}`.
+    /// array: `{"family":"traffic", ...}` (or `"mix"` for the cluster
+    /// campaign).
     pub workload_json: String,
     /// The recorded violations (re-checked on the minimized spec).
     pub violations: Vec<String>,
+    /// Came from the cluster campaign (`repro fuzz --cluster`)?
+    pub cluster: bool,
 }
 
 impl FuzzFailure {
@@ -84,7 +88,8 @@ impl FuzzFailure {
             s.push_str(&format!("  - {v}\n"));
         }
         s.push_str(&format!("minimized workload: {}\n", self.workload_json));
-        s.push_str(&format!("reproduce with: repro fuzz --seed {}\n", self.seed));
+        let flag = if self.cluster { " --cluster" } else { "" };
+        s.push_str(&format!("reproduce with: repro fuzz{flag} --seed {}\n", self.seed));
         s
     }
 }
@@ -114,12 +119,18 @@ fn draw_spec(rng: &mut Rng) -> TrafficSpec {
             span: 4096 + 64 * rng.gen_range(0, 1024) as u32,
         },
     };
+    // Bursting is drawn in about two thirds of the points; the validator
+    // requires a nonzero pause whenever bursting is on.
+    let burst_len = rng.gen_range(0, 3) as u32 * rng.gen_range(1, 9) as u32;
+    let burst_gap = if burst_len > 0 { rng.gen_range(1, 9) as u32 } else { 0 };
     TrafficSpec {
         pattern,
         ops: rng.gen_range(8, 257) as u32,
         gap: rng.gen_range(0, 4) as u32,
         seed: rng.next_u64(),
         write_frac: f64::from(rng.gen_f32()) * 0.5,
+        burst_len,
+        burst_gap,
     }
 }
 
@@ -155,6 +166,10 @@ pub fn workload_json(spec: &TrafficSpec) -> String {
     parts.push(format!("\"gap\":{}", spec.gap));
     parts.push(format!("\"seed\":{}", spec.seed));
     parts.push(format!("\"write_frac\":{}", spec.write_frac));
+    if spec.burst_len > 0 {
+        parts.push(format!("\"burst_len\":{}", spec.burst_len));
+        parts.push(format!("\"burst_gap\":{}", spec.burst_gap));
+    }
     format!("{{{}}}", parts.join(","))
 }
 
@@ -279,6 +294,12 @@ fn shrink(mut spec: TrafficSpec, sys_idx: usize) -> TrafficSpec {
             c.write_frac = 0.0;
             candidates.push(c);
         }
+        if spec.burst_len > 0 {
+            let mut c = spec;
+            c.burst_len = 0;
+            c.burst_gap = 0;
+            candidates.push(c);
+        }
         match spec.pattern {
             TrafficPattern::Strided { stride, width, align } => {
                 if width > 1 || align > 0 {
@@ -359,6 +380,178 @@ pub fn run_fuzz(seed: u64, iters: u32) -> FuzzOutcome {
                     system: system(sys_idx).name,
                     workload_json: workload_json(&min),
                     violations,
+                    cluster: false,
+                }),
+            };
+        }
+    }
+    FuzzOutcome { iters, points_checked: iters, failure: None }
+}
+
+// ---------------------------------------------------------------------------
+// Cluster interleaver fuzzing (`repro fuzz --cluster`)
+// ---------------------------------------------------------------------------
+
+/// Draw one bounded random job mix for the cluster campaign: 2..=5 jobs
+/// from the small suite keeps the reference core — which walks every
+/// stall cycle of every slot — fast enough for pinned CI campaigns.
+fn draw_mix(rng: &mut Rng) -> MixSpec {
+    MixSpec {
+        jobs: rng.gen_range(2, 6) as u32,
+        skew: f64::from(rng.gen_f32()),
+        seed: rng.next_u64(),
+        suite: MixSuite::Small,
+        family: None,
+    }
+}
+
+/// Render a mix as a pasteable `"mix"`-family workload object.
+pub fn mix_json(mix: &MixSpec) -> String {
+    format!(
+        "{{\"family\":\"mix\",\"jobs\":{},\"skew\":{},\"seed\":{},\"suite\":\"small\"}}",
+        mix.jobs, mix.skew, mix.seed
+    )
+}
+
+/// Expand a mix into a cluster job queue. [`ClusterJob`] is not `Clone`,
+/// so every run regenerates its own queue (the expansion is
+/// deterministic in the mix alone).
+fn mix_queue(registry: &WorkloadRegistry, mix: &MixSpec) -> Result<Vec<ClusterJob>, String> {
+    mix.generate()
+        .into_iter()
+        .map(|j| {
+            let wl = registry
+                .resolve(&ScenarioSpec::preset(&j.preset))
+                .map_err(|e| format!("mix preset {:?}: {e}", j.preset))?;
+            Ok(ClusterJob { workload: wl, family: j.family })
+        })
+        .collect()
+}
+
+/// Serve one mix on the 2-array runahead cluster under one core.
+/// `checked` wraps every slot in [`CheckedModel`] (private L2s); plain
+/// runs keep the shared L2 + channel, covering the contention path the
+/// wrapper cannot thread through.
+fn run_cluster_one(
+    registry: &WorkloadRegistry,
+    mix: &MixSpec,
+    core: SimCore,
+    checked: bool,
+    violations: &mut Vec<String>,
+) -> Option<ClusterOutcome> {
+    let sys = SystemSpec::cluster_runahead(2);
+    let tag = if checked { "checked" } else { "shared" };
+    let ExecModel::Cluster { mem, cgra, cluster } = &sys.exec else {
+        violations.push(format!("fuzz system {:?} is not a cluster system", sys.name));
+        return None;
+    };
+    let jobs = match mix_queue(registry, mix) {
+        Ok(jobs) => jobs,
+        Err(e) => {
+            violations.push(format!("[{} {tag}] {e}", core.name()));
+            return None;
+        }
+    };
+    let mut cfg = *cgra;
+    cfg.core = core;
+    let mut c = if checked {
+        Cluster::new_checked(*cluster, mem)
+    } else {
+        Cluster::new(*cluster, mem)
+    };
+    let out = c.run(cfg, &jobs);
+    for v in c.violations() {
+        violations.push(format!("[{} {tag}] {v}", core.name()));
+    }
+    if !out.all_outputs_ok() {
+        violations.push(format!(
+            "[{} {tag}] a served job failed output validation",
+            core.name()
+        ));
+    }
+    Some(out)
+}
+
+/// Check one mix point: event≡reference equality of the *whole*
+/// [`ClusterOutcome`] — every job's dispatch/finish record (the serving
+/// order), per-array stat blocks, makespan, channel counters — on both
+/// the checked-private and the shared-L2 cluster, plus every wrapper
+/// invariant and output validation.
+fn check_cluster_point(registry: &WorkloadRegistry, mix: &MixSpec) -> Result<(), Vec<String>> {
+    let mut violations = Vec::new();
+    for checked in [true, false] {
+        let ev = run_cluster_one(registry, mix, SimCore::Event, checked, &mut violations);
+        let rf = run_cluster_one(registry, mix, SimCore::Reference, checked, &mut violations);
+        if let (Some(a), Some(b)) = (ev, rf) {
+            if a != b {
+                violations.push(format!(
+                    "cluster core divergence ({} slots):\n  event:     {a:?}\n  reference: {b:?}",
+                    if checked { "checked private" } else { "shared-L2" }
+                ));
+            }
+        }
+    }
+    if violations.is_empty() {
+        Ok(())
+    } else {
+        Err(violations)
+    }
+}
+
+/// Greedy mix shrink, mirroring [`shrink`]: drop jobs one at a time,
+/// then flatten the skew, while the failure reproduces.
+fn shrink_mix(registry: &WorkloadRegistry, mut mix: MixSpec) -> MixSpec {
+    loop {
+        let mut candidates: Vec<MixSpec> = Vec::new();
+        if mix.jobs > 1 {
+            let mut c = mix.clone();
+            c.jobs -= 1;
+            candidates.push(c);
+        }
+        if mix.skew > 0.0 {
+            let mut c = mix.clone();
+            c.skew = 0.0;
+            candidates.push(c);
+        }
+        let mut progressed = false;
+        for c in candidates {
+            if c != mix && check_cluster_point(registry, &c).is_err() {
+                mix = c;
+                progressed = true;
+                break;
+            }
+        }
+        if !progressed {
+            return mix;
+        }
+    }
+}
+
+/// Run a cluster-interleaver fuzzing campaign: `iters` random small
+/// mixes on `Cluster-2xRunahead` from `seed`, stopping (with a
+/// minimized reproduction) at the first violation. The solo campaign
+/// ([`run_fuzz`]) checks one array against one memory system; this one
+/// checks the *serving* layer — dispatch order, the interleaver's
+/// fast-forward clamp, shared-level contention — under the same
+/// event≡reference contract.
+pub fn run_cluster_fuzz(seed: u64, iters: u32) -> FuzzOutcome {
+    let registry = WorkloadRegistry::builtin();
+    let mut rng = Rng::new(seed);
+    for iter in 0..iters {
+        let mix = draw_mix(&mut rng);
+        if let Err(first) = check_cluster_point(&registry, &mix) {
+            let min = shrink_mix(&registry, mix);
+            let violations = check_cluster_point(&registry, &min).err().unwrap_or(first);
+            return FuzzOutcome {
+                iters,
+                points_checked: iter + 1,
+                failure: Some(FuzzFailure {
+                    seed,
+                    iter,
+                    system: SystemSpec::cluster_runahead(2).name,
+                    workload_json: mix_json(&min),
+                    violations,
+                    cluster: true,
                 }),
             };
         }
@@ -414,12 +607,39 @@ mod tests {
             gap: 1,
             seed: 9,
             write_frac: 0.125,
+            burst_len: 4,
+            burst_gap: 2,
         };
         let json = workload_json(&spec);
         let v = super::super::Json::parse(&json).expect("workload json parses");
         let scenario = super::super::ScenarioSpec::from_json(&v).expect("scenario parses");
         let back = super::super::traffic_spec_of(&scenario.params).expect("params validate");
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn small_cluster_campaign_is_clean() {
+        let out = run_cluster_fuzz(0xC1057E2, 2);
+        if let Some(f) = &out.failure {
+            panic!("{}", f.report());
+        }
+        assert_eq!(out.points_checked, 2);
+    }
+
+    #[test]
+    fn mix_json_parses_back_through_the_family_validator() {
+        let mix = MixSpec {
+            jobs: 3,
+            skew: 0.5,
+            seed: 11,
+            suite: MixSuite::Small,
+            family: None,
+        };
+        let json = mix_json(&mix);
+        let v = super::super::Json::parse(&json).expect("mix json parses");
+        let scenario = super::super::ScenarioSpec::from_json(&v).expect("scenario parses");
+        let back = super::super::mix_spec_of(&scenario.params).expect("params validate");
+        assert_eq!(back, mix);
     }
 
     #[test]

@@ -39,13 +39,13 @@ pub mod tracestore;
 
 pub use cell::{CellKey, STORE_FORMAT_VERSION};
 pub use engine::{default_parallelism, Engine};
-pub use fuzz::{run_fuzz, FuzzOutcome};
+pub use fuzz::{run_cluster_fuzz, run_fuzz, FuzzOutcome};
 pub use json::Json;
 pub use registry::{
     all_systems, builtin_systems, extra_systems, system_named, Params, WorkloadRegistry,
 };
 pub use session::{CellEvent, JobId, Provenance, Session, SessionStats};
-pub use store::ResultStore;
+pub use store::{synthetic_entries, ResultStore, StoreEntry, NUM_SHARDS};
 pub use tracestore::TraceStore;
 
 use crate::baseline::{run_cpu, CpuModel};
@@ -1368,7 +1368,7 @@ pub fn mix_spec_of(params: &Params) -> Result<MixSpec, String> {
 pub fn traffic_spec_of(params: &Params) -> Result<TrafficSpec, String> {
     const PATTERNS: [&str; 4] = ["strided", "pointer_chase", "zipf_gather", "phase_mix"];
     let pattern_name = params.choice("pattern", &PATTERNS, "strided")?;
-    let common = ["pattern", "ops", "gap", "seed", "write_frac"];
+    let common = ["pattern", "ops", "gap", "seed", "write_frac", "burst_len", "burst_gap"];
     let per_pattern: &[&str] = match pattern_name.as_str() {
         "strided" => &["stride", "width", "align"],
         "pointer_chase" => &["nodes", "fanout"],
@@ -1395,6 +1395,20 @@ pub fn traffic_spec_of(params: &Params) -> Result<TrafficSpec, String> {
         }
         Ok(v)
     };
+
+    let burst_len = bounded("burst_len", params.u64("burst_len", 0)?, 0, 4096)?;
+    let burst_gap = bounded("burst_gap", params.u64("burst_gap", 0)?, 0, 4096)?;
+    if burst_len == 0 && burst_gap != 0 {
+        return Err(format!(
+            "traffic \"burst_gap\" needs \"burst_len\" > 0 (got burst_gap={burst_gap} with bursting off)"
+        ));
+    }
+    if burst_len > 0 && burst_gap == 0 {
+        return Err(
+            "traffic \"burst_len\" > 0 needs \"burst_gap\" >= 1 (a zero-pause burst is just uniform traffic)"
+                .to_string(),
+        );
+    }
     let pattern = match pattern_name.as_str() {
         "strided" => {
             let stride = bounded("stride", params.u64("stride", 4)?, 4, 4096)?;
@@ -1454,7 +1468,15 @@ pub fn traffic_spec_of(params: &Params) -> Result<TrafficSpec, String> {
             }
         }
     };
-    Ok(TrafficSpec { pattern, ops: ops as u32, gap: gap as u32, seed, write_frac })
+    Ok(TrafficSpec {
+        pattern,
+        ops: ops as u32,
+        gap: gap as u32,
+        seed,
+        write_frac,
+        burst_len: burst_len as u32,
+        burst_gap: burst_gap as u32,
+    })
 }
 
 /// Execute one synthetic-traffic cell: synthesize the deterministic

@@ -213,6 +213,21 @@ impl WorkloadRegistry {
         );
         r.preset("small/mesh", "mesh", Params::new().set_str("scale", "small"), false);
         r.preset("small/phased", "phased", Params::new().set_str("scale", "small"), false);
+        // On/off synthetic traffic (`sim::traffic` burst knob): bursts
+        // of 32 back-to-back gathers, then a 64-cycle drain — the
+        // arrival shape that alternately saturates and empties the
+        // MSHR/DRAM queues instead of loading them uniformly.
+        r.preset(
+            "traffic/bursty",
+            "traffic",
+            Params::new()
+                .set_str("pattern", "zipf_gather")
+                .set("locality", Json::num(0.25))
+                .set_u64("ops", 2048)
+                .set_u64("burst_len", 32)
+                .set_u64("burst_gap", 64),
+            false,
+        );
         r
     }
 
@@ -873,6 +888,21 @@ mod tests {
         // Out-of-range values are hard errors.
         let bad = ScenarioSpec::family("traffic", Params::new().set_u64("ops", 0));
         assert!(reg.validate(&bad).unwrap_err().contains("ops"));
+    }
+
+    #[test]
+    fn bursty_preset_validates_and_half_specified_bursts_are_errors() {
+        let reg = WorkloadRegistry::builtin();
+        assert!(reg.contains("traffic/bursty"));
+        let preset = reg.presets.iter().find(|p| p.name == "traffic/bursty").unwrap();
+        let spec = crate::exp::traffic_spec_of(&preset.params).unwrap();
+        assert_eq!((spec.burst_len, spec.burst_gap), (32, 64));
+        // A pause with bursting off, or a burst with no pause, is a
+        // misspelled point — strict validation rejects both halves.
+        let bad = ScenarioSpec::family("traffic", Params::new().set_u64("burst_gap", 8));
+        assert!(reg.validate(&bad).unwrap_err().contains("burst_len"));
+        let bad = ScenarioSpec::family("traffic", Params::new().set_u64("burst_len", 8));
+        assert!(reg.validate(&bad).unwrap_err().contains("burst_gap"));
     }
 
     #[test]

@@ -279,9 +279,11 @@ impl<'e> Session<'e> {
                         } else {
                             // Hoisted so the store borrow ends before the
                             // table insert below (RefMut field borrows
-                            // cannot split through Deref).
+                            // cannot split through Deref). The store get
+                            // is `&mut`: it lazily loads just the shard
+                            // this key lives in.
                             let from_store =
-                                inner.store.as_ref().and_then(|st| st.get(key)).cloned();
+                                inner.store.as_mut().and_then(|st| st.get(key)).cloned();
                             match from_store {
                                 Some(m) => {
                                     inner.cells.insert(key, m);
@@ -641,6 +643,47 @@ impl<'e> Session<'e> {
     pub fn run(&self, spec: &ExperimentSpec) -> Report {
         self.try_run(spec).unwrap_or_else(|e| panic!("{e}"))
     }
+
+    /// The streaming collect path: submit, then fold every cell of the
+    /// grid — `(workload, system, repeat, &measurement)` in spec grid
+    /// order — into an accumulator *by reference*. Unlike
+    /// [`Session::collect`], nothing is materialized: no
+    /// `Vec<Measurement>`, no presentation-name clones per cell. Figures
+    /// that reduce over large grids (`runahead_region`'s 200-cell
+    /// heatmap, `cluster_latency`, `scaling`) use this so their memory
+    /// stays O(accumulator) as sweep sizes grow. Cells stream off
+    /// `map_with` into the session table during the submit; the fold
+    /// then walks the table in grid order, so the values (and their
+    /// order) are exactly what `collect` would have stamped.
+    pub fn try_run_fold<A>(
+        &self,
+        spec: &ExperimentSpec,
+        init: A,
+        mut f: impl FnMut(A, &str, &str, u32, &Measurement) -> A,
+    ) -> Result<A, String> {
+        let job = self.try_submit(spec)?;
+        let inner = self.inner.borrow();
+        let rec = inner.jobs.get(job.0).expect("job just submitted");
+        let mut acc = init;
+        for (w, s, rep, key) in &rec.grid {
+            let m = inner
+                .cells
+                .get(key)
+                .ok_or_else(|| format!("cell {} missing from the session table", key.hex()))?;
+            acc = f(acc, w, s, *rep, m);
+        }
+        Ok(acc)
+    }
+
+    /// [`Session::try_run_fold`], panicking on spec errors.
+    pub fn run_fold<A>(
+        &self,
+        spec: &ExperimentSpec,
+        init: A,
+        f: impl FnMut(A, &str, &str, u32, &Measurement) -> A,
+    ) -> A {
+        self.try_run_fold(spec, init, f).unwrap_or_else(|e| panic!("{e}"))
+    }
 }
 
 #[cfg(test)]
@@ -774,6 +817,26 @@ mod tests {
             assert!(bytes > 0);
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn run_fold_matches_collect_without_extra_executions() {
+        let eng = Engine::new(2);
+        let session = eng.session();
+        let spec = tiny_spec("fold", vec![SystemSpec::cache_spm(), SystemSpec::runahead()]);
+        let report = session.run(&spec);
+        let before = session.stats().executed;
+        let folded = session.run_fold(&spec, Vec::new(), |mut acc, w, s, rep, m| {
+            acc.push((w.to_string(), s.to_string(), rep, m.cycles));
+            acc
+        });
+        assert_eq!(session.stats().executed, before, "fold is pure reuse after the first run");
+        let from_report: Vec<(String, String, u32, u64)> = report
+            .measurements
+            .iter()
+            .map(|m| (m.workload.clone(), m.system.clone(), m.repeat, m.cycles))
+            .collect();
+        assert_eq!(folded, from_report, "fold streams the same cells in the same grid order");
     }
 
     #[test]

@@ -1,32 +1,60 @@
 //! Persistent result store: the on-disk half of the session layer.
 //!
-//! An append-only JSON-lines file (default `target/cellstore.jsonl`)
-//! mapping [`CellKey`]s to canonicalized [`Measurement`]s, so re-running
-//! `repro all` / `figure` / `sweep` across process invocations skips
-//! every already-measured cell. One line per cell:
+//! Store v2 is a *sharded directory* (default `target/cellstore/`):
+//! [`NUM_SHARDS`] append-only JSON-lines files named `shard-XX.jsonl`,
+//! where `XX` is the low 4 bits of the [`CellKey`] in hex. Each line
+//! maps a key to a canonicalized [`Measurement`]:
 //!
 //! ```json
 //! {"key":"9f3a…16 hex…","measurement":{…},"repeat":0,
-//!  "scenario":{…identity…},"system":{…identity…},"v":1}
+//!  "scenario":{…identity…},"system":{…identity…},"v":7}
 //! ```
+//!
+//! The line schema is unchanged from the v1 single-file store — only the
+//! layout moved. Three properties make the layout scale:
+//!
+//! - **Lazy, streaming loads.** Opening a store reads nothing. A shard
+//!   is loaded the first time a lookup touches it, through a `BufRead`
+//!   line reader (constant memory — no whole-file `read_to_string`), so
+//!   a session is O(touched shards), not O(whole history).
+//! - **Advisory per-shard locks.** `append_batch` serializes same-shard
+//!   writers through a create-exclusive `shard-XX.lock` file carrying
+//!   the holder's PID; a dead holder is detected via `/proc` (with a
+//!   timeout fallback) and the lock taken over. Appends from concurrent
+//!   processes land whole (one write per shard per batch, fsync'd), and
+//!   merge-on-load + last-dup-wins makes the result well-defined.
+//! - **One-shot migration.** Opening a path that is (or sits beside) a
+//!   legacy single-file `cellstore.jsonl` renames it aside and splits
+//!   its valid lines byte-for-byte into shards, so warm replays keep
+//!   working across the layout change. Migration is resumable: a crash
+//!   leaves a `.migrating` file that the next open adopts.
 //!
 //! `v` is [`STORE_FORMAT_VERSION`]; the same value salts the key
 //! preimage, so bumping it on any measurement-semantics change
 //! (simulator timing, workload synthesis, family defaults, line schema)
 //! invalidates the whole store (every lookup misses) without any
-//! migration code.
-//! The `scenario`/`system` identity objects are for humans and tooling —
-//! loads trust only `key`. Corrupt or foreign-version lines are skipped
-//! (and counted), never fatal: a truncated tail from a killed process
-//! costs those cells, not the store. Later duplicates of a key win, so
-//! appending is always safe.
+//! migration code. The `scenario`/`system` identity objects are for
+//! humans and tooling — loads trust only `key`. Corrupt or
+//! foreign-version lines are skipped (and counted), never fatal: a
+//! truncated tail from a killed process costs those cells, not the
+//! store. Later duplicates of a key win, so appending is always safe.
 
 use super::cell::{CellKey, STORE_FORMAT_VERSION};
 use super::json::Json;
 use super::Measurement;
 use std::collections::HashMap;
-use std::io::Write as _;
+use std::io::{BufRead as _, Write as _};
 use std::path::{Path, PathBuf};
+
+/// Shard fan-out. Cell keys are FNV-1a hashes, so the low bits spread
+/// uniformly; 16 shards keep every shard file a 16th of the history
+/// while staying enumerable by eye in `ls`.
+pub const NUM_SHARDS: usize = 16;
+
+/// How long a live lock holder may block a writer before the lock is
+/// presumed stuck and broken (advisory locks must never deadlock).
+const LOCK_TIMEOUT_MS: u64 = 10_000;
+const LOCK_RETRY_MS: u64 = 2;
 
 /// One entry queued for [`ResultStore::append_batch`].
 pub struct StoreEntry {
@@ -37,143 +65,464 @@ pub struct StoreEntry {
     pub measurement: Measurement,
 }
 
-/// Loaded view of the cell store plus its backing path.
+/// Lazily loaded view of the sharded cell store plus its root path.
 pub struct ResultStore {
-    path: PathBuf,
-    cells: HashMap<CellKey, Measurement>,
+    root: PathBuf,
+    /// `None` = shard not loaded yet; loaded on first touch.
+    shards: Vec<Option<HashMap<CellKey, Measurement>>>,
     skipped: usize,
+}
+
+fn shard_of(key: CellKey) -> usize {
+    (key.0 & (NUM_SHARDS as u64 - 1)) as usize
+}
+
+fn shard_file(root: &Path, shard: usize) -> PathBuf {
+    root.join(format!("shard-{shard:02x}.jsonl"))
+}
+
+fn lock_file(root: &Path, shard: usize) -> PathBuf {
+    root.join(format!("shard-{shard:02x}.lock"))
+}
+
+/// Sibling path with a suffix appended to the full file name (unlike
+/// `with_extension`, never replaces an existing extension).
+fn sibling(root: &Path, suffix: &str) -> PathBuf {
+    let mut s = root.as_os_str().to_os_string();
+    s.push(suffix);
+    PathBuf::from(s)
+}
+
+/// In-progress-migration marker: a legacy single file is renamed here
+/// before being split into shards, so a crash mid-split is resumed (not
+/// lost) by the next open.
+fn migrating_file(root: &Path) -> PathBuf {
+    sibling(root, ".migrating")
+}
+
+/// Legacy single-file candidates for a store root: the root itself (a
+/// `--store /tmp/cells.jsonl` pointing straight at a v1 file) and, for
+/// extension-less roots like the default `target/cellstore`, the
+/// conventional v1 sibling `target/cellstore.jsonl`.
+fn legacy_candidates(root: &Path) -> Vec<PathBuf> {
+    let mut v = vec![root.to_path_buf()];
+    if root.extension().is_none() {
+        v.push(sibling(root, ".jsonl"));
+    }
+    v
 }
 
 impl ResultStore {
     /// The conventional location (under cargo's target dir, so `git
     /// status` stays clean and `cargo clean` resets the cache).
     pub fn default_path() -> PathBuf {
-        PathBuf::from("target/cellstore.jsonl")
+        PathBuf::from("target/cellstore")
     }
 
-    /// Open (and load) a store. A missing file is an empty store — it is
-    /// created on first append.
+    /// Open a store rooted at `path`. Nothing is read yet — shards load
+    /// lazily on first lookup — except a one-shot migration when `path`
+    /// is (or sits beside) a legacy single-file store.
     pub fn open(path: impl Into<PathBuf>) -> std::io::Result<ResultStore> {
-        let path = path.into();
-        let mut store = ResultStore { path, cells: HashMap::new(), skipped: 0 };
-        let text = match std::fs::read_to_string(&store.path) {
-            Ok(t) => t,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(store),
-            Err(e) => return Err(e),
-        };
-        let expected = schema_keys();
-        for line in text.lines() {
-            if line.trim().is_empty() {
-                continue;
-            }
-            match parse_line(line, &expected) {
-                Some((key, m)) => {
-                    store.cells.insert(key, m);
-                }
-                None => store.skipped += 1,
-            }
-        }
+        let root = path.into();
+        let mut store =
+            ResultStore { root, shards: (0..NUM_SHARDS).map(|_| None).collect(), skipped: 0 };
+        store.migrate_legacy()?;
         Ok(store)
     }
 
-    pub fn path(&self) -> &Path {
-        &self.path
-    }
-
-    /// Distinct cells resident after load + appends.
-    pub fn len(&self) -> usize {
-        self.cells.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.cells.is_empty()
-    }
-
-    /// Lines ignored at load (corrupt, truncated, or foreign-version).
-    pub fn skipped_lines(&self) -> usize {
-        self.skipped
-    }
-
-    pub fn get(&self, key: CellKey) -> Option<&Measurement> {
-        self.cells.get(&key)
-    }
-
-    /// Append a batch of freshly computed cells: one file open, one line
-    /// per cell, then the in-memory view is updated. Measurements are
-    /// expected in canonical cell form (presentation fields cleared by
-    /// the session).
-    pub fn append_batch(&mut self, entries: Vec<StoreEntry>) -> std::io::Result<()> {
-        if entries.is_empty() {
-            return Ok(());
+    /// Adopt any legacy single-file store reachable from this root:
+    /// rename it to the `.migrating` marker (atomic), split its valid
+    /// lines byte-for-byte into shard files, drop the marker. Invalid
+    /// lines (corrupt, truncated, foreign-version) are counted in
+    /// `skipped_lines` and reclaimed — migration doubles as a compact.
+    fn migrate_legacy(&mut self) -> std::io::Result<()> {
+        let marker = migrating_file(&self.root);
+        // A marker left by a crashed migration is adopted first; its
+        // content predates anything already sharded, and duplicated
+        // lines from a half-done split are resolved by last-dup-wins.
+        if marker.is_file() {
+            self.adopt_file(&marker)?;
+            std::fs::remove_file(&marker)?;
         }
-        if let Some(dir) = self.path.parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)?;
+        for cand in legacy_candidates(&self.root) {
+            if cand.is_file() {
+                std::fs::rename(&cand, &marker)?;
+                self.adopt_file(&marker)?;
+                std::fs::remove_file(&marker)?;
             }
-        }
-        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?;
-        let mut text = String::new();
-        for e in &entries {
-            text.push_str(&render_line(e));
-            text.push('\n');
-        }
-        f.write_all(text.as_bytes())?;
-        for e in entries {
-            self.cells.insert(e.key, e.measurement);
         }
         Ok(())
     }
 
-    /// Delete a store file. `Ok(true)` if a file was removed, `Ok(false)`
-    /// if there was nothing to remove.
-    pub fn clear(path: &Path) -> std::io::Result<bool> {
-        match std::fs::remove_file(path) {
-            Ok(()) => Ok(true),
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
-            Err(e) => Err(e),
+    /// Split one legacy JSONL file into the shard files, preserving the
+    /// raw bytes and relative order of every valid line.
+    fn adopt_file(&mut self, file: &Path) -> std::io::Result<()> {
+        let reader = std::io::BufReader::new(std::fs::File::open(file)?);
+        let expected = schema_keys();
+        let mut buckets: Vec<String> = (0..NUM_SHARDS).map(|_| String::new()).collect();
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_line(&line, &expected) {
+                Some((key, _)) => {
+                    let b = &mut buckets[shard_of(key)];
+                    b.push_str(&line);
+                    b.push('\n');
+                }
+                None => self.skipped += 1,
+            }
+        }
+        std::fs::create_dir_all(&self.root)?;
+        for (shard, text) in buckets.iter().enumerate() {
+            if text.is_empty() {
+                continue;
+            }
+            let _lock = ShardLock::acquire(&self.root, shard)?;
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(shard_file(&self.root, shard))?;
+            f.write_all(text.as_bytes())?;
+            f.sync_data()?;
+        }
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.root
+    }
+
+    /// Load one shard through a buffered line reader. Best-effort: an
+    /// unreadable shard (not merely absent) loads empty with a warning,
+    /// so a damaged cache degrades to re-simulation, never a crash.
+    fn ensure_loaded(&mut self, shard: usize) {
+        if self.shards[shard].is_some() {
+            return;
+        }
+        let mut cells = HashMap::new();
+        match std::fs::File::open(shard_file(&self.root, shard)) {
+            Ok(f) => {
+                let expected = schema_keys();
+                for line in std::io::BufReader::new(f).lines() {
+                    let Ok(line) = line else {
+                        self.skipped += 1;
+                        break;
+                    };
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    match parse_line(&line, &expected) {
+                        Some((key, m)) => {
+                            cells.insert(key, m);
+                        }
+                        None => self.skipped += 1,
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                eprintln!("(cellstore: shard {shard:02x} unreadable, treating as empty: {e})")
+            }
+        }
+        self.shards[shard] = Some(cells);
+    }
+
+    /// Force-load every shard (CLI stats, benches). Sessions never need
+    /// this — lookups pull in exactly the shards their keys touch.
+    pub fn load_all(&mut self) {
+        for shard in 0..NUM_SHARDS {
+            self.ensure_loaded(shard);
         }
     }
 
-    /// Rewrite the store keeping exactly the lines a load would let win:
-    /// the *last* occurrence of each key, in original file order. Earlier
-    /// duplicates (append-only updates) and lines a load skips anyway
-    /// (corrupt, truncated, foreign-version) are dropped. Raw line text
-    /// is preserved byte-for-byte — compaction never re-renders a
-    /// measurement. The rewrite goes through a sibling temp file and a
-    /// rename, so a crash mid-compact leaves either the old or the new
-    /// file, never a half-written one.
-    ///
-    /// Returns `(reclaimed_lines, reclaimed_bytes)`; a missing file is
-    /// an empty store, `(0, 0)`.
-    pub fn compact(path: &Path) -> std::io::Result<(u64, u64)> {
-        let text = match std::fs::read_to_string(path) {
-            Ok(t) => t,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((0, 0)),
-            Err(e) => return Err(e),
-        };
-        let expected = schema_keys();
-        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
-        let mut last: HashMap<CellKey, usize> = HashMap::new();
-        for (i, line) in lines.iter().enumerate() {
-            if let Some((key, _)) = parse_line(line, &expected) {
-                last.insert(key, i);
-            }
-        }
-        let keep: std::collections::HashSet<usize> = last.values().copied().collect();
-        let mut out = String::with_capacity(text.len());
-        for (i, line) in lines.iter().enumerate() {
-            if keep.contains(&i) {
-                out.push_str(line);
-                out.push('\n');
-            }
-        }
-        let tmp = path.with_extension("jsonl.compact-tmp");
-        std::fs::write(&tmp, &out)?;
-        std::fs::rename(&tmp, path)?;
-        let reclaimed_lines = (lines.len() - keep.len()) as u64;
-        let reclaimed_bytes = (text.len() as u64).saturating_sub(out.len() as u64);
-        Ok((reclaimed_lines, reclaimed_bytes))
+    /// Shards resident in memory (loaded lazily or via appends).
+    pub fn loaded_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.is_some()).count()
     }
+
+    /// Distinct cells resident after lazy loads + appends. Call
+    /// [`ResultStore::load_all`] first for the on-disk total.
+    pub fn len(&self) -> usize {
+        self.shards.iter().flatten().map(|m| m.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lines ignored so far (corrupt, truncated, or foreign-version) —
+    /// grows as shards load.
+    pub fn skipped_lines(&self) -> usize {
+        self.skipped
+    }
+
+    /// Look up a cell, loading its shard on first touch.
+    pub fn get(&mut self, key: CellKey) -> Option<&Measurement> {
+        let shard = shard_of(key);
+        self.ensure_loaded(shard);
+        self.shards[shard].as_ref().and_then(|m| m.get(&key))
+    }
+
+    /// Append a batch of freshly computed cells: entries are grouped by
+    /// shard, each shard written under its advisory lock in one
+    /// `write_all` and fsync'd (a killed process loses at most the
+    /// in-flight batch, never a previously synced one), then the
+    /// in-memory view is updated. Measurements are expected in canonical
+    /// cell form (presentation fields cleared by the session).
+    pub fn append_batch(&mut self, entries: Vec<StoreEntry>) -> std::io::Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        std::fs::create_dir_all(&self.root)?;
+        let mut texts: Vec<String> = (0..NUM_SHARDS).map(|_| String::new()).collect();
+        for e in &entries {
+            let t = &mut texts[shard_of(e.key)];
+            t.push_str(&render_line(e));
+            t.push('\n');
+        }
+        for (shard, text) in texts.iter().enumerate() {
+            if text.is_empty() {
+                continue;
+            }
+            let _lock = ShardLock::acquire(&self.root, shard)?;
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(shard_file(&self.root, shard))?;
+            f.write_all(text.as_bytes())?;
+            f.sync_data()?;
+        }
+        for e in entries {
+            let shard = shard_of(e.key);
+            self.ensure_loaded(shard);
+            self.shards[shard].as_mut().expect("shard just loaded").insert(e.key, e.measurement);
+        }
+        Ok(())
+    }
+
+    /// Delete a store — the shard directory (shard files, stray locks,
+    /// the dir itself if it empties) and any legacy single file or
+    /// migration marker beside it. `Ok(true)` if anything was removed.
+    pub fn clear(path: &Path) -> std::io::Result<bool> {
+        let mut removed = false;
+        for cand in legacy_candidates(path) {
+            if cand.is_file() {
+                std::fs::remove_file(&cand)?;
+                removed = true;
+            }
+        }
+        let marker = migrating_file(path);
+        if marker.is_file() {
+            std::fs::remove_file(&marker)?;
+            removed = true;
+        }
+        if path.is_dir() {
+            for ent in std::fs::read_dir(path)?.flatten() {
+                let name = ent.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with("shard-") {
+                    std::fs::remove_file(ent.path())?;
+                    if name.ends_with(".jsonl") {
+                        removed = true;
+                    }
+                }
+            }
+            let _ = std::fs::remove_dir(path); // best-effort: may be non-empty
+        }
+        Ok(removed)
+    }
+
+    /// On-disk footprint without loading anything: `(shard_files,
+    /// total_bytes)`. A not-yet-migrated legacy file counts as one.
+    pub fn disk_stats(path: &Path) -> (usize, u64) {
+        if path.is_file() {
+            return (1, std::fs::metadata(path).map(|m| m.len()).unwrap_or(0));
+        }
+        let mut files = 0usize;
+        let mut bytes = 0u64;
+        for shard in 0..NUM_SHARDS {
+            if let Ok(md) = std::fs::metadata(shard_file(path, shard)) {
+                files += 1;
+                bytes += md.len();
+            }
+        }
+        (files, bytes)
+    }
+
+    /// Compact every shard (or a legacy single file) in place, keeping
+    /// exactly the lines a load would let win: the *last* occurrence of
+    /// each key, in original file order. Earlier duplicates (append-only
+    /// updates) and lines a load skips anyway (corrupt, truncated,
+    /// foreign-version) are dropped. Raw line text is preserved
+    /// byte-for-byte — compaction never re-renders a measurement. Each
+    /// rewrite goes through a sibling temp file and a rename under the
+    /// shard's lock, so a crash mid-compact leaves either the old or the
+    /// new file, never a half-written one.
+    ///
+    /// Returns `(reclaimed_lines, reclaimed_bytes)` summed over shards;
+    /// a missing store is an empty compact, `(0, 0)`.
+    pub fn compact(path: &Path) -> std::io::Result<(u64, u64)> {
+        if path.is_file() {
+            return compact_file(path);
+        }
+        if !path.is_dir() {
+            return Ok((0, 0));
+        }
+        let mut lines = 0u64;
+        let mut bytes = 0u64;
+        for shard in 0..NUM_SHARDS {
+            let file = shard_file(path, shard);
+            if !file.is_file() {
+                continue;
+            }
+            let _lock = ShardLock::acquire(path, shard)?;
+            let (l, b) = compact_file(&file)?;
+            lines += l;
+            bytes += b;
+        }
+        Ok((lines, bytes))
+    }
+}
+
+/// Compact one JSONL file (a shard, or a legacy single-file store).
+fn compact_file(path: &Path) -> std::io::Result<(u64, u64)> {
+    let f = match std::fs::File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((0, 0)),
+        Err(e) => return Err(e),
+    };
+    let in_bytes = f.metadata()?.len();
+    let mut lines: Vec<String> = Vec::new();
+    for line in std::io::BufReader::new(f).lines() {
+        let line = line?;
+        if !line.trim().is_empty() {
+            lines.push(line);
+        }
+    }
+    let expected = schema_keys();
+    let mut last: HashMap<CellKey, usize> = HashMap::new();
+    for (i, line) in lines.iter().enumerate() {
+        if let Some((key, _)) = parse_line(line, &expected) {
+            last.insert(key, i);
+        }
+    }
+    let keep: std::collections::HashSet<usize> = last.values().copied().collect();
+    let mut out = String::new();
+    for (i, line) in lines.iter().enumerate() {
+        if keep.contains(&i) {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    let tmp = sibling(path, ".compact-tmp");
+    std::fs::write(&tmp, &out)?;
+    std::fs::rename(&tmp, path)?;
+    let reclaimed_lines = (lines.len() - keep.len()) as u64;
+    let reclaimed_bytes = in_bytes.saturating_sub(out.len() as u64);
+    Ok((reclaimed_lines, reclaimed_bytes))
+}
+
+/// RAII advisory lock on one shard: a create-exclusive `.lock` file
+/// holding the owner's PID, removed on drop. Contention spins (appends
+/// are milliseconds); a holder that died is detected by PID liveness
+/// and taken over, and any holder older than [`LOCK_TIMEOUT_MS`] is
+/// presumed stuck and broken — the lock is advisory, so breaking it can
+/// interleave two writers at worst, which last-dup-wins absorbs.
+struct ShardLock {
+    path: PathBuf,
+}
+
+impl ShardLock {
+    fn acquire(root: &Path, shard: usize) -> std::io::Result<ShardLock> {
+        let path = lock_file(root, shard);
+        let mut waited_ms = 0u64;
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = write!(f, "{}", std::process::id());
+                    return Ok(ShardLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if holder_is_stale(&path) || waited_ms >= LOCK_TIMEOUT_MS {
+                        // Best-effort break; the create_new above
+                        // re-arbitrates if another waiter raced us here.
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(LOCK_RETRY_MS));
+                    waited_ms += LOCK_RETRY_MS;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    // Root vanished under us (concurrent `cache clear`).
+                    std::fs::create_dir_all(root)?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl Drop for ShardLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// A lock file whose recorded PID is provably dead. An empty or
+/// unparseable file (the holder sits between create and PID write, or
+/// the platform has no `/proc`) is *not* stale — the timeout handles it.
+fn holder_is_stale(lock: &Path) -> bool {
+    let Ok(text) = std::fs::read_to_string(lock) else { return false };
+    let Ok(pid) = text.trim().parse::<u32>() else { return false };
+    if pid == std::process::id() {
+        return false;
+    }
+    #[cfg(target_os = "linux")]
+    {
+        !Path::new(&format!("/proc/{pid}")).exists()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        false
+    }
+}
+
+/// Deterministic synthetic cells for store-scale benchmarking and CI
+/// seeding (`repro cache seed`). Keys are splitmix64-spread so shards
+/// fill uniformly; the keys occupy the same 64-bit space as real FNV
+/// keys but never collide with a computed identity in practice.
+pub fn synthetic_entries(n: u64) -> Vec<StoreEntry> {
+    let zero = Measurement::from_json(&Json::obj(vec![
+        ("workload", Json::str("")),
+        ("system", Json::str("")),
+    ]))
+    .expect("a minimal measurement object parses");
+    (0..n)
+        .map(|i| {
+            let mut m = zero.clone();
+            m.cycles = i;
+            m.output_ok = true;
+            StoreEntry {
+                key: CellKey(splitmix64(i)),
+                scenario: Json::obj(vec![
+                    ("family", Json::str("synthetic")),
+                    ("i", Json::u64(i)),
+                ]),
+                system: Json::obj(vec![("synthetic", Json::Bool(true))]),
+                repeat: 0,
+                measurement: m,
+            }
+        })
+        .collect()
+}
+
+fn splitmix64(i: u64) -> u64 {
+    let mut z = i.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
 }
 
 fn render_line(e: &StoreEntry) -> String {
@@ -233,7 +582,7 @@ mod tests {
     fn temp_path(tag: &str) -> PathBuf {
         static N: AtomicU32 = AtomicU32::new(0);
         std::env::temp_dir().join(format!(
-            "cgra-cellstore-{tag}-{}-{}.jsonl",
+            "cgra-cellstore-{tag}-{}-{}",
             std::process::id(),
             N.fetch_add(1, Ordering::Relaxed)
         ))
@@ -293,11 +642,11 @@ mod tests {
         s.append_batch(vec![entry(1, 100), entry(2, 200)]).unwrap();
         s.append_batch(vec![entry(1, 111)]).unwrap(); // append-only update
         drop(s);
-        let back = ResultStore::open(&path).unwrap();
-        assert_eq!(back.len(), 2);
-        assert_eq!(back.skipped_lines(), 0);
+        let mut back = ResultStore::open(&path).unwrap();
         assert_eq!(back.get(CellKey(1)).unwrap().cycles, 111);
         assert_eq!(back.get(CellKey(2)).unwrap().cycles, 200);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.skipped_lines(), 0);
         assert_eq!(back.get(CellKey(1)).unwrap(), &{
             let mut m = tiny_measurement();
             m.cycles = 111;
@@ -308,16 +657,35 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_foreign_and_drifted_lines_are_skipped_not_fatal() {
-        let path = temp_path("corrupt");
+    fn loads_are_lazy_per_shard() {
+        let path = temp_path("lazy");
         let mut s = ResultStore::open(&path).unwrap();
-        s.append_batch(vec![entry(7, 700)]).unwrap();
-        let good_line = std::fs::read_to_string(&path).unwrap();
-        // Simulate a truncated tail, a future-format line, and a
-        // same-version line whose measurement schema drifted (renamed
-        // field): the lenient Measurement::from_json would zero-default
-        // it, so the strict schema check must skip it instead.
+        // Keys 0x10 and 0x21: shards 0 and 1.
+        s.append_batch(vec![entry(0x10, 1), entry(0x21, 2)]).unwrap();
+        drop(s);
+        let mut back = ResultStore::open(&path).unwrap();
+        assert_eq!(back.loaded_shards(), 0, "open must read nothing");
+        assert!(back.get(CellKey(0x10)).is_some());
+        assert_eq!(back.loaded_shards(), 1, "a lookup loads only its own shard");
+        assert_eq!(back.len(), 1, "len counts resident cells only");
+        back.load_all();
+        assert_eq!(back.loaded_shards(), NUM_SHARDS);
+        assert_eq!(back.len(), 2);
+        let (files, bytes) = ResultStore::disk_stats(&path);
+        assert_eq!(files, 2);
+        assert!(bytes > 0);
+        ResultStore::clear(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_foreign_and_drifted_lines_are_skipped_not_fatal() {
+        // The bad lines land in a legacy single file, so this doubles as
+        // the migration-skips-them test: the one good line is adopted
+        // into its shard, the three bad ones are counted and reclaimed.
+        let path = temp_path("corrupt");
+        let good_line = render_line(&entry(7, 700));
         let mut text = good_line.clone();
+        text.push('\n');
         text.push_str("{\"key\":\"00000000000000\n");
         text.push_str(&format!(
             "{{\"key\":\"{}\",\"measurement\":{{}},\"v\":{}}}\n",
@@ -329,12 +697,141 @@ mod tests {
                 .replace(&CellKey(7).hex(), &CellKey(9).hex())
                 .replace("\"cycles\":", "\"cyclez\":"),
         );
+        text.push('\n');
         std::fs::write(&path, text).unwrap();
-        let back = ResultStore::open(&path).unwrap();
-        assert_eq!(back.len(), 1);
+        let mut back = ResultStore::open(&path).unwrap();
         assert_eq!(back.skipped_lines(), 3);
         assert!(back.get(CellKey(7)).is_some());
         assert!(back.get(CellKey(9)).is_none(), "drifted schema must not be a cache hit");
+        assert_eq!(back.len(), 1);
+        // Migration consumed the legacy file; a second open is clean.
+        let mut again = ResultStore::open(&path).unwrap();
+        assert!(path.is_dir(), "legacy file became a shard dir");
+        assert_eq!(again.skipped_lines(), 0);
+        assert!(again.get(CellKey(7)).is_some());
+        ResultStore::clear(&path).unwrap();
+    }
+
+    #[test]
+    fn migration_adopts_legacy_single_file_and_conventional_sibling() {
+        // Build a sharded store, flatten it back into one legacy file,
+        // and reopen: every cell must survive the split byte-for-byte.
+        let path = temp_path("migrate");
+        let keys: Vec<u64> = (0..40).map(|i| i * 0x1111 + 5).collect();
+        let mut s = ResultStore::open(&path).unwrap();
+        s.append_batch(keys.iter().map(|&k| entry(k, k)).collect()).unwrap();
+        drop(s);
+        let mut flat = String::new();
+        for shard in 0..NUM_SHARDS {
+            if let Ok(t) = std::fs::read_to_string(shard_file(&path, shard)) {
+                flat.push_str(&t);
+            }
+        }
+        ResultStore::clear(&path).unwrap();
+        std::fs::write(&path, &flat).unwrap();
+        let mut back = ResultStore::open(&path).unwrap();
+        assert_eq!(back.skipped_lines(), 0);
+        for &k in &keys {
+            assert_eq!(back.get(CellKey(k)).unwrap().cycles, k);
+        }
+        back.load_all();
+        assert_eq!(back.len(), keys.len());
+        assert!(!migrating_file(&path).exists(), "marker consumed");
+
+        // The conventional sibling (`<root>.jsonl` beside an
+        // extension-less root) is adopted the same way.
+        let root2 = temp_path("migrate-sib");
+        std::fs::write(sibling(&root2, ".jsonl"), &flat).unwrap();
+        let mut sib = ResultStore::open(&root2).unwrap();
+        assert_eq!(sib.get(CellKey(keys[0])).unwrap().cycles, keys[0]);
+        assert!(!sibling(&root2, ".jsonl").exists(), "legacy sibling consumed");
+        ResultStore::clear(&path).unwrap();
+        ResultStore::clear(&root2).unwrap();
+    }
+
+    #[test]
+    fn killed_append_loses_only_the_torn_tail_line() {
+        // Satellite: fsync'd batches + a mid-line truncation (what a
+        // kill looks like on disk) cost exactly the torn line.
+        let path = temp_path("killtail");
+        let mut s = ResultStore::open(&path).unwrap();
+        // Low nibble 0 on every key: all three lines share shard 0.
+        s.append_batch(vec![entry(0x10, 1), entry(0x20, 2), entry(0x30, 3)]).unwrap();
+        drop(s);
+        let file = shard_file(&path, 0);
+        let len = std::fs::metadata(&file).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&file).unwrap();
+        f.set_len(len - 5).unwrap(); // torn mid-line: no trailing newline, bytes missing
+        drop(f);
+        let mut back = ResultStore::open(&path).unwrap();
+        assert_eq!(back.get(CellKey(0x10)).unwrap().cycles, 1);
+        assert_eq!(back.get(CellKey(0x20)).unwrap().cycles, 2);
+        assert!(back.get(CellKey(0x30)).is_none(), "torn line is lost, not resurrected");
+        assert_eq!(back.skipped_lines(), 1);
+        assert_eq!(back.len(), 2);
+        ResultStore::clear(&path).unwrap();
+    }
+
+    #[test]
+    fn concurrent_appends_merge_with_last_dup_wins() {
+        // Two independent handles on one store dir (two "processes"):
+        // interleaved appends to the same shard all land, and the later
+        // duplicate wins on a fresh load.
+        let path = temp_path("concurrent");
+        let mut s1 = ResultStore::open(&path).unwrap();
+        let mut s2 = ResultStore::open(&path).unwrap();
+        s1.append_batch(vec![entry(0x11, 100), entry(0x21, 200)]).unwrap();
+        s2.append_batch(vec![entry(0x11, 999), entry(0x31, 300)]).unwrap();
+        s1.append_batch(vec![entry(0x41, 400)]).unwrap();
+        drop(s1);
+        drop(s2);
+        let mut back = ResultStore::open(&path).unwrap();
+        assert_eq!(back.get(CellKey(0x11)).unwrap().cycles, 999, "later writer wins");
+        assert_eq!(back.get(CellKey(0x21)).unwrap().cycles, 200);
+        assert_eq!(back.get(CellKey(0x31)).unwrap().cycles, 300);
+        assert_eq!(back.get(CellKey(0x41)).unwrap().cycles, 400);
+        assert_eq!(back.len(), 4);
+        ResultStore::clear(&path).unwrap();
+    }
+
+    #[test]
+    fn lock_contention_resolves_without_deadlock() {
+        // Two threads hammer the SAME shard (every key has low nibble
+        // 0) through separate store handles; the advisory lock
+        // serializes writers and every line survives.
+        let path = temp_path("contend");
+        let mk = |t: u64| {
+            let path = path.clone();
+            std::thread::spawn(move || {
+                let mut s = ResultStore::open(&path).unwrap();
+                for i in 0..40u64 {
+                    let key = (t * 1000 + i) << 4;
+                    s.append_batch(vec![entry(key, i)]).unwrap();
+                }
+            })
+        };
+        let (a, b) = (mk(1), mk(2));
+        a.join().unwrap();
+        b.join().unwrap();
+        let mut back = ResultStore::open(&path).unwrap();
+        back.load_all();
+        assert_eq!(back.len(), 80);
+        assert_eq!(back.skipped_lines(), 0, "no torn lines under contention");
+        assert!(!lock_file(&path, 0).exists(), "locks released");
+        ResultStore::clear(&path).unwrap();
+    }
+
+    #[test]
+    fn stale_lock_from_a_dead_process_is_taken_over() {
+        let path = temp_path("stalelock");
+        std::fs::create_dir_all(&path).unwrap();
+        // PIDs are monotonically allocated and this one is absurd; on
+        // non-Linux the 10s timeout (not exercised here) handles it.
+        std::fs::write(lock_file(&path, 0), "4294967294").unwrap();
+        let mut s = ResultStore::open(&path).unwrap();
+        s.append_batch(vec![entry(0x10, 1)]).unwrap();
+        assert!(!lock_file(&path, 0).exists(), "stale lock broken and released");
+        assert_eq!(s.get(CellKey(0x10)).unwrap().cycles, 1);
         ResultStore::clear(&path).unwrap();
     }
 
@@ -342,30 +839,48 @@ mod tests {
     fn compact_keeps_last_duplicates_and_drops_dead_lines() {
         let path = temp_path("compact");
         let mut s = ResultStore::open(&path).unwrap();
-        s.append_batch(vec![entry(1, 100), entry(2, 200)]).unwrap();
+        // Keys 1 and 0x21 share... no: 1 -> shard 1, 0x21 -> shard 1.
+        s.append_batch(vec![entry(1, 100), entry(0x21, 200)]).unwrap();
         s.append_batch(vec![entry(1, 111)]).unwrap();
         drop(s);
         // A corrupt tail the loader skips; compaction reclaims it too.
+        let file = shard_file(&path, 1);
         {
-            use std::io::Write as _;
-            let mut f =
-                std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            let mut f = std::fs::OpenOptions::new().append(true).open(&file).unwrap();
             writeln!(f, "{{\"key\":\"truncat").unwrap();
         }
-        let before = std::fs::metadata(&path).unwrap().len();
+        let before = std::fs::metadata(&file).unwrap().len();
         let (lines, bytes) = ResultStore::compact(&path).unwrap();
         assert_eq!(lines, 2, "one stale duplicate + one corrupt line");
         assert!(bytes > 0);
-        assert_eq!(std::fs::metadata(&path).unwrap().len(), before - bytes);
-        let back = ResultStore::open(&path).unwrap();
+        assert_eq!(std::fs::metadata(&file).unwrap().len(), before - bytes);
+        let mut back = ResultStore::open(&path).unwrap();
+        assert_eq!(back.get(CellKey(1)).unwrap().cycles, 111, "last duplicate won");
+        assert_eq!(back.get(CellKey(0x21)).unwrap().cycles, 200);
         assert_eq!(back.len(), 2);
         assert_eq!(back.skipped_lines(), 0);
-        assert_eq!(back.get(CellKey(1)).unwrap().cycles, 111, "last duplicate won");
-        assert_eq!(back.get(CellKey(2)).unwrap().cycles, 200);
         // Idempotent: a second compact reclaims nothing.
         assert_eq!(ResultStore::compact(&path).unwrap(), (0, 0));
         // A missing store is an empty compact, not an error.
         ResultStore::clear(&path).unwrap();
         assert_eq!(ResultStore::compact(&path).unwrap(), (0, 0));
+    }
+
+    #[test]
+    fn synthetic_entries_spread_over_every_shard_and_reload() {
+        let path = temp_path("synth");
+        let mut s = ResultStore::open(&path).unwrap();
+        let entries = synthetic_entries(256);
+        let keys: Vec<CellKey> = entries.iter().map(|e| e.key).collect();
+        s.append_batch(entries).unwrap();
+        drop(s);
+        let (files, _) = ResultStore::disk_stats(&path);
+        assert_eq!(files, NUM_SHARDS, "256 splitmix keys must touch all 16 shards");
+        let mut back = ResultStore::open(&path).unwrap();
+        back.load_all();
+        assert_eq!(back.len(), 256);
+        assert_eq!(back.skipped_lines(), 0);
+        assert_eq!(back.get(keys[3]).unwrap().cycles, 3);
+        ResultStore::clear(&path).unwrap();
     }
 }

@@ -3,7 +3,12 @@
 //!
 //! One binary file per captured run (default `target/tracestore/`),
 //! named by the [`CellKey`] hex of the *producing* cell — the (scenario,
-//! source system, repeat 0) measurement that recorded the stream. The
+//! source system, repeat 0) measurement that recorded the stream — and
+//! sharded exactly like the cell store: traces live in
+//! `shard-XX/<key>.cgtr` subdirectories keyed by the low 4 bits of the
+//! key, so directory listings stay a 16th of the history as capture
+//! campaigns scale. Files written by the pre-shard layout (flat in the
+//! store root) are still found on load; new saves always shard. The
 //! key's preimage is salted with [`STORE_FORMAT_VERSION`] exactly like
 //! cell-store lines, so bumping the version orphans every old trace
 //! (lookups miss, files linger until `repro cache clear`) without any
@@ -12,6 +17,7 @@
 //! foreign-schema file is a load miss, never fatal.
 
 use super::cell::CellKey;
+use super::store::NUM_SHARDS;
 use crate::sim::CapturedTrace;
 use std::path::{Path, PathBuf};
 
@@ -45,20 +51,29 @@ impl TraceStore {
         &self.dir
     }
 
+    fn shard_dir(&self, key: CellKey) -> PathBuf {
+        self.dir.join(format!("shard-{:02x}", key.0 & (NUM_SHARDS as u64 - 1)))
+    }
+
     fn file_of(&self, key: CellKey) -> PathBuf {
+        self.shard_dir(key).join(format!("{}.cgtr", key.hex()))
+    }
+
+    /// Pre-shard layout: flat in the store root. Read-only fallback.
+    fn legacy_file_of(&self, key: CellKey) -> PathBuf {
         self.dir.join(format!("{}.cgtr", key.hex()))
     }
 
     /// Is a trace for this producing cell already on disk? (Existence
     /// only — decode happens at load.)
     pub fn contains(&self, key: CellKey) -> bool {
-        self.file_of(key).is_file()
+        self.file_of(key).is_file() || self.legacy_file_of(key).is_file()
     }
 
     /// Persist a capture under its producing cell's key, stamping the
     /// key into the header so a loaded trace knows its provenance.
     pub fn save(&self, key: CellKey, trace: &CapturedTrace) -> std::io::Result<()> {
-        std::fs::create_dir_all(&self.dir)?;
+        std::fs::create_dir_all(self.shard_dir(key))?;
         let mut stamped = trace.clone();
         stamped.header.producer = key.0;
         std::fs::write(self.file_of(key), stamped.encode())
@@ -74,49 +89,71 @@ impl TraceStore {
     /// Like [`TraceStore::load`] but surfaces decode errors, for callers
     /// that must distinguish "never captured" from "capture unreadable".
     pub fn load_strict(&self, key: CellKey) -> Result<Option<CapturedTrace>, String> {
-        let bytes = match std::fs::read(self.file_of(key)) {
-            Ok(b) => b,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
-            Err(e) => return Err(format!("trace {}: {e}", key.hex())),
-        };
+        let mut bytes = None;
+        for path in [self.file_of(key), self.legacy_file_of(key)] {
+            match std::fs::read(&path) {
+                Ok(b) => {
+                    bytes = Some(b);
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(format!("trace {}: {e}", key.hex())),
+            }
+        }
+        let Some(bytes) = bytes else { return Ok(None) };
         CapturedTrace::decode(&bytes)
             .map(Some)
             .map_err(|e| format!("trace {}: {e}", key.hex()))
     }
 
-    /// `(entries, total bytes)` across every `.cgtr` file in the store,
-    /// for `repro cache stats`.
+    /// `(entries, total bytes)` across every `.cgtr` file in the store —
+    /// shard subdirectories and any legacy flat files — for
+    /// `repro cache stats`.
     pub fn stats(&self) -> (usize, u64) {
-        let Ok(rd) = std::fs::read_dir(&self.dir) else { return (0, 0) };
         let mut n = 0usize;
         let mut bytes = 0u64;
-        for ent in rd.flatten() {
-            let p = ent.path();
-            if p.extension().and_then(|e| e.to_str()) == Some("cgtr") {
-                n += 1;
-                bytes += ent.metadata().map(|m| m.len()).unwrap_or(0);
+        let mut dirs = vec![self.dir.clone()];
+        for shard in 0..NUM_SHARDS {
+            dirs.push(self.dir.join(format!("shard-{shard:02x}")));
+        }
+        for d in dirs {
+            let Ok(rd) = std::fs::read_dir(&d) else { continue };
+            for ent in rd.flatten() {
+                let p = ent.path();
+                if p.extension().and_then(|e| e.to_str()) == Some("cgtr") {
+                    n += 1;
+                    bytes += ent.metadata().map(|m| m.len()).unwrap_or(0);
+                }
             }
         }
         (n, bytes)
     }
 
-    /// Remove every trace file (and the directory if it empties).
+    /// Remove every trace file — shard subdirectories and legacy flat
+    /// files alike — and the directories if they empty.
     /// `Ok(removed_count)`.
     pub fn clear(dir: &Path) -> std::io::Result<usize> {
-        let rd = match std::fs::read_dir(dir) {
-            Ok(rd) => rd,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
-            Err(e) => return Err(e),
-        };
         let mut n = 0usize;
-        for ent in rd {
-            let p = ent?.path();
-            if p.extension().and_then(|e| e.to_str()) == Some("cgtr") {
-                std::fs::remove_file(&p)?;
-                n += 1;
-            }
+        let mut dirs = Vec::new();
+        for shard in 0..NUM_SHARDS {
+            dirs.push(dir.join(format!("shard-{shard:02x}")));
         }
-        let _ = std::fs::remove_dir(dir); // best-effort: may be non-empty
+        dirs.push(dir.to_path_buf());
+        for d in &dirs {
+            let rd = match std::fs::read_dir(d) {
+                Ok(rd) => rd,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e),
+            };
+            for ent in rd {
+                let p = ent?.path();
+                if p.extension().and_then(|e| e.to_str()) == Some("cgtr") {
+                    std::fs::remove_file(&p)?;
+                    n += 1;
+                }
+            }
+            let _ = std::fs::remove_dir(d); // best-effort: may be non-empty
+        }
         Ok(n)
     }
 }
@@ -171,6 +208,10 @@ mod tests {
         assert!(store.load(key).is_none());
         store.save(key, &tiny_trace()).unwrap();
         assert!(store.contains(key));
+        assert!(
+            dir.join("shard-09").join(format!("{}.cgtr", key.hex())).is_file(),
+            "saves land in the key's shard subdir (low nibble 9)"
+        );
         let back = store.load(key).expect("trace present");
         assert_eq!(back.header.producer, key.0, "store stamps provenance");
         assert_eq!(back.events, tiny_trace().events);
@@ -179,6 +220,24 @@ mod tests {
         assert!(bytes > 0);
         assert_eq!(TraceStore::clear(&dir).unwrap(), 1);
         assert_eq!(TraceStore::clear(&dir).unwrap(), 0);
+    }
+
+    #[test]
+    fn legacy_flat_layout_is_still_found_and_cleared() {
+        let dir = temp_dir("legacy");
+        let store = TraceStore::open(&dir);
+        let key = CellKey(0xabcd_ef01_2345_6789);
+        let mut stamped = tiny_trace();
+        stamped.header.producer = key.0;
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(format!("{}.cgtr", key.hex())), stamped.encode()).unwrap();
+        assert!(store.contains(key));
+        assert!(store.load(key).is_some(), "flat pre-shard file is a hit");
+        let (n, bytes) = store.stats();
+        assert_eq!(n, 1);
+        assert!(bytes > 0);
+        assert_eq!(TraceStore::clear(&dir).unwrap(), 1);
+        assert!(store.load(key).is_none());
     }
 
     #[test]

@@ -44,7 +44,10 @@ USAGE:
   repro list                        list kernels, systems and figures
   repro run <kernel> [system]       run one kernel (default: all 5 systems)
   repro sweep <spec.json>           run a declarative (workloads x systems
-                                    x repeats) experiment; see DESIGN.md
+                                    x repeats) experiment; see DESIGN.md;
+                                    --jobs-from K/N serves only the Kth of
+                                    N workload slices (split one spec over
+                                    concurrent processes on one store)
   repro all [-j N] [--json]         regenerate every figure AND table from
                                     one session: each unique (scenario,
                                     system, repeat) cell simulates once;
@@ -52,20 +55,24 @@ USAGE:
   repro figure <id|all> [-j N]      regenerate a figure:
                                     {figures}
   repro table <1|2|3|all>           regenerate a table
-  repro cache stats                 cell count + size of the result store,
-                                    the trace store beside it, and the last
-                                    session's hit/miss ledger
-  repro cache compact               rewrite the result store keeping only
-                                    the winning line per cell (append-only
+  repro cache stats                 per-shard cell count + size of the
+                                    result store, the trace store beside
+                                    it, and the last session's ledger
+  repro cache compact               rewrite each shard keeping only the
+                                    winning line per cell (append-only
                                     updates leave stale duplicates behind)
   repro cache clear                 delete the result store and trace store
+  repro cache seed <n>              append n synthetic cells to the store
+                                    (store-scale benches and CI smoke)
   repro bench [-j N]                run the fixed kernel x system perf
                                     matrix and write BENCH_sim.json
                                     (iterations/sec; the perf trajectory;
                                     default -j 1 for stable wall times)
   repro fuzz [--seed N] [--iters N] property-fuzz the memory subsystem over
                                     random synthetic-traffic points (both
-                                    sim cores, invariant-checked); exits
+                                    sim cores, invariant-checked); with
+                                    --cluster, fuzz the cluster interleaver
+                                    over random job mixes instead; exits
                                     non-zero with a minimized repro spec
                                     on any violation (default: 256 iters)
   repro golden <artifact>           load + execute an AOT artifact via PJRT
@@ -74,7 +81,8 @@ USAGE:
 FLAGS:
   -j N          worker threads (default: all hardware threads; bench: 1)
   --json        structured JSON on stdout (run/sweep reports; all status)
-  --store PATH  result-store location (default: target/cellstore.jsonl)
+  --store PATH  result-store directory (default: target/cellstore; a legacy
+                single-file store at PATH is migrated in on first open)
   --no-cache    skip the persistent store (in-session dedup still applies)
 
 ENVIRONMENT:
@@ -139,7 +147,7 @@ fn main() {
         Some("all") => all(threads, &cache, json_out),
         Some("figure") => figure(args.get(1).map(String::as_str).unwrap_or("all"), threads, &cache),
         Some("table") => table(args.get(1).map(String::as_str).unwrap_or("all")),
-        Some("cache") => cache_cmd(args.get(1).map(String::as_str), &cache),
+        Some("cache") => cache_cmd(&args[1..], &cache),
         Some("bench") => bench(jobs.unwrap_or(1)),
         Some("fuzz") => fuzz(&args[1..]),
         Some("golden") => golden(args.get(1).map(String::as_str).unwrap_or("aggregate")),
@@ -174,7 +182,7 @@ fn take_value_flag(args: &mut Vec<String>, flag: &str) -> Result<Option<String>,
         return Ok(None);
     };
     let Some(val) = args.get(i + 1).cloned() else {
-        return Err(format!("{flag} needs a value (e.g. {flag} target/cellstore.jsonl)"));
+        return Err(format!("{flag} needs a value (e.g. {flag} target/cellstore)"));
     };
     args.drain(i..=i + 1);
     Ok(Some(val))
@@ -312,9 +320,31 @@ fn run(args: &[String], threads: usize, json_out: bool, cache: &CacheOpts) {
     write_stats_sidecar(cache, &session);
 }
 
+/// Parse a `--jobs-from K/N` slice selector (1-based slice K of N).
+fn parse_jobs_from(v: &str) -> Result<(usize, usize), String> {
+    let err = || format!("bad --jobs-from value {v:?} (expected K/N with 1 <= K <= N, e.g. 1/2)");
+    let (k, n) = v.split_once('/').ok_or_else(err)?;
+    let k: usize = k.parse().map_err(|_| err())?;
+    let n: usize = n.parse().map_err(|_| err())?;
+    if k == 0 || k > n {
+        return Err(err());
+    }
+    Ok((k, n))
+}
+
 fn sweep(args: &[String], threads: usize, json_out: bool, cache: &CacheOpts) {
+    let mut args: Vec<String> = args.to_vec();
+    let slice = match take_value_flag(&mut args, "--jobs-from")
+        .and_then(|v| v.as_deref().map(parse_jobs_from).transpose())
+    {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
     let Some(path) = args.first() else {
-        eprintln!("usage: repro sweep <spec.json> [--json]");
+        eprintln!("usage: repro sweep <spec.json> [--jobs-from K/N] [--json]");
         std::process::exit(2);
     };
     let text = match std::fs::read_to_string(path) {
@@ -330,6 +360,26 @@ fn sweep(args: &[String], threads: usize, json_out: bool, cache: &CacheOpts) {
             eprintln!("bad sweep spec {path}: {e}");
             std::process::exit(1);
         }
+    };
+    // Slice the workload axis (every Kth scenario of N, 1-based) so N
+    // processes pointed at one spec + one store cover it exactly once:
+    // disjoint slices mean disjoint cells, the per-shard locks serialize
+    // same-shard appends, and a final warm full run merges the halves.
+    let spec = match slice {
+        Some((k, n)) => {
+            let mut s = spec;
+            let total = s.workloads.len();
+            s.workloads = s
+                .workloads
+                .into_iter()
+                .enumerate()
+                .filter(|(i, _)| i % n == k - 1)
+                .map(|(_, w)| w)
+                .collect();
+            eprintln!("(--jobs-from {k}/{n}: serving {} of {total} workload(s))", s.workloads.len());
+            s
+        }
+        None => spec,
     };
     let eng = Engine::new(threads);
     let session = cache.session(&eng);
@@ -487,15 +537,24 @@ fn table(id: &str) {
 }
 
 /// `repro cache stats|clear` — inspect or reset the persistent store.
-fn cache_cmd(sub: Option<&str>, cache: &CacheOpts) {
-    match sub {
+fn cache_cmd(args: &[String], cache: &CacheOpts) {
+    match args.first().map(String::as_str) {
         Some("stats") => {
             let path = &cache.path;
+            // disk_stats walks the shard files without loading them;
+            // load_all then parses every shard for the dedup'd cell
+            // count (stats is the one command where that cost is the
+            // point of the exercise).
+            let (shard_files, bytes) = ResultStore::disk_stats(path);
             match ResultStore::open(path) {
-                Ok(store) => {
-                    let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+                Ok(mut store) => {
+                    store.load_all();
                     println!("store:        {}", path.display());
                     println!("cells:        {}", store.len());
+                    println!(
+                        "shards:       {shard_files} file(s) on disk, {} loaded",
+                        store.loaded_shards()
+                    );
                     println!("size:         {bytes} bytes");
                     if store.skipped_lines() > 0 {
                         println!("skipped:      {} corrupt/foreign line(s)", store.skipped_lines());
@@ -568,8 +627,35 @@ fn cache_cmd(sub: Option<&str>, cache: &CacheOpts) {
                 std::process::exit(1);
             }
         },
+        Some("seed") => {
+            let n: u64 = match args.get(1).map(|v| v.parse()) {
+                Some(Ok(n)) => n,
+                _ => {
+                    eprintln!("usage: repro cache seed <n> [--store PATH]");
+                    std::process::exit(2);
+                }
+            };
+            match ResultStore::open(&cache.path) {
+                Ok(mut store) => {
+                    if let Err(e) = store.append_batch(cgra_mem::exp::synthetic_entries(n)) {
+                        eprintln!("cannot seed {}: {e}", cache.path.display());
+                        std::process::exit(1);
+                    }
+                    let (files, bytes) = ResultStore::disk_stats(&cache.path);
+                    println!(
+                        "seeded {n} synthetic cell(s) into {} ({files} shard file(s), \
+                         {bytes} bytes)",
+                        cache.path.display()
+                    );
+                }
+                Err(e) => {
+                    eprintln!("cannot open {}: {e}", cache.path.display());
+                    std::process::exit(1);
+                }
+            }
+        }
         _ => {
-            eprintln!("usage: repro cache <stats|compact|clear> [--store PATH]");
+            eprintln!("usage: repro cache <stats|compact|clear|seed <n>> [--store PATH]");
             std::process::exit(2);
         }
     }
@@ -807,6 +893,71 @@ fn bench(threads: usize) {
             ("memory_bound", Json::Bool(false)),
         ]));
     }
+    // Store-scale rows: the sharded result store's three hot paths —
+    // locked batched append, cold open + full load, and warm lookups over
+    // a resident store — at 10k and 100k synthetic cells. iterations =
+    // cells touched, iters/sec = cells (lookups) per wall second.
+    // sim_cycles is pinned to the cell count so the rows are
+    // deterministic for the bench-comparison gate.
+    for &n in &[10_000u64, 100_000u64] {
+        use cgra_mem::exp::synthetic_entries;
+        let dir =
+            std::env::temp_dir().join(format!("cellstore-bench-{}-{n}", std::process::id()));
+        let _ = ResultStore::clear(&dir);
+        let sys_name = format!("{}k-cells", n / 1000);
+        let entries = synthetic_entries(n);
+        let keys: Vec<_> = entries.iter().map(|e| e.key).collect();
+
+        let mut store = ResultStore::open(&dir).expect("bench store opens");
+        let t0 = Instant::now();
+        store.append_batch(entries).expect("bench store appends");
+        let append_s = t0.elapsed().as_secs_f64().max(1e-9);
+        drop(store);
+
+        let t0 = Instant::now();
+        let mut cold = ResultStore::open(&dir).expect("bench store reopens");
+        cold.load_all();
+        let cold_s = t0.elapsed().as_secs_f64().max(1e-9);
+        assert_eq!(cold.len() as u64, n, "bench store round-trips every cell");
+
+        let t0 = Instant::now();
+        let mut hits = 0u64;
+        for k in &keys {
+            hits += u64::from(cold.get(*k).is_some());
+        }
+        let warm_s = t0.elapsed().as_secs_f64().max(1e-9);
+        assert_eq!(hits, n, "bench store serves every key");
+        let _ = ResultStore::clear(&dir);
+
+        for (kernel, secs) in [
+            ("store_append", append_s),
+            ("store_cold_load", cold_s),
+            ("store_warm_lookup", warm_s),
+        ] {
+            let per_sec = n as f64 / secs;
+            println!(
+                "{:<22} {:<14} {:>12} {:>10.2} {:>14.0} {:>12.2} {:>3}",
+                kernel,
+                sys_name,
+                n,
+                secs * 1e3,
+                per_sec,
+                per_sec / 1e6,
+                ""
+            );
+            out.push(Json::obj(vec![
+                ("kernel", Json::str(kernel)),
+                ("system", Json::str(&sys_name)),
+                ("iterations", Json::u64(n)),
+                ("sim_cycles", Json::u64(n)),
+                ("output_ok", Json::Bool(true)),
+                ("wall_s", Json::num(secs)),
+                ("iters_per_sec", Json::num(per_sec)),
+                ("sim_throughput", Json::num(per_sec)),
+                ("memory_bound", Json::Bool(false)),
+            ]));
+        }
+    }
     let doc = Json::obj(vec![
         ("bench", Json::str("sim")),
         ("unit", Json::str("kernel iterations per wall second")),
@@ -858,12 +1009,18 @@ fn fuzz(rest: &[String]) {
             std::process::exit(2);
         }
     };
+    let cluster = take_flag(&mut args, "--cluster");
     if let Some(extra) = args.first() {
         eprintln!("unknown fuzz argument {extra:?}");
         std::process::exit(2);
     }
-    println!("fuzzing {iters} traffic point(s) from seed {seed} (4 systems x 2 sim cores)");
-    let out = cgra_mem::exp::run_fuzz(seed, iters);
+    let out = if cluster {
+        println!("fuzzing {iters} cluster mix(es) from seed {seed} (2-array cluster x 2 sim cores)");
+        cgra_mem::exp::run_cluster_fuzz(seed, iters)
+    } else {
+        println!("fuzzing {iters} traffic point(s) from seed {seed} (4 systems x 2 sim cores)");
+        cgra_mem::exp::run_fuzz(seed, iters)
+    };
     match out.failure {
         None => println!(
             "fuzz: {} point(s) clean — every invariant held under both sim cores",

@@ -641,28 +641,38 @@ pub fn scaling_with(s: &Session, dims: &[u32]) -> String {
             .named(format!("mesh/{d}x{d}"))
         })
         .collect();
-    let report = s.run(&ExperimentSpec::new("scaling").workloads(scenarios).systems(systems));
-    let mut s = String::from(
+    let spec = ExperimentSpec::new("scaling").workloads(scenarios).systems(systems);
+    let mut out = String::from(
         "Scaling — cycles per nonzero vs. mesh size (unstructured SpMV, random order)\n",
     );
-    s.push_str(&format!("{:<14} {:>9}", "mesh", "x+y KB"));
+    out.push_str(&format!("{:<14} {:>9}", "mesh", "x+y KB"));
     for n in &sys_names {
-        s.push_str(&format!(" {:>10}", n));
+        out.push_str(&format!(" {:>10}", n));
     }
-    s.push('\n');
-    for (&d, w) in dims.iter().zip(report.workloads.iter()) {
-        // One authoritative nonzero count — the workload's own (the
-        // scenario above runs the same family defaults).
-        let nnz = MeshSpmv::new(d, MeshOrder::Random, 101).iterations() as f64;
-        let kb = (d as f64) * (d as f64) * 8.0 / 1024.0;
-        s.push_str(&format!("{:<14} {:>9.1}", w, kb));
-        for n in &sys_names {
-            let m = report.get(w, n).unwrap();
-            assert!(m.output_ok, "{w} on {n} diverged");
-            s.push_str(&format!(" {:>10.2}", m.cycles as f64 / nnz));
+    out.push('\n');
+    // Streaming reduction: fold cells in grid order (workloads-major,
+    // systems inner) instead of materializing the report — each cell
+    // appends its column, each last-system cell closes the row.
+    let mut idx = 0usize;
+    let mut nnz = 1.0f64;
+    let mut s = s.run_fold(&spec, out, |mut acc, w, n, _rep, m| {
+        let si = idx % sys_names.len();
+        if si == 0 {
+            let d = dims[idx / sys_names.len()];
+            // One authoritative nonzero count — the workload's own (the
+            // scenario above runs the same family defaults).
+            nnz = MeshSpmv::new(d, MeshOrder::Random, 101).iterations() as f64;
+            let kb = (d as f64) * (d as f64) * 8.0 / 1024.0;
+            acc.push_str(&format!("{:<14} {:>9.1}", w, kb));
         }
-        s.push('\n');
-    }
+        assert!(m.output_ok, "{w} on {n} diverged");
+        acc.push_str(&format!(" {:>10.2}", m.cycles as f64 / nnz));
+        if si == sys_names.len() - 1 {
+            acc.push('\n');
+        }
+        idx += 1;
+        acc
+    });
     s.push_str(
         "(SPM-only holds until x/y outgrow its window, then pays off-SPM latency per\n\
          gather; Cache+SPM/Runahead degrade with cache reach; Ideal is the floor)\n",
@@ -1026,8 +1036,7 @@ pub fn cluster_latency_with(
         .iter()
         .map(|&sk| ScenarioSpec::mix(jobs, sk, seed).named(format!("skew={sk}")))
         .collect();
-    let report =
-        s.run(&ExperimentSpec::new("cluster-latency").workloads(scenarios).systems(systems));
+    let spec = ExperimentSpec::new("cluster-latency").workloads(scenarios).systems(systems);
     let mut out = format!(
         "Cluster tail latency — job latency percentiles (cycles) vs arrays and skew\n\
          (serving mix: {jobs} jobs, seed {seed}, FIFO dispatch)\n"
@@ -1037,21 +1046,25 @@ pub fn cluster_latency_with(
         out.push_str(&format!(" {:>10}", p));
     }
     out.push_str(&format!(" {:>10}\n", "p99/p50"));
-    for w in &report.workloads {
-        for &n in arrays {
-            let m = report.get(w, &format!("{n}x-fifo")).unwrap();
-            assert!(m.output_ok, "{w} on {n} arrays diverged");
-            out.push_str(&format!(
-                "{:<10} {:<7} {:>10} {:>10} {:>10} {:>9.2}x\n",
-                w,
-                n,
-                m.cluster_p50_cycles,
-                m.cluster_p95_cycles,
-                m.cluster_p99_cycles,
-                m.cluster_p99_cycles as f64 / m.cluster_p50_cycles.max(1) as f64,
-            ));
-        }
-    }
+    // Streaming reduction: one output line per cell, folded in grid
+    // order (skew rows outer, array-count systems inner) — no report
+    // materialization between the session table and the text.
+    let mut idx = 0usize;
+    let mut out = s.run_fold(&spec, out, |mut acc, w, _sys, _rep, m| {
+        let n = arrays[idx % arrays.len()];
+        idx += 1;
+        assert!(m.output_ok, "{w} on {n} arrays diverged");
+        acc.push_str(&format!(
+            "{:<10} {:<7} {:>10} {:>10} {:>10} {:>9.2}x\n",
+            w,
+            n,
+            m.cluster_p50_cycles,
+            m.cluster_p95_cycles,
+            m.cluster_p99_cycles,
+            m.cluster_p99_cycles as f64 / m.cluster_p50_cycles.max(1) as f64,
+        ));
+        acc
+    });
     out.push_str(
         "(queueing dominates the tail at low array counts; skew stretches p99 as the\n\
          hot family's jobs serialize behind the shared memory system)\n",
@@ -1094,32 +1107,39 @@ pub fn runahead_region_with(s: &Session, ops: u64, n_loc: usize, n_gap: usize) -
             );
         }
     }
-    let report =
-        s.run(&ExperimentSpec::new("runahead-region").workloads(scenarios).systems(systems));
+    let spec = ExperimentSpec::new("runahead-region").workloads(scenarios).systems(systems);
     let mut out = format!(
         "Runahead-win region — Runahead speedup over Cache+SPM on synthetic\n\
          zipf_gather traffic ({ops} ops/point, {n_loc}x{n_gap} locality x gap grid)\n\
          rows: gap (idle cycles between accesses; 0 = most memory-bound)\n\
          cols: locality (hot-set hit probability; leftmost = uniform gather)\n\n"
     );
+    // Streaming reduction over the 2·n_loc·n_gap-cell grid: the session
+    // folds cells in grid order — scenario-major (g outer, locality
+    // inner), base system then runahead — so consecutive cell pairs
+    // reduce to one speedup ratio without materializing the report.
     let mut grid = vec![vec![0.0f64; n_loc]; n_gap];
     let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
     let mut peak = String::new();
-    for (g, row) in grid.iter_mut().enumerate() {
-        for (li, cell) in row.iter_mut().enumerate() {
-            let w = format!("traffic/zipf-l{li}-g{g}");
-            let base = report.get(&w, "Cache+SPM").unwrap().cycles;
-            let ra = report.get(&w, "Runahead").unwrap().cycles.max(1);
-            *cell = base as f64 / ra as f64;
-            if *cell < lo {
-                lo = *cell;
-            }
-            if *cell > hi {
-                hi = *cell;
-                peak = format!("locality {:.2}, gap {g}", li as f64 / n_loc as f64);
-            }
+    let mut cell = 0usize;
+    let mut base = 0u64;
+    s.run_fold(&spec, (), |(), _w, sys, _rep, m| {
+        if sys == "Cache+SPM" {
+            base = m.cycles;
+            return;
         }
-    }
+        let (g, li) = (cell / n_loc, cell % n_loc);
+        cell += 1;
+        let v = base as f64 / m.cycles.max(1) as f64;
+        grid[g][li] = v;
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+            peak = format!("locality {:.2}, gap {g}", li as f64 / n_loc as f64);
+        }
+    });
     out.push_str(&format!("{:>4} |", "gap"));
     for li in 0..n_loc {
         out.push_str(&format!(" {:>5.2}", li as f64 / n_loc as f64));

@@ -32,7 +32,8 @@
 //! exploits.
 
 use crate::mem::{
-    ChannelStats, Cycle, MemoryModel, MemoryModelSpec, MemorySubsystem, SharedL2, SubsystemStats,
+    ChannelStats, CheckedModel, Cycle, MemoryModel, MemoryModelSpec, MemorySubsystem, SharedL2,
+    SubsystemStats,
 };
 use crate::reconfig::OnlineController;
 use crate::sim::{CgraArray, CgraConfig, EpochController, ReconfigMode};
@@ -231,6 +232,11 @@ impl ClusterOutcome {
 enum Slots {
     Hier { mems: Vec<MemorySubsystem>, shared_l2: SharedL2 },
     Boxed { mems: Vec<Box<dyn MemoryModel>> },
+    /// Invariant-checked fuzzing slots: every backend — private L2 and
+    /// channel included, since the shared-L2 swap cannot thread through
+    /// the wrapper — wrapped in a [`CheckedModel`]. Built by
+    /// [`Cluster::new_checked`]; contends on nothing by construction.
+    Checked { mems: Vec<CheckedModel> },
 }
 
 impl Slots {
@@ -247,6 +253,7 @@ impl Slots {
                 r
             }
             Slots::Boxed { mems } => f(&mut *mems[i]),
+            Slots::Checked { mems } => f(&mut mems[i]),
         }
     }
 
@@ -254,6 +261,7 @@ impl Slots {
         match self {
             Slots::Hier { mems, .. } => mems.len(),
             Slots::Boxed { mems } => mems.len(),
+            Slots::Checked { mems } => mems.len(),
         }
     }
 
@@ -264,13 +272,14 @@ impl Slots {
         match self {
             Slots::Hier { mems, .. } => mems[i].stats,
             Slots::Boxed { mems } => mems[i].stats(),
+            Slots::Checked { mems } => mems[i].stats(),
         }
     }
 
     fn channel_stats(&self) -> ChannelStats {
         match self {
             Slots::Hier { shared_l2, .. } => shared_l2.channel_stats(),
-            Slots::Boxed { .. } => ChannelStats::default(),
+            Slots::Boxed { .. } | Slots::Checked { .. } => ChannelStats::default(),
         }
     }
 }
@@ -336,6 +345,53 @@ impl Cluster {
             spm_usable: mem_spec.spm_usable_bytes(),
             spm_greedy: mem_spec.spm_greedy(),
         }
+    }
+
+    /// Like [`Cluster::new`], but every slot's backend is wrapped in a
+    /// [`CheckedModel`] (fill latency, lost/phantom fills, MSHR budget,
+    /// `next_event` liveness — see [`crate::mem::invariant`]). Checked
+    /// slots keep *private* L2s/channels — the shared-L2 swap cannot
+    /// thread through the wrapper — so pair a checked run with a plain
+    /// [`Cluster::new`] run when shared-level contention also needs
+    /// core-equivalence coverage. Collect results with
+    /// [`Cluster::violations`] after [`Cluster::run`].
+    pub fn new_checked(spec: ClusterSpec, mem_spec: &MemoryModelSpec) -> Self {
+        assert!(
+            spec.arrays >= 1 && spec.arrays <= 15,
+            "cluster size {} outside 1..=15 (32-bit salt space)",
+            spec.arrays
+        );
+        let num_ports = mem_spec.num_ports();
+        let backing_bytes = (num_ports as u32 * PORT_STRIDE) as usize;
+        let budget = match mem_spec {
+            MemoryModelSpec::Hierarchy(cfg) => Some(cfg.mshr_entries),
+            _ => None,
+        };
+        let mems = (0..spec.arrays)
+            .map(|_| CheckedModel::new(mem_spec.build(backing_bytes), budget))
+            .collect();
+        Cluster {
+            spec,
+            slots: Slots::Checked { mems },
+            num_ports,
+            spm_usable: mem_spec.spm_usable_bytes(),
+            spm_greedy: mem_spec.spm_greedy(),
+        }
+    }
+
+    /// End-of-run invariant sweep over every checked slot: runs the
+    /// final checks and returns all recorded violations, tagged by slot.
+    /// Empty on a clean run — and vacuously on an un-checked cluster.
+    pub fn violations(&mut self) -> Vec<String> {
+        let Slots::Checked { mems } = &mut self.slots else { return Vec::new() };
+        let mut out = Vec::new();
+        for (i, m) in mems.iter_mut().enumerate() {
+            m.final_check();
+            for v in m.violations() {
+                out.push(format!("[slot {i}] {v}"));
+            }
+        }
+        out
     }
 
     /// Serve the whole queue; returns per-job and per-array accounting.
@@ -704,6 +760,25 @@ mod tests {
         let rf = run(crate::sim::SimCore::Reference);
         assert!(ev.all_outputs_ok());
         assert_eq!(ev, rf, "event and reference cores must agree byte-for-byte");
+    }
+
+    #[test]
+    fn checked_cluster_agrees_across_cores_with_no_violations() {
+        let run = |core| {
+            let mut cfg = cgra();
+            cfg.core = core;
+            let spec = ClusterSpec { arrays: 2, scheduler: SchedulerKind::Fifo };
+            let mut c = Cluster::new_checked(spec, &MemoryModelSpec::Hierarchy(small_cfg()));
+            let out = c.run(cfg, &two_family_queue());
+            (out, c.violations())
+        };
+        let (ev, ev_viol) = run(crate::sim::SimCore::Event);
+        let (rf, rf_viol) = run(crate::sim::SimCore::Reference);
+        assert!(ev_viol.is_empty(), "event-core violations: {ev_viol:?}");
+        assert!(rf_viol.is_empty(), "reference-core violations: {rf_viol:?}");
+        assert!(ev.all_outputs_ok());
+        assert_eq!(ev, rf, "checked slots must not perturb core equivalence");
+        assert_eq!(ev.channel, ChannelStats::default(), "checked slots are private");
     }
 
     #[test]

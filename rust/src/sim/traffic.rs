@@ -16,7 +16,12 @@
 //! schedule time `k · (gap + 1)` (the lock-step machine's "all border
 //! PEs fire in the same context" shape). `gap` inserts idle schedule
 //! slots between groups — the memory-intensity knob (`gap = 0` is one
-//! access per port per cycle). When synthesized for a Runahead system,
+//! access per port per cycle). The *bursty* knob layers on top: with
+//! `burst_len > 0`, every `burst_len` consecutive groups are followed
+//! by `burst_gap` extra idle slots, so group `k` lands at
+//! `k · (gap + 1) + ⌊k / burst_len⌋ · burst_gap` — on/off traffic that
+//! alternately saturates and drains the MSHR/DRAM queues instead of
+//! loading them uniformly. When synthesized for a Runahead system,
 //! each group is followed by a recorded runahead episode: an `RaEnter`
 //! marker plus the next `lookahead` accesses of every port as staggered
 //! `Prefetch` events — replay drops the episode wherever the group does
@@ -103,6 +108,13 @@ pub struct TrafficSpec {
     pub seed: u64,
     /// Per-access probability of a store instead of a load.
     pub write_frac: f64,
+    /// Bursty arrivals: groups per burst (0 disables bursting — the
+    /// uniform schedule above — and then `burst_gap` must be 0 too).
+    pub burst_len: u32,
+    /// Extra idle schedule slots after each full burst (must be ≥ 1
+    /// when `burst_len > 0`: a zero-pause burst is just uniform
+    /// traffic, which spec validation rejects as a misspelled point).
+    pub burst_gap: u32,
 }
 
 /// Per-port address/op stream generator state.
@@ -197,6 +209,9 @@ pub fn synthesize(spec: &TrafficSpec, ports: usize, runahead: bool) -> CapturedT
     let ports = ports.max(1);
     let ops = u64::from(spec.ops);
     let step = u64::from(spec.gap) + 1;
+    let (burst, bgap) = (u64::from(spec.burst_len), u64::from(spec.burst_gap));
+    // Group k's schedule slot; see module docs ("Timing model").
+    let sched = |k: u64| k * step + if burst > 0 { (k / burst) * bgap } else { 0 };
     let lookahead = u64::from(spec.pattern.lookahead());
 
     // Materialize every port's stream up front: the episode emitter
@@ -214,7 +229,7 @@ pub fn synthesize(spec: &TrafficSpec, ports: usize, runahead: bool) -> CapturedT
 
     let mut cap = CaptureTrace::new(true);
     for k in 0..ops {
-        let s = k * step;
+        let s = sched(k);
         for (port, stream) in streams.iter().enumerate() {
             let (addr, is_write) = stream[k as usize];
             let kind = if is_write { CaptureKind::DemandWrite } else { CaptureKind::DemandRead };
@@ -236,7 +251,7 @@ pub fn synthesize(spec: &TrafficSpec, ports: usize, runahead: bool) -> CapturedT
         }
     }
 
-    let end_sched = if ops == 0 { 0 } else { (ops - 1) * step + 1 };
+    let end_sched = if ops == 0 { 0 } else { sched(ops - 1) + 1 };
     CapturedTrace {
         header: CaptureHeader {
             producer: 0,
@@ -292,6 +307,8 @@ mod tests {
             gap: 1,
             seed,
             write_frac: 0.25,
+            burst_len: 0,
+            burst_gap: 0,
         }
     }
 
@@ -312,7 +329,15 @@ mod tests {
             TrafficPattern::ZipfGather { locality: 0.8, span: 0x18_0000 },
             TrafficPattern::PhaseMix { period: 16, stride: 64, locality: 0.5, span: 32768 },
         ] {
-            let spec = TrafficSpec { pattern, ops: 200, gap: 0, seed: 3, write_frac: 0.1 };
+            let spec = TrafficSpec {
+                pattern,
+                ops: 200,
+                gap: 0,
+                seed: 3,
+                write_frac: 0.1,
+                burst_len: 0,
+                burst_gap: 0,
+            };
             let t = synthesize(&spec, 2, true);
             for e in &t.events {
                 if e.kind == CaptureKind::RaEnter {
@@ -338,6 +363,8 @@ mod tests {
             gap: 0,
             seed: 1,
             write_frac: 0.0,
+            burst_len: 0,
+            burst_gap: 0,
         };
         let t = synthesize(&single, 1, true);
         assert!(
@@ -360,6 +387,8 @@ mod tests {
             gap: 0,
             seed: 2,
             write_frac: 0.0,
+            burst_len: 0,
+            burst_gap: 0,
         };
         let t = synthesize(&spec, 2, false);
         let mspec = MemoryModelSpec::Ideal(IdealConfig {
@@ -390,6 +419,40 @@ mod tests {
         assert_eq!(ev.runahead_entries, rf.runahead_entries);
         assert!(ev.runahead_entries > 0, "zipf over a cold hierarchy must stall");
         assert!(ev.mem.prefetches_issued > 0, "episodes must replay prefetches");
+    }
+
+    #[test]
+    fn bursty_schedule_matches_the_golden_formula() {
+        // ops=4, gap=0, burst_len=2, burst_gap=3: groups 0,1 form the
+        // first burst, then 3 idle slots, then groups 2,3 → scheds
+        // 0, 1, 5, 6 and end_sched 7.
+        let spec = TrafficSpec {
+            pattern: TrafficPattern::Strided { stride: 4, width: 1, align: 0 },
+            ops: 4,
+            gap: 0,
+            seed: 9,
+            write_frac: 0.0,
+            burst_len: 2,
+            burst_gap: 3,
+        };
+        let t = synthesize(&spec, 1, false);
+        let scheds: Vec<u64> = t.events.iter().map(|e| e.sched).collect();
+        assert_eq!(scheds, vec![0, 1, 5, 6]);
+        assert_eq!(t.header.end_sched, 7);
+        // burst_len = 0 must reproduce the uniform schedule exactly
+        // (bursting off is not a degenerate burst of infinity).
+        let uniform = TrafficSpec { burst_len: 0, burst_gap: 0, ..spec };
+        let u = synthesize(&uniform, 1, false);
+        assert_eq!(
+            u.events.iter().map(|e| e.sched).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        assert_eq!(u.header.end_sched, 4);
+        // Same addresses either way: bursting re-times, never re-draws.
+        assert_eq!(
+            t.events.iter().map(|e| e.addr).collect::<Vec<_>>(),
+            u.events.iter().map(|e| e.addr).collect::<Vec<_>>()
+        );
     }
 
     #[test]

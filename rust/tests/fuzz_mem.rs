@@ -8,7 +8,7 @@
 //! replay it.
 
 use cgra_mem::exp::fuzz::mutate_bytes;
-use cgra_mem::exp::run_fuzz;
+use cgra_mem::exp::{run_cluster_fuzz, run_fuzz};
 use cgra_mem::sim::traffic::synthesize;
 use cgra_mem::sim::{CapturedTrace, TrafficPattern, TrafficSpec};
 use cgra_mem::util::Rng;
@@ -33,6 +33,19 @@ fn second_seed_is_clean() {
     }
 }
 
+/// The cluster CI campaign, pinned: random small job mixes through the
+/// 2-array runahead cluster, each mix run under both sim cores with
+/// invariant-checked slots, and the event core's serving order compared
+/// against the reference core's.
+#[test]
+fn pinned_cluster_campaign_is_clean() {
+    let out = run_cluster_fuzz(0xC1AB5, 6);
+    if let Some(f) = &out.failure {
+        panic!("{}", f.report());
+    }
+    assert_eq!(out.points_checked, 6);
+}
+
 fn sample_trace() -> CapturedTrace {
     synthesize(
         &TrafficSpec {
@@ -41,6 +54,8 @@ fn sample_trace() -> CapturedTrace {
             gap: 1,
             seed: 11,
             write_frac: 0.25,
+            burst_len: 0,
+            burst_gap: 0,
         },
         2,
         true,

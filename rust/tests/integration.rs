@@ -665,6 +665,114 @@ fn warm_store_rerun_is_byte_identical_with_zero_simulations() {
     let _ = ResultStore::clear(&path);
 }
 
+/// Acceptance (migration): flattening a sharded store back into the v1
+/// single-file layout and re-opening it adopts every line into shards,
+/// and a warm re-run replays every cell with zero simulations and a
+/// byte-identical report.
+#[test]
+fn legacy_single_file_store_migrates_to_shards_byte_identically() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, ResultStore, SystemSpec};
+    let pid = std::process::id();
+    let root = std::env::temp_dir().join(format!("cgra-itest-cellstore-{pid}-migrate"));
+    let legacy = std::env::temp_dir().join(format!("cgra-itest-cellstore-{pid}-legacy"));
+    let _ = ResultStore::clear(&root);
+    let _ = ResultStore::clear(&legacy);
+    let spec = ExperimentSpec::new("migrate")
+        .workloads(["aggregate/tiny", "small/join_probe"])
+        .systems([SystemSpec::cache_spm(), SystemSpec::runahead()]);
+
+    // Cold run against a sharded store.
+    let eng = Engine::new(2);
+    let cold = eng.session_with_store(ResultStore::open(&root).unwrap());
+    let cold_report = cold.run(&spec);
+    assert!(cold.stats().executed > 0);
+    drop(cold);
+
+    // Flatten every shard line into one v1-style single file.
+    let mut lines = String::new();
+    for entry in std::fs::read_dir(&root).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().and_then(|e| e.to_str()) == Some("jsonl") {
+            lines.push_str(&std::fs::read_to_string(&p).unwrap());
+        }
+    }
+    assert!(!lines.is_empty(), "the cold run must have persisted shard lines");
+    std::fs::write(&legacy, &lines).unwrap();
+
+    // Opening the legacy path adopts the single file into shards; a
+    // warm run then replays every cell without simulating.
+    let eng2 = Engine::new(3);
+    let warm = eng2.session_with_store(ResultStore::open(&legacy).unwrap());
+    let warm_report = warm.run(&spec);
+    assert_eq!(warm.stats().executed, 0, "the migrated store must satisfy every cell");
+    assert_eq!(
+        warm_report.to_json().render_pretty(),
+        cold_report.to_json().render_pretty(),
+        "migration must preserve every cell byte for byte"
+    );
+    assert!(
+        std::fs::metadata(&legacy).unwrap().is_dir(),
+        "the legacy single file is replaced by a shard directory"
+    );
+    let _ = ResultStore::clear(&root);
+    let _ = ResultStore::clear(&legacy);
+}
+
+/// Acceptance (concurrency): two sessions running disjoint halves of one
+/// spec against the same store directory — concurrently, each with its
+/// own store handle, like two `repro sweep --jobs-from` processes — leave
+/// a merged store that satisfies a warm full run with zero simulations
+/// and a report byte-identical to an uncached cold run.
+#[test]
+fn two_sessions_splitting_one_spec_merge_into_one_warm_store() {
+    use cgra_mem::exp::{Engine, ExperimentSpec, ResultStore, SystemSpec};
+    let root =
+        std::env::temp_dir().join(format!("cgra-itest-cellstore-{}-split", std::process::id()));
+    let _ = ResultStore::clear(&root);
+    let full = || {
+        ExperimentSpec::new("split")
+            .workloads(["aggregate/tiny", "small/rgb", "small/join_probe", "small/mesh"])
+            .systems([SystemSpec::cache_spm(), SystemSpec::runahead()])
+    };
+    // Uncached reference for the byte-identity check.
+    let reference = Engine::new(2).session().run(&full());
+
+    let halves: Vec<_> = (0..2usize)
+        .map(|k| {
+            let root = root.clone();
+            std::thread::spawn(move || {
+                let mut spec = full();
+                spec.workloads = spec
+                    .workloads
+                    .into_iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % 2 == k)
+                    .map(|(_, w)| w)
+                    .collect();
+                let eng = Engine::new(1);
+                let session = eng.session_with_store(ResultStore::open(&root).unwrap());
+                session.run(&spec);
+                session.stats().executed
+            })
+        })
+        .collect();
+    for h in halves {
+        assert!(h.join().expect("half-sweep thread") > 0, "each half simulates its slice");
+    }
+
+    let eng = Engine::new(2);
+    let warm = eng.session_with_store(ResultStore::open(&root).unwrap());
+    let warm_report = warm.run(&full());
+    assert_eq!(warm.stats().executed, 0, "the merged store must satisfy the full spec");
+    assert_eq!(warm.stats().store_hits, 8);
+    assert_eq!(
+        warm_report.to_json().render_pretty(),
+        reference.to_json().render_pretty(),
+        "split halves must merge into the same report an uncached run produces"
+    );
+    let _ = ResultStore::clear(&root);
+}
+
 /// Satellite (contention): two arrays hammering the shared banked-DRAM
 /// channel pay measurably more total cycles than twice the solo run —
 /// the shared L2 halves each array's effective capacity and the
